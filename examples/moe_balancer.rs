@@ -1,0 +1,52 @@
+//! MoE workload-balancer walkthrough (§6.4): route a batch through
+//! Qwen3-30B-A3B's 128 experts under increasing routing skew and watch
+//! the static strategy collapse while MPK's hybrid stays flat.
+//!
+//! ```bash
+//! cargo run --release --example moe_balancer
+//! ```
+
+use mpk::models::ModelConfig;
+use mpk::moe::{dynamic_us, hybrid_us, route, sglang_us, static_partition_us, Skew};
+use mpk::sim::GpuSpec;
+use mpk::util::Table;
+
+fn main() {
+    let cfg = ModelConfig::qwen3_30b_a3b();
+    let moe = cfg.moe.unwrap();
+    let gpu = GpuSpec::b200();
+    println!(
+        "Qwen3-30B-A3B MoE block on {}: {} experts, top-{}, expert FFN {}\n",
+        gpu.name, moe.num_experts, moe.top_k, moe.expert_ffn
+    );
+
+    let mut t = Table::new(&["skew", "max/mean load", "Static µs", "Hybrid µs", "Dynamic µs", "SGLang µs"]);
+    for (label, skew) in [
+        ("uniform", Skew::Uniform),
+        ("zipf 0.8", Skew::Zipf(0.8)),
+        ("zipf 1.2", Skew::Zipf(1.2)),
+        ("zipf 1.6", Skew::Zipf(1.6)),
+    ] {
+        let r = route(16, moe.num_experts, moe.top_k, skew, 123);
+        let mean = r.total_assignments() as f64 / r.activated().max(1) as f64;
+        let st = static_partition_us(&moe, cfg.d_model, &r, &gpu, 16).us;
+        let hy = hybrid_us(&moe, cfg.d_model, &r, &gpu).us;
+        let dy = dynamic_us(&moe, cfg.d_model, &r, &gpu).us;
+        let sg = sglang_us(&moe, cfg.d_model, &r, &gpu).us;
+        t.row(vec![
+            label.into(),
+            format!("{:.1}", r.max_load() as f64 / mean),
+            format!("{st:.1}"),
+            format!("{hy:.1}"),
+            format!("{dy:.1}"),
+            format!("{sg:.1}"),
+        ]);
+    }
+    println!("{}", t.render());
+    println!("takeaways (the Figure 10 story):");
+    println!(" * static SM groups oversubscribe hot experts as skew grows;");
+    println!(" * hybrid = static task structure + runtime meta-tensor refinement stays near even;");
+    println!(" * fully dynamic pays per-tile synchronization;");
+    println!(" * SGLang-class pays the standalone gather (~11% at batch 1) + launches,");
+    println!("   which MPK folds into the GEMM's data-loading phase (fused gather-GEMM).");
+}

@@ -1,0 +1,55 @@
+//! Multi-GPU tensor parallelism walkthrough (§6.5): shard Qwen3-1.7B
+//! across 1–8 simulated H100s, show the in-kernel ring all-reduce
+//! schedule, and compare fine-grained vs coarse compute–communication
+//! overlap.
+//!
+//! ```bash
+//! cargo run --release --example multi_gpu_tp
+//! ```
+
+use mpk::models::ModelConfig;
+use mpk::multigpu::{collective, tp};
+use mpk::sim::{BaselineSystem, GpuSpec, LinkSpec};
+use mpk::tgraph::DepGranularity;
+use mpk::util::Table;
+
+fn main() {
+    let gpu = GpuSpec::h100();
+    let link = LinkSpec::nvlink_h100();
+    let cfg = ModelConfig::qwen3_1_7b();
+
+    println!("== ring all-reduce lowering (d_model row, batch 8, bf16) ==");
+    let bytes = (8 * cfg.d_model * 2) as u64;
+    for w in [2usize, 4, 8] {
+        let steps = collective::ring_schedule(bytes, w);
+        println!(
+            "  world {w}: {} steps, {} B/device on the wire, in-kernel {:.1} µs vs NCCL-class {:.1} µs",
+            steps.len(),
+            collective::ring_bytes_per_device(bytes, w),
+            collective::inkernel_allreduce_us(bytes, w, &link),
+            collective::nccl_allreduce_us(bytes, w, &link),
+        );
+    }
+
+    println!("\n== Qwen3-1.7B iteration latency by world size (batch 8) ==");
+    let mut t = Table::new(&["GPUs", "MPK fine µs", "MPK coarse µs", "overlap", "SGLang µs", "speedup"]);
+    for w in [1usize, 2, 4, 8] {
+        let fine = tp::plan(&cfg, 8, 512, w, &gpu, DepGranularity::Fine);
+        let coarse = tp::plan(&cfg, 8, 512, w, &gpu, DepGranularity::CoarseCollectives);
+        let f = tp::mpk_iteration_us(&fine, &gpu, &link, true);
+        let c = tp::mpk_iteration_us(&coarse, &gpu, &link, true);
+        let sg = tp::baseline_iteration_us(&fine, &gpu, &link, &BaselineSystem::sglang());
+        t.row(vec![
+            w.to_string(),
+            format!("{f:.0}"),
+            format!("{c:.0}"),
+            format!("{:.3}x", c / f),
+            format!("{sg:.0}"),
+            format!("{:.2}x", sg / f),
+        ]);
+    }
+    println!("{}", t.render());
+    println!("communication tasks live in the same tGraph as compute and are");
+    println!("dispatched by the same event-driven scheduler — overlap emerges");
+    println!("from the task schedule, not from stream management (§6.5/§8).");
+}

@@ -1,0 +1,55 @@
+//! Quickstart: compile a model into an SM-level tGraph and execute it on
+//! the threaded in-kernel runtime — the 60-second tour of MPK.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+
+use mpk::megakernel::{MegaConfig, MegaKernel};
+use mpk::models::{build_decode_graph, GraphOptions, ModelConfig};
+use mpk::sim::{simulate_baseline, simulate_megakernel, BaselineSystem, GpuSpec, SimOptions};
+use mpk::tgraph::{compile, CompileOptions, DecomposeConfig, TaskDesc};
+
+fn main() {
+    // 1. a tensor program: one decode iteration of Qwen3-1.7B, batch 4.
+    let cfg = ModelConfig::qwen3_1_7b();
+    let graph = build_decode_graph(&cfg, &GraphOptions { batch: 4, kv_len: 256, ..Default::default() });
+    println!("computation graph: {} ops, {} tensors", graph.ops.len(), graph.tensors.len());
+
+    // 2. the MPK compiler: decompose → dependencies → fusion →
+    //    normalization → linearization (§4).
+    let gpu = GpuSpec::b200();
+    let compiled = compile(
+        &graph,
+        &CompileOptions {
+            decompose: DecomposeConfig { target_tasks: gpu.workers, min_tile_cols: 8 },
+            ..Default::default()
+        },
+    );
+    let s = compiled.stats();
+    println!(
+        "tGraph: {} tasks ({:.1}/op), {} events (fusion {:.0}x, linearization {:.1}x smaller)",
+        s.tasks, s.tasks_per_op, s.events, s.fusion_reduction, s.lin_reduction
+    );
+
+    // 3. execute on the threaded in-kernel runtime (workers + schedulers,
+    //    hybrid JIT/AOT launch — §5). Tasks are no-ops here; see
+    //    serve_e2e for real numerics through PJRT.
+    let kernel = MegaKernel::new(&compiled, MegaConfig { workers: 8, schedulers: 2, ..Default::default() });
+    let report = kernel.run(&|_: &TaskDesc| {}).expect("mega-kernel run");
+    println!(
+        "threaded run: {} tasks in {:?} ({} JIT dispatches, {} AOT hits)",
+        report.metrics.tasks_executed, report.elapsed, report.metrics.jit_dispatches, report.metrics.aot_hits
+    );
+
+    // 4. what would this cost on a B200? (roofline DES, §6)
+    let mpk_us = simulate_megakernel(&compiled, &gpu, &SimOptions::default()).makespan_us;
+    let sg_us = simulate_baseline(&compiled, &gpu, &BaselineSystem::sglang(), None);
+    println!(
+        "simulated on {}: MPK {:.0} µs/iter vs SGLang-class {:.0} µs/iter ({:.2}x)",
+        gpu.name,
+        mpk_us,
+        sg_us,
+        sg_us / mpk_us
+    );
+}

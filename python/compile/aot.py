@@ -1,0 +1,185 @@
+"""AOT lowering: emit every artifact the rust runtime loads.
+
+Per batch size b ∈ {1,2,4,8} (per-batch-size specialized graphs, §6.1):
+  matmul_b{b}_k{K}_n{TILE_N}  — Pallas tiled matmul for each distinct K
+  rmsnorm_b{b}                — Pallas RMSNorm, D = d_model
+  swiglu_b{b}                 — Pallas SwiGLU, 2F -> F
+  add_b{b}                    — residual add, width d_model
+  embed_b{b}                  — embedding gather
+  ref_decode_b{b}             — the fused reference decode step (oracle)
+plus once:
+  attn_q1                     — per-request decode attention (padded
+                                S_MAX cache + cur_len mask)
+  moe_gather_gemm_b8          — fused gather-GEMM demo kernel
+
+Everything is written as HLO *text* (see common.to_hlo_text) plus a
+manifest.json the rust manifest loader parses.
+
+Usage: cd python && python -m compile.aot --out ../artifacts
+"""
+
+import argparse
+import functools
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+
+from .common import BATCH_SIZES, S_MAX, TILE_N, TinyConfig, lower_fn
+from .kernels import attention, elementwise, matmul, moe
+from . import model as model_mod
+
+F32 = jnp.float32
+I32 = jnp.int32
+
+
+def spec(shape, dtype=F32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def manifest_entry(name, fname, in_specs, n_outputs):
+    return {
+        "name": name,
+        "file": fname,
+        "inputs": [
+            {"shape": list(s.shape), "dtype": "i32" if s.dtype == jnp.int32 else "f32"}
+            for s in in_specs
+        ],
+        "outputs": n_outputs,
+    }
+
+
+def emit(outdir, name, fn, in_specs, n_outputs, entries, force=False):
+    fname = f"{name}.hlo.txt"
+    path = os.path.join(outdir, fname)
+    if force or not os.path.exists(path):
+        text = lower_fn(fn, in_specs)
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"  wrote {fname} ({len(text)} chars)")
+    else:
+        print(f"  kept  {fname}")
+    entries.append(manifest_entry(name, fname, in_specs, n_outputs))
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--force", action="store_true", help="re-lower even if files exist")
+    args = ap.parse_args()
+    outdir = args.out
+    os.makedirs(outdir, exist_ok=True)
+    cfg = TinyConfig()
+    entries = []
+
+    d, q_dim, kv_dim, f = cfg.d_model, cfg.q_dim, cfg.kv_dim, cfg.ffn
+    k_values = sorted({d, f})  # contraction dims used by the tiny model
+
+    for b in BATCH_SIZES:
+        print(f"batch {b}:")
+        for k in k_values:
+            emit(
+                outdir,
+                f"matmul_b{b}_k{k}_n{TILE_N}",
+                lambda x, w: (matmul.matmul(x, w),),
+                [spec((b, k)), spec((k, TILE_N))],
+                1,
+                entries,
+                args.force,
+            )
+        emit(
+            outdir,
+            f"rmsnorm_b{b}",
+            lambda x, w: (elementwise.rmsnorm(x, w),),
+            [spec((b, d)), spec((d,))],
+            1,
+            entries,
+            args.force,
+        )
+        emit(
+            outdir,
+            f"swiglu_b{b}",
+            lambda gu: (elementwise.swiglu(gu),),
+            [spec((b, 2 * f))],
+            1,
+            entries,
+            args.force,
+        )
+        emit(
+            outdir,
+            f"add_b{b}",
+            lambda a, c: (elementwise.add(a, c),),
+            [spec((b, d)), spec((b, d))],
+            1,
+            entries,
+            args.force,
+        )
+        emit(
+            outdir,
+            f"embed_b{b}",
+            lambda ids, tbl: (jnp.take(tbl, ids, axis=0),),
+            [spec((b,), I32), spec((cfg.vocab, d))],
+            1,
+            entries,
+            args.force,
+        )
+        # fused reference decode step: logits + per-layer new K/V rows.
+        emit(
+            outdir,
+            f"ref_decode_b{b}",
+            model_mod.decode_step_flat(cfg, b),
+            model_mod.decode_step_shapes(cfg, b),
+            1 + 2 * cfg.layers,
+            entries,
+            args.force,
+        )
+
+    print("shared:")
+    attn_fn = functools.partial(
+        attention.attention_decode,
+        heads=cfg.heads,
+        kv_heads=cfg.kv_heads,
+        head_dim=cfg.head_dim,
+    )
+    emit(
+        outdir,
+        "attn_q1",
+        lambda q, kc, vc, ln: (attn_fn(q, kc, vc, ln),),
+        [spec((1, q_dim)), spec((S_MAX, kv_dim)), spec((S_MAX, kv_dim)), spec((1,), I32)],
+        1,
+        entries,
+        args.force,
+    )
+    emit(
+        outdir,
+        "moe_gather_gemm_b8",
+        lambda x, idx, w: (moe.moe_gather_gemm(x, idx, w, expert=0),),
+        [spec((8, d)), spec((8, 2), I32), spec((d, 128))],
+        1,
+        entries,
+        args.force,
+    )
+
+    manifest = {
+        "model": {
+            "layers": cfg.layers,
+            "d_model": d,
+            "heads": cfg.heads,
+            "kv_heads": cfg.kv_heads,
+            "head_dim": cfg.head_dim,
+            "ffn": f,
+            "vocab": cfg.vocab,
+        },
+        "s_max": S_MAX,
+        "tile_n": TILE_N,
+        "batch_sizes": list(BATCH_SIZES),
+        "artifacts": entries,
+    }
+    with open(os.path.join(outdir, "manifest.json"), "w") as fo:
+        json.dump(manifest, fo, indent=1)
+    print(f"manifest.json: {len(entries)} artifacts")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,58 @@
+"""Shared compile-path helpers: tiny-model config and HLO-text lowering.
+
+HLO *text* (not serialized HloModuleProto) is the interchange format with
+the rust runtime: jax >= 0.5 emits protos with 64-bit instruction ids
+which xla_extension 0.5.1 (behind the `xla` crate) rejects; the text
+parser reassigns ids and round-trips cleanly.
+"""
+
+from dataclasses import dataclass
+
+import jax
+from jax._src.lib import xla_client as xc
+
+
+@dataclass(frozen=True)
+class TinyConfig:
+    """Mirror of rust `ModelConfig::tiny()` — keep in sync."""
+
+    layers: int = 4
+    d_model: int = 256
+    heads: int = 4
+    kv_heads: int = 2
+    head_dim: int = 64
+    ffn: int = 512
+    vocab: int = 512
+
+    @property
+    def q_dim(self) -> int:
+        return self.heads * self.head_dim
+
+    @property
+    def kv_dim(self) -> int:
+        return self.kv_heads * self.head_dim
+
+
+#: padded KV-cache length for the real-numerics serving path. Static
+#: shapes + a `cur_len` operand replace dynamic cache growth.
+S_MAX = 64
+
+#: batch sizes with specialized tGraphs / artifacts (§6.1: powers of two).
+BATCH_SIZES = (1, 2, 4, 8)
+
+#: matmul tile width on the N dimension shared by all linear layers.
+TILE_N = 128
+
+
+def to_hlo_text(lowered) -> str:
+    """Convert a jax-lowered computation to XLA HLO text."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_fn(fn, args) -> str:
+    """Jit + lower `fn` at the given abstract args, return HLO text."""
+    return to_hlo_text(jax.jit(fn).lower(*args))

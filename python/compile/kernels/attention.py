@@ -1,0 +1,55 @@
+"""Pallas GQA decode-attention kernel (L1).
+
+One kernel invocation handles one request's single-token decode step
+over a padded KV cache with a `cur_len` mask (the paged-attention shape
+contract of the serving path: static S_MAX, dynamic valid length).
+
+GPU→TPU adaptation: the paper's attention tasks are FlashDecoding-style
+thread-block programs splitting the KV sequence across warps. Here the
+whole padded cache fits one VMEM block (S_MAX=64), so the kernel is a
+single-block softmax-attention with masked lanes — the cross-SM split
+the paper does per-KV-chunk is instead expressed at the tGraph level
+(one task per request).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, len_ref, o_ref, *, heads, kv_heads, head_dim):
+    s_max = k_ref.shape[0]
+    group = heads // kv_heads
+    q = q_ref[...].reshape(heads, head_dim)
+    k = k_ref[...].reshape(s_max, kv_heads, head_dim)
+    v = v_ref[...].reshape(s_max, kv_heads, head_dim)
+    cur_len = len_ref[0]
+    mask = jnp.arange(s_max) < cur_len
+    scale = 1.0 / jnp.sqrt(jnp.float32(head_dim))
+
+    # [heads, S]: q_h · k_{h//group}
+    kq = jnp.einsum("hd,skd->hsk", q, k)  # [heads, S, kv_heads]
+    idx = jnp.arange(heads) // group
+    scores = jnp.take_along_axis(kq, idx[:, None, None], axis=2)[..., 0] * scale
+    scores = jnp.where(mask[None, :], scores, -1e30)
+    p = jnp.exp(scores - jnp.max(scores, axis=-1, keepdims=True))
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    vg = v[:, idx, :]  # [S, heads, head_dim]
+    out = jnp.einsum("hs,shd->hd", p, vg)
+    o_ref[...] = out.reshape(1, heads * head_dim)
+
+
+@functools.partial(jax.jit, static_argnames=("heads", "kv_heads", "head_dim"))
+def attention_decode(q, kcache, vcache, cur_len, *, heads, kv_heads, head_dim):
+    """q[1, heads*head_dim], caches [S_MAX, kv_heads*head_dim],
+    cur_len[1] (i32) -> [1, heads*head_dim]."""
+    kernel = functools.partial(
+        _attn_kernel, heads=heads, kv_heads=kv_heads, head_dim=head_dim
+    )
+    return pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct((1, heads * head_dim), jnp.float32),
+        interpret=True,
+    )(q, kcache, vcache, cur_len)

@@ -1,0 +1,56 @@
+"""Pallas elementwise / normalization kernels (L1): RMSNorm, SwiGLU,
+residual add. Each is a single-block kernel — on real hardware these
+tiles are sized to one shared-memory page (32 KB, §6.2); in interpret
+mode the BlockSpec documents the VMEM footprint."""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _rmsnorm_kernel(x_ref, w_ref, o_ref):
+    x = x_ref[...]
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    o_ref[...] = x / jnp.sqrt(var + 1e-6) * w_ref[...]
+
+
+@jax.jit
+def rmsnorm(x, weight):
+    """Row-wise RMSNorm: x[M, D], weight[D] -> [M, D]."""
+    return pl.pallas_call(
+        _rmsnorm_kernel,
+        out_shape=jax.ShapeDtypeStruct(x.shape, jnp.float32),
+        interpret=True,
+    )(x, weight)
+
+
+def _swiglu_kernel(gu_ref, o_ref):
+    f = o_ref.shape[-1]
+    gate = gu_ref[..., :f]
+    up = gu_ref[..., f:]
+    o_ref[...] = gate * (1.0 / (1.0 + jnp.exp(-gate))) * up
+
+
+@jax.jit
+def swiglu(gate_up):
+    """Packed [gate | up] of width 2F -> silu(gate) * up, width F."""
+    m, f2 = gate_up.shape
+    return pl.pallas_call(
+        _swiglu_kernel,
+        out_shape=jax.ShapeDtypeStruct((m, f2 // 2), jnp.float32),
+        interpret=True,
+    )(gate_up)
+
+
+def _add_kernel(a_ref, b_ref, o_ref):
+    o_ref[...] = a_ref[...] + b_ref[...]
+
+
+@jax.jit
+def add(a, b):
+    """Elementwise residual add."""
+    return pl.pallas_call(
+        _add_kernel,
+        out_shape=jax.ShapeDtypeStruct(a.shape, jnp.float32),
+        interpret=True,
+    )(a, b)

@@ -1,0 +1,87 @@
+"""Pure-jnp oracles for every Pallas kernel.
+
+These are the correctness ground truth: pytest asserts kernel-vs-ref
+allclose, and the rust end-to-end path is validated against the fused
+reference decode step built from these.
+"""
+
+import jax.lax as lax
+import jax.numpy as jnp
+
+
+def matmul_ref(x, w):
+    """x[M, K] @ w[K, N] -> [M, N] in f32."""
+    return jnp.dot(x, w, preferred_element_type=jnp.float32)
+
+
+def rmsnorm_ref(x, weight, eps=1e-6):
+    """Row-wise RMS normalization with learned scale."""
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return x / jnp.sqrt(var + eps) * weight
+
+
+def swiglu_ref(gate_up):
+    """gate_up[M, 2F] packed as [gate | up] -> silu(gate) * up, [M, F]."""
+    f = gate_up.shape[-1] // 2
+    gate = gate_up[..., :f]
+    up = gate_up[..., f:]
+    return gate * (1.0 / (1.0 + jnp.exp(-gate))) * up
+
+
+def add_ref(a, b):
+    """Elementwise residual add."""
+    return a + b
+
+
+def embed_ref(ids, table):
+    """ids[B] (i32) gathered from table[V, D]."""
+    return jnp.take(table, ids, axis=0)
+
+
+def attention_decode_ref(q, kcache, vcache, cur_len, heads, kv_heads, head_dim):
+    """Single-token GQA decode attention over a padded KV cache.
+
+    q: [1, heads*head_dim] — this step's query row.
+    kcache/vcache: [S_MAX, kv_heads*head_dim] — padded caches; positions
+        >= cur_len are masked out.
+    cur_len: scalar i32, number of valid cache entries (the current
+        token's K/V must already be appended).
+    Returns [1, heads*head_dim].
+    """
+    s_max = kcache.shape[0]
+    qh = q.reshape(heads, head_dim)
+    kh = kcache.reshape(s_max, kv_heads, head_dim)
+    vh = vcache.reshape(s_max, kv_heads, head_dim)
+    group = heads // kv_heads
+    mask = jnp.arange(s_max) < cur_len
+    outs = []
+    for h in range(heads):
+        kv_h = h // group
+        scores = jnp.einsum("d,sd->s", qh[h], kh[:, kv_h, :])
+        scores = scores / jnp.sqrt(jnp.float32(head_dim))
+        scores = jnp.where(mask, scores, -1e30)
+        p = jnp.exp(scores - jnp.max(scores))
+        p = p / jnp.sum(p)
+        outs.append(jnp.einsum("s,sd->d", p, vh[:, kv_h, :]))
+    return jnp.concatenate(outs).reshape(1, heads * head_dim)
+
+
+def moe_gather_gemm_ref(x, route_idx, w_expert, expert):
+    """Fused gather-GEMM oracle (§6.4): rows of x routed to `expert`
+    (route_idx[B, topk] holds expert ids) participate in the GEMM; all
+    other rows contribute zero.
+
+    x: [B, D]; w_expert: [D, F]; returns [B, F].
+    """
+    sel = jnp.any(route_idx == expert, axis=-1)  # [B]
+    xg = jnp.where(sel[:, None], x, 0.0)
+    return jnp.dot(xg, w_expert, preferred_element_type=jnp.float32)
+
+
+def topk_route_ref(x, w_gate, topk):
+    """Router: logits -> (top-k expert indices, softmax weights)."""
+    logits = jnp.dot(x, w_gate)
+    vals, idx = lax.top_k(logits, topk)
+    w = jnp.exp(vals - jnp.max(vals, axis=-1, keepdims=True))
+    w = w / jnp.sum(w, axis=-1, keepdims=True)
+    return idx, w

@@ -1,0 +1,134 @@
+"""L2: the tiny Qwen3-style decode step in JAX, calling the Pallas
+kernels (L1). Lowered whole by `aot.py` into the fused *reference*
+artifact the rust end-to-end path validates against, and per task type
+into the tile artifacts the megakernel workers execute.
+
+Weight layout (per layer l): ln1, wqkv[D, q+2kv], wo[q, D], ln2,
+w_gate_up[D, 2F], w_down[F, D]; plus embed table, final norm weight and
+lm_head. All weights arrive as function inputs — the rust side
+synthesizes them deterministically and feeds the same values to both the
+tiled megakernel path and this fused reference.
+"""
+
+import jax.numpy as jnp
+
+from .common import S_MAX, TinyConfig
+from .kernels import attention, elementwise, matmul
+
+
+def layer_weights(cfg: TinyConfig):
+    """Abstract shapes of one layer's weight tuple, in order."""
+    d, q, kv, f = cfg.d_model, cfg.q_dim, cfg.kv_dim, cfg.ffn
+    return [
+        ("ln1", (d,)),
+        ("wqkv", (d, q + 2 * kv)),
+        ("wo", (q, d)),
+        ("ln2", (d,)),
+        ("w_gate_up", (d, 2 * f)),
+        ("w_down", (f, d)),
+    ]
+
+
+def decode_step(cfg: TinyConfig, ids, kcaches, vcaches, cur_len, *weights):
+    """One decode iteration for a batch of single tokens.
+
+    ids: [B] i32 token ids.
+    kcaches/vcaches: per layer, [B, S_MAX, kv_dim] padded caches.
+    cur_len: [1] i32 — valid cache length *excluding* this step's token.
+    weights: embed_table, (6 per layer...), final_norm, lm_head.
+
+    Returns (logits[B, vocab], new_k list, new_v list) where new_k/new_v
+    are this step's K/V rows ([B, kv_dim]) for the caller to append.
+    """
+    b = ids.shape[0]
+    d, q_dim, kv_dim = cfg.d_model, cfg.q_dim, cfg.kv_dim
+    widx = 0
+    embed_table = weights[widx]
+    widx += 1
+
+    x = jnp.take(embed_table, ids, axis=0)  # [B, D]
+    new_ks, new_vs = [], []
+    for layer in range(cfg.layers):
+        ln1, wqkv, wo, ln2, wgu, wd = weights[widx : widx + 6]
+        widx += 6
+        h = elementwise.rmsnorm(x, ln1)
+        qkv = matmul.matmul(h, wqkv)
+        q = qkv[:, :q_dim]
+        k = qkv[:, q_dim : q_dim + kv_dim]
+        v = qkv[:, q_dim + kv_dim :]
+        new_ks.append(k)
+        new_vs.append(v)
+        # append into padded caches at position cur_len.
+        kc = write_row(kcaches[layer], k, cur_len)
+        vc = write_row(vcaches[layer], v, cur_len)
+        attn_rows = []
+        for r in range(b):
+            attn_rows.append(
+                attention.attention_decode(
+                    q[r : r + 1],
+                    kc[r],
+                    vc[r],
+                    cur_len + 1,
+                    heads=cfg.heads,
+                    kv_heads=cfg.kv_heads,
+                    head_dim=cfg.head_dim,
+                )
+            )
+        attn = jnp.concatenate(attn_rows, axis=0)
+        attn_out = matmul.matmul(attn, wo)
+        x = elementwise.add(x, attn_out)
+        h2 = elementwise.rmsnorm(x, ln2)
+        gu = matmul.matmul(h2, wgu)
+        act = elementwise.swiglu(gu)
+        down = matmul.matmul(act, wd)
+        x = elementwise.add(x, down)
+
+    final_norm, lm_head = weights[widx], weights[widx + 1]
+    xf = elementwise.rmsnorm(x, final_norm)
+    logits = matmul.matmul(xf, lm_head)
+    return (logits, *new_ks, *new_vs)
+
+
+def write_row(cache, row, cur_len):
+    """cache[B, S_MAX, kv], row[B, kv] -> cache with row at position
+    cur_len (dynamic index)."""
+    b, s_max, kv = cache.shape
+    onehot = (jnp.arange(s_max) == cur_len[0]).astype(cache.dtype)  # [S]
+    return cache * (1.0 - onehot)[None, :, None] + onehot[None, :, None] * row[:, None, :]
+
+
+def decode_step_shapes(cfg: TinyConfig, batch: int):
+    """Abstract input signature of `decode_step` for AOT lowering."""
+    import jax
+
+    f32 = jnp.float32
+    shapes = [
+        jax.ShapeDtypeStruct((batch,), jnp.int32),  # ids
+    ]
+    for _ in range(cfg.layers):
+        shapes.append(jax.ShapeDtypeStruct((batch, S_MAX, cfg.kv_dim), f32))
+    for _ in range(cfg.layers):
+        shapes.append(jax.ShapeDtypeStruct((batch, S_MAX, cfg.kv_dim), f32))
+    shapes.append(jax.ShapeDtypeStruct((1,), jnp.int32))  # cur_len
+    shapes.append(jax.ShapeDtypeStruct((cfg.vocab, cfg.d_model), f32))  # embed
+    for _ in range(cfg.layers):
+        for _, shp in layer_weights(cfg):
+            shapes.append(jax.ShapeDtypeStruct(shp, f32))
+    shapes.append(jax.ShapeDtypeStruct((cfg.d_model,), f32))  # final norm
+    shapes.append(jax.ShapeDtypeStruct((cfg.d_model, cfg.vocab), f32))  # lm head
+    return shapes
+
+
+def decode_step_flat(cfg: TinyConfig, batch: int):
+    """Wrap `decode_step` with a flat positional signature matching
+    `decode_step_shapes` (ids, k caches…, v caches…, cur_len, weights…)."""
+
+    def fn(*args):
+        ids = args[0]
+        kcaches = list(args[1 : 1 + cfg.layers])
+        vcaches = list(args[1 + cfg.layers : 1 + 2 * cfg.layers])
+        cur_len = args[1 + 2 * cfg.layers]
+        weights = args[2 + 2 * cfg.layers :]
+        return decode_step(cfg, ids, kcaches, vcaches, cur_len, *weights)
+
+    return fn

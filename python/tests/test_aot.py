@@ -1,0 +1,63 @@
+"""AOT manifest integrity: the contract between aot.py and the rust
+manifest loader. Runs only when artifacts have been built (cheap check,
+no re-lowering)."""
+
+import json
+import os
+
+import pytest
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def manifest():
+    path = os.path.join(ART, "manifest.json")
+    if not os.path.exists(path):
+        pytest.skip("artifacts not built (run `make artifacts`)")
+    with open(path) as f:
+        return json.load(f)
+
+
+def test_manifest_model_matches_tiny_config():
+    from compile.common import TinyConfig
+
+    m = manifest()["model"]
+    cfg = TinyConfig()
+    assert m["layers"] == cfg.layers
+    assert m["d_model"] == cfg.d_model
+    assert m["heads"] == cfg.heads
+    assert m["kv_heads"] == cfg.kv_heads
+    assert m["ffn"] == cfg.ffn
+    assert m["vocab"] == cfg.vocab
+
+
+def test_every_artifact_file_exists_and_is_hlo_text():
+    man = manifest()
+    assert len(man["artifacts"]) >= 25
+    for a in man["artifacts"]:
+        path = os.path.join(ART, a["file"])
+        assert os.path.exists(path), a["name"]
+        head = open(path).read(200)
+        assert "HloModule" in head, f"{a['name']} is not HLO text"
+
+
+def test_batch_specializations_complete():
+    man = manifest()
+    names = {a["name"] for a in man["artifacts"]}
+    for b in man["batch_sizes"]:
+        for stem in [f"matmul_b{b}_k256_n128", f"rmsnorm_b{b}", f"swiglu_b{b}",
+                     f"add_b{b}", f"embed_b{b}", f"ref_decode_b{b}"]:
+            assert stem in names, stem
+    assert "attn_q1" in names
+    assert "moe_gather_gemm_b8" in names
+
+
+def test_ref_decode_signature():
+    man = manifest()
+    cfg = man["model"]
+    ref = next(a for a in man["artifacts"] if a["name"] == "ref_decode_b1")
+    layers = cfg["layers"]
+    # ids + 2L caches + cur_len + embed + 6L weights + final + lm_head
+    assert len(ref["inputs"]) == 1 + 2 * layers + 1 + 1 + 6 * layers + 2
+    assert ref["outputs"] == 1 + 2 * layers
+    assert ref["inputs"][0]["dtype"] == "i32"

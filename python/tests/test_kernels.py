@@ -1,0 +1,174 @@
+"""Kernel-vs-oracle correctness: every Pallas kernel against its pure-jnp
+reference, including hypothesis sweeps over shapes and values. This is
+the L1 correctness signal the whole stack rests on."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import attention, elementwise, matmul, moe, ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def rand(shape, seed, scale=1.0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.standard_normal(shape, dtype=np.float32) * scale)
+
+
+# ---------------------------------------------------------------- matmul
+@pytest.mark.parametrize("m,k,n", [(1, 256, 128), (8, 512, 128), (4, 256, 512), (2, 128, 64)])
+def test_matmul_matches_ref(m, k, n):
+    x, w = rand((m, k), 1), rand((k, n), 2)
+    np.testing.assert_allclose(
+        matmul.matmul(x, w), ref.matmul_ref(x, w), rtol=1e-5, atol=1e-5
+    )
+
+
+def test_matmul_single_k_slab():
+    x, w = rand((2, 64), 3), rand((64, 32), 4)
+    np.testing.assert_allclose(
+        matmul.matmul(x, w, block_k=256), ref.matmul_ref(x, w), rtol=1e-5, atol=1e-5
+    )
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    m=st.integers(1, 8),
+    kblk=st.integers(1, 4),
+    n=st.sampled_from([16, 32, 128]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matmul_hypothesis_shapes(m, kblk, n, seed):
+    k = kblk * 128
+    x, w = rand((m, k), seed), rand((k, n), seed + 1)
+    np.testing.assert_allclose(
+        matmul.matmul(x, w), ref.matmul_ref(x, w), rtol=1e-4, atol=1e-4
+    )
+
+
+def test_matmul_rejects_bad_k():
+    with pytest.raises(AssertionError):
+        matmul.matmul(rand((2, 100), 0), rand((100, 16), 1), block_k=64)
+
+
+# ----------------------------------------------------------- elementwise
+@pytest.mark.parametrize("m,d", [(1, 256), (8, 256), (3, 64)])
+def test_rmsnorm_matches_ref(m, d):
+    x, w = rand((m, d), 5), rand((d,), 6)
+    np.testing.assert_allclose(
+        elementwise.rmsnorm(x, w), ref.rmsnorm_ref(x, w), rtol=1e-5, atol=1e-5
+    )
+
+
+def test_rmsnorm_scale_invariance():
+    # RMSNorm(a·x) == RMSNorm(x) for a > 0 (up to eps effects).
+    x, w = rand((4, 256), 7), rand((256,), 8)
+    a = elementwise.rmsnorm(x, w)
+    b = elementwise.rmsnorm(x * 1000.0, w)
+    np.testing.assert_allclose(a, b, rtol=1e-3, atol=1e-4)
+
+
+@settings(max_examples=15, deadline=None)
+@given(m=st.integers(1, 8), f=st.sampled_from([64, 256, 512]), seed=st.integers(0, 2**31 - 1))
+def test_swiglu_hypothesis(m, f, seed):
+    gu = rand((m, 2 * f), seed)
+    np.testing.assert_allclose(
+        elementwise.swiglu(gu), ref.swiglu_ref(gu), rtol=1e-5, atol=1e-5
+    )
+
+
+def test_swiglu_zero_gate_is_zero():
+    gu = jnp.concatenate([jnp.zeros((2, 64)), rand((2, 64), 9)], axis=-1)
+    np.testing.assert_allclose(elementwise.swiglu(gu), jnp.zeros((2, 64)), atol=1e-7)
+
+
+def test_add_matches_ref():
+    a, b = rand((4, 256), 10), rand((4, 256), 11)
+    np.testing.assert_allclose(elementwise.add(a, b), a + b, rtol=1e-6)
+
+
+# ------------------------------------------------------------- attention
+def attn_pair(seed, cur_len, heads=4, kv_heads=2, head_dim=64, s_max=64):
+    q = rand((1, heads * head_dim), seed)
+    kc = rand((s_max, kv_heads * head_dim), seed + 1)
+    vc = rand((s_max, kv_heads * head_dim), seed + 2)
+    ln = jnp.asarray([cur_len], dtype=jnp.int32)
+    got = attention.attention_decode(
+        q, kc, vc, ln, heads=heads, kv_heads=kv_heads, head_dim=head_dim
+    )
+    want = ref.attention_decode_ref(q, kc, vc, ln[0], heads, kv_heads, head_dim)
+    return got, want
+
+
+@pytest.mark.parametrize("cur_len", [1, 2, 17, 63, 64])
+def test_attention_matches_ref(cur_len):
+    got, want = attn_pair(20, cur_len)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+@settings(max_examples=15, deadline=None)
+@given(cur_len=st.integers(1, 64), seed=st.integers(0, 2**31 - 1))
+def test_attention_hypothesis(cur_len, seed):
+    got, want = attn_pair(seed, cur_len)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_attention_mask_excludes_padding():
+    # poisoning masked cache positions must not change the output.
+    heads, kv_heads, head_dim, s_max = 4, 2, 64, 64
+    q = rand((1, heads * head_dim), 30)
+    kc = rand((s_max, kv_heads * head_dim), 31)
+    vc = rand((s_max, kv_heads * head_dim), 32)
+    ln = jnp.asarray([10], dtype=jnp.int32)
+    base = attention.attention_decode(q, kc, vc, ln, heads=heads, kv_heads=kv_heads, head_dim=head_dim)
+    kc2 = kc.at[10:].set(1e6)
+    vc2 = vc.at[10:].set(-1e6)
+    poisoned = attention.attention_decode(q, kc2, vc2, ln, heads=heads, kv_heads=kv_heads, head_dim=head_dim)
+    np.testing.assert_allclose(base, poisoned, rtol=1e-5)
+
+
+def test_attention_single_valid_token_returns_its_value():
+    # with one valid cache entry, softmax weight is 1 on it.
+    heads, kv_heads, head_dim, s_max = 4, 2, 64, 64
+    q = rand((1, heads * head_dim), 33)
+    kc = rand((s_max, kv_heads * head_dim), 34)
+    vc = rand((s_max, kv_heads * head_dim), 35)
+    ln = jnp.asarray([1], dtype=jnp.int32)
+    out = attention.attention_decode(q, kc, vc, ln, heads=heads, kv_heads=kv_heads, head_dim=head_dim)
+    group = heads // kv_heads
+    want = jnp.concatenate(
+        [vc[0].reshape(kv_heads, head_dim)[h // group] for h in range(heads)]
+    ).reshape(1, -1)
+    np.testing.assert_allclose(out, want, rtol=1e-5)
+
+
+# ------------------------------------------------------------------ moe
+@settings(max_examples=10, deadline=None)
+@given(b=st.integers(1, 8), expert=st.integers(0, 3), seed=st.integers(0, 2**31 - 1))
+def test_moe_gather_gemm_hypothesis(b, expert, seed):
+    rng = np.random.default_rng(seed)
+    x = rand((b, 64), seed)
+    idx = jnp.asarray(rng.integers(0, 4, size=(b, 2)), dtype=jnp.int32)
+    w = rand((64, 32), seed + 1)
+    got = moe.moe_gather_gemm(x, idx, w, expert=expert)
+    want = ref.moe_gather_gemm_ref(x, idx, w, expert)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+def test_moe_unrouted_rows_are_zero():
+    x = rand((4, 64), 40)
+    idx = jnp.zeros((4, 2), dtype=jnp.int32)  # everyone routed to expert 0
+    w = rand((64, 32), 41)
+    out = moe.moe_gather_gemm(x, idx, w, expert=3)
+    np.testing.assert_allclose(out, jnp.zeros((4, 32)), atol=1e-7)
+
+
+def test_topk_route_weights_sum_to_one():
+    x = rand((8, 64), 42)
+    wg = rand((64, 16), 43)
+    idx, w = ref.topk_route_ref(x, wg, 4)
+    assert idx.shape == (8, 4)
+    np.testing.assert_allclose(np.sum(np.asarray(w), axis=-1), np.ones(8), rtol=1e-5)

@@ -1,0 +1,126 @@
+"""L2 model-level tests: decode_step shape contract, KV append
+semantics, and a 2-step decode consistency check (the cache written at
+step t is what attention reads at step t+1)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as model_mod
+from compile.common import S_MAX, TinyConfig
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+CFG = TinyConfig()
+
+
+def make_weights(cfg: TinyConfig, seed=0):
+    rng = np.random.default_rng(seed)
+
+    def r(shape, scale):
+        return jnp.asarray(rng.standard_normal(shape, dtype=np.float32) * scale)
+
+    ws = [r((cfg.vocab, cfg.d_model), 0.05)]
+    for _ in range(cfg.layers):
+        for name, shp in model_mod.layer_weights(cfg):
+            scale = 1.0 if name.startswith("ln") else 0.05
+            ws.append(r(shp, scale) if not name.startswith("ln") else jnp.ones(shp))
+    ws.append(jnp.ones((cfg.d_model,)))
+    ws.append(r((cfg.d_model, cfg.vocab), 0.05))
+    return ws
+
+
+def empty_caches(cfg: TinyConfig, b: int):
+    kc = [jnp.zeros((b, S_MAX, cfg.kv_dim)) for _ in range(cfg.layers)]
+    vc = [jnp.zeros((b, S_MAX, cfg.kv_dim)) for _ in range(cfg.layers)]
+    return kc, vc
+
+
+@pytest.mark.parametrize("b", [1, 2, 4])
+def test_decode_step_shapes(b):
+    ws = make_weights(CFG)
+    kc, vc = empty_caches(CFG, b)
+    ids = jnp.arange(b, dtype=jnp.int32)
+    out = model_mod.decode_step(CFG, ids, kc, vc, jnp.asarray([0], jnp.int32), *ws)
+    logits = out[0]
+    assert logits.shape == (b, CFG.vocab)
+    assert len(out) == 1 + 2 * CFG.layers
+    for nk in out[1 : 1 + CFG.layers]:
+        assert nk.shape == (b, CFG.kv_dim)
+
+
+def test_write_row_places_at_cur_len():
+    cache = jnp.zeros((2, S_MAX, 4))
+    row = jnp.ones((2, 4)) * 7.0
+    out = model_mod.write_row(cache, row, jnp.asarray([5], jnp.int32))
+    np.testing.assert_allclose(out[:, 5, :], row)
+    np.testing.assert_allclose(out[:, 4, :], 0.0)
+    np.testing.assert_allclose(out[:, 6, :], 0.0)
+
+
+def test_write_row_preserves_existing():
+    cache = jnp.ones((1, S_MAX, 4)) * 3.0
+    row = jnp.zeros((1, 4))
+    out = model_mod.write_row(cache, row, jnp.asarray([2], jnp.int32))
+    np.testing.assert_allclose(out[0, 1, :], 3.0)
+    np.testing.assert_allclose(out[0, 2, :], 0.0)
+
+
+def test_two_step_decode_uses_appended_kv():
+    """Step 1's K/V must influence step 2's logits: running step 2 with
+    and without step 1's rows appended must differ."""
+    b = 1
+    ws = make_weights(CFG, seed=3)
+    kc, vc = empty_caches(CFG, b)
+    ids0 = jnp.asarray([5], jnp.int32)
+    out0 = model_mod.decode_step(CFG, ids0, kc, vc, jnp.asarray([0], jnp.int32), *ws)
+    new_ks = out0[1 : 1 + CFG.layers]
+    new_vs = out0[1 + CFG.layers :]
+    # append step-0 KV at position 0.
+    kc1 = [model_mod.write_row(kc[l], new_ks[l], jnp.asarray([0], jnp.int32)) for l in range(CFG.layers)]
+    vc1 = [model_mod.write_row(vc[l], new_vs[l], jnp.asarray([0], jnp.int32)) for l in range(CFG.layers)]
+    ids1 = jnp.asarray([7], jnp.int32)
+    with_history = model_mod.decode_step(CFG, ids1, kc1, vc1, jnp.asarray([1], jnp.int32), *ws)[0]
+    without_history = model_mod.decode_step(CFG, ids1, kc, vc, jnp.asarray([1], jnp.int32), *ws)[0]
+    assert not np.allclose(np.asarray(with_history), np.asarray(without_history)), (
+        "history K/V had no effect — cache append is broken"
+    )
+
+
+def test_decode_matches_manual_composition():
+    """decode_step == manual layer-by-layer composition from the refs."""
+    b = 2
+    cfg = CFG
+    ws = make_weights(cfg, seed=9)
+    kc, vc = empty_caches(cfg, b)
+    ids = jnp.asarray([3, 100], jnp.int32)
+    cur = jnp.asarray([0], jnp.int32)
+    got = model_mod.decode_step(cfg, ids, kc, vc, cur, *ws)[0]
+
+    widx = 0
+    x = ref.embed_ref(ids, ws[widx]); widx += 1
+    for _ in range(cfg.layers):
+        ln1, wqkv, wo, ln2, wgu, wd = ws[widx : widx + 6]; widx += 6
+        h = ref.rmsnorm_ref(x, ln1)
+        qkv = ref.matmul_ref(h, wqkv)
+        q = qkv[:, : cfg.q_dim]
+        k = qkv[:, cfg.q_dim : cfg.q_dim + cfg.kv_dim]
+        v = qkv[:, cfg.q_dim + cfg.kv_dim :]
+        rows = []
+        for r in range(b):
+            kcr = jnp.zeros((S_MAX, cfg.kv_dim)).at[0].set(k[r])
+            vcr = jnp.zeros((S_MAX, cfg.kv_dim)).at[0].set(v[r])
+            rows.append(
+                ref.attention_decode_ref(
+                    q[r : r + 1], kcr, vcr, jnp.int32(1), cfg.heads, cfg.kv_heads, cfg.head_dim
+                )
+            )
+        attn = jnp.concatenate(rows, axis=0)
+        x = ref.add_ref(x, ref.matmul_ref(attn, wo))
+        h2 = ref.rmsnorm_ref(x, ln2)
+        act = ref.swiglu_ref(ref.matmul_ref(h2, wgu))
+        x = ref.add_ref(x, ref.matmul_ref(act, wd))
+    xf = ref.rmsnorm_ref(x, ws[widx]); widx += 1
+    want = ref.matmul_ref(xf, ws[widx])
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-3, atol=1e-4)

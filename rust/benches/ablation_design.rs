@@ -1,0 +1,73 @@
+//! Design-choice ablations called out in DESIGN.md:
+//!
+//! 1. scheduling policy — decentralized (paper default) vs globally
+//!    coordinated (§6.1 names this as the alternative the runtime could
+//!    support); 2. event fusion on/off (what Table 2's "Fusion" column
+//!    buys at runtime); 3. task-granularity sweep (tasks ∝ SMs is the
+//!    paper's default — what happens at 0.5× / 2× / 4×?).
+
+use mpk::models::{build_decode_graph, GraphOptions, ModelConfig};
+use mpk::sim::engine::SchedPolicy;
+use mpk::sim::{simulate_megakernel, GpuSpec, SimOptions};
+use mpk::tgraph::{compile, CompileOptions, DecomposeConfig};
+use mpk::util::Table;
+
+fn main() {
+    let gpu = GpuSpec::b200();
+    let cfg = ModelConfig::qwen3_1_7b();
+    let g = build_decode_graph(&cfg, &GraphOptions { batch: 4, kv_len: 512, ..Default::default() });
+    let mk = |target: usize, fuse: bool| {
+        compile(
+            &g,
+            &CompileOptions {
+                decompose: DecomposeConfig { target_tasks: target, min_tile_cols: 8 },
+                fuse,
+                ..Default::default()
+            },
+        )
+    };
+
+    println!("== ablation 1: scheduling policy (Qwen3-1.7B, batch 4, B200) ==\n");
+    let c = mk(gpu.workers, true);
+    let mut t = Table::new(&["policy", "makespan µs", "vs decentralized"]);
+    let dec = simulate_megakernel(&c, &gpu, &SimOptions::default()).makespan_us;
+    let glob = simulate_megakernel(
+        &c,
+        &gpu,
+        &SimOptions { policy: SchedPolicy::GlobalQueue, ..Default::default() },
+    )
+    .makespan_us;
+    t.row(vec!["decentralized (paper)".into(), format!("{dec:.0}"), "1.00x".into()]);
+    t.row(vec!["global queue".into(), format!("{glob:.0}"), format!("{:.2}x", glob / dec)]);
+    println!("{}", t.render());
+    println!("the paper's decentralized choice avoids the serialized grant path;");
+    println!("with ~{} tasks a single coordinator becomes the bottleneck.\n", c.tgraph.tasks.len());
+
+    println!("== ablation 2: event fusion on/off ==\n");
+    let mut t = Table::new(&["fusion", "events", "makespan µs"]);
+    for (label, fuse) in [("on (paper)", true), ("off", false)] {
+        let c = mk(gpu.workers, fuse);
+        let r = simulate_megakernel(&c, &gpu, &SimOptions::default());
+        t.row(vec![label.into(), c.stats().events.to_string(), format!("{:.0}", r.makespan_us)]);
+    }
+    println!("{}", t.render());
+    println!("fusion mainly shrinks synchronization state (Table 2); the");
+    println!("schedule itself is dependency-equivalent, so makespans are close.\n");
+
+    println!("== ablation 3: task-granularity sweep (tasks per op vs workers) ==\n");
+    let mut t = Table::new(&["target tasks/op", "makespan µs", "utilization"]);
+    for mult in [0.5f64, 1.0, 2.0, 4.0] {
+        let target = ((gpu.workers as f64) * mult) as usize;
+        let c = mk(target.max(1), true);
+        let r = simulate_megakernel(&c, &gpu, &SimOptions::default());
+        t.row(vec![
+            format!("{:.1}x workers", mult),
+            format!("{:.0}", r.makespan_us),
+            format!("{:.2}", r.utilization),
+        ]);
+    }
+    println!("{}", t.render());
+    println!("tasks ∝ SMs (1x) balances decomposition overhead against load");
+    println!("balance — the paper's default; 0.5x starves workers, 4x pays");
+    println!("per-task dispatch without improving balance much.");
+}

@@ -1,0 +1,38 @@
+//! Figure 10: MoE execution strategies — Qwen3-30B-A3B on B200,
+//! batch 1–16. MPK-Hybrid vs MPK-Static vs fully-dynamic vs SGLang-MoE.
+//! Values are one MoE block's runtime in µs (lower is better); the
+//! speedup column is MPK-Hybrid over SGLang-MoE as in the paper.
+
+use mpk::models::ModelConfig;
+use mpk::moe::{dynamic_us, hybrid_us, route, sglang_us, static_partition_us, Skew};
+use mpk::sim::GpuSpec;
+use mpk::util::Table;
+
+fn main() {
+    println!("== Figure 10: MoE runtime per block (µs), Qwen3-30B-A3B on B200 ==\n");
+    let cfg = ModelConfig::qwen3_30b_a3b();
+    let moe = cfg.moe.unwrap();
+    let gpu = GpuSpec::b200();
+    for (label, skew) in [("skewed routing (Zipf 1.2)", Skew::Zipf(1.2)), ("uniform routing", Skew::Uniform)] {
+        let mut t = Table::new(&["batch", "MPK-Hybrid", "MPK-Static", "Dynamic", "SGLang-MoE", "speedup"]);
+        for b in [1usize, 2, 4, 8, 16] {
+            let r = route(b, moe.num_experts, moe.top_k, skew, 7 + b as u64);
+            let hy = hybrid_us(&moe, cfg.d_model, &r, &gpu).us;
+            let st = static_partition_us(&moe, cfg.d_model, &r, &gpu, 16).us;
+            let dy = dynamic_us(&moe, cfg.d_model, &r, &gpu).us;
+            let sg = sglang_us(&moe, cfg.d_model, &r, &gpu).us;
+            t.row(vec![
+                b.to_string(),
+                format!("{hy:.1}"),
+                format!("{st:.1}"),
+                format!("{dy:.1}"),
+                format!("{sg:.1}"),
+                format!("{:.2}x", sg / hy),
+            ]);
+        }
+        println!("--- {label} ---");
+        println!("{}", t.render());
+    }
+    println!("paper shape: Hybrid consistently beats Static across batch sizes;");
+    println!("gather fusion removes the ~11% preprocessing SGLang pays at batch 1.");
+}

@@ -1,0 +1,53 @@
+//! Figure 12: cross-task pipelining ablation — the final linear layer
+//! (lm_head) of Qwen3-8B on B200. MPK-Pipe vs MPK-No-Pipe vs a
+//! cuBLAS-class monolithic kernel. Values in µs, lower is better.
+
+use mpk::models::ModelConfig;
+use mpk::ops::{CompGraph, DType, OpKind};
+use mpk::sim::{op_kernel_us, simulate_megakernel, task_costs, GpuSpec, SimOptions};
+use mpk::tgraph::{compile, CompileOptions, DecomposeConfig};
+use mpk::util::Table;
+
+fn main() {
+    println!("== Figure 12: cross-task pipelining on the final linear layer ==");
+    println!("(Qwen3-8B lm_head: [b,4096] x [4096,151936] on B200)\n");
+    let gpu = GpuSpec::b200();
+    let cfg = ModelConfig::qwen3_8b();
+    let mut t = Table::new(&["batch", "MPK-Pipe", "MPK-No-Pipe", "cuBLAS-class", "Pipe speedup"]);
+    for b in [1usize, 4, 8, 16] {
+        // isolated graph: just the lm_head matmul.
+        let mut g = CompGraph::new();
+        let x = g.input("x", vec![b, cfg.d_model], DType::BF16);
+        let w = g.param("lm_head", vec![cfg.d_model, cfg.vocab], DType::BF16);
+        g.op("lm_head_mm", OpKind::MatMul, &[x, w], vec![b, cfg.vocab], DType::BF16);
+        let c = compile(
+            &g,
+            &CompileOptions {
+                // multiple task rounds per worker: cross-task pipelining
+                // only exists when a worker runs tasks back-to-back.
+                decompose: DecomposeConfig { target_tasks: 4 * gpu.workers, min_tile_cols: 8 },
+                ..Default::default()
+            },
+        );
+        // deterministic (jitter-free) for a clean ablation read.
+        let pipe = simulate_megakernel(&c, &gpu, &SimOptions { jitter: 0.0, ..Default::default() });
+        let nopipe = simulate_megakernel(
+            &c,
+            &gpu,
+            &SimOptions { pipelining: false, jitter: 0.0, ..Default::default() },
+        );
+        let costs = task_costs(&c, &gpu, None);
+        let cublas = op_kernel_us(&c, &costs, 0, &gpu, None) + gpu.launch_us_graph;
+        t.row(vec![
+            b.to_string(),
+            format!("{:.1}", pipe.makespan_us),
+            format!("{:.1}", nopipe.makespan_us),
+            format!("{cublas:.1}"),
+            format!("{:.2}x", nopipe.makespan_us / pipe.makespan_us),
+        ]);
+    }
+    println!("{}", t.render());
+    println!("paper shape: pipelining buys 1.2-1.3x and edges out cuBLAS.");
+    println!("mechanism: back-to-back tasks keep the HBM pipe warm (bw_eff");
+    println!("0.95 vs 0.75 cold; a monolithic kernel sustains ~0.88).");
+}

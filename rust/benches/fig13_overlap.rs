@@ -1,0 +1,29 @@
+//! Figure 13: compute–communication overlap ablation — Qwen3-1.7B on
+//! 4×H100, fine-grained events vs coarse per-collective events
+//! (Figure 5c semantics). Per-iteration latency in µs, lower is better.
+
+use mpk::models::ModelConfig;
+use mpk::multigpu::tp::{mpk_iteration_us, plan};
+use mpk::sim::{GpuSpec, LinkSpec};
+use mpk::tgraph::DepGranularity;
+use mpk::util::Table;
+
+fn main() {
+    println!("== Figure 13: compute-communication overlap, Qwen3-1.7B on 4xH100 ==\n");
+    let gpu = GpuSpec::h100();
+    let link = LinkSpec::nvlink_h100();
+    let cfg = ModelConfig::qwen3_1_7b();
+    let mut t = Table::new(&["batch", "overlap ON (fine)", "overlap OFF (coarse)", "benefit"]);
+    for b in [1usize, 4, 8, 16] {
+        let fine = plan(&cfg, b, 512, 4, &gpu, DepGranularity::Fine);
+        let coarse = plan(&cfg, b, 512, 4, &gpu, DepGranularity::CoarseCollectives);
+        let f = mpk_iteration_us(&fine, &gpu, &link, true);
+        let c = mpk_iteration_us(&coarse, &gpu, &link, true);
+        t.row(vec![b.to_string(), format!("{f:.0}"), format!("{c:.0}"), format!("{:.3}x", c / f)]);
+    }
+    println!("{}", t.render());
+    println!("paper shape: fine-grained dependencies reduce per-iteration");
+    println!("latency ~1.1x; our roofline DES reproduces the direction with a");
+    println!("smaller magnitude (completion-time spread is the only staggering");
+    println!("source we model — see EXPERIMENTS.md).");
+}

@@ -1,0 +1,82 @@
+//! Hot-path microbenchmarks for the perf pass (§Perf in
+//! EXPERIMENTS.md): queue ops, event notification, compiler stages, DES
+//! throughput, and tile marshalling into the PJRT pool. Custom harness
+//! (criterion unavailable offline): warmup + median-of-N on the
+//! monotonic clock.
+
+use mpk::megakernel::{EventTable, MpmcQueue};
+use mpk::models::{build_decode_graph, GraphOptions, ModelConfig};
+use mpk::sim::{simulate_megakernel, GpuSpec, SimOptions};
+use mpk::tgraph::{analyze_deps, compile, decompose, CompileOptions, DecomposeConfig};
+use mpk::util::{bench_median_ns, Table};
+
+fn main() {
+    println!("== hot-path microbenchmarks (median ns unless noted) ==\n");
+    let mut t = Table::new(&["benchmark", "median", "note"]);
+
+    // queue push+pop round trip
+    let q: MpmcQueue<usize> = MpmcQueue::new(1024);
+    let ns = bench_median_ns(1000, 20000, || {
+        q.push(1).unwrap();
+        std::hint::black_box(q.pop());
+    });
+    t.row(vec!["MpmcQueue push+pop".into(), format!("{ns} ns"), "per task dispatch".into()]);
+
+    // event notify
+    let ev = EventTable::new(&[u32::MAX as usize]);
+    let ns = bench_median_ns(1000, 20000, || {
+        std::hint::black_box(ev.notify(0));
+    });
+    t.row(vec!["EventTable notify".into(), format!("{ns} ns"), "atomicAdd analogue".into()]);
+
+    // compiler stages on Qwen3-1.7B
+    let cfg = ModelConfig::qwen3_1_7b();
+    let gpu = GpuSpec::b200();
+    let g = build_decode_graph(&cfg, &GraphOptions { batch: 1, kv_len: 512, ..Default::default() });
+    let dc = DecomposeConfig { target_tasks: gpu.workers, min_tile_cols: 8 };
+
+    let ns = bench_median_ns(1, 5, || {
+        std::hint::black_box(decompose(&g, &dc));
+    });
+    t.row(vec!["decompose (1.7B)".into(), format!("{:.2} ms", ns as f64 / 1e6), "per graph".into()]);
+
+    let d = decompose(&g, &dc);
+    let ns = bench_median_ns(1, 5, || {
+        std::hint::black_box(analyze_deps(&g, &d));
+    });
+    t.row(vec!["dependency analysis (1.7B)".into(), format!("{:.2} ms", ns as f64 / 1e6), "pairwise overlap".into()]);
+
+    let ns = bench_median_ns(1, 5, || {
+        std::hint::black_box(compile(&g, &CompileOptions { decompose: dc, ..Default::default() }));
+    });
+    t.row(vec!["full compile (1.7B)".into(), format!("{:.2} ms", ns as f64 / 1e6), "all stages".into()]);
+
+    // DES throughput
+    let c = compile(&g, &CompileOptions { decompose: dc, ..Default::default() });
+    let ns = bench_median_ns(1, 5, || {
+        std::hint::black_box(simulate_megakernel(&c, &gpu, &SimOptions::default()));
+    });
+    let tasks = c.tgraph.tasks.len();
+    t.row(vec![
+        "DES replay (1.7B)".into(),
+        format!("{:.2} ms", ns as f64 / 1e6),
+        format!("{:.0} ktasks/s", tasks as f64 / (ns as f64 / 1e9) / 1000.0),
+    ]);
+
+    // threaded megakernel dispatch-only throughput (no-op tasks)
+    let tiny = ModelConfig::tiny();
+    let gt = build_decode_graph(&tiny, &GraphOptions { batch: 4, kv_len: 16, ..Default::default() });
+    let ct = compile(&gt, &CompileOptions { decompose: DecomposeConfig { target_tasks: 16, min_tile_cols: 8 }, ..Default::default() });
+    let mk = mpk::megakernel::MegaKernel::new(&ct, mpk::megakernel::MegaConfig { workers: 4, schedulers: 1, ..Default::default() });
+    let ns = bench_median_ns(2, 10, || {
+        mk.run(&|_: &mpk::tgraph::TaskDesc| {}).unwrap();
+    });
+    let nt = ct.tgraph.tasks.len();
+    t.row(vec![
+        "threaded megakernel (no-op tasks)".into(),
+        format!("{:.2} ms", ns as f64 / 1e6),
+        format!("{} tasks, {:.0} ns/task", nt, ns as f64 / nt as f64),
+    ]);
+
+    println!("{}", t.render());
+}

@@ -1,0 +1,199 @@
+//! Task → artifact binding: the executor that megakernel workers call
+//! on the real-numerics path.
+//!
+//! Each compute task's tile is mapped to one AOT artifact plus input
+//! slices from the [`TensorStore`]; results are written back to the
+//! task's output tile. `KvAppend` is executed natively (pure cache
+//! bookkeeping, zero flops — the §6.1 in-kernel KV metadata update).
+
+use crate::exec::store::TensorStore;
+use crate::megakernel::runtime::TaskExecutor;
+use crate::ops::{CompGraph, OpKind, Region};
+use crate::runtime::pool::{ExecPool, Value};
+use crate::runtime::Manifest;
+use crate::tgraph::{TaskDesc, TaskKind};
+use std::sync::Mutex;
+
+/// Executes tile tasks against the PJRT pool.
+pub struct TileExecutor<'a> {
+    pub graph: &'a CompGraph,
+    pub store: &'a TensorStore,
+    pub pool: &'a ExecPool,
+    pub batch: usize,
+    /// Valid cache length *before* this iteration's token, per batch
+    /// row (continuous batching admits requests at different times, so
+    /// rows carry different cache lengths). The new K/V row is written
+    /// at this position.
+    pub row_lens: Mutex<Vec<usize>>,
+    /// First execution error, if any (the runtime has no error channel;
+    /// tests assert this is None afterwards).
+    pub error: Mutex<Option<String>>,
+}
+
+impl<'a> TileExecutor<'a> {
+    pub fn new(graph: &'a CompGraph, store: &'a TensorStore, pool: &'a ExecPool, batch: usize) -> Self {
+        TileExecutor {
+            graph,
+            store,
+            pool,
+            batch,
+            row_lens: Mutex::new(vec![0; batch]),
+            error: Mutex::new(None),
+        }
+    }
+
+    /// Uniform cache length for all rows (the validation path).
+    pub fn set_cur_len(&self, l: usize) {
+        let mut g = self.row_lens.lock().unwrap();
+        g.iter_mut().for_each(|x| *x = l);
+    }
+
+    /// Per-row cache lengths (continuous batching).
+    pub fn set_row_lens(&self, lens: &[usize]) {
+        let mut g = self.row_lens.lock().unwrap();
+        assert_eq!(lens.len(), self.batch);
+        g.copy_from_slice(lens);
+    }
+
+    fn row_len(&self, r: usize) -> usize {
+        self.row_lens.lock().unwrap()[r]
+    }
+
+    pub fn take_error(&self) -> Option<String> {
+        self.error.lock().unwrap().take()
+    }
+
+    fn fail(&self, e: String) {
+        let mut g = self.error.lock().unwrap();
+        if g.is_none() {
+            *g = Some(e);
+        }
+    }
+
+    fn meta(&self) -> &Manifest {
+        self.pool.manifest()
+    }
+
+    fn run_compute(&self, op_id: usize, kind: &OpKind, out_region: &Region) -> Result<(), String> {
+        let op = &self.graph.ops[op_id];
+        let b = self.batch;
+        let m = self.meta().model;
+        match kind {
+            OpKind::Embedding => {
+                let ids: Vec<i32> =
+                    self.store.get(op.inputs[0]).iter().map(|&v| v as i32).collect();
+                let table = self.store.get(op.inputs[1]);
+                let out = self
+                    .pool
+                    .execute_by_name(&format!("embed_b{b}"), vec![Value::I32(ids), Value::F32(table)])?;
+                self.store.set(op.output, out.into_iter().next().unwrap());
+            }
+            OpKind::RmsNorm => {
+                let x = self.store.get(op.inputs[0]);
+                let w = self.store.get(op.inputs[1]);
+                let out =
+                    self.pool.execute_by_name(&format!("rmsnorm_b{b}"), vec![Value::F32(x), Value::F32(w)])?;
+                self.store.set(op.output, out.into_iter().next().unwrap());
+            }
+            OpKind::MatMul => {
+                let k = self.graph.tensor(op.inputs[0]).shape[1];
+                let (c0, c1) = out_region.dims[1];
+                let tile_n = self.meta().tile_n;
+                if c1 - c0 != tile_n {
+                    return Err(format!(
+                        "matmul tile width {} != artifact tile {}",
+                        c1 - c0,
+                        tile_n
+                    ));
+                }
+                let x = self.store.get(op.inputs[0]);
+                let w = self.store.read_tile(op.inputs[1], &Region::new(vec![(0, k), (c0, c1)]));
+                let out = self.pool.execute_by_name(
+                    &format!("matmul_b{b}_k{k}_n{tile_n}"),
+                    vec![Value::F32(x), Value::F32(w)],
+                )?;
+                self.store.write_tile(op.output, out_region, &out.into_iter().next().unwrap());
+            }
+            OpKind::Attention { .. } => {
+                // one task per request row.
+                let (r0, r1) = out_region.dims[0];
+                debug_assert_eq!(r1 - r0, 1, "attention tasks are per-request");
+                let r = r0;
+                let q_dim = m.q_dim();
+                let kv_dim = m.kv_dim();
+                let s_max = self.meta().s_max;
+                // inputs: [qkv, kcache, vcache, kv_new]
+                let q = self.store.read_tile(op.inputs[0], &Region::new(vec![(r, r + 1), (0, q_dim)]));
+                let kc = self
+                    .store
+                    .read_tile(op.inputs[1], &Region::new(vec![(r, r + 1), (0, s_max), (0, kv_dim)]));
+                let vc = self
+                    .store
+                    .read_tile(op.inputs[2], &Region::new(vec![(r, r + 1), (0, s_max), (0, kv_dim)]));
+                let valid = self.row_len(r) + 1;
+                let out = self.pool.execute_by_name(
+                    "attn_q1",
+                    vec![Value::F32(q), Value::F32(kc), Value::F32(vc), Value::I32(vec![valid as i32])],
+                )?;
+                self.store.write_tile(
+                    op.output,
+                    &Region::new(vec![(r, r + 1), (0, q_dim)]),
+                    &out.into_iter().next().unwrap(),
+                );
+            }
+            OpKind::KvAppend => {
+                // native: copy this step's K/V rows from the fused qkv
+                // output into the caches at position cur_len.
+                let q_dim = m.q_dim();
+                let kv_dim = m.kv_dim();
+                let qkv = op.inputs[0];
+                for r in 0..b {
+                    let pos = self.row_len(r);
+                    let krow = self
+                        .store
+                        .read_tile(qkv, &Region::new(vec![(r, r + 1), (q_dim, q_dim + kv_dim)]));
+                    let vrow = self.store.read_tile(
+                        qkv,
+                        &Region::new(vec![(r, r + 1), (q_dim + kv_dim, q_dim + 2 * kv_dim)]),
+                    );
+                    self.store.write_tile(
+                        op.inputs[2],
+                        &Region::new(vec![(r, r + 1), (pos, pos + 1), (0, kv_dim)]),
+                        &krow,
+                    );
+                    self.store.write_tile(
+                        op.inputs[3],
+                        &Region::new(vec![(r, r + 1), (pos, pos + 1), (0, kv_dim)]),
+                        &vrow,
+                    );
+                }
+            }
+            OpKind::Add => {
+                let a = self.store.get(op.inputs[0]);
+                let c = self.store.get(op.inputs[1]);
+                let out =
+                    self.pool.execute_by_name(&format!("add_b{b}"), vec![Value::F32(a), Value::F32(c)])?;
+                self.store.set(op.output, out.into_iter().next().unwrap());
+            }
+            OpKind::SwiGLU => {
+                let gu = self.store.get(op.inputs[0]);
+                let out = self.pool.execute_by_name(&format!("swiglu_b{b}"), vec![Value::F32(gu)])?;
+                self.store.set(op.output, out.into_iter().next().unwrap());
+            }
+            other => {
+                return Err(format!("real path does not support op kind {other:?}"));
+            }
+        }
+        Ok(())
+    }
+}
+
+impl TaskExecutor for TileExecutor<'_> {
+    fn execute(&self, task: &TaskDesc) {
+        if let TaskKind::Compute { op, kind } = &task.kind {
+            if let Err(e) = self.run_compute(*op, kind, &task.out_region) {
+                self.fail(format!("task {} ({}): {e}", task.id, self.graph.ops[*op].name));
+            }
+        }
+    }
+}

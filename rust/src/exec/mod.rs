@@ -1,0 +1,9 @@
+//! Real-numerics execution of compiled tGraphs: tensor store, task →
+//! artifact binding, and the end-to-end validated decode path.
+pub mod binder;
+pub mod real;
+pub mod store;
+
+pub use binder::TileExecutor;
+pub use real::{build_real_graph, compile_real, init_weights, run_iteration, run_reference, RealSession};
+pub use store::TensorStore;

@@ -1,0 +1,274 @@
+//! The real-numerics end-to-end path: build the tiny-model graph with
+//! artifact-aligned partition hints, synthesize deterministic weights,
+//! run one decode iteration on the megakernel, and validate against the
+//! fused reference artifact.
+
+use crate::exec::binder::TileExecutor;
+use crate::exec::store::TensorStore;
+use crate::megakernel::{MegaConfig, MegaKernel, RunReport};
+use crate::models::{build_decode_graph, GraphOptions, ModelConfig};
+use crate::ops::{CompGraph, DType, OpKind};
+use crate::runtime::pool::{ExecPool, Value};
+use crate::runtime::Manifest;
+use crate::tgraph::{compile, CompileOptions, CompiledGraph, DecomposeConfig};
+use crate::util::XorShift64;
+
+/// Build the tiny-model decode graph whose tiles line up with the AOT
+/// artifacts: matmuls tiled to `tile_n` columns, attention per request,
+/// everything else whole-tensor.
+pub fn build_real_graph(manifest: &Manifest, batch: usize) -> CompGraph {
+    let cfg = ModelConfig::tiny();
+    let m = manifest.model;
+    assert_eq!(
+        (m.layers, m.d_model, m.heads, m.kv_heads, m.head_dim, m.ffn, m.vocab),
+        (cfg.layers, cfg.d_model, cfg.heads, cfg.kv_heads, cfg.head_dim, cfg.ffn, cfg.vocab),
+        "rust ModelConfig::tiny() out of sync with python TinyConfig"
+    );
+    let mut g = build_decode_graph(
+        &cfg,
+        &GraphOptions {
+            batch,
+            kv_len: manifest.s_max - 1,
+            dtype: DType::F32,
+            // explicit KvAppend: the artifact set has a separate native
+            // append step (the fused variant is for the perf graphs).
+            fused_kv_append: false,
+            ..Default::default()
+        },
+    );
+    let tile_n = manifest.tile_n;
+    for op in g.ops.iter_mut() {
+        let out_shape = op.output;
+        let _ = out_shape;
+        op.partition_hint = Some(match op.kind {
+            OpKind::MatMul => vec![1, 0], // cols filled below
+            OpKind::Attention { .. } => vec![batch, 1],
+            _ => vec![1; 2],
+        });
+    }
+    // second pass with shapes in hand (borrow rules: shapes are on g).
+    let shapes: Vec<Vec<usize>> = g.ops.iter().map(|o| g.tensors[o.output].shape.clone()).collect();
+    for (op, shape) in g.ops.iter_mut().zip(shapes) {
+        match op.kind {
+            OpKind::MatMul => {
+                assert_eq!(shape[1] % tile_n, 0, "{}: N={} not tileable", op.name, shape[1]);
+                op.partition_hint = Some(vec![1, shape[1] / tile_n]);
+            }
+            OpKind::Attention { .. } => {}
+            _ => {
+                op.partition_hint = Some(vec![1; shape.len()]);
+            }
+        }
+    }
+    g
+}
+
+/// Compile the real graph for the megakernel.
+pub fn compile_real(manifest: &Manifest, batch: usize) -> CompiledGraph {
+    let g = build_real_graph(manifest, batch);
+    compile(
+        &g,
+        &CompileOptions {
+            decompose: DecomposeConfig { target_tasks: 8, min_tile_cols: 8 },
+            ..Default::default()
+        },
+    )
+}
+
+/// Deterministically synthesize weights into the store (seeded per
+/// tensor id): norm weights = 1, projections ~ U(-0.05, 0.05).
+pub fn init_weights(g: &CompGraph, store: &TensorStore, seed: u64) {
+    for t in &g.tensors {
+        if !t.is_param {
+            continue;
+        }
+        if t.name.contains("ln") || t.name.contains("norm") {
+            store.set(t.id, vec![1.0; t.numel()]);
+        } else {
+            // seed by *name* so the same weight tensor gets identical
+            // values in every batch-size-specialized graph.
+            let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+            for b in t.name.as_bytes() {
+                h = (h ^ *b as u64).wrapping_mul(0x1000_0000_01b3);
+            }
+            let mut rng = XorShift64::new(seed ^ h);
+            store.set(t.id, (0..t.numel()).map(|_| rng.unit_f32() * 0.05).collect());
+        }
+    }
+}
+
+/// Write this iteration's token ids into the store.
+pub fn set_ids(g: &CompGraph, store: &TensorStore, ids: &[i32]) {
+    let t = g.tensor_by_name("token_ids").expect("token_ids input");
+    store.set(t.id, ids.iter().map(|&i| i as f32).collect());
+}
+
+/// Fetch the logits produced by the last iteration.
+pub fn get_logits(g: &CompGraph, store: &TensorStore) -> Vec<f32> {
+    let t = g.tensor_by_name("lm_head").expect("lm_head output");
+    store.get(t.id)
+}
+
+/// Run one decode iteration on the megakernel with real numerics.
+pub fn run_iteration(
+    kernel: &MegaKernel,
+    exec: &TileExecutor,
+    cur_len: usize,
+) -> Result<RunReport, String> {
+    exec.set_cur_len(cur_len);
+    let report = kernel.run(exec)?;
+    if let Some(e) = exec.take_error() {
+        return Err(e);
+    }
+    Ok(report)
+}
+
+/// Run the fused reference decode artifact on the same store state and
+/// return the logits. Cache inputs are read *as stored* — on entry to an
+/// iteration they contain tokens `0..cur_len` (the reference appends the
+/// current token itself, mirroring `KvAppend`).
+pub fn run_reference(
+    manifest: &Manifest,
+    pool: &ExecPool,
+    g: &CompGraph,
+    store: &TensorStore,
+    batch: usize,
+    ids: &[i32],
+    cur_len: usize,
+) -> Result<Vec<f32>, String> {
+    let m = manifest.model;
+    let mut inputs: Vec<Value> = Vec::new();
+    inputs.push(Value::I32(ids.to_vec()));
+    for l in 0..m.layers {
+        let t = g.tensor_by_name(&format!("l{l}.kcache")).unwrap();
+        inputs.push(Value::F32(store.get(t.id)));
+    }
+    for l in 0..m.layers {
+        let t = g.tensor_by_name(&format!("l{l}.vcache")).unwrap();
+        inputs.push(Value::F32(store.get(t.id)));
+    }
+    inputs.push(Value::I32(vec![cur_len as i32]));
+    let by_name = |n: &str| -> Value {
+        Value::F32(store.get(g.tensor_by_name(n).unwrap_or_else(|| panic!("missing {n}")).id))
+    };
+    inputs.push(by_name("embed.weight"));
+    for l in 0..m.layers {
+        inputs.push(by_name(&format!("l{l}.ln1.weight")));
+        inputs.push(by_name(&format!("l{l}.wqkv")));
+        inputs.push(by_name(&format!("l{l}.wo")));
+        inputs.push(by_name(&format!("l{l}.ln2.weight")));
+        inputs.push(by_name(&format!("l{l}.w_gate_up")));
+        inputs.push(by_name(&format!("l{l}.w_down")));
+    }
+    inputs.push(by_name("final_norm.weight"));
+    inputs.push(by_name("lm_head.weight"));
+    let out = pool.execute_by_name(&format!("ref_decode_b{batch}"), inputs)?;
+    Ok(out.into_iter().next().unwrap())
+}
+
+/// Argmax over a logits row.
+pub fn argmax(row: &[f32]) -> usize {
+    row.iter().enumerate().max_by(|a, b| a.1.partial_cmp(b.1).unwrap()).map(|(i, _)| i).unwrap_or(0)
+}
+
+/// Convenience bundle for examples/tests: pool + graph + store + kernel
+/// inputs for a given batch size.
+pub struct RealSession {
+    pub manifest: Manifest,
+    pub pool: ExecPool,
+    pub batch: usize,
+    pub compiled: CompiledGraph,
+    pub store: TensorStore,
+}
+
+impl RealSession {
+    pub fn create(batch: usize, pool_threads: usize, seed: u64) -> Result<RealSession, String> {
+        let manifest = Manifest::load(&Manifest::default_dir())?;
+        let compiled = compile_real(&manifest, batch);
+        let store = TensorStore::new(&compiled.graph);
+        init_weights(&compiled.graph, &store, seed);
+        let pool = ExecPool::new(manifest.clone(), pool_threads)?;
+        Ok(RealSession { manifest, pool, batch, compiled, store })
+    }
+
+    pub fn mega_config(&self, workers: usize, schedulers: usize) -> MegaConfig {
+        MegaConfig { workers, schedulers, ..Default::default() }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn have_artifacts() -> bool {
+        Manifest::load(&Manifest::default_dir()).is_ok()
+    }
+
+    #[test]
+    fn real_graph_tiles_match_artifacts() {
+        if !have_artifacts() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let m = Manifest::load(&Manifest::default_dir()).unwrap();
+        let c = compile_real(&m, 2);
+        // every matmul task must be exactly tile_n wide.
+        for t in &c.tgraph.tasks {
+            if let crate::tgraph::TaskKind::Compute { kind: OpKind::MatMul, .. } = &t.kind {
+                assert_eq!(t.out_region.extent(1), m.tile_n);
+            }
+            if let crate::tgraph::TaskKind::Compute { kind: OpKind::Attention { .. }, .. } = &t.kind {
+                assert_eq!(t.out_region.extent(0), 1);
+            }
+        }
+    }
+
+    #[test]
+    fn megakernel_matches_reference_logits_batch1() {
+        if !have_artifacts() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let s = RealSession::create(1, 2, 42).unwrap();
+        let kernel = MegaKernel::new(&s.compiled, s.mega_config(4, 1));
+        let exec = TileExecutor::new(&s.compiled.graph, &s.store, &s.pool, 1);
+        // reference first (reads caches before KvAppend mutates them —
+        // same values either way, but keep the clean order).
+        set_ids(&s.compiled.graph, &s.store, &[7]);
+        let want = run_reference(&s.manifest, &s.pool, &s.compiled.graph, &s.store, 1, &[7], 0).unwrap();
+        run_iteration(&kernel, &exec, 0).unwrap();
+        let got = get_logits(&s.compiled.graph, &s.store);
+        assert_eq!(got.len(), want.len());
+        let max_err = got
+            .iter()
+            .zip(&want)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max);
+        assert!(max_err < 1e-3, "logits mismatch: max err {max_err}");
+    }
+
+    #[test]
+    fn multi_step_decode_consistent_with_reference() {
+        if !have_artifacts() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let s = RealSession::create(2, 2, 7).unwrap();
+        let kernel = MegaKernel::new(&s.compiled, s.mega_config(4, 1));
+        let exec = TileExecutor::new(&s.compiled.graph, &s.store, &s.pool, 2);
+        let mut ids = vec![3i32, 11];
+        for step in 0..3 {
+            set_ids(&s.compiled.graph, &s.store, &ids);
+            let want =
+                run_reference(&s.manifest, &s.pool, &s.compiled.graph, &s.store, 2, &ids, step).unwrap();
+            run_iteration(&kernel, &exec, step).unwrap();
+            let got = get_logits(&s.compiled.graph, &s.store);
+            let max_err =
+                got.iter().zip(&want).map(|(a, b)| (a - b).abs()).fold(0.0f32, f32::max);
+            assert!(max_err < 1e-3, "step {step}: max err {max_err}");
+            // greedy next tokens from the megakernel logits.
+            let vocab = s.manifest.model.vocab;
+            ids = (0..2).map(|r| argmax(&got[r * vocab..(r + 1) * vocab]) as i32).collect();
+        }
+    }
+}

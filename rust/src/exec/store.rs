@@ -1,0 +1,197 @@
+//! Tensor store for the real-numerics path.
+//!
+//! One host buffer per computation-graph tensor (weights, activations,
+//! KV caches), each behind its own mutex. Tasks hold a lock only while
+//! memcpy-ing a tile in or out — the actual math happens in the PJRT
+//! pool — so contention stays negligible at tiny-model scale. Buffers
+//! are f32 throughout; integer tensors (token ids) store exact small
+//! ints and are converted at the artifact boundary.
+
+use crate::ops::{CompGraph, Region, TensorId};
+use std::sync::Mutex;
+
+/// Named f32 buffers, indexed by graph tensor id.
+pub struct TensorStore {
+    bufs: Vec<Mutex<Vec<f32>>>,
+    shapes: Vec<Vec<usize>>,
+}
+
+impl TensorStore {
+    /// Zero-initialized buffers for every tensor of `g`.
+    pub fn new(g: &CompGraph) -> Self {
+        TensorStore {
+            bufs: g.tensors.iter().map(|t| Mutex::new(vec![0.0; t.numel()])).collect(),
+            shapes: g.tensors.iter().map(|t| t.shape.clone()).collect(),
+        }
+    }
+
+    pub fn shape(&self, t: TensorId) -> &[usize] {
+        &self.shapes[t]
+    }
+
+    /// Replace the whole buffer.
+    pub fn set(&self, t: TensorId, data: Vec<f32>) {
+        let mut b = self.bufs[t].lock().unwrap();
+        assert_eq!(b.len(), data.len(), "tensor {t} size mismatch");
+        *b = data;
+    }
+
+    /// Copy of the whole buffer.
+    pub fn get(&self, t: TensorId) -> Vec<f32> {
+        self.bufs[t].lock().unwrap().clone()
+    }
+
+    /// Copy out an axis-aligned tile.
+    pub fn read_tile(&self, t: TensorId, r: &Region) -> Vec<f32> {
+        let shape = &self.shapes[t];
+        assert_eq!(r.rank(), shape.len(), "tile rank mismatch for tensor {t}");
+        let buf = self.bufs[t].lock().unwrap();
+        let mut out = Vec::with_capacity(r.numel());
+        copy_region(&buf, shape, r, &mut |src| out.extend_from_slice(src));
+        out
+    }
+
+    /// Copy a tile in (row-major within the tile).
+    pub fn write_tile(&self, t: TensorId, r: &Region, data: &[f32]) {
+        let shape = self.shapes[t].clone();
+        assert_eq!(r.numel(), data.len(), "tile data size mismatch for tensor {t}");
+        let mut buf = self.bufs[t].lock().unwrap();
+        let mut offset = 0;
+        write_region(&mut buf, &shape, r, &mut |dst| {
+            dst.copy_from_slice(&data[offset..offset + dst.len()]);
+            offset += dst.len();
+        });
+    }
+}
+
+/// Walk the contiguous innermost runs of `region` within a row-major
+/// buffer of `shape`, calling `f` with each source slice.
+fn copy_region(buf: &[f32], shape: &[usize], region: &Region, f: &mut impl FnMut(&[f32])) {
+    let rank = shape.len();
+    let (last_s, last_e) = region.dims[rank - 1];
+    let run = last_e - last_s;
+    let mut strides = vec![1usize; rank];
+    for d in (0..rank - 1).rev() {
+        strides[d] = strides[d + 1] * shape[d + 1];
+    }
+    let mut idx: Vec<usize> = region.dims[..rank - 1].iter().map(|&(s, _)| s).collect();
+    loop {
+        let base: usize =
+            idx.iter().zip(&strides[..rank - 1]).map(|(&i, &st)| i * st).sum::<usize>() + last_s;
+        f(&buf[base..base + run]);
+        // advance multi-index over the outer dims.
+        let mut d = rank.wrapping_sub(2);
+        loop {
+            if d == usize::MAX {
+                return;
+            }
+            idx[d] += 1;
+            if idx[d] < region.dims[d].1 {
+                break;
+            }
+            idx[d] = region.dims[d].0;
+            d = d.wrapping_sub(1);
+        }
+    }
+}
+
+fn write_region(buf: &mut [f32], shape: &[usize], region: &Region, f: &mut impl FnMut(&mut [f32])) {
+    let rank = shape.len();
+    let (last_s, last_e) = region.dims[rank - 1];
+    let run = last_e - last_s;
+    let mut strides = vec![1usize; rank];
+    for d in (0..rank - 1).rev() {
+        strides[d] = strides[d + 1] * shape[d + 1];
+    }
+    let mut idx: Vec<usize> = region.dims[..rank - 1].iter().map(|&(s, _)| s).collect();
+    loop {
+        let base: usize =
+            idx.iter().zip(&strides[..rank - 1]).map(|(&i, &st)| i * st).sum::<usize>() + last_s;
+        f(&mut buf[base..base + run]);
+        let mut d = rank.wrapping_sub(2);
+        loop {
+            if d == usize::MAX {
+                return;
+            }
+            idx[d] += 1;
+            if idx[d] < region.dims[d].1 {
+                break;
+            }
+            idx[d] = region.dims[d].0;
+            d = d.wrapping_sub(1);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ops::{DType, OpKind};
+
+    fn store_2d() -> (TensorStore, TensorId) {
+        let mut g = CompGraph::new();
+        let t = g.input("x", vec![4, 6], DType::F32);
+        let w = g.param("w", vec![6, 2], DType::F32);
+        g.op("y", OpKind::MatMul, &[t, w], vec![4, 2], DType::F32);
+        (TensorStore::new(&g), t)
+    }
+
+    #[test]
+    fn whole_tensor_roundtrip() {
+        let (s, t) = store_2d();
+        let data: Vec<f32> = (0..24).map(|i| i as f32).collect();
+        s.set(t, data.clone());
+        assert_eq!(s.get(t), data);
+    }
+
+    #[test]
+    fn tile_read_matches_manual_slice() {
+        let (s, t) = store_2d();
+        s.set(t, (0..24).map(|i| i as f32).collect());
+        // rows 1..3, cols 2..5 of a 4x6 row-major buffer
+        let tile = s.read_tile(t, &Region::new(vec![(1, 3), (2, 5)]));
+        assert_eq!(tile, vec![8.0, 9.0, 10.0, 14.0, 15.0, 16.0]);
+    }
+
+    #[test]
+    fn tile_write_then_read() {
+        let (s, t) = store_2d();
+        let r = Region::new(vec![(2, 4), (0, 3)]);
+        s.write_tile(t, &r, &[1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        assert_eq!(s.read_tile(t, &r), vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        // untouched region stays zero
+        assert_eq!(s.read_tile(t, &Region::new(vec![(0, 2), (0, 6)])), vec![0.0; 12]);
+    }
+
+    #[test]
+    fn rank3_tiles() {
+        let mut g = CompGraph::new();
+        let t = g.input("c", vec![2, 3, 4], DType::F32);
+        let s = TensorStore::new(&g);
+        s.set(t, (0..24).map(|i| i as f32).collect());
+        // [1:2, 0:3, 1:3]
+        let tile = s.read_tile(t, &Region::new(vec![(1, 2), (0, 3), (1, 3)]));
+        assert_eq!(tile, vec![13.0, 14.0, 17.0, 18.0, 21.0, 22.0]);
+        // write a row of the cache (KvAppend pattern)
+        s.write_tile(t, &Region::new(vec![(0, 1), (2, 3), (0, 4)]), &[9.0; 4]);
+        let back = s.read_tile(t, &Region::new(vec![(0, 1), (2, 3), (0, 4)]));
+        assert_eq!(back, vec![9.0; 4]);
+    }
+
+    #[test]
+    fn concurrent_disjoint_tile_writes() {
+        let (s, t) = store_2d();
+        std::thread::scope(|sc| {
+            for row in 0..4 {
+                let s = &s;
+                sc.spawn(move || {
+                    s.write_tile(t, &Region::new(vec![(row, row + 1), (0, 6)]), &[row as f32; 6]);
+                });
+            }
+        });
+        for row in 0..4 {
+            let tile = s.read_tile(t, &Region::new(vec![(row, row + 1), (0, 6)]));
+            assert_eq!(tile, vec![row as f32; 6]);
+        }
+    }
+}

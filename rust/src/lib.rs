@@ -1,0 +1,31 @@
+//! MPK: a compiler and runtime for mega-kernelizing tensor programs.
+//!
+//! Rust + JAX + Pallas reproduction of the MPK paper (CMU, 2025). See
+//! DESIGN.md for the full architecture. Quick tour:
+//!
+//! * [`ops`] — computation-graph IR (operators, tensors, tile regions).
+//! * [`models`] — decode-iteration graph builders for the paper's models.
+//! * [`tgraph`] — the MPK compiler: operator decomposition, dependency
+//!   analysis, event fusion, normalization, linearization (§4).
+//! * [`megakernel`] — the in-kernel parallel runtime, threaded: workers,
+//!   schedulers, events, hybrid JIT/AOT launch, paged shared memory (§5).
+//! * [`runtime`] / [`exec`] — PJRT-backed real-numerics execution of
+//!   compiled tGraphs (HLO text artifacts built by `make artifacts`).
+//! * [`sim`] — discrete-event GPU timing simulator regenerating the
+//!   paper's figures on A100/H100/B200 roofline models.
+//! * [`serving`] — continuous batching + paged KV cache substrate (§6.1).
+//! * [`moe`] — expert routing + hybrid workload balancer (§6.4).
+//! * [`multigpu`] — tensor parallelism + collective decomposition (§6.5).
+pub mod exec;
+pub mod megakernel;
+pub mod metrics;
+pub mod models;
+pub mod moe;
+pub mod multigpu;
+pub mod ops;
+pub mod proputil;
+pub mod runtime;
+pub mod serving;
+pub mod sim;
+pub mod tgraph;
+pub mod util;

@@ -1,0 +1,102 @@
+//! `mpk` CLI — the leader entrypoint.
+//!
+//! Subcommands:
+//!   compile  <model> [--batch N] [--gpu NAME]   compiler-stage stats
+//!   simulate <model> [--batch N] [--gpu NAME]   MPK vs baselines on a roofline
+//!   serve    [--requests N] [--batch N]         real-numerics serving (needs artifacts)
+//!   models                                      list known model configs
+
+use mpk::megakernel::MegaConfig;
+use mpk::models::{build_decode_graph, GraphOptions, ModelConfig};
+use mpk::serving::{Request, ServeEngine};
+use mpk::sim::{simulate_baseline, simulate_megakernel, BaselineSystem, GpuSpec, SimOptions};
+use mpk::tgraph::{compile, CompileOptions, DecomposeConfig};
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = args.first().map(|s| s.as_str()).unwrap_or("help");
+    match cmd {
+        "models" => {
+            for m in ModelConfig::paper_models().iter().chain(std::iter::once(&ModelConfig::tiny())) {
+                println!(
+                    "{:<16} {} layers, d={}, {}q/{}kv heads, ~{:.1}B params{}",
+                    m.name,
+                    m.layers,
+                    m.d_model,
+                    m.heads,
+                    m.kv_heads,
+                    m.param_count() as f64 / 1e9,
+                    if m.moe.is_some() { " (MoE)" } else { "" }
+                );
+            }
+        }
+        "compile" | "simulate" => {
+            let model = flag_pos(&args, 1).unwrap_or_else(|| "Qwen3-1.7B".into());
+            let batch: usize = flag(&args, "--batch").and_then(|v| v.parse().ok()).unwrap_or(1);
+            let gpu = GpuSpec::by_name(&flag(&args, "--gpu").unwrap_or_else(|| "B200".into()))
+                .expect("unknown GPU (A100/H100/B200)");
+            let cfg = ModelConfig::by_name(&model).expect("unknown model; see `mpk models`");
+            let g = build_decode_graph(&cfg, &GraphOptions { batch, kv_len: 512, ..Default::default() });
+            let c = compile(
+                &g,
+                &CompileOptions {
+                    decompose: DecomposeConfig { target_tasks: gpu.workers, min_tile_cols: 8 },
+                    ..Default::default()
+                },
+            );
+            let s = c.stats();
+            println!("{} @ batch {batch} on {}:", cfg.name, gpu.name);
+            println!("  ops {} | tasks {} ({:.1}/op) | events {}", s.ops, s.tasks, s.tasks_per_op, s.events);
+            println!(
+                "  fusion {:.0}x | linearization {:.1}x | normalization overhead {:.2}%",
+                s.fusion_reduction,
+                s.lin_reduction,
+                s.norm_overhead * 100.0
+            );
+            if cmd == "simulate" {
+                let mpk = simulate_megakernel(&c, &gpu, &SimOptions::default()).makespan_us;
+                println!("  MPK            {:>10.1} µs/iter", mpk);
+                for sys in BaselineSystem::all() {
+                    let b = simulate_baseline(&c, &gpu, &sys, None);
+                    println!("  {:<14} {:>10.1} µs/iter ({:.2}x vs MPK)", sys.name, b, b / mpk);
+                }
+            }
+        }
+        "serve" => {
+            let n: usize = flag(&args, "--requests").and_then(|v| v.parse().ok()).unwrap_or(8);
+            let batch: usize = flag(&args, "--batch").and_then(|v| v.parse().ok()).unwrap_or(4);
+            let mega = MegaConfig { workers: 6, schedulers: 2, ..Default::default() };
+            let mut e = ServeEngine::create(batch, 3, 42, mega)
+                .expect("serving needs artifacts: run `make artifacts`");
+            for i in 0..n as u64 {
+                let prompt: Vec<i32> = (0..3).map(|t| 1 + (i as i32 * 13 + t) % 500).collect();
+                e.submit(Request::new(i, prompt, 6));
+            }
+            let (out, stats) = e.serve().expect("serve");
+            println!(
+                "{} requests | {} tokens | {} iters | {:?} total | {:.1} tok/s | p50 iter {:?}",
+                out.len(),
+                stats.tokens_generated,
+                stats.iterations,
+                stats.total,
+                stats.throughput_tok_s(),
+                stats.p50_latency()
+            );
+        }
+        _ => {
+            println!("mpk — mega-kernelizing tensor programs (see README.md)");
+            println!("usage: mpk <models|compile|simulate|serve> [args]");
+            println!("  mpk compile Qwen3-8B --batch 1 --gpu B200");
+            println!("  mpk simulate Qwen3-1.7B --batch 4 --gpu A100");
+            println!("  mpk serve --requests 8 --batch 4   (after `make artifacts`)");
+        }
+    }
+}
+
+fn flag(args: &[String], name: &str) -> Option<String> {
+    args.iter().position(|a| a == name).and_then(|i| args.get(i + 1).cloned())
+}
+
+fn flag_pos(args: &[String], idx: usize) -> Option<String> {
+    args.get(idx).filter(|a| !a.starts_with("--")).cloned()
+}

@@ -1,0 +1,103 @@
+//! Atomic event state — the device-memory semaphores of §5.1.
+//!
+//! Each event holds a trigger counter; a task completing does one
+//! `fetch_add` (the paper's `atomicAdd`). The notification that crosses
+//! the activation threshold is the one that enqueues the event for a
+//! scheduler (JIT) — AOT consumers instead poll [`EventTable::activated`]
+//! on their queue head.
+
+use std::sync::atomic::{AtomicU32, Ordering};
+
+/// Runtime counters for all events of one tGraph execution.
+pub struct EventTable {
+    counters: Vec<AtomicU32>,
+    required: Vec<u32>,
+}
+
+impl EventTable {
+    pub fn new(required: &[usize]) -> Self {
+        EventTable {
+            counters: required.iter().map(|_| AtomicU32::new(0)).collect(),
+            required: required.iter().map(|&r| r as u32).collect(),
+        }
+    }
+
+    /// Reset all counters (reuse across decode iterations).
+    pub fn reset(&self) {
+        for c in &self.counters {
+            c.store(0, Ordering::Relaxed);
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.counters.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.counters.is_empty()
+    }
+
+    /// Notify the event once. Returns `true` iff *this* notification
+    /// activated the event (exactly one caller observes `true`).
+    pub fn notify(&self, ev: usize) -> bool {
+        let prev = self.counters[ev].fetch_add(1, Ordering::AcqRel);
+        prev + 1 == self.required[ev]
+    }
+
+    /// True once the event has received all required notifications.
+    /// Events with `required == 0` (the start event) are born activated.
+    pub fn activated(&self, ev: usize) -> bool {
+        self.counters[ev].load(Ordering::Acquire) >= self.required[ev]
+    }
+
+    pub fn required(&self, ev: usize) -> u32 {
+        self.required[ev]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn activation_threshold() {
+        let t = EventTable::new(&[3]);
+        assert!(!t.activated(0));
+        assert!(!t.notify(0));
+        assert!(!t.notify(0));
+        assert!(t.notify(0)); // third notification crosses the threshold
+        assert!(t.activated(0));
+    }
+
+    #[test]
+    fn zero_required_is_born_activated() {
+        let t = EventTable::new(&[0]);
+        assert!(t.activated(0));
+    }
+
+    #[test]
+    fn exactly_one_activator_under_contention() {
+        let t = Arc::new(EventTable::new(&[64]));
+        let activations: usize = std::thread::scope(|s| {
+            let handles: Vec<_> = (0..8)
+                .map(|_| {
+                    let t = t.clone();
+                    s.spawn(move || (0..8).filter(|_| t.notify(0)).count())
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).sum()
+        });
+        assert_eq!(activations, 1);
+        assert!(t.activated(0));
+    }
+
+    #[test]
+    fn reset_clears_state() {
+        let t = EventTable::new(&[1, 2]);
+        t.notify(0);
+        assert!(t.activated(0));
+        t.reset();
+        assert!(!t.activated(0));
+    }
+}

@@ -1,0 +1,11 @@
+//! The in-kernel parallel runtime (§5): workers, schedulers, events,
+//! hybrid JIT/AOT launch, paged shared memory.
+pub mod event;
+pub mod queue;
+pub mod runtime;
+pub mod smem;
+
+pub use event::EventTable;
+pub use queue::{AotQueue, MpmcQueue};
+pub use runtime::{MegaConfig, MegaKernel, RunReport, TaskExecutor};
+pub use smem::{task_smem_bytes, PagedSmem, SmemError, PAGE_BYTES};

@@ -1,0 +1,227 @@
+//! Fixed-capacity lock-free queues — the device-memory circular buffers
+//! of §6.1 ("event queues and task queues are implemented as circular
+//! buffers ... enqueue and dequeue operations rely only on low-cost
+//! atomicAdd instructions").
+//!
+//! [`MpmcQueue`] is the classic bounded MPMC ring (per-slot sequence
+//! numbers, Vyukov-style): workers push activated events to schedulers,
+//! and schedulers push JIT tasks to workers, without locks on the hot
+//! path. The per-worker AOT queue needs no atomics at all: it is filled
+//! once before launch and consumed by a single worker ([`AotQueue`]).
+
+use std::cell::UnsafeCell;
+use std::mem::MaybeUninit;
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+struct Slot<T> {
+    seq: AtomicUsize,
+    val: UnsafeCell<MaybeUninit<T>>,
+}
+
+/// Bounded multi-producer multi-consumer queue.
+pub struct MpmcQueue<T> {
+    buf: Box<[Slot<T>]>,
+    mask: usize,
+    enqueue_pos: AtomicUsize,
+    dequeue_pos: AtomicUsize,
+}
+
+unsafe impl<T: Send> Sync for MpmcQueue<T> {}
+unsafe impl<T: Send> Send for MpmcQueue<T> {}
+
+impl<T> MpmcQueue<T> {
+    /// Capacity is rounded up to the next power of two (min 2).
+    pub fn new(capacity: usize) -> Self {
+        let cap = capacity.next_power_of_two().max(2);
+        let buf: Box<[Slot<T>]> = (0..cap)
+            .map(|i| Slot { seq: AtomicUsize::new(i), val: UnsafeCell::new(MaybeUninit::uninit()) })
+            .collect();
+        MpmcQueue { buf, mask: cap - 1, enqueue_pos: AtomicUsize::new(0), dequeue_pos: AtomicUsize::new(0) }
+    }
+
+    /// Try to enqueue; returns `Err(v)` when full.
+    pub fn push(&self, v: T) -> Result<(), T> {
+        let mut pos = self.enqueue_pos.load(Ordering::Relaxed);
+        loop {
+            let slot = &self.buf[pos & self.mask];
+            let seq = slot.seq.load(Ordering::Acquire);
+            let diff = seq as isize - pos as isize;
+            if diff == 0 {
+                match self.enqueue_pos.compare_exchange_weak(
+                    pos,
+                    pos + 1,
+                    Ordering::Relaxed,
+                    Ordering::Relaxed,
+                ) {
+                    Ok(_) => {
+                        unsafe { (*slot.val.get()).write(v) };
+                        slot.seq.store(pos + 1, Ordering::Release);
+                        return Ok(());
+                    }
+                    Err(p) => pos = p,
+                }
+            } else if diff < 0 {
+                return Err(v); // full
+            } else {
+                pos = self.enqueue_pos.load(Ordering::Relaxed);
+            }
+        }
+    }
+
+    /// Try to dequeue; `None` when empty.
+    pub fn pop(&self) -> Option<T> {
+        let mut pos = self.dequeue_pos.load(Ordering::Relaxed);
+        loop {
+            let slot = &self.buf[pos & self.mask];
+            let seq = slot.seq.load(Ordering::Acquire);
+            let diff = seq as isize - (pos + 1) as isize;
+            if diff == 0 {
+                match self.dequeue_pos.compare_exchange_weak(
+                    pos,
+                    pos + 1,
+                    Ordering::Relaxed,
+                    Ordering::Relaxed,
+                ) {
+                    Ok(_) => {
+                        let v = unsafe { (*slot.val.get()).assume_init_read() };
+                        slot.seq.store(pos + self.mask + 1, Ordering::Release);
+                        return Some(v);
+                    }
+                    Err(p) => pos = p,
+                }
+            } else if diff < 0 {
+                return None; // empty
+            } else {
+                pos = self.dequeue_pos.load(Ordering::Relaxed);
+            }
+        }
+    }
+
+    /// Approximate number of queued items (for load-aware dispatch).
+    pub fn len_approx(&self) -> usize {
+        let e = self.enqueue_pos.load(Ordering::Relaxed);
+        let d = self.dequeue_pos.load(Ordering::Relaxed);
+        e.saturating_sub(d)
+    }
+}
+
+impl<T> Drop for MpmcQueue<T> {
+    fn drop(&mut self) {
+        while self.pop().is_some() {}
+    }
+}
+
+/// Per-worker AOT task queue (§5.2): pre-filled before the mega-kernel
+/// launches, consumed in FIFO order by exactly one worker. The worker
+/// may only *peek* the head and execute it once its dependent event is
+/// activated — head-of-line blocking is intentional and deadlock-free
+/// because tasks are enqueued in linearized (topological) order.
+#[derive(Debug, Default)]
+pub struct AotQueue {
+    items: Vec<usize>,
+    head: usize,
+}
+
+impl AotQueue {
+    pub fn new(items: Vec<usize>) -> Self {
+        AotQueue { items, head: 0 }
+    }
+
+    pub fn peek(&self) -> Option<usize> {
+        self.items.get(self.head).copied()
+    }
+
+    pub fn advance(&mut self) {
+        self.head += 1;
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.items.len() - self.head
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn fifo_single_thread() {
+        let q = MpmcQueue::new(4);
+        for i in 0..4 {
+            q.push(i).unwrap();
+        }
+        assert!(q.push(9).is_err(), "queue should be full");
+        for i in 0..4 {
+            assert_eq!(q.pop(), Some(i));
+        }
+        assert_eq!(q.pop(), None);
+    }
+
+    #[test]
+    fn capacity_rounds_up() {
+        let q = MpmcQueue::new(3);
+        for i in 0..4 {
+            q.push(i).unwrap();
+        }
+        assert!(q.push(4).is_err());
+    }
+
+    #[test]
+    fn mpmc_no_loss_no_dup() {
+        const PRODUCERS: usize = 4;
+        const PER: usize = 5000;
+        let q = Arc::new(MpmcQueue::new(PRODUCERS * PER));
+        let mut handles = Vec::new();
+        for p in 0..PRODUCERS {
+            let q = q.clone();
+            handles.push(std::thread::spawn(move || {
+                for i in 0..PER {
+                    q.push(p * PER + i).unwrap();
+                }
+            }));
+        }
+        let consumers: Vec<_> = (0..3)
+            .map(|_| {
+                let q = q.clone();
+                std::thread::spawn(move || {
+                    let mut got = Vec::new();
+                    let mut idle = 0;
+                    while idle < 200_000 {
+                        match q.pop() {
+                            Some(v) => {
+                                got.push(v);
+                                idle = 0;
+                            }
+                            None => {
+                                idle += 1;
+                                std::hint::spin_loop();
+                            }
+                        }
+                    }
+                    got
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        let mut all: Vec<usize> = consumers.into_iter().flat_map(|c| c.join().unwrap()).collect();
+        all.sort_unstable();
+        let expect: Vec<usize> = (0..PRODUCERS * PER).collect();
+        assert_eq!(all, expect);
+    }
+
+    #[test]
+    fn aot_queue_peek_advance() {
+        let mut q = AotQueue::new(vec![7, 8, 9]);
+        assert_eq!(q.peek(), Some(7));
+        assert_eq!(q.peek(), Some(7)); // peek is non-destructive
+        q.advance();
+        assert_eq!(q.peek(), Some(8));
+        assert_eq!(q.remaining(), 2);
+        q.advance();
+        q.advance();
+        assert_eq!(q.peek(), None);
+    }
+}

@@ -1,0 +1,187 @@
+//! Paged shared-memory abstraction (§5.3).
+//!
+//! Shared memory (VMEM analogue on TPU) is split into fixed-size pages.
+//! A task acquires pages up front, may acquire more while it has not yet
+//! released any, and once it releases a page it may only release —
+//! the *monotonic usage* rule that lets the runtime hand freed pages to
+//! the next task's preload phase while the current task still computes.
+
+/// Page size used in the paper's evaluation (32 KB on all GPUs).
+pub const PAGE_BYTES: usize = 32 * 1024;
+
+/// Per-worker page allocator.
+#[derive(Debug)]
+pub struct PagedSmem {
+    total_pages: usize,
+    free: Vec<usize>,
+    /// Pages held per task id.
+    held: std::collections::HashMap<usize, Vec<usize>>,
+    /// Tasks that have released at least one page (monotonic rule).
+    releasing: std::collections::HashSet<usize>,
+}
+
+/// Errors from the allocator.
+#[derive(Debug, PartialEq, Eq)]
+pub enum SmemError {
+    /// Not enough free pages right now (caller should retry later — this
+    /// is what delays a preload, not a failure).
+    OutOfPages,
+    /// A task attempted to acquire after releasing (monotonic violation).
+    MonotonicViolation,
+}
+
+impl PagedSmem {
+    pub fn new(total_pages: usize) -> Self {
+        PagedSmem {
+            total_pages,
+            free: (0..total_pages).rev().collect(),
+            held: Default::default(),
+            releasing: Default::default(),
+        }
+    }
+
+    /// Pages needed for `bytes` of scratch.
+    pub fn pages_for(bytes: usize) -> usize {
+        bytes.div_ceil(PAGE_BYTES)
+    }
+
+    pub fn free_pages(&self) -> usize {
+        self.free.len()
+    }
+
+    pub fn total_pages(&self) -> usize {
+        self.total_pages
+    }
+
+    /// Acquire `n` pages for `task`. All-or-nothing.
+    pub fn acquire(&mut self, task: usize, n: usize) -> Result<Vec<usize>, SmemError> {
+        if self.releasing.contains(&task) {
+            return Err(SmemError::MonotonicViolation);
+        }
+        if self.free.len() < n {
+            return Err(SmemError::OutOfPages);
+        }
+        let pages: Vec<usize> = (0..n).map(|_| self.free.pop().unwrap()).collect();
+        self.held.entry(task).or_default().extend(&pages);
+        Ok(pages)
+    }
+
+    /// Release `n` of the pages held by `task` (all of them if `n`
+    /// exceeds the held count). After this the task may not acquire.
+    pub fn release(&mut self, task: usize, n: usize) -> usize {
+        let held = self.held.entry(task).or_default();
+        let k = n.min(held.len());
+        for _ in 0..k {
+            self.free.push(held.pop().unwrap());
+        }
+        if held.is_empty() {
+            self.held.remove(&task);
+        }
+        if k > 0 {
+            self.releasing.insert(task);
+        }
+        k
+    }
+
+    /// Release everything held by `task` and clear its monotonic flag
+    /// (the task is finished).
+    pub fn finish(&mut self, task: usize) {
+        if let Some(held) = self.held.remove(&task) {
+            self.free.extend(held);
+        }
+        self.releasing.remove(&task);
+        debug_assert!(self.free.len() <= self.total_pages);
+    }
+
+    /// Can the next task's preload start now? (§5.3 condition 2.)
+    pub fn can_preload(&self, pages_needed: usize) -> bool {
+        self.free.len() >= pages_needed
+    }
+}
+
+/// Modeled shared-memory footprint (bytes) of a task — how many pages a
+/// task of this kind/tile occupies while resident on an SM. Used both by
+/// the allocator and by the simulator's pipelining condition.
+pub fn task_smem_bytes(kind: &crate::tgraph::TaskKind, elem: usize) -> usize {
+    use crate::ops::OpKind;
+    use crate::tgraph::TaskKind as TK;
+    match kind {
+        TK::Compute { kind, .. } => match kind {
+            // double-buffered K-slab of x and w tiles + accumulator.
+            OpKind::MatMul => 3 * PAGE_BYTES,
+            OpKind::Attention { head_dim, kv_heads, .. } => {
+                // q tile + one KV chunk in flight + output accumulator.
+                (2 * kv_heads * head_dim * 128 * elem).clamp(PAGE_BYTES, 4 * PAGE_BYTES)
+            }
+            OpKind::MoeExpertGemm { .. } => 3 * PAGE_BYTES,
+            OpKind::Embedding | OpKind::RmsNorm | OpKind::Add | OpKind::SwiGLU | OpKind::KvAppend => PAGE_BYTES,
+            OpKind::AllReduce { .. } => 2 * PAGE_BYTES,
+            OpKind::MoeRoute { .. } | OpKind::MoeCombine { .. } => PAGE_BYTES,
+        },
+        TK::Transfer { .. } => PAGE_BYTES,
+        TK::Dummy | TK::IterPrep => 0,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn acquire_release_cycle() {
+        let mut s = PagedSmem::new(5);
+        let p = s.acquire(1, 3).unwrap();
+        assert_eq!(p.len(), 3);
+        assert_eq!(s.free_pages(), 2);
+        assert_eq!(s.release(1, 2), 2);
+        assert_eq!(s.free_pages(), 4);
+        s.finish(1);
+        assert_eq!(s.free_pages(), 5);
+    }
+
+    #[test]
+    fn monotonic_rule_enforced() {
+        let mut s = PagedSmem::new(5);
+        s.acquire(1, 2).unwrap();
+        s.release(1, 1);
+        assert_eq!(s.acquire(1, 1), Err(SmemError::MonotonicViolation));
+        s.finish(1);
+        // finished task may start a fresh acquire cycle.
+        assert!(s.acquire(1, 1).is_ok());
+    }
+
+    #[test]
+    fn out_of_pages_is_retryable() {
+        let mut s = PagedSmem::new(2);
+        s.acquire(1, 2).unwrap();
+        assert_eq!(s.acquire(2, 1), Err(SmemError::OutOfPages));
+        assert!(!s.can_preload(1));
+        s.release(1, 1);
+        assert!(s.can_preload(1));
+        assert!(s.acquire(2, 1).is_ok());
+    }
+
+    #[test]
+    fn pages_for_rounds_up() {
+        assert_eq!(PagedSmem::pages_for(1), 1);
+        assert_eq!(PagedSmem::pages_for(PAGE_BYTES), 1);
+        assert_eq!(PagedSmem::pages_for(PAGE_BYTES + 1), 2);
+        assert_eq!(PagedSmem::pages_for(0), 0);
+    }
+
+    #[test]
+    fn no_page_leak_under_random_ops() {
+        let mut rng = crate::util::XorShift64::new(9);
+        let mut s = PagedSmem::new(7);
+        for task in 0..200 {
+            let n = rng.range(0, 4);
+            if s.acquire(task, n).is_ok() {
+                if rng.below(2) == 0 {
+                    s.release(task, rng.range(0, n));
+                }
+            }
+            s.finish(task);
+            assert_eq!(s.free_pages(), 7, "leak after task {task}");
+        }
+    }
+}

@@ -1,0 +1,193 @@
+//! Model configurations for the paper's evaluated LLMs (§6.2, Figure 9)
+//! plus a tiny Qwen3-style model used for the real-numerics CPU path.
+
+/// Mixture-of-experts parameters (Qwen3-30B-A3B).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct MoeConfig {
+    pub num_experts: usize,
+    pub top_k: usize,
+    /// Per-expert FFN intermediate size.
+    pub expert_ffn: usize,
+}
+
+/// Architectural parameters of a decoder-only transformer.
+#[derive(Clone, Debug)]
+pub struct ModelConfig {
+    pub name: &'static str,
+    pub layers: usize,
+    pub d_model: usize,
+    pub heads: usize,
+    pub kv_heads: usize,
+    pub head_dim: usize,
+    /// Dense FFN intermediate size (gate/up width). Ignored for MoE layers.
+    pub ffn: usize,
+    pub vocab: usize,
+    pub moe: Option<MoeConfig>,
+}
+
+impl ModelConfig {
+    /// Approximate parameter count (embedding + per-layer + head), used
+    /// for the §6.3 bandwidth lower bound.
+    pub fn param_count(&self) -> u64 {
+        let d = self.d_model as u64;
+        let q = (self.heads * self.head_dim) as u64;
+        let kv = (self.kv_heads * self.head_dim) as u64;
+        let attn = d * q + 2 * d * kv + q * d;
+        let mlp = match self.moe {
+            Some(m) => {
+                let e = m.expert_ffn as u64;
+                (self.layers as u64) * 0 + (m.num_experts as u64) * 3 * d * e + d * m.num_experts as u64
+            }
+            None => 3 * d * (self.ffn as u64),
+        };
+        let per_layer = attn + mlp + 2 * d; // + norms
+        let emb = (self.vocab as u64) * d;
+        emb * 2 + (self.layers as u64) * per_layer
+    }
+
+    /// Qwen3-0.6B.
+    pub fn qwen3_0_6b() -> Self {
+        ModelConfig {
+            name: "Qwen3-0.6B",
+            layers: 28,
+            d_model: 1024,
+            heads: 16,
+            kv_heads: 8,
+            head_dim: 128,
+            ffn: 3072,
+            vocab: 151_936,
+            moe: None,
+        }
+    }
+
+    /// Llama-3.2-1B-Instruct.
+    pub fn llama32_1b() -> Self {
+        ModelConfig {
+            name: "Llama-3.2-1B",
+            layers: 16,
+            d_model: 2048,
+            heads: 32,
+            kv_heads: 8,
+            head_dim: 64,
+            ffn: 8192,
+            vocab: 128_256,
+            moe: None,
+        }
+    }
+
+    /// Qwen3-1.7B.
+    pub fn qwen3_1_7b() -> Self {
+        ModelConfig {
+            name: "Qwen3-1.7B",
+            layers: 28,
+            d_model: 2048,
+            heads: 16,
+            kv_heads: 8,
+            head_dim: 128,
+            ffn: 6144,
+            vocab: 151_936,
+            moe: None,
+        }
+    }
+
+    /// Qwen3-8B.
+    pub fn qwen3_8b() -> Self {
+        ModelConfig {
+            name: "Qwen3-8B",
+            layers: 36,
+            d_model: 4096,
+            heads: 32,
+            kv_heads: 8,
+            head_dim: 128,
+            ffn: 12_288,
+            vocab: 151_936,
+            moe: None,
+        }
+    }
+
+    /// Qwen3-30B-A3B (MoE: 128 experts, top-8).
+    pub fn qwen3_30b_a3b() -> Self {
+        ModelConfig {
+            name: "Qwen3-30B-A3B",
+            layers: 48,
+            d_model: 2048,
+            heads: 32,
+            kv_heads: 4,
+            head_dim: 128,
+            ffn: 6144,
+            vocab: 151_936,
+            moe: Some(MoeConfig { num_experts: 128, top_k: 8, expert_ffn: 768 }),
+        }
+    }
+
+    /// Tiny Qwen3-style model for the real-numerics end-to-end path
+    /// (small enough to AOT-compile and run on CPU PJRT in seconds).
+    pub fn tiny() -> Self {
+        ModelConfig {
+            name: "Tiny-Qwen3",
+            layers: 4,
+            d_model: 256,
+            heads: 4,
+            kv_heads: 2,
+            head_dim: 64,
+            ffn: 512,
+            vocab: 512,
+            moe: None,
+        }
+    }
+
+    /// The five paper models in Figure 9 order.
+    pub fn paper_models() -> Vec<ModelConfig> {
+        vec![
+            Self::qwen3_0_6b(),
+            Self::llama32_1b(),
+            Self::qwen3_1_7b(),
+            Self::qwen3_8b(),
+            Self::qwen3_30b_a3b(),
+        ]
+    }
+
+    /// Look up a config by (case-insensitive) name.
+    pub fn by_name(name: &str) -> Option<ModelConfig> {
+        let n = name.to_ascii_lowercase();
+        Self::paper_models()
+            .into_iter()
+            .chain(std::iter::once(Self::tiny()))
+            .find(|m| m.name.to_ascii_lowercase() == n)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn param_counts_in_expected_band() {
+        // sanity: within ~2x of the advertised sizes.
+        let checks = [
+            (ModelConfig::qwen3_0_6b(), 0.3e9, 1.4e9),
+            (ModelConfig::llama32_1b(), 0.7e9, 2.5e9),
+            (ModelConfig::qwen3_1_7b(), 1.0e9, 3.4e9),
+            (ModelConfig::qwen3_8b(), 5.0e9, 12.0e9),
+            (ModelConfig::qwen3_30b_a3b(), 18.0e9, 45.0e9),
+        ];
+        for (cfg, lo, hi) in checks {
+            let p = cfg.param_count() as f64;
+            assert!(p > lo && p < hi, "{}: {p:.2e} not in [{lo:.1e}, {hi:.1e}]", cfg.name);
+        }
+    }
+
+    #[test]
+    fn by_name_roundtrip() {
+        for m in ModelConfig::paper_models() {
+            assert_eq!(ModelConfig::by_name(m.name).unwrap().name, m.name);
+        }
+        assert!(ModelConfig::by_name("nope").is_none());
+    }
+
+    #[test]
+    fn moe_config_present_only_for_a3b() {
+        assert!(ModelConfig::qwen3_30b_a3b().moe.is_some());
+        assert!(ModelConfig::qwen3_8b().moe.is_none());
+    }
+}

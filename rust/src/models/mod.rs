@@ -1,0 +1,6 @@
+//! Model configurations and decode-iteration graph builders.
+pub mod config;
+pub mod transformer;
+
+pub use config::{ModelConfig, MoeConfig};
+pub use transformer::{build_decode_graph, GraphOptions};

@@ -1,0 +1,7 @@
+//! Mixture-of-experts support (§6.4): routing workloads and the
+//! static / hybrid / dynamic workload balancers of Figure 10.
+pub mod balance;
+pub mod router;
+
+pub use balance::{dynamic_us, hybrid_us, sglang_us, static_partition_us, MoeCost};
+pub use router::{route, Routing, Skew};

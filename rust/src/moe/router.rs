@@ -1,0 +1,113 @@
+//! Expert routing workload generation (§6.4).
+//!
+//! The number of tokens routed to each expert is known only at runtime;
+//! skewed routing is exactly what breaks static SM partitioning. This
+//! module synthesizes routing distributions (uniform → heavily skewed)
+//! with a deterministic RNG so every balancer sees identical workloads.
+
+use crate::util::XorShift64;
+
+/// A routing outcome: tokens assigned to each expert for one MoE layer.
+#[derive(Clone, Debug)]
+pub struct Routing {
+    /// tokens_per_expert\[e\] = number of (token, slot) pairs routed to e.
+    pub tokens_per_expert: Vec<usize>,
+    pub batch: usize,
+    pub top_k: usize,
+}
+
+impl Routing {
+    pub fn total_assignments(&self) -> usize {
+        self.tokens_per_expert.iter().sum()
+    }
+
+    /// Experts with at least one token (whose weights must stream).
+    pub fn activated(&self) -> usize {
+        self.tokens_per_expert.iter().filter(|&&t| t > 0).count()
+    }
+
+    /// Max over experts — the static balancer's bottleneck.
+    pub fn max_load(&self) -> usize {
+        self.tokens_per_expert.iter().copied().max().unwrap_or(0)
+    }
+}
+
+/// Routing skew profile.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Skew {
+    /// Every token picks its top-k uniformly.
+    Uniform,
+    /// Zipf-like preference: a few hot experts absorb most tokens (the
+    /// regime where the paper's static strategy collapses).
+    Zipf(f64),
+}
+
+/// Simulate routing of `batch` tokens, each to `top_k` distinct experts.
+pub fn route(batch: usize, experts: usize, top_k: usize, skew: Skew, seed: u64) -> Routing {
+    let mut rng = XorShift64::new(seed);
+    let mut tokens = vec![0usize; experts];
+    // expert popularity weights.
+    let weights: Vec<f64> = match skew {
+        Skew::Uniform => vec![1.0; experts],
+        Skew::Zipf(a) => (0..experts).map(|i| 1.0 / ((i + 1) as f64).powf(a)).collect(),
+    };
+    let total_w: f64 = weights.iter().sum();
+    for _ in 0..batch {
+        let mut chosen = Vec::with_capacity(top_k);
+        let mut guard = 0;
+        while chosen.len() < top_k.min(experts) && guard < 10_000 {
+            guard += 1;
+            let mut x = rng.f64() * total_w;
+            let mut e = 0;
+            for (i, &w) in weights.iter().enumerate() {
+                x -= w;
+                if x <= 0.0 {
+                    e = i;
+                    break;
+                }
+            }
+            if !chosen.contains(&e) {
+                chosen.push(e);
+            }
+        }
+        for e in chosen {
+            tokens[e] += 1;
+        }
+    }
+    Routing { tokens_per_expert: tokens, batch, top_k }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn uniform_routing_conserves_assignments() {
+        let r = route(16, 128, 8, Skew::Uniform, 1);
+        assert_eq!(r.total_assignments(), 16 * 8);
+        assert!(r.activated() <= 128);
+    }
+
+    #[test]
+    fn topk_experts_distinct_per_token() {
+        // with batch 1, exactly top_k experts get one token each.
+        let r = route(1, 128, 8, Skew::Zipf(1.2), 7);
+        assert_eq!(r.total_assignments(), 8);
+        assert_eq!(r.max_load(), 1);
+        assert_eq!(r.activated(), 8);
+    }
+
+    #[test]
+    fn zipf_is_more_skewed_than_uniform() {
+        let u = route(64, 128, 8, Skew::Uniform, 3);
+        let z = route(64, 128, 8, Skew::Zipf(1.5), 3);
+        assert!(z.max_load() > u.max_load(), "zipf {} vs uniform {}", z.max_load(), u.max_load());
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let a = route(32, 64, 4, Skew::Zipf(1.0), 42);
+        let b = route(32, 64, 4, Skew::Zipf(1.0), 42);
+        assert_eq!(a.tokens_per_expert, b.tokens_per_expert);
+    }
+}

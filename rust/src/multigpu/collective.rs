@@ -1,0 +1,120 @@
+//! Collective lowering (§6.5): AllReduce → inter-GPU data-transfer tasks
+//! + local reduction tasks, executable by the same event-driven runtime
+//! as compute.
+//!
+//! The simulator's compiled graphs keep `AllReduce` as an op whose tasks
+//! carry link cost (see `sim::cost`); this module provides the explicit
+//! ring schedule those costs are derived from, plus a task-level
+//! lowering used by tests and the multi-GPU example to show the
+//! Transfer/Reduce structure.
+
+use crate::sim::gpu::LinkSpec;
+
+/// One step of a ring all-reduce for a tensor shard.
+#[derive(Clone, Debug, PartialEq)]
+pub struct RingStep {
+    pub phase: RingPhase,
+    pub step: usize,
+    /// Bytes each device sends to its neighbor in this step.
+    pub bytes_per_device: u64,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RingPhase {
+    ReduceScatter,
+    AllGather,
+}
+
+/// The classic 2(w−1)-step ring schedule over `total_bytes`.
+pub fn ring_schedule(total_bytes: u64, world: usize) -> Vec<RingStep> {
+    if world <= 1 {
+        return Vec::new();
+    }
+    let chunk = total_bytes.div_ceil(world as u64);
+    let mut steps = Vec::with_capacity(2 * (world - 1));
+    for s in 0..world - 1 {
+        steps.push(RingStep { phase: RingPhase::ReduceScatter, step: s, bytes_per_device: chunk });
+    }
+    for s in 0..world - 1 {
+        steps.push(RingStep { phase: RingPhase::AllGather, step: s, bytes_per_device: chunk });
+    }
+    steps
+}
+
+/// Total bytes a device pushes through its link for the whole ring
+/// all-reduce: 2(w−1)/w × N.
+pub fn ring_bytes_per_device(total_bytes: u64, world: usize) -> u64 {
+    if world <= 1 {
+        return 0;
+    }
+    let w = world as u64;
+    total_bytes * 2 * (w - 1) / w
+}
+
+/// Latency of an in-kernel ring all-reduce when transfers pipeline
+/// across steps (NVSHMEM put + signal per step).
+pub fn inkernel_allreduce_us(total_bytes: u64, world: usize, link: &LinkSpec) -> f64 {
+    if world <= 1 {
+        return 0.0;
+    }
+    let steps = 2.0 * (world - 1) as f64;
+    let chunk = total_bytes as f64 / world as f64;
+    steps * (chunk / link.bytes_per_us + link.latency_us)
+}
+
+/// Latency of a host-launched (NCCL-class) all-reduce: same wire time
+/// plus the collective kernel launch.
+pub fn nccl_allreduce_us(total_bytes: u64, world: usize, link: &LinkSpec) -> f64 {
+    if world <= 1 {
+        return 0.0;
+    }
+    inkernel_allreduce_us(total_bytes, world, link) + link.nccl_launch_us
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ring_has_2w_minus_2_steps() {
+        for w in [2usize, 4, 8] {
+            let s = ring_schedule(1 << 20, w);
+            assert_eq!(s.len(), 2 * (w - 1));
+            assert_eq!(s.iter().filter(|x| x.phase == RingPhase::ReduceScatter).count(), w - 1);
+        }
+    }
+
+    #[test]
+    fn world_one_is_free() {
+        assert!(ring_schedule(1 << 20, 1).is_empty());
+        assert_eq!(ring_bytes_per_device(1 << 20, 1), 0);
+        let l = LinkSpec::nvlink_h100();
+        assert_eq!(inkernel_allreduce_us(1 << 20, 1, &l), 0.0);
+    }
+
+    #[test]
+    fn wire_bytes_formula() {
+        // 2(w-1)/w of the tensor crosses each link.
+        assert_eq!(ring_bytes_per_device(8000, 4), 12000);
+        assert_eq!(ring_bytes_per_device(8000, 2), 8000);
+    }
+
+    #[test]
+    fn inkernel_beats_nccl() {
+        let l = LinkSpec::nvlink_h100();
+        for bytes in [4096u64, 1 << 20] {
+            assert!(
+                inkernel_allreduce_us(bytes, 4, &l) < nccl_allreduce_us(bytes, 4, &l),
+                "bytes {bytes}"
+            );
+        }
+    }
+
+    #[test]
+    fn latency_dominates_small_messages() {
+        let l = LinkSpec::nvlink_h100();
+        let small = inkernel_allreduce_us(4096, 8, &l);
+        // 14 steps × ~1.5 µs latency floor
+        assert!(small > 14.0 * l.latency_us * 0.9, "{small}");
+    }
+}

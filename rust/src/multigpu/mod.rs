@@ -1,0 +1,7 @@
+//! Multi-GPU tensor parallelism (§6.5): collective lowering to ring
+//! schedules and per-rank TP execution plans.
+pub mod collective;
+pub mod tp;
+
+pub use collective::{inkernel_allreduce_us, nccl_allreduce_us, ring_bytes_per_device, ring_schedule};
+pub use tp::{baseline_iteration_us, mpk_iteration_us, plan, TpPlan};

@@ -1,0 +1,242 @@
+//! The kernel-level computation graph (the MPK compiler's *input*).
+//!
+//! A [`CompGraph`] is a DAG of [`Op`]s over [`TensorMeta`] edges, built
+//! with a small builder API. Graph inputs (activations) and parameters
+//! are tensors with no producer. Validation checks single-producer /
+//! shape-rank sanity, and `topo_order` yields a deterministic
+//! topological ordering used by the decomposer and the baselines.
+
+use super::op::{LaunchMode, Op, OpKind};
+use super::tensor::{DType, TensorId, TensorMeta};
+use std::collections::HashMap;
+
+/// A tensor-program DAG.
+#[derive(Clone, Debug, Default)]
+pub struct CompGraph {
+    pub tensors: Vec<TensorMeta>,
+    pub ops: Vec<Op>,
+    /// producer op id per tensor (None for graph inputs / params).
+    pub producer: Vec<Option<usize>>,
+    name_index: HashMap<String, TensorId>,
+}
+
+impl CompGraph {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Declare a graph input (activation fed each iteration).
+    pub fn input(&mut self, name: &str, shape: Vec<usize>, dtype: DType) -> TensorId {
+        self.add_tensor(name, shape, dtype, false)
+    }
+
+    /// Declare a parameter (weights resident in device memory).
+    pub fn param(&mut self, name: &str, shape: Vec<usize>, dtype: DType) -> TensorId {
+        self.add_tensor(name, shape, dtype, true)
+    }
+
+    fn add_tensor(&mut self, name: &str, shape: Vec<usize>, dtype: DType, is_param: bool) -> TensorId {
+        let id = self.tensors.len();
+        assert!(
+            !self.name_index.contains_key(name),
+            "duplicate tensor name: {name}"
+        );
+        self.tensors.push(TensorMeta { id, name: name.to_string(), shape, dtype, is_param });
+        self.producer.push(None);
+        self.name_index.insert(name.to_string(), id);
+        id
+    }
+
+    /// Append an operator producing a fresh output tensor.
+    pub fn op(
+        &mut self,
+        name: &str,
+        kind: OpKind,
+        inputs: &[TensorId],
+        out_shape: Vec<usize>,
+        dtype: DType,
+    ) -> TensorId {
+        let out = self.add_tensor(name, out_shape, dtype, false);
+        let id = self.ops.len();
+        self.ops.push(Op {
+            id,
+            name: name.to_string(),
+            kind,
+            inputs: inputs.to_vec(),
+            output: out,
+            partition_hint: None,
+            launch_override: None,
+        });
+        self.producer[out] = Some(id);
+        out
+    }
+
+    /// Set a partition hint on the most recently added op.
+    pub fn hint_last(&mut self, hint: Vec<usize>) {
+        let op = self.ops.last_mut().expect("no ops yet");
+        op.partition_hint = Some(hint);
+    }
+
+    /// Force a launch mode on the most recently added op.
+    pub fn launch_last(&mut self, mode: LaunchMode) {
+        let op = self.ops.last_mut().expect("no ops yet");
+        op.launch_override = Some(mode);
+    }
+
+    pub fn tensor(&self, id: TensorId) -> &TensorMeta {
+        &self.tensors[id]
+    }
+
+    pub fn tensor_by_name(&self, name: &str) -> Option<&TensorMeta> {
+        self.name_index.get(name).map(|&id| &self.tensors[id])
+    }
+
+    /// Consumers of a tensor: ops that list it among inputs.
+    pub fn consumers(&self, t: TensorId) -> Vec<usize> {
+        self.ops
+            .iter()
+            .filter(|op| op.inputs.contains(&t))
+            .map(|op| op.id)
+            .collect()
+    }
+
+    /// Input shapes of an op (cloned), in input order.
+    pub fn in_shapes(&self, op: &Op) -> Vec<Vec<usize>> {
+        op.inputs.iter().map(|&t| self.tensors[t].shape.clone()).collect()
+    }
+
+    /// Deterministic topological order of op ids (Kahn, stable by id).
+    pub fn topo_order(&self) -> Vec<usize> {
+        let n = self.ops.len();
+        let mut indeg = vec![0usize; n];
+        for op in &self.ops {
+            // dedupe: an op may consume the same tensor several times
+            // (fused QKV used as q/k/v, SwiGLU's packed gate‖up), but a
+            // producer unblocks the consumer exactly once.
+            let mut ins: Vec<_> = op.inputs.iter().filter(|&&t| self.producer[t].is_some()).collect();
+            ins.sort_unstable();
+            ins.dedup();
+            indeg[op.id] = ins.len();
+        }
+        let mut ready: Vec<usize> = (0..n).filter(|&i| indeg[i] == 0).collect();
+        ready.sort_unstable();
+        let mut order = Vec::with_capacity(n);
+        let mut qi = 0;
+        while qi < ready.len() {
+            let id = ready[qi];
+            qi += 1;
+            order.push(id);
+            let out = self.ops[id].output;
+            let mut newly: Vec<usize> = Vec::new();
+            for c in self.consumers(out) {
+                indeg[c] -= 1;
+                if indeg[c] == 0 {
+                    newly.push(c);
+                }
+            }
+            newly.sort_unstable();
+            ready.extend(newly);
+        }
+        assert_eq!(order.len(), n, "computation graph has a cycle");
+        order
+    }
+
+    /// Structural validation: every op input exists, outputs have a
+    /// unique producer, elementwise ops have matching input shapes.
+    pub fn validate(&self) -> Result<(), String> {
+        for op in &self.ops {
+            for &t in &op.inputs {
+                if t >= self.tensors.len() {
+                    return Err(format!("op {}: missing input tensor {t}", op.name));
+                }
+            }
+            if self.producer[op.output] != Some(op.id) {
+                return Err(format!("op {}: output producer mismatch", op.name));
+            }
+            match op.kind {
+                OpKind::Add => {
+                    let a = &self.tensors[op.inputs[0]].shape;
+                    let b = &self.tensors[op.inputs[1]].shape;
+                    if a != b {
+                        return Err(format!("op {}: Add shape mismatch {a:?} vs {b:?}", op.name));
+                    }
+                }
+                OpKind::MatMul => {
+                    let x = &self.tensors[op.inputs[0]].shape;
+                    let w = &self.tensors[op.inputs[1]].shape;
+                    if x[1] != w[0] {
+                        return Err(format!("op {}: MatMul K mismatch {x:?} vs {w:?}", op.name));
+                    }
+                }
+                _ => {}
+            }
+        }
+        // topo_order asserts acyclicity.
+        let _ = self.topo_order();
+        Ok(())
+    }
+
+    /// Total modeled parameter bytes (drives the bandwidth lower bound of
+    /// §6.3: decode latency ≥ param bytes / HBM bandwidth).
+    pub fn param_bytes(&self) -> u64 {
+        self.tensors.iter().filter(|t| t.is_param).map(|t| t.bytes() as u64).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_graph() -> CompGraph {
+        let mut g = CompGraph::new();
+        let x = g.input("x", vec![2, 8], DType::F32);
+        let w1 = g.param("w1", vec![8, 16], DType::F32);
+        let w2 = g.param("w2", vec![16, 8], DType::F32);
+        let h = g.op("h", OpKind::MatMul, &[x, w1], vec![2, 16], DType::F32);
+        let y = g.op("y", OpKind::MatMul, &[h, w2], vec![2, 8], DType::F32);
+        let _z = g.op("z", OpKind::Add, &[y, x], vec![2, 8], DType::F32);
+        g
+    }
+
+    #[test]
+    fn build_and_validate() {
+        let g = tiny_graph();
+        assert!(g.validate().is_ok());
+        assert_eq!(g.ops.len(), 3);
+        assert_eq!(g.topo_order(), vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn consumers_and_producer() {
+        let g = tiny_graph();
+        let h = g.tensor_by_name("h").unwrap().id;
+        assert_eq!(g.consumers(h), vec![1]);
+        assert_eq!(g.producer[h], Some(0));
+        let x = g.tensor_by_name("x").unwrap().id;
+        assert_eq!(g.producer[x], None);
+        assert_eq!(g.consumers(x), vec![0, 2]);
+    }
+
+    #[test]
+    fn param_bytes_counts_only_params() {
+        let g = tiny_graph();
+        assert_eq!(g.param_bytes(), ((8 * 16 + 16 * 8) * 4) as u64);
+    }
+
+    #[test]
+    #[should_panic(expected = "duplicate tensor name")]
+    fn duplicate_names_rejected() {
+        let mut g = CompGraph::new();
+        g.input("x", vec![1], DType::F32);
+        g.input("x", vec![1], DType::F32);
+    }
+
+    #[test]
+    fn shape_mismatch_detected() {
+        let mut g = CompGraph::new();
+        let x = g.input("x", vec![2, 8], DType::F32);
+        let w = g.param("w", vec![4, 16], DType::F32);
+        g.op("bad", OpKind::MatMul, &[x, w], vec![2, 16], DType::F32);
+        assert!(g.validate().is_err());
+    }
+}

@@ -1,0 +1,8 @@
+//! Computation-graph IR: tensors, tile regions, operators, DAG builder.
+pub mod graph;
+pub mod op;
+pub mod tensor;
+
+pub use graph::CompGraph;
+pub use op::{LaunchMode, Op, OpKind};
+pub use tensor::{split_ranges, DType, Region, TensorId, TensorMeta};

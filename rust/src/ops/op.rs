@@ -1,0 +1,333 @@
+//! Operators of the computation graph.
+//!
+//! Each operator consumes input tensors and produces exactly one output
+//! tensor. The [`OpKind`] carries everything the MPK compiler needs:
+//! which output dimensions may be partitioned into tasks, how an output
+//! tile maps back onto input regions (the core of §4.1 dependency
+//! analysis), a roofline cost (flops + bytes) per tile, and whether the
+//! operator's duration is data-dependent (→ JIT launch, §5.2).
+
+use super::tensor::{Region, TensorId};
+
+/// Task launch mode (§5.2). Operators with data-dependent durations are
+/// JIT; everything else defaults to AOT to minimize dispatch overhead.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum LaunchMode {
+    Jit,
+    Aot,
+}
+
+/// The operator vocabulary needed for the paper's workloads (dense and
+/// MoE transformer decode iterations, plus tensor-parallel collectives).
+#[derive(Clone, Debug, PartialEq)]
+pub enum OpKind {
+    /// ids\[B\] × table\[V, D\] → \[B, D\]. Gather rows of the embedding table.
+    Embedding,
+    /// x\[B, D\] (+ weight\[D\]) → \[B, D\].
+    RmsNorm,
+    /// x\[B, K\] × w\[K, N\] → \[B, N\]. Linear layer / projection.
+    MatMul,
+    /// Decode attention over a KV cache of `kv_len` tokens per request:
+    /// q\[B, Hq·dh\] (+ caches) → \[B, Hq·dh\]. `heads`/`kv_heads`/`head_dim`
+    /// drive the cost model; duration is data-dependent (variable kv_len).
+    Attention { heads: usize, kv_heads: usize, head_dim: usize, kv_len: usize },
+    /// Append this step's K/V rows to the paged cache: elementwise-cheap.
+    KvAppend,
+    /// Elementwise a + b.
+    Add,
+    /// Elementwise silu(gate) * up.
+    SwiGLU,
+    /// Ring all-reduce across `world` devices; elementwise dependency on
+    /// its input (each output tile depends only on the matching input
+    /// tile — the Figure 4 fine-grained overlap enabler).
+    AllReduce { world: usize },
+    /// Top-k softmax router: x\[B, D\] × wg\[D, E\] → meta\[B, topk\].
+    MoeRoute { experts: usize, topk: usize },
+    /// Grouped expert GEMM: tokens routed to `expert` through w\[K, N\].
+    /// `avg_tokens` is the compile-time load estimate for cost/partition.
+    MoeExpertGemm { expert: usize, avg_tokens: usize },
+    /// Weighted scatter-add of expert outputs back to token order.
+    MoeCombine { topk: usize },
+}
+
+impl OpKind {
+    /// Short mnemonic used in task names and reports (MM/AT/AR… as in
+    /// the paper's figures).
+    pub fn mnemonic(&self) -> &'static str {
+        match self {
+            OpKind::Embedding => "EMB",
+            OpKind::RmsNorm => "RMS",
+            OpKind::MatMul => "MM",
+            OpKind::Attention { .. } => "AT",
+            OpKind::KvAppend => "KV",
+            OpKind::Add => "ADD",
+            OpKind::SwiGLU => "GLU",
+            OpKind::AllReduce { .. } => "AR",
+            OpKind::MoeRoute { .. } => "RT",
+            OpKind::MoeExpertGemm { .. } => "EXP",
+            OpKind::MoeCombine { .. } => "CMB",
+        }
+    }
+
+    /// True for inter-GPU communication operators (orange tasks in the
+    /// paper's figures).
+    pub fn is_comm(&self) -> bool {
+        matches!(self, OpKind::AllReduce { .. })
+    }
+
+    /// Default launch mode (§5.2): operators whose execution time depends
+    /// on runtime data are JIT. Attention (variable sequence length) and
+    /// the expert GEMMs / combine (variable tokens-per-expert) qualify.
+    pub fn default_launch(&self) -> LaunchMode {
+        match self {
+            OpKind::Attention { .. }
+            | OpKind::MoeExpertGemm { .. }
+            | OpKind::MoeCombine { .. } => LaunchMode::Jit,
+            _ => LaunchMode::Aot,
+        }
+    }
+
+    /// Map an output tile back to the input region it consumes
+    /// (`input_idx` indexes the op's input list; `in_shape` is that
+    /// input's shape). This implements the producer/consumer overlap test
+    /// of §4.1: an event is inserted between tasks `(t1, t2)` iff
+    /// `t1.out_region` overlaps `input_region(t2.out_region, i)`.
+    pub fn input_region(&self, out: &Region, input_idx: usize, in_shape: &[usize]) -> Region {
+        let full = Region::full(in_shape);
+        match self {
+            // Gather: ids rows match output rows; the table is read at
+            // data-dependent rows → conservatively the whole table.
+            OpKind::Embedding => {
+                if input_idx == 0 {
+                    Region::new(vec![(out.dims[0].0, out.dims[0].1)])
+                } else {
+                    full
+                }
+            }
+            // Row-wise: x rows match output rows, weight fully read.
+            OpKind::RmsNorm => {
+                if input_idx == 0 {
+                    Region::new(vec![out.dims[0], (0, in_shape[1])])
+                } else {
+                    full
+                }
+            }
+            // out[r, c] reads x[r, :] and w[:, c].
+            OpKind::MatMul => {
+                if input_idx == 0 {
+                    Region::new(vec![out.dims[0], (0, in_shape[1])])
+                } else {
+                    Region::new(vec![(0, in_shape[0]), out.dims[1]])
+                }
+            }
+            // Attention tasks tile [request rows × head groups]: the q
+            // slice follows the output columns (input 0), while KV cache
+            // inputs are read conservatively in full for the task's rows
+            // (cache layout interleaves kv-heads; caches are state
+            // tensors, so precision there does not cost concurrency).
+            OpKind::Attention { .. } => {
+                if input_idx == 0 {
+                    // q (or fused qkv) rows for the task's requests; full
+                    // width — fused-append tasks also read this step's
+                    // K/V columns.
+                    Region::new(vec![out.dims[0], (0, in_shape[1])])
+                } else {
+                    let mut dims = vec![out.dims[0]];
+                    for &s in &in_shape[1..] {
+                        dims.push((0, s));
+                    }
+                    Region::new(dims)
+                }
+            }
+            // Row-wise append into the cache.
+            OpKind::KvAppend => {
+                let mut dims = vec![out.dims[0]];
+                for &s in &in_shape[1..] {
+                    dims.push((0, s));
+                }
+                Region::new(dims)
+            }
+            // Elementwise: identical region.
+            OpKind::Add => out.clone(),
+            // Gate/up are packed side by side in one input of width 2F:
+            // an output tile [r, c0:c1] reads [r, c0:c1] and
+            // [r, F+c0:F+c1]. Regions are single rectangles, so we use
+            // the conservative row-aligned full-width region (correct,
+            // slightly over-synchronized).
+            OpKind::SwiGLU => Region::new(vec![out.dims[0], (0, in_shape[1])]),
+            // Elementwise collective: the fine-grained dependency that
+            // lets AllReduce tiles start before the whole MatMul is done.
+            OpKind::AllReduce { .. } => out.clone(),
+            // Router reads its token rows fully, gate weight fully.
+            OpKind::MoeRoute { .. } => {
+                if input_idx == 0 {
+                    Region::new(vec![out.dims[0], (0, in_shape[1])])
+                } else {
+                    full
+                }
+            }
+            // Expert GEMM: which tokens reach the expert is data-
+            // dependent → conservatively all token rows of x / the route
+            // meta, full weight tile columns.
+            OpKind::MoeExpertGemm { .. } => full,
+            // Combine: reads expert outputs at data-dependent rows.
+            OpKind::MoeCombine { .. } => full,
+        }
+    }
+
+    /// Floating-point operations to produce `out` (modeled).
+    pub fn flops(&self, out: &Region, in_shapes: &[Vec<usize>]) -> u64 {
+        let n = out.numel() as u64;
+        match self {
+            OpKind::Embedding | OpKind::KvAppend => 0,
+            OpKind::RmsNorm => 4 * n,
+            OpKind::MatMul => {
+                let k = in_shapes[0][1] as u64;
+                2 * n * k
+            }
+            OpKind::Attention { kv_heads, head_dim, kv_len, heads } => {
+                // QK^T + PV over kv_len for the head slice this tile
+                // covers (FlashDecoding-style split across head groups).
+                let rows = out.extent(0) as u64;
+                let q_dim = (*heads * *head_dim) as u64;
+                let frac = out.extent(1) as f64 / q_dim.max(1) as f64;
+                let _ = kv_heads;
+                let full = 4 * rows * (*heads as u64) * (*head_dim as u64) * (*kv_len as u64);
+                (full as f64 * frac) as u64
+            }
+            OpKind::Add => n,
+            OpKind::SwiGLU => 4 * n,
+            OpKind::AllReduce { world } => n * (*world as u64 - 1).max(1),
+            OpKind::MoeRoute { experts, .. } => {
+                let rows = out.extent(0) as u64;
+                let d = in_shapes[0][1] as u64;
+                2 * rows * d * (*experts as u64)
+            }
+            OpKind::MoeExpertGemm { avg_tokens, .. } => {
+                let k = in_shapes[1][0] as u64;
+                let ncols = out.extent(1) as u64;
+                2 * (*avg_tokens as u64) * k * ncols
+            }
+            OpKind::MoeCombine { topk } => n * (*topk as u64) * 2,
+        }
+    }
+
+    /// Device-memory bytes moved (read + write) to produce `out`, with
+    /// `elem` bytes per element. Dominant term for decode is weight
+    /// streaming, which is what makes LLM decode bandwidth-bound.
+    pub fn bytes(&self, out: &Region, in_shapes: &[Vec<usize>], elem: usize) -> u64 {
+        let write = (out.numel() * elem) as u64;
+        let read: u64 = match self {
+            OpKind::Embedding => (out.numel() * elem) as u64,
+            OpKind::RmsNorm => (out.numel() * elem + in_shapes[1].iter().product::<usize>() * elem) as u64,
+            OpKind::MatMul => {
+                let rows = out.extent(0);
+                let k = in_shapes[0][1];
+                let cols = out.extent(1);
+                ((rows * k + k * cols) * elem) as u64
+            }
+            OpKind::Attention { kv_heads, head_dim, kv_len, heads } => {
+                // each head-group tile streams its share of the KV cache.
+                let rows = out.extent(0);
+                let q_dim = heads * head_dim;
+                let frac = out.extent(1) as f64 / q_dim.max(1) as f64;
+                let kv_bytes = (2 * kv_heads * head_dim * kv_len) as f64 * frac;
+                ((rows as f64 * (out.extent(1) as f64 + kv_bytes)) * elem as f64) as u64
+            }
+            OpKind::KvAppend => (2 * out.numel() * elem) as u64,
+            OpKind::Add | OpKind::SwiGLU => (2 * out.numel() * elem) as u64,
+            OpKind::AllReduce { world } => {
+                // ring: each element crosses the link 2(w-1)/w times;
+                // count local read+write once here, link cost modeled by
+                // the interconnect.
+                let w = *world as u64;
+                (out.numel() as u64 * elem as u64) * 2 * (w - 1).max(1) / w.max(1)
+            }
+            OpKind::MoeRoute { experts, .. } => {
+                let rows = out.extent(0);
+                let d = in_shapes[0][1];
+                ((rows * d + d * experts) * elem) as u64
+            }
+            OpKind::MoeExpertGemm { avg_tokens, .. } => {
+                let k = in_shapes[1][0];
+                let cols = out.extent(1);
+                ((avg_tokens * k + k * cols) * elem) as u64
+            }
+            OpKind::MoeCombine { topk } => (out.numel() * topk * elem) as u64,
+        };
+        read + write
+    }
+}
+
+/// One operator instance in a [`crate::ops::CompGraph`].
+#[derive(Clone, Debug)]
+pub struct Op {
+    pub id: usize,
+    pub name: String,
+    pub kind: OpKind,
+    pub inputs: Vec<TensorId>,
+    pub output: TensorId,
+    /// Optional user partition hint: desired number of tiles along each
+    /// output dimension (§4.1 "interface for custom partitioning").
+    pub partition_hint: Option<Vec<usize>>,
+    /// Optional launch-mode override; `None` → [`OpKind::default_launch`].
+    pub launch_override: Option<LaunchMode>,
+}
+
+impl Op {
+    /// Effective launch mode for the op's tasks.
+    pub fn launch(&self) -> LaunchMode {
+        self.launch_override.unwrap_or_else(|| self.kind.default_launch())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matmul_input_regions() {
+        let out = Region::new(vec![(2, 4), (8, 16)]);
+        let k = OpKind::MatMul;
+        // x[B=8, K=32]
+        assert_eq!(k.input_region(&out, 0, &[8, 32]), Region::new(vec![(2, 4), (0, 32)]));
+        // w[K=32, N=64]
+        assert_eq!(k.input_region(&out, 1, &[32, 64]), Region::new(vec![(0, 32), (8, 16)]));
+    }
+
+    #[test]
+    fn allreduce_is_elementwise() {
+        let out = Region::new(vec![(0, 2), (4, 8)]);
+        let k = OpKind::AllReduce { world: 4 };
+        assert_eq!(k.input_region(&out, 0, &[2, 16]), out);
+    }
+
+    #[test]
+    fn matmul_disjoint_col_tiles_do_not_share_weight_cols() {
+        let k = OpKind::MatMul;
+        let t1 = Region::new(vec![(0, 2), (0, 8)]);
+        let t2 = Region::new(vec![(0, 2), (8, 16)]);
+        let w1 = k.input_region(&t1, 1, &[32, 16]);
+        let w2 = k.input_region(&t2, 1, &[32, 16]);
+        assert!(!w1.overlaps(&w2));
+    }
+
+    #[test]
+    fn default_launch_modes() {
+        assert_eq!(OpKind::MatMul.default_launch(), LaunchMode::Aot);
+        assert_eq!(
+            OpKind::Attention { heads: 8, kv_heads: 2, head_dim: 64, kv_len: 128 }.default_launch(),
+            LaunchMode::Jit
+        );
+        assert_eq!(OpKind::MoeExpertGemm { expert: 0, avg_tokens: 4 }.default_launch(), LaunchMode::Jit);
+    }
+
+    #[test]
+    fn matmul_flops_and_bytes() {
+        let out = Region::new(vec![(0, 1), (0, 64)]);
+        let shapes = vec![vec![1, 128], vec![128, 64]];
+        assert_eq!(OpKind::MatMul.flops(&out, &shapes), 2 * 64 * 128);
+        // read x (1×128) + w (128×64), write 64, 2 bytes each
+        assert_eq!(OpKind::MatMul.bytes(&out, &shapes, 2), ((128 + 128 * 64 + 64) * 2) as u64);
+    }
+}

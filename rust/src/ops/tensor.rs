@@ -1,0 +1,241 @@
+//! Tensor metadata and tile-region algebra.
+//!
+//! A [`Region`] is an axis-aligned hyper-rectangle of a tensor, written as
+//! per-dimension half-open ranges. Regions are the currency of the MPK
+//! compiler: operator decomposition partitions each operator's *output*
+//! tensor into disjoint regions (one per task), and dependency analysis
+//! introduces an event between two tasks iff the producer's output region
+//! overlaps the consumer's input region (§4.1).
+
+use std::fmt;
+
+/// Element type of a tensor. The paper serves in bf16; our CPU/PJRT real
+/// path runs f32 (the interpret-mode Pallas kernels are f32), while the
+/// cost model accounts bytes with the *modeled* dtype.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum DType {
+    F32,
+    BF16,
+    I32,
+}
+
+impl DType {
+    /// Size in bytes of one element.
+    pub fn size(self) -> usize {
+        match self {
+            DType::F32 | DType::I32 => 4,
+            DType::BF16 => 2,
+        }
+    }
+}
+
+impl fmt::Display for DType {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            DType::F32 => write!(f, "f32"),
+            DType::BF16 => write!(f, "bf16"),
+            DType::I32 => write!(f, "i32"),
+        }
+    }
+}
+
+/// Identifier of a tensor within a [`crate::ops::CompGraph`].
+pub type TensorId = usize;
+
+/// Metadata for one tensor (an edge in the computation graph).
+#[derive(Clone, Debug)]
+pub struct TensorMeta {
+    pub id: TensorId,
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+    /// True for weights/params: resident in device memory, never produced
+    /// by an operator in the graph.
+    pub is_param: bool,
+}
+
+impl TensorMeta {
+    /// Total number of elements.
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    /// Total size in bytes under the modeled dtype.
+    pub fn bytes(&self) -> usize {
+        self.numel() * self.dtype.size()
+    }
+
+    /// The region covering the whole tensor.
+    pub fn full_region(&self) -> Region {
+        Region::full(&self.shape)
+    }
+}
+
+/// An axis-aligned hyper-rectangle: `dims[i] = (start, end)` half-open.
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+pub struct Region {
+    pub dims: Vec<(usize, usize)>,
+}
+
+impl Region {
+    /// Region covering an entire shape.
+    pub fn full(shape: &[usize]) -> Self {
+        Region { dims: shape.iter().map(|&s| (0, s)).collect() }
+    }
+
+    /// Build from explicit ranges.
+    pub fn new(dims: Vec<(usize, usize)>) -> Self {
+        Region { dims }
+    }
+
+    /// Number of dimensions.
+    pub fn rank(&self) -> usize {
+        self.dims.len()
+    }
+
+    /// Number of elements covered.
+    pub fn numel(&self) -> usize {
+        self.dims.iter().map(|&(s, e)| e.saturating_sub(s)).product()
+    }
+
+    /// True if any dimension is empty.
+    pub fn is_empty(&self) -> bool {
+        self.dims.iter().any(|&(s, e)| e <= s)
+    }
+
+    /// Hyper-rectangle intersection test. Regions of differing rank never
+    /// overlap (they belong to tensors of different shapes and callers
+    /// must not compare them, but we fail safe).
+    pub fn overlaps(&self, other: &Region) -> bool {
+        if self.rank() != other.rank() || self.is_empty() || other.is_empty() {
+            return false;
+        }
+        self.dims
+            .iter()
+            .zip(other.dims.iter())
+            .all(|(&(a0, a1), &(b0, b1))| a0 < b1 && b0 < a1)
+    }
+
+    /// True if `self` fully contains `other`.
+    pub fn contains(&self, other: &Region) -> bool {
+        if self.rank() != other.rank() {
+            return false;
+        }
+        self.dims
+            .iter()
+            .zip(other.dims.iter())
+            .all(|(&(a0, a1), &(b0, b1))| a0 <= b0 && b1 <= a1)
+    }
+
+    /// Extent (length) along dimension `d`.
+    pub fn extent(&self, d: usize) -> usize {
+        let (s, e) = self.dims[d];
+        e.saturating_sub(s)
+    }
+}
+
+impl fmt::Display for Region {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "[")?;
+        for (i, (s, e)) in self.dims.iter().enumerate() {
+            if i > 0 {
+                write!(f, ", ")?;
+            }
+            write!(f, "{s}:{e}")?;
+        }
+        write!(f, "]")
+    }
+}
+
+/// Split `extent` into `parts` contiguous, near-equal half-open ranges
+/// (first `extent % parts` ranges get one extra element). `parts` is
+/// clamped to `extent` so no range is empty.
+pub fn split_ranges(extent: usize, parts: usize) -> Vec<(usize, usize)> {
+    let parts = parts.clamp(1, extent.max(1));
+    let base = extent / parts;
+    let rem = extent % parts;
+    let mut out = Vec::with_capacity(parts);
+    let mut start = 0;
+    for i in 0..parts {
+        let len = base + usize::from(i < rem);
+        out.push((start, start + len));
+        start += len;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn region_overlap_basic() {
+        let a = Region::new(vec![(0, 4), (0, 4)]);
+        let b = Region::new(vec![(2, 6), (3, 8)]);
+        let c = Region::new(vec![(4, 8), (0, 4)]);
+        assert!(a.overlaps(&b));
+        assert!(!a.overlaps(&c)); // touching at boundary: half-open, no overlap
+        assert!(b.overlaps(&c));
+    }
+
+    #[test]
+    fn region_contains() {
+        let a = Region::new(vec![(0, 8), (0, 8)]);
+        let b = Region::new(vec![(2, 4), (3, 8)]);
+        assert!(a.contains(&b));
+        assert!(!b.contains(&a));
+        assert!(a.contains(&a));
+    }
+
+    #[test]
+    fn empty_region_never_overlaps() {
+        let a = Region::new(vec![(3, 3), (0, 4)]);
+        let b = Region::new(vec![(0, 8), (0, 8)]);
+        assert!(a.is_empty());
+        assert!(!a.overlaps(&b));
+        assert!(!b.overlaps(&a));
+    }
+
+    #[test]
+    fn rank_mismatch_is_safe() {
+        let a = Region::new(vec![(0, 4)]);
+        let b = Region::new(vec![(0, 4), (0, 4)]);
+        assert!(!a.overlaps(&b));
+        assert!(!a.contains(&b));
+    }
+
+    #[test]
+    fn split_ranges_covers_exactly() {
+        for extent in [1usize, 7, 16, 100] {
+            for parts in [1usize, 2, 3, 16, 200] {
+                let r = split_ranges(extent, parts);
+                assert_eq!(r[0].0, 0);
+                assert_eq!(r.last().unwrap().1, extent);
+                for w in r.windows(2) {
+                    assert_eq!(w[0].1, w[1].0);
+                    assert!(w[0].1 > w[0].0);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn split_ranges_near_equal() {
+        let r = split_ranges(10, 3);
+        assert_eq!(r, vec![(0, 4), (4, 7), (7, 10)]);
+    }
+
+    #[test]
+    fn tensor_meta_bytes() {
+        let t = TensorMeta {
+            id: 0,
+            name: "w".into(),
+            shape: vec![4, 8],
+            dtype: DType::BF16,
+            is_param: true,
+        };
+        assert_eq!(t.numel(), 32);
+        assert_eq!(t.bytes(), 64);
+        assert_eq!(t.full_region(), Region::new(vec![(0, 4), (0, 8)]));
+    }
+}

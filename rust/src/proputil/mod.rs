@@ -1,0 +1,47 @@
+//! Mini property-testing framework (proptest is unavailable offline).
+//!
+//! Seeded, deterministic, shrinking-free: `forall` runs a generator +
+//! property over N cases and reports the failing seed so a case can be
+//! replayed exactly. Used for the tGraph/runtime/serving invariant
+//! suites in `rust/tests/prop_*.rs`.
+
+use crate::util::XorShift64;
+
+/// Run `prop` over `cases` generated inputs. Panics with the seed of the
+/// first failing case.
+pub fn forall<T, G, P>(name: &str, seed: u64, cases: usize, mut gen: G, mut prop: P)
+where
+    G: FnMut(&mut XorShift64) -> T,
+    P: FnMut(&T) -> Result<(), String>,
+{
+    for case in 0..cases {
+        let case_seed = seed.wrapping_add(case as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        let mut rng = XorShift64::new(case_seed);
+        let input = gen(&mut rng);
+        if let Err(e) = prop(&input) {
+            panic!("property '{name}' failed at case {case} (seed {case_seed:#x}): {e}");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forall_passes_trivial_property() {
+        forall("x<n", 1, 100, |r| r.below(10), |&x| {
+            if x < 10 {
+                Ok(())
+            } else {
+                Err(format!("{x} >= 10"))
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-fails' failed")]
+    fn forall_reports_failures() {
+        forall("always-fails", 2, 5, |r| r.below(3), |_| Err("nope".into()));
+    }
+}

@@ -1,0 +1,192 @@
+//! Reader for `artifacts/manifest.json` (emitted by `python -m
+//! compile.aot`). Describes every AOT-compiled HLO-text artifact: name,
+//! file, input signature and output arity, plus the tiny-model metadata
+//! the exec layer needs (S_MAX, tile width, batch sizes).
+
+use crate::util::{json_parse, Json};
+use std::path::{Path, PathBuf};
+
+/// Element type tag of an artifact input.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ArgType {
+    F32,
+    I32,
+}
+
+/// One input slot of an artifact.
+#[derive(Clone, Debug)]
+pub struct ArgSpec {
+    pub shape: Vec<usize>,
+    pub ty: ArgType,
+}
+
+impl ArgSpec {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One AOT-compiled computation.
+#[derive(Clone, Debug)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub path: PathBuf,
+    pub inputs: Vec<ArgSpec>,
+    /// Number of tuple outputs.
+    pub outputs: usize,
+}
+
+/// Tiny-model metadata mirrored from python `TinyConfig`.
+#[derive(Clone, Copy, Debug)]
+pub struct TinyModelMeta {
+    pub layers: usize,
+    pub d_model: usize,
+    pub heads: usize,
+    pub kv_heads: usize,
+    pub head_dim: usize,
+    pub ffn: usize,
+    pub vocab: usize,
+}
+
+impl TinyModelMeta {
+    pub fn q_dim(&self) -> usize {
+        self.heads * self.head_dim
+    }
+
+    pub fn kv_dim(&self) -> usize {
+        self.kv_heads * self.head_dim
+    }
+}
+
+/// The parsed manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub model: TinyModelMeta,
+    pub s_max: usize,
+    pub tile_n: usize,
+    pub batch_sizes: Vec<usize>,
+    pub artifacts: Vec<ArtifactSpec>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest, String> {
+        let text = std::fs::read_to_string(dir.join("manifest.json"))
+            .map_err(|e| format!("reading manifest.json in {dir:?}: {e} — run `make artifacts`"))?;
+        let j = json_parse::parse(&text)?;
+        let model = j.get("model").ok_or("missing model")?;
+        let get = |o: &Json, k: &str| -> Result<usize, String> {
+            o.get(k).and_then(Json::as_usize).ok_or_else(|| format!("missing {k}"))
+        };
+        let meta = TinyModelMeta {
+            layers: get(model, "layers")?,
+            d_model: get(model, "d_model")?,
+            heads: get(model, "heads")?,
+            kv_heads: get(model, "kv_heads")?,
+            head_dim: get(model, "head_dim")?,
+            ffn: get(model, "ffn")?,
+            vocab: get(model, "vocab")?,
+        };
+        let batch_sizes = j
+            .get("batch_sizes")
+            .and_then(Json::as_arr)
+            .ok_or("missing batch_sizes")?
+            .iter()
+            .filter_map(Json::as_usize)
+            .collect();
+        let mut artifacts = Vec::new();
+        for a in j.get("artifacts").and_then(Json::as_arr).ok_or("missing artifacts")? {
+            let name = a.get("name").and_then(Json::as_str).ok_or("artifact name")?.to_string();
+            let file = a.get("file").and_then(Json::as_str).ok_or("artifact file")?;
+            let mut inputs = Vec::new();
+            for i in a.get("inputs").and_then(Json::as_arr).ok_or("artifact inputs")? {
+                let shape = i
+                    .get("shape")
+                    .and_then(Json::as_arr)
+                    .ok_or("input shape")?
+                    .iter()
+                    .filter_map(Json::as_usize)
+                    .collect();
+                let ty = match i.get("dtype").and_then(Json::as_str) {
+                    Some("i32") => ArgType::I32,
+                    _ => ArgType::F32,
+                };
+                inputs.push(ArgSpec { shape, ty });
+            }
+            let outputs = a.get("outputs").and_then(Json::as_usize).unwrap_or(1);
+            artifacts.push(ArtifactSpec { name, path: dir.join(file), inputs, outputs });
+        }
+        Ok(Manifest { model: meta, s_max: get(&j, "s_max")?, tile_n: get(&j, "tile_n")?, batch_sizes, artifacts })
+    }
+
+    pub fn find(&self, name: &str) -> Option<(usize, &ArtifactSpec)> {
+        self.artifacts.iter().enumerate().find(|(_, a)| a.name == name)
+    }
+
+    /// Default artifacts directory: `$MPK_ARTIFACTS` or `./artifacts`.
+    pub fn default_dir() -> PathBuf {
+        std::env::var("MPK_ARTIFACTS").map(PathBuf::from).unwrap_or_else(|_| PathBuf::from("artifacts"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // These tests require `make artifacts` to have run; they are the
+    // integration contract between aot.py and the rust loader.
+    fn manifest() -> Option<Manifest> {
+        let dir = Manifest::default_dir();
+        Manifest::load(&dir).ok()
+    }
+
+    #[test]
+    fn manifest_loads_and_matches_tiny_config() {
+        let Some(m) = manifest() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        assert_eq!(m.model.layers, 4);
+        assert_eq!(m.model.d_model, 256);
+        assert_eq!(m.model.q_dim(), 256);
+        assert_eq!(m.model.kv_dim(), 128);
+        assert_eq!(m.batch_sizes, vec![1, 2, 4, 8]);
+        assert!(m.s_max >= 16);
+    }
+
+    #[test]
+    fn expected_artifacts_present_with_files() {
+        let Some(m) = manifest() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        for b in &m.batch_sizes {
+            for name in [
+                format!("matmul_b{b}_k256_n128"),
+                format!("matmul_b{b}_k512_n128"),
+                format!("rmsnorm_b{b}"),
+                format!("swiglu_b{b}"),
+                format!("add_b{b}"),
+                format!("embed_b{b}"),
+                format!("ref_decode_b{b}"),
+            ] {
+                let (_, a) = m.find(&name).unwrap_or_else(|| panic!("missing artifact {name}"));
+                assert!(a.path.exists(), "file missing for {name}");
+            }
+        }
+        let (_, attn) = m.find("attn_q1").expect("attn_q1");
+        assert_eq!(attn.inputs.len(), 4);
+        assert_eq!(attn.inputs[3].ty, ArgType::I32);
+    }
+
+    #[test]
+    fn ref_decode_signature_arity() {
+        let Some(m) = manifest() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let (_, r) = m.find("ref_decode_b1").unwrap();
+        // ids + 2L caches + cur_len + embed + 6L weights + final + head
+        assert_eq!(r.inputs.len(), 1 + 2 * 4 + 1 + 1 + 6 * 4 + 2);
+        assert_eq!(r.outputs, 1 + 2 * 4);
+    }
+}

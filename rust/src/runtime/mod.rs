@@ -1,0 +1,8 @@
+//! PJRT-backed artifact execution: manifest loading and the thread-
+//! confined exec pool. Python builds the artifacts once (`make
+//! artifacts`); this module runs them from the rust hot path.
+pub mod manifest;
+pub mod pool;
+
+pub use manifest::{ArgSpec, ArgType, ArtifactSpec, Manifest, TinyModelMeta};
+pub use pool::{ExecPool, Value};

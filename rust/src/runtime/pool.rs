@@ -1,0 +1,308 @@
+//! PJRT execution pool.
+//!
+//! The `xla` crate's `PjRtClient` is `Rc`-based (`!Send`), and
+//! `execute()` clones that `Rc` per output buffer — so a client must
+//! never be shared across threads. The pool therefore runs K *executor
+//! threads, each owning its own client and its own compiled copy of
+//! every artifact*; megakernel workers submit plain `Vec<f32>`/`Vec<i32>`
+//! tensors over a channel and block on a per-request reply channel.
+//! Python is never involved: artifacts are HLO text on disk, compiled
+//! once per executor thread at pool construction.
+
+use crate::runtime::manifest::{ArgType, Manifest};
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
+
+/// A host tensor crossing the pool boundary.
+#[derive(Clone, Debug)]
+pub enum Value {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+impl Value {
+    pub fn len(&self) -> usize {
+        match self {
+            Value::F32(v) => v.len(),
+            Value::I32(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn as_f32(&self) -> &[f32] {
+        match self {
+            Value::F32(v) => v,
+            Value::I32(_) => panic!("expected f32 value"),
+        }
+    }
+}
+
+struct Request {
+    artifact: usize,
+    inputs: Vec<Value>,
+    reply: mpsc::SyncSender<Result<Vec<Vec<f32>>, String>>,
+}
+
+struct SharedQueue {
+    q: Mutex<VecDeque<Request>>,
+    cv: Condvar,
+    closed: Mutex<bool>,
+}
+
+/// Thread pool of PJRT executor threads.
+pub struct ExecPool {
+    queue: Arc<SharedQueue>,
+    handles: Vec<std::thread::JoinHandle<()>>,
+    /// Requests executed (per-pool counter, for perf accounting).
+    pub executed: Arc<AtomicUsize>,
+    manifest: Arc<Manifest>,
+}
+
+impl ExecPool {
+    /// Build a pool with `threads` executor threads; each compiles all
+    /// artifacts in `manifest` on its own CPU client.
+    pub fn new(manifest: Manifest, threads: usize) -> Result<ExecPool, String> {
+        let manifest = Arc::new(manifest);
+        let queue = Arc::new(SharedQueue {
+            q: Mutex::new(VecDeque::new()),
+            cv: Condvar::new(),
+            closed: Mutex::new(false),
+        });
+        let executed = Arc::new(AtomicUsize::new(0));
+        // compile-check on the main thread first for a clean error.
+        let mut handles = Vec::new();
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<(), String>>();
+        for t in 0..threads.max(1) {
+            let queue = queue.clone();
+            let manifest = manifest.clone();
+            let executed = executed.clone();
+            let ready = ready_tx.clone();
+            handles.push(
+                std::thread::Builder::new()
+                    .name(format!("pjrt-exec-{t}"))
+                    .spawn(move || executor_thread(queue, manifest, executed, ready))
+                    .map_err(|e| e.to_string())?,
+            );
+        }
+        drop(ready_tx);
+        for _ in 0..threads.max(1) {
+            ready_rx.recv().map_err(|e| e.to_string())??;
+        }
+        Ok(ExecPool { queue, handles, executed, manifest })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Execute artifact `artifact` (index into the manifest) with the
+    /// given inputs; blocks until the result tuple (each element
+    /// flattened to f32) is ready.
+    pub fn execute(&self, artifact: usize, inputs: Vec<Value>) -> Result<Vec<Vec<f32>>, String> {
+        let (tx, rx) = mpsc::sync_channel(1);
+        {
+            let mut q = self.queue.q.lock().unwrap();
+            q.push_back(Request { artifact, inputs, reply: tx });
+        }
+        self.queue.cv.notify_one();
+        rx.recv().map_err(|_| "executor thread died".to_string())?
+    }
+
+    /// Execute by artifact name (convenience for tests/examples).
+    pub fn execute_by_name(&self, name: &str, inputs: Vec<Value>) -> Result<Vec<Vec<f32>>, String> {
+        let (idx, _) = self.manifest.find(name).ok_or_else(|| format!("unknown artifact {name}"))?;
+        self.execute(idx, inputs)
+    }
+}
+
+impl Drop for ExecPool {
+    fn drop(&mut self) {
+        *self.queue.closed.lock().unwrap() = true;
+        self.queue.cv.notify_all();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn executor_thread(
+    queue: Arc<SharedQueue>,
+    manifest: Arc<Manifest>,
+    executed: Arc<AtomicUsize>,
+    ready: mpsc::Sender<Result<(), String>>,
+) {
+    // Own client + own compiled executables: nothing here is Send.
+    // Artifacts compile lazily on first use (compiling all ~30 up front
+    // costs tens of seconds; a typical run touches a handful).
+    let client = match xla::PjRtClient::cpu() {
+        Ok(c) => {
+            let _ = ready.send(Ok(()));
+            c
+        }
+        Err(e) => {
+            let _ = ready.send(Err(e.to_string()));
+            return;
+        }
+    };
+    let mut exes: Vec<Option<xla::PjRtLoadedExecutable>> =
+        (0..manifest.artifacts.len()).map(|_| None).collect();
+
+    loop {
+        let req = {
+            let mut q = queue.q.lock().unwrap();
+            loop {
+                if let Some(r) = q.pop_front() {
+                    break r;
+                }
+                if *queue.closed.lock().unwrap() {
+                    return;
+                }
+                q = queue.cv.wait(q).unwrap();
+            }
+        };
+        let result = run_one(&client, &mut exes, &manifest, &req);
+        executed.fetch_add(1, Ordering::Relaxed);
+        let _ = req.reply.send(result);
+    }
+}
+
+fn run_one(
+    client: &xla::PjRtClient,
+    exes: &mut [Option<xla::PjRtLoadedExecutable>],
+    manifest: &Manifest,
+    req: &Request,
+) -> Result<Vec<Vec<f32>>, String> {
+    let spec = &manifest.artifacts[req.artifact];
+    if exes[req.artifact].is_none() {
+        let proto = xla::HloModuleProto::from_text_file(
+            spec.path.to_str().ok_or("non-utf8 path")?,
+        )
+        .map_err(|e| format!("{}: {e}", spec.name))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        exes[req.artifact] =
+            Some(client.compile(&comp).map_err(|e| format!("compile {}: {e}", spec.name))?);
+    }
+    if req.inputs.len() != spec.inputs.len() {
+        return Err(format!(
+            "{}: expected {} inputs, got {}",
+            spec.name,
+            spec.inputs.len(),
+            req.inputs.len()
+        ));
+    }
+    let mut literals = Vec::with_capacity(req.inputs.len());
+    for (v, s) in req.inputs.iter().zip(spec.inputs.iter()) {
+        if v.len() != s.numel() {
+            return Err(format!(
+                "{}: input numel mismatch {} vs {:?}",
+                spec.name,
+                v.len(),
+                s.shape
+            ));
+        }
+        let dims: Vec<i64> = s.shape.iter().map(|&d| d as i64).collect();
+        let lit = match (v, s.ty) {
+            (Value::F32(data), ArgType::F32) => {
+                xla::Literal::vec1(data).reshape(&dims).map_err(|e| e.to_string())?
+            }
+            (Value::I32(data), ArgType::I32) => {
+                xla::Literal::vec1(data).reshape(&dims).map_err(|e| e.to_string())?
+            }
+            _ => return Err(format!("{}: dtype mismatch", spec.name)),
+        };
+        literals.push(lit);
+    }
+    let out = exes[req.artifact]
+        .as_ref()
+        .unwrap()
+        .execute::<xla::Literal>(&literals)
+        .map_err(|e| e.to_string())?;
+    let tuple = out[0][0].to_literal_sync().map_err(|e| e.to_string())?;
+    let parts = tuple.to_tuple().map_err(|e| e.to_string())?;
+    if parts.len() != spec.outputs {
+        return Err(format!("{}: expected {} outputs, got {}", spec.name, spec.outputs, parts.len()));
+    }
+    parts
+        .into_iter()
+        .map(|p| p.to_vec::<f32>().map_err(|e| e.to_string()))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::manifest::Manifest;
+
+    fn pool(threads: usize) -> Option<ExecPool> {
+        let m = Manifest::load(&Manifest::default_dir()).ok()?;
+        Some(ExecPool::new(m, threads).expect("pool construction"))
+    }
+
+    #[test]
+    fn matmul_artifact_computes() {
+        let Some(p) = pool(1) else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        // x = ones(1,256), w = identity-ish: w[i,j] = 1 if i==j else 0
+        let x = vec![1.0f32; 256];
+        let mut w = vec![0.0f32; 256 * 128];
+        for i in 0..128 {
+            w[i * 128 + i] = 2.0; // rows 0..128 map to cols scaled by 2
+        }
+        let out = p
+            .execute_by_name("matmul_b1_k256_n128", vec![Value::F32(x), Value::F32(w)])
+            .unwrap();
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].len(), 128);
+        for &v in &out[0] {
+            assert!((v - 2.0).abs() < 1e-5, "got {v}");
+        }
+    }
+
+    #[test]
+    fn concurrent_execution_from_many_threads() {
+        let Some(p) = pool(2) else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let p = std::sync::Arc::new(p);
+        std::thread::scope(|s| {
+            for t in 0..8 {
+                let p = p.clone();
+                s.spawn(move || {
+                    for i in 0..4 {
+                        let scale = (t * 4 + i + 1) as f32;
+                        let a = vec![scale; 256];
+                        let b = vec![1.0f32; 256];
+                        let out = p
+                            .execute_by_name("add_b1", vec![Value::F32(a), Value::F32(b)])
+                            .unwrap();
+                        for &v in &out[0] {
+                            assert!((v - (scale + 1.0)).abs() < 1e-6);
+                        }
+                    }
+                });
+            }
+        });
+        assert_eq!(p.executed.load(Ordering::Relaxed), 32);
+    }
+
+    #[test]
+    fn input_validation_errors() {
+        let Some(p) = pool(1) else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let err = p.execute_by_name("add_b1", vec![Value::F32(vec![0.0; 3])]).unwrap_err();
+        assert!(err.contains("expected 2 inputs"), "{err}");
+        let err = p
+            .execute_by_name("add_b1", vec![Value::F32(vec![0.0; 3]), Value::F32(vec![0.0; 256])])
+            .unwrap_err();
+        assert!(err.contains("numel mismatch"), "{err}");
+    }
+}

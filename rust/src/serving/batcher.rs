@@ -1,0 +1,218 @@
+//! Requests and continuous batching (§6.1, Orca-style).
+//!
+//! Each decode iteration the engine (1) retires finished requests,
+//! (2) admits waiting requests while KV blocks and batch slots allow,
+//! and (3) picks the specialized tGraph for the next power-of-two batch
+//! size. In the paper this bookkeeping runs *inside* the mega-kernel as
+//! the start event's task; here it is the host-side `IterPrep`
+//! counterpart driving the same state.
+
+use crate::serving::kvcache::KvAllocator;
+use std::collections::VecDeque;
+
+/// A generation request.
+#[derive(Clone, Debug)]
+pub struct Request {
+    pub id: u64,
+    pub prompt: Vec<i32>,
+    pub max_new_tokens: usize,
+    /// Tokens generated so far.
+    pub generated: Vec<i32>,
+    /// Prompt tokens already consumed (prefill progress).
+    pub prompt_pos: usize,
+    /// Cache length (tokens already appended).
+    pub cache_len: usize,
+    /// Batch slot while active.
+    pub slot: Option<usize>,
+}
+
+impl Request {
+    pub fn new(id: u64, prompt: Vec<i32>, max_new_tokens: usize) -> Self {
+        assert!(!prompt.is_empty(), "empty prompt");
+        Request { id, prompt, max_new_tokens, generated: Vec::new(), prompt_pos: 0, cache_len: 0, slot: None }
+    }
+
+    /// Next token to feed the model: prompt token during prefill, last
+    /// generated token during decode.
+    pub fn next_input(&self) -> i32 {
+        if self.prompt_pos < self.prompt.len() {
+            self.prompt[self.prompt_pos]
+        } else {
+            *self.generated.last().unwrap_or(&0)
+        }
+    }
+
+    /// True while still consuming the prompt.
+    pub fn in_prefill(&self) -> bool {
+        self.prompt_pos < self.prompt.len()
+    }
+
+    pub fn finished(&self) -> bool {
+        self.generated.len() >= self.max_new_tokens
+    }
+
+    /// Total tokens this request will hold in cache after this step.
+    pub fn tokens_after_step(&self) -> usize {
+        self.cache_len + 1
+    }
+}
+
+/// Continuous batcher over a bounded slot array.
+pub struct Batcher {
+    pub max_batch: usize,
+    pub max_seq: usize,
+    waiting: VecDeque<Request>,
+    pub active: Vec<Request>,
+    pub finished: Vec<Request>,
+    pub kv: KvAllocator,
+}
+
+impl Batcher {
+    pub fn new(max_batch: usize, max_seq: usize, kv: KvAllocator) -> Self {
+        Batcher { max_batch, max_seq, waiting: VecDeque::new(), active: Vec::new(), finished: Vec::new(), kv }
+    }
+
+    pub fn submit(&mut self, r: Request) {
+        assert!(
+            r.prompt.len() + r.max_new_tokens <= self.max_seq,
+            "request {} exceeds max_seq {}",
+            r.id,
+            self.max_seq
+        );
+        self.waiting.push_back(r);
+    }
+
+    pub fn pending(&self) -> usize {
+        self.waiting.len()
+    }
+
+    pub fn has_work(&self) -> bool {
+        !self.waiting.is_empty() || !self.active.is_empty()
+    }
+
+    /// One scheduling step: retire finished, admit waiting (§6.1 order).
+    /// Returns ids of requests retired this step.
+    pub fn step_admission(&mut self) -> Vec<u64> {
+        // 1. retire
+        let mut retired = Vec::new();
+        let mut i = 0;
+        while i < self.active.len() {
+            if self.active[i].finished() {
+                let mut r = self.active.swap_remove(i);
+                self.kv.release(r.id);
+                r.slot = None;
+                retired.push(r.id);
+                self.finished.push(r);
+            } else {
+                i += 1;
+            }
+        }
+        // 2. admit while slots + KV blocks allow (worst-case reservation).
+        while self.active.len() < self.max_batch {
+            let Some(front) = self.waiting.front() else { break };
+            let worst = front.prompt.len() + front.max_new_tokens;
+            if !self.kv.ensure(front.id, worst) {
+                break; // KV pressure: wait for retirements
+            }
+            let mut r = self.waiting.pop_front().unwrap();
+            r.slot = None; // assigned by compaction below
+            self.active.push(r);
+        }
+        // 3. compact slots: active requests occupy slots 0..n in order.
+        for (slot, r) in self.active.iter_mut().enumerate() {
+            r.slot = Some(slot);
+        }
+        retired
+    }
+
+    /// Specialized-graph batch size for the current active set: next
+    /// power of two (§6.1 "powers of two up to the maximum batch size").
+    pub fn graph_batch(&self) -> usize {
+        self.active.len().next_power_of_two().min(self.max_batch.next_power_of_two())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn batcher(max_batch: usize, blocks: usize) -> Batcher {
+        Batcher::new(max_batch, 64, KvAllocator::new(blocks, 8))
+    }
+
+    fn req(id: u64, prompt_len: usize, gen: usize) -> Request {
+        Request::new(id, (0..prompt_len as i32).collect(), gen)
+    }
+
+    #[test]
+    fn admits_up_to_batch_capacity() {
+        let mut b = batcher(2, 100);
+        for i in 0..4 {
+            b.submit(req(i, 4, 4));
+        }
+        b.step_admission();
+        assert_eq!(b.active.len(), 2);
+        assert_eq!(b.pending(), 2);
+        assert_eq!(b.active[0].slot, Some(0));
+        assert_eq!(b.active[1].slot, Some(1));
+    }
+
+    #[test]
+    fn kv_pressure_blocks_admission() {
+        // 2 blocks of 8 tokens = 16 tokens capacity; each request needs
+        // 8+8 = 16 → only one fits.
+        let mut b = batcher(4, 2);
+        b.submit(req(1, 8, 8));
+        b.submit(req(2, 8, 8));
+        b.step_admission();
+        assert_eq!(b.active.len(), 1);
+        assert_eq!(b.pending(), 1);
+    }
+
+    #[test]
+    fn retirement_frees_kv_and_admits_next() {
+        let mut b = batcher(4, 2);
+        b.submit(req(1, 8, 1));
+        b.submit(req(2, 8, 8));
+        b.step_admission();
+        assert_eq!(b.active.len(), 1);
+        // finish request 1
+        b.active[0].generated.push(42);
+        let retired = b.step_admission();
+        assert_eq!(retired, vec![1]);
+        assert_eq!(b.active.len(), 1);
+        assert_eq!(b.active[0].id, 2);
+        assert_eq!(b.kv.held_by(1), 0);
+    }
+
+    #[test]
+    fn graph_batch_is_power_of_two() {
+        let mut b = batcher(8, 1000);
+        for i in 0..5 {
+            b.submit(req(i, 2, 2));
+        }
+        b.step_admission();
+        assert_eq!(b.active.len(), 5);
+        assert_eq!(b.graph_batch(), 8);
+    }
+
+    #[test]
+    fn prefill_then_decode_inputs() {
+        let mut r = req(1, 3, 2);
+        assert!(r.in_prefill());
+        assert_eq!(r.next_input(), 0);
+        r.prompt_pos = 2;
+        assert_eq!(r.next_input(), 2);
+        r.prompt_pos = 3;
+        r.generated.push(99);
+        assert!(!r.in_prefill());
+        assert_eq!(r.next_input(), 99);
+    }
+
+    #[test]
+    #[should_panic(expected = "exceeds max_seq")]
+    fn oversized_request_rejected() {
+        let mut b = batcher(1, 100);
+        b.submit(req(1, 60, 10));
+    }
+}

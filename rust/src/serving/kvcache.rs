@@ -1,0 +1,124 @@
+//! Paged KV-cache block allocator (§6.1 / PagedAttention-class).
+//!
+//! Physical cache memory is divided into fixed-size blocks of
+//! `block_tokens` tokens; each active request holds a growing list of
+//! blocks per layer. The serving engine uses this for admission control
+//! (a request is admitted only if its worst-case block demand fits) and
+//! frees blocks when requests retire.
+
+/// Block-grained KV allocator.
+#[derive(Debug)]
+pub struct KvAllocator {
+    total_blocks: usize,
+    free: Vec<usize>,
+    /// blocks held per request id.
+    held: std::collections::HashMap<u64, Vec<usize>>,
+    pub block_tokens: usize,
+}
+
+impl KvAllocator {
+    pub fn new(total_blocks: usize, block_tokens: usize) -> Self {
+        KvAllocator {
+            total_blocks,
+            free: (0..total_blocks).rev().collect(),
+            held: Default::default(),
+            block_tokens: block_tokens.max(1),
+        }
+    }
+
+    pub fn free_blocks(&self) -> usize {
+        self.free.len()
+    }
+
+    pub fn total_blocks(&self) -> usize {
+        self.total_blocks
+    }
+
+    /// Blocks needed to hold `tokens` tokens.
+    pub fn blocks_for(&self, tokens: usize) -> usize {
+        tokens.div_ceil(self.block_tokens)
+    }
+
+    /// Ensure `req` holds enough blocks for `tokens` tokens; allocates
+    /// the difference. Returns false (no change) if the pool is short.
+    pub fn ensure(&mut self, req: u64, tokens: usize) -> bool {
+        let need = self.blocks_for(tokens);
+        let have = self.held.get(&req).map_or(0, |v| v.len());
+        if need <= have {
+            return true;
+        }
+        let want = need - have;
+        if self.free.len() < want {
+            return false;
+        }
+        let entry = self.held.entry(req).or_default();
+        for _ in 0..want {
+            entry.push(self.free.pop().unwrap());
+        }
+        true
+    }
+
+    /// Release all blocks of a retired request.
+    pub fn release(&mut self, req: u64) -> usize {
+        match self.held.remove(&req) {
+            Some(blocks) => {
+                let n = blocks.len();
+                self.free.extend(blocks);
+                n
+            }
+            None => 0,
+        }
+    }
+
+    /// Blocks currently held by a request.
+    pub fn held_by(&self, req: u64) -> usize {
+        self.held.get(&req).map_or(0, |v| v.len())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn allocate_grow_release() {
+        let mut a = KvAllocator::new(10, 4);
+        assert!(a.ensure(1, 4)); // 1 block
+        assert_eq!(a.held_by(1), 1);
+        assert!(a.ensure(1, 5)); // grows to 2
+        assert_eq!(a.held_by(1), 2);
+        assert!(a.ensure(1, 5)); // idempotent
+        assert_eq!(a.free_blocks(), 8);
+        assert_eq!(a.release(1), 2);
+        assert_eq!(a.free_blocks(), 10);
+    }
+
+    #[test]
+    fn admission_fails_when_pool_short() {
+        let mut a = KvAllocator::new(2, 4);
+        assert!(a.ensure(1, 8)); // takes both
+        assert!(!a.ensure(2, 1), "should refuse when empty");
+        // failed ensure must not leak partial allocations.
+        assert_eq!(a.held_by(2), 0);
+        a.release(1);
+        assert!(a.ensure(2, 1));
+    }
+
+    #[test]
+    fn blocks_for_rounds_up() {
+        let a = KvAllocator::new(1, 16);
+        assert_eq!(a.blocks_for(1), 1);
+        assert_eq!(a.blocks_for(16), 1);
+        assert_eq!(a.blocks_for(17), 2);
+        assert_eq!(a.blocks_for(0), 0);
+    }
+
+    #[test]
+    fn no_double_release() {
+        let mut a = KvAllocator::new(4, 4);
+        a.ensure(9, 16);
+        assert_eq!(a.release(9), 4);
+        assert_eq!(a.release(9), 0);
+        assert_eq!(a.free_blocks(), 4);
+    }
+}

@@ -1,0 +1,9 @@
+//! LLM serving substrate (§6.1): requests, paged KV allocation,
+//! continuous batching, and the decode loop over the real megakernel.
+pub mod batcher;
+pub mod engine;
+pub mod kvcache;
+
+pub use batcher::{Batcher, Request};
+pub use engine::{ServeEngine, ServeStats};
+pub use kvcache::KvAllocator;

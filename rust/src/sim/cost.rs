@@ -1,0 +1,236 @@
+//! Per-task roofline costs for the discrete-event simulator.
+//!
+//! Each task gets a `preload` (device-memory bytes at the worker's
+//! bandwidth share) and a `compute` (flops at the worker's MXU share)
+//! duration; communication tasks instead cost link time. The bandwidth
+//! *efficiency* applied to the preload is where cross-task pipelining
+//! shows up (see [`crate::sim::gpu::GpuSpec::bw_eff_pipelined`]).
+
+use crate::ops::{LaunchMode, OpKind};
+use crate::sim::gpu::{GpuSpec, LinkSpec};
+use crate::tgraph::{CompiledGraph, TaskKind};
+
+/// Precomputed cost of one task, µs (before efficiency scaling).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct TaskCost {
+    /// Device-memory traffic at full per-worker share.
+    pub preload_us: f64,
+    /// MXU/CUDA-core time at per-worker share.
+    pub compute_us: f64,
+    /// Inter-GPU transfer time (comm tasks), including link latency.
+    pub comm_us: f64,
+    /// Dispatch overhead by launch mode.
+    pub dispatch_us: f64,
+    /// Shared-memory pages needed while resident.
+    pub pages: usize,
+    pub is_comm: bool,
+}
+
+impl TaskCost {
+    /// Execution time with a given bandwidth efficiency (dispatch
+    /// overhead excluded — the engine accounts it separately).
+    pub fn exec_us(&self, bw_eff: f64, compute_eff: f64) -> f64 {
+        self.preload_us / bw_eff + self.compute_us / compute_eff + self.comm_us
+    }
+}
+
+/// Compute costs for every task of a compiled graph.
+pub fn task_costs(c: &CompiledGraph, gpu: &GpuSpec, link: Option<&LinkSpec>) -> Vec<TaskCost> {
+    task_costs_with_variance(c, gpu, link, 0.35)
+}
+
+/// Like [`task_costs`], with explicit attention-duration variance.
+///
+/// Decode attention is data-dependent (requests have different sequence
+/// lengths, §5.2); `variance` scales each request row's attention tasks
+/// deterministically within `[1-v, 1+v]`. This staggering is what JIT
+/// launch balances and what fine-grained events exploit — setting it to
+/// 0 models perfectly uniform requests.
+pub fn task_costs_with_variance(
+    c: &CompiledGraph,
+    gpu: &GpuSpec,
+    link: Option<&LinkSpec>,
+    variance: f64,
+) -> Vec<TaskCost> {
+    let g = &c.graph;
+    let bw = gpu.bw_share();
+    let fl = gpu.flops_share();
+    c.tgraph
+        .tasks
+        .iter()
+        .map(|t| match &t.kind {
+            TaskKind::Dummy => TaskCost::default(),
+            TaskKind::IterPrep => TaskCost {
+                compute_us: 0.5,
+                dispatch_us: gpu.aot_check_us,
+                ..Default::default()
+            },
+            TaskKind::Transfer { bytes, .. } => {
+                let l = link.expect("transfer task without link spec");
+                TaskCost {
+                    comm_us: *bytes as f64 / l.bytes_per_us + l.latency_us,
+                    dispatch_us: dispatch(gpu, t.launch),
+                    pages: 1,
+                    is_comm: true,
+                    ..Default::default()
+                }
+            }
+            TaskKind::Compute { op, kind } => {
+                let op = &g.ops[*op];
+                let in_shapes = g.in_shapes(op);
+                let elem = g.tensor(op.output).dtype.size();
+                let mut flops = kind.flops(&t.out_region, &in_shapes) as f64;
+                let mut bytes = kind.bytes(&t.out_region, &in_shapes, elem) as f64;
+                if let OpKind::Attention { .. } = kind {
+                    // per-request sequence-length variance: deterministic
+                    // hash of the request row.
+                    let row = t.out_region.dims[0].0 as u64;
+                    let h = row.wrapping_mul(0x9E37_79B9_7F4A_7C15) >> 40;
+                    let f = 1.0 + variance * ((h % 1000) as f64 / 500.0 - 1.0);
+                    flops *= f;
+                    bytes *= f;
+                }
+                if let OpKind::AllReduce { world } = kind {
+                    // in-kernel ring transfer: bytes already account the
+                    // 2(w-1)/w factor; ride the link, not HBM.
+                    let l = link.expect("AllReduce task without link spec");
+                    let _ = world;
+                    TaskCost {
+                        comm_us: bytes / l.bytes_per_us + l.latency_us,
+                        compute_us: flops / fl,
+                        dispatch_us: dispatch(gpu, t.launch),
+                        pages: 2,
+                        is_comm: true,
+                        ..Default::default()
+                    }
+                } else {
+                    TaskCost {
+                        preload_us: bytes / bw,
+                        compute_us: flops / fl,
+                        dispatch_us: dispatch(gpu, t.launch),
+                        pages: (crate::megakernel::task_smem_bytes(&t.kind, elem)
+                            / crate::megakernel::PAGE_BYTES)
+                            .max(1),
+                        is_comm: false,
+                        ..Default::default()
+                    }
+                }
+            }
+        })
+        .collect()
+}
+
+fn dispatch(gpu: &GpuSpec, mode: LaunchMode) -> f64 {
+    match mode {
+        LaunchMode::Jit => gpu.jit_dispatch_us,
+        LaunchMode::Aot => gpu.aot_check_us,
+    }
+}
+
+/// Whole-operator cost for the kernel-per-operator baselines: all tasks
+/// of the op run as one kernel across all workers (wave-quantized), at
+/// monolithic-kernel efficiency.
+pub fn op_kernel_us(
+    c: &CompiledGraph,
+    costs: &[TaskCost],
+    op_id: usize,
+    gpu: &GpuSpec,
+    link: Option<&LinkSpec>,
+) -> f64 {
+    let span: Vec<usize> = c
+        .tgraph
+        .tasks
+        .iter()
+        .filter(|t| t.op_id() == Some(op_id) && !t.kind.is_dummy())
+        .map(|t| t.id)
+        .collect();
+    if span.is_empty() {
+        return 0.0;
+    }
+    let is_comm = costs[span[0]].is_comm;
+    if is_comm {
+        // host-launched collective: whole-tensor latency + NCCL launch.
+        let total_comm: f64 = span.iter().map(|&t| costs[t].comm_us).sum();
+        let l = link.expect("comm op without link");
+        // tasks proceed in parallel over the link: bandwidth term is the
+        // sum of bytes (link serializes), latency paid once per op.
+        let lat: f64 = l.latency_us * (span.len() as f64).min(2.0);
+        return total_comm - l.latency_us * span.len() as f64 + lat + l.nccl_launch_us;
+    }
+    let waves = span.len().div_ceil(gpu.workers) as f64;
+    let max_task = span
+        .iter()
+        .map(|&t| costs[t].exec_us(gpu.bw_eff_kernel, gpu.compute_eff))
+        .fold(0.0f64, f64::max);
+    waves * max_task
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::{build_decode_graph, GraphOptions, ModelConfig};
+    use crate::tgraph::{compile, CompileOptions, DecomposeConfig};
+
+    fn compiled(batch: usize) -> CompiledGraph {
+        let cfg = ModelConfig::qwen3_1_7b();
+        let g = build_decode_graph(&cfg, &GraphOptions { batch, kv_len: 512, ..Default::default() });
+        compile(
+            &g,
+            &CompileOptions {
+                decompose: DecomposeConfig { target_tasks: 104, min_tile_cols: 8 },
+                ..Default::default()
+            },
+        )
+    }
+
+    #[test]
+    fn decode_is_bandwidth_bound() {
+        let c = compiled(1);
+        let gpu = GpuSpec::a100();
+        let costs = task_costs(&c, &gpu, None);
+        let preload: f64 = costs.iter().map(|c| c.preload_us).sum();
+        let compute: f64 = costs.iter().map(|c| c.compute_us).sum();
+        assert!(preload > 5.0 * compute, "preload {preload} compute {compute}");
+    }
+
+    #[test]
+    fn total_preload_close_to_param_streaming_bound() {
+        let c = compiled(1);
+        let gpu = GpuSpec::a100();
+        let costs = task_costs(&c, &gpu, None);
+        // sum over workers: total preload time × workers × share = bytes.
+        let total_bytes: f64 =
+            costs.iter().map(|t| t.preload_us).sum::<f64>() * gpu.bw_share();
+        // the embedding table is gathered (B rows), not streamed, so
+        // the bound excludes it.
+        let embed = c.graph.tensor_by_name("embed.weight").unwrap().bytes() as f64;
+        let param_bytes = c.graph.param_bytes() as f64 - embed;
+        assert!(
+            total_bytes > param_bytes && total_bytes < 1.8 * param_bytes,
+            "moved {total_bytes:.2e} vs streamed params {param_bytes:.2e}"
+        );
+    }
+
+    #[test]
+    fn dummy_tasks_are_free() {
+        let c = compiled(2);
+        let gpu = GpuSpec::h100();
+        let costs = task_costs(&c, &gpu, None);
+        for t in &c.tgraph.tasks {
+            if t.kind.is_dummy() {
+                let k = costs[t.id];
+                assert_eq!(k.preload_us + k.compute_us + k.comm_us, 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn pipelining_efficiency_ratio_in_paper_band() {
+        // memory-bound task: pipe vs no-pipe ratio = 0.95/0.75 ≈ 1.27.
+        let gpu = GpuSpec::b200();
+        let t = TaskCost { preload_us: 100.0, compute_us: 2.0, ..Default::default() };
+        let ratio = t.exec_us(gpu.bw_eff_unpipelined, gpu.compute_eff)
+            / t.exec_us(gpu.bw_eff_pipelined, gpu.compute_eff);
+        assert!((1.15..=1.35).contains(&ratio), "ratio {ratio}");
+    }
+}

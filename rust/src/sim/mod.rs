@@ -1,0 +1,12 @@
+//! Discrete-event GPU timing simulator: roofline models of A100/H100/
+//! B200, the mega-kernel scheduling replay, and the kernel-per-operator
+//! baselines — the substrate that regenerates the paper's figures.
+pub mod baseline;
+pub mod cost;
+pub mod engine;
+pub mod gpu;
+
+pub use baseline::{kernel_launches, simulate_baseline, BaselineSystem, LaunchModel};
+pub use cost::{op_kernel_us, task_costs, TaskCost};
+pub use engine::{simulate_megakernel, SimOptions, SimResult};
+pub use gpu::{GpuSpec, LinkSpec};

@@ -1,0 +1,219 @@
+//! tGraph linearization (§4.1, Algorithm 1).
+//!
+//! Orders tasks so that all tasks launched by the same event occupy a
+//! contiguous index range; each event's fan-out is then encoded as just
+//! `(first, last)` task indices instead of an explicit list, shrinking
+//! the on-device footprint 4–15× (Table 2, "Lin." column).
+//!
+//! Requires a *normalized* graph where every task has exactly one
+//! dependent event (the compiler attaches parentless tasks to the start
+//! event before calling this).
+
+use crate::tgraph::task::{EventDesc, TaskDesc, TaskId};
+
+/// The linearized, runtime-ready encoding.
+#[derive(Clone, Debug)]
+pub struct LinearTGraph {
+    /// Task ids in launch order (Algorithm 1 output list `T`).
+    pub order: Vec<TaskId>,
+    /// Inverse of `order`: position of each task.
+    pub pos: Vec<usize>,
+    /// Per event: `(first, last)` positions in `order` of the tasks it
+    /// launches — inclusive — or `None` if the event launches nothing.
+    pub event_range: Vec<Option<(usize, usize)>>,
+    /// Per event: notifications required for activation.
+    pub required: Vec<usize>,
+}
+
+impl LinearTGraph {
+    /// Footprint in bytes of the successor encoding *with* linearization:
+    /// first + last index (4 bytes each) per event.
+    pub fn footprint_bytes(&self) -> usize {
+        self.event_range.len() * 8
+    }
+}
+
+/// Footprint without linearization: one 4-byte task index per (event,
+/// successor task) entry.
+pub fn naive_footprint_bytes(events: &[EventDesc]) -> usize {
+    events.iter().map(|e| e.out_tasks.len() * 4).sum()
+}
+
+/// Algorithm 1. Panics on malformed input (task with ≠1 dependent event,
+/// unreachable tasks, or a cyclic graph).
+pub fn linearize(tasks: &[TaskDesc], events: &[EventDesc]) -> LinearTGraph {
+    let n = tasks.len();
+    for t in tasks {
+        assert_eq!(
+            t.dependent_events.len(),
+            1,
+            "linearize requires exactly one dependent event per task (task {})",
+            t.id
+        );
+        assert!(t.trigger_events.len() <= 1, "task {} has >1 trigger events", t.id);
+    }
+
+    // tasks grouped by their (single) dependent event, ascending id for
+    // determinism.
+    let mut by_event: Vec<Vec<TaskId>> = vec![Vec::new(); events.len()];
+    for t in tasks {
+        by_event[t.dependent_events[0]].push(t.id);
+    }
+    for v in by_event.iter_mut() {
+        v.sort_unstable();
+    }
+
+    let mut remaining: Vec<usize> = events.iter().map(|e| e.in_tasks.len()).collect();
+    let mut queue: std::collections::VecDeque<usize> = (0..events.len())
+        .filter(|&e| remaining[e] == 0)
+        .collect();
+
+    let mut order: Vec<TaskId> = Vec::with_capacity(n);
+    let mut event_range: Vec<Option<(usize, usize)>> = vec![None; events.len()];
+    let mut seen_event = vec![false; events.len()];
+    for &e in queue.iter() {
+        seen_event[e] = true;
+    }
+
+    while let Some(e) = queue.pop_front() {
+        let launched = &by_event[e];
+        if !launched.is_empty() {
+            let first = order.len();
+            for &t in launched {
+                order.push(t);
+                // lines 8-10: t's trigger event gains one placed trigger.
+                if let Some(&ep) = tasks[t].trigger_events.first() {
+                    remaining[ep] -= 1;
+                    if remaining[ep] == 0 {
+                        assert!(!seen_event[ep], "event {ep} enqueued twice");
+                        seen_event[ep] = true;
+                        queue.push_back(ep);
+                    }
+                }
+            }
+            event_range[e] = Some((first, order.len() - 1));
+        }
+    }
+    assert_eq!(order.len(), n, "linearization left {} tasks unplaced (cycle or unreachable)", n - order.len());
+
+    let mut pos = vec![0usize; n];
+    for (i, &t) in order.iter().enumerate() {
+        pos[t] = i;
+    }
+    let required = events.iter().map(|e| e.in_tasks.len()).collect();
+    LinearTGraph { order, pos, event_range, required }
+}
+
+/// Check the central linearization invariant: for every event, the tasks
+/// it launches are exactly the contiguous range recorded for it.
+pub fn verify(lin: &LinearTGraph, tasks: &[TaskDesc], events: &[EventDesc]) -> Result<(), String> {
+    for e in events {
+        let launched: Vec<TaskId> = e.out_tasks.clone();
+        match lin.event_range[e.id] {
+            None => {
+                if !launched.is_empty() {
+                    return Err(format!("event {} launches tasks but has no range", e.id));
+                }
+            }
+            Some((f, l)) => {
+                if l + 1 - f != launched.len() {
+                    return Err(format!("event {} range size mismatch", e.id));
+                }
+                for &t in &launched {
+                    let p = lin.pos[t];
+                    if p < f || p > l {
+                        return Err(format!("task {t} outside event {} range", e.id));
+                    }
+                }
+            }
+        }
+    }
+    // order is a permutation
+    let mut sorted = lin.order.clone();
+    sorted.sort_unstable();
+    if sorted != (0..tasks.len()).collect::<Vec<_>>() {
+        return Err("order is not a permutation of tasks".into());
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ops::{LaunchMode, Region};
+    use crate::tgraph::task::TaskKind;
+
+    fn mk(id: usize, dep: usize, trig: Option<usize>) -> TaskDesc {
+        TaskDesc {
+            id,
+            kind: TaskKind::Dummy,
+            out_region: Region::new(vec![]),
+            launch: LaunchMode::Aot,
+            dependent_events: vec![dep],
+            trigger_events: trig.into_iter().collect(),
+            device: 0,
+        }
+    }
+
+    #[test]
+    fn chain_linearizes_in_order() {
+        // e0(start) -> t0 -> e1 -> t1 -> e2 -> t2
+        let tasks = vec![mk(0, 0, Some(1)), mk(1, 1, Some(2)), mk(2, 2, None)];
+        let events = vec![
+            EventDesc { id: 0, in_tasks: vec![], out_tasks: vec![0] },
+            EventDesc { id: 1, in_tasks: vec![0], out_tasks: vec![1] },
+            EventDesc { id: 2, in_tasks: vec![1], out_tasks: vec![2] },
+        ];
+        let lin = linearize(&tasks, &events);
+        assert_eq!(lin.order, vec![0, 1, 2]);
+        verify(&lin, &tasks, &events).unwrap();
+    }
+
+    #[test]
+    fn fanout_tasks_contiguous() {
+        // start launches t0; t0 -> e1 which launches t1..t3; all trigger e2.
+        let tasks = vec![
+            mk(0, 0, Some(1)),
+            mk(1, 1, Some(2)),
+            mk(2, 1, Some(2)),
+            mk(3, 1, Some(2)),
+        ];
+        let events = vec![
+            EventDesc { id: 0, in_tasks: vec![], out_tasks: vec![0] },
+            EventDesc { id: 1, in_tasks: vec![0], out_tasks: vec![1, 2, 3] },
+            EventDesc { id: 2, in_tasks: vec![1, 2, 3], out_tasks: vec![] },
+        ];
+        let lin = linearize(&tasks, &events);
+        assert_eq!(lin.event_range[1], Some((1, 3)));
+        assert_eq!(lin.required[2], 3);
+        verify(&lin, &tasks, &events).unwrap();
+    }
+
+    #[test]
+    fn footprint_shrinks_for_high_fanout() {
+        // one event launching 100 tasks: naive = 400B, linear = 8B/event.
+        let mut tasks = vec![mk(0, 0, Some(1))];
+        let mut out = Vec::new();
+        for i in 1..=100 {
+            tasks.push(mk(i, 1, None));
+            out.push(i);
+        }
+        let events = vec![
+            EventDesc { id: 0, in_tasks: vec![], out_tasks: vec![0] },
+            EventDesc { id: 1, in_tasks: vec![0], out_tasks: out },
+        ];
+        let lin = linearize(&tasks, &events);
+        assert_eq!(naive_footprint_bytes(&events), 4 + 400);
+        assert_eq!(lin.footprint_bytes(), 16);
+        verify(&lin, &tasks, &events).unwrap();
+    }
+
+    #[test]
+    #[should_panic(expected = "unplaced")]
+    fn cycle_detected() {
+        // t0 depends on e0 whose trigger is t0 itself (cycle).
+        let tasks = vec![mk(0, 0, Some(0))];
+        let events = vec![EventDesc { id: 0, in_tasks: vec![0], out_tasks: vec![0] }];
+        linearize(&tasks, &events);
+    }
+}

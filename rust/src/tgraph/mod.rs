@@ -1,0 +1,12 @@
+//! The MPK compiler: computation graph → optimized SM-level tGraph (§4).
+pub mod build;
+pub mod compiler;
+pub mod fusion;
+pub mod linearize;
+pub mod normalize;
+pub mod task;
+
+pub use build::{analyze_deps, decompose, DecomposeConfig, OpTasks};
+pub use compiler::{compile, CompileOptions, CompiledGraph, DepGranularity, StageStats};
+pub use linearize::{linearize, LinearTGraph};
+pub use task::{EventDesc, EventId, TGraph, TaskDesc, TaskId, TaskKind};

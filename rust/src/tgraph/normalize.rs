@@ -1,0 +1,196 @@
+//! tGraph normalization (§4.1, Figure 6).
+//!
+//! Bounds the dependency metadata per task: after normalization every
+//! task has at most one dependent event and at most one triggering event,
+//! so the runtime's task descriptor stores two event ids instead of
+//! variable-length lists. Tasks with excess fan-out (Figure 6a) or
+//! fan-in (Figure 6b) are rewritten by inserting a fresh event plus one
+//! *empty task* per original event.
+
+use crate::ops::{LaunchMode, Region};
+use crate::tgraph::task::{EventDesc, TaskDesc, TaskKind};
+
+/// Statistics about the rewrites applied.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct NormalizeStats {
+    pub fanout_rewrites: usize,
+    pub fanin_rewrites: usize,
+    pub dummy_tasks_added: usize,
+    pub events_added: usize,
+}
+
+/// Normalize in place. Returns rewrite statistics.
+pub fn normalize(tasks: &mut Vec<TaskDesc>, events: &mut Vec<EventDesc>) -> NormalizeStats {
+    let mut stats = NormalizeStats::default();
+    let n0 = tasks.len();
+
+    // -- Figure 6a: reduce fan-out to one -------------------------------
+    for tid in 0..n0 {
+        if tasks[tid].trigger_events.len() <= 1 {
+            continue;
+        }
+        stats.fanout_rewrites += 1;
+        let originals = std::mem::take(&mut tasks[tid].trigger_events);
+        // new event e' triggered by T0 alone.
+        let eprime = events.len();
+        events.push(EventDesc { id: eprime, in_tasks: vec![tid], out_tasks: Vec::new() });
+        stats.events_added += 1;
+        tasks[tid].trigger_events.push(eprime);
+        for ei in originals {
+            // dummy task: depends on e', triggers the original event.
+            let did = tasks.len();
+            tasks.push(TaskDesc {
+                id: did,
+                kind: TaskKind::Dummy,
+                out_region: Region::new(vec![]),
+                launch: LaunchMode::Aot,
+                dependent_events: vec![eprime],
+                trigger_events: vec![ei],
+                device: tasks[tid].device,
+            });
+            stats.dummy_tasks_added += 1;
+            events[eprime].out_tasks.push(did);
+            // rewire the original event: replace T0 by the dummy.
+            let e = &mut events[ei];
+            e.in_tasks.retain(|&t| t != tid);
+            e.in_tasks.push(did);
+            e.in_tasks.sort_unstable();
+        }
+    }
+
+    // -- Figure 6b: reduce fan-in to one ---------------------------------
+    let n1 = tasks.len();
+    for tid in 0..n1 {
+        if tasks[tid].dependent_events.len() <= 1 {
+            continue;
+        }
+        stats.fanin_rewrites += 1;
+        let originals = std::mem::take(&mut tasks[tid].dependent_events);
+        let eprime = events.len();
+        events.push(EventDesc { id: eprime, in_tasks: Vec::new(), out_tasks: vec![tid] });
+        stats.events_added += 1;
+        tasks[tid].dependent_events.push(eprime);
+        for ei in originals {
+            let did = tasks.len();
+            tasks.push(TaskDesc {
+                id: did,
+                kind: TaskKind::Dummy,
+                out_region: Region::new(vec![]),
+                launch: LaunchMode::Aot,
+                dependent_events: vec![ei],
+                trigger_events: vec![eprime],
+                device: tasks[tid].device,
+            });
+            stats.dummy_tasks_added += 1;
+            events[eprime].in_tasks.push(did);
+            let e = &mut events[ei];
+            e.out_tasks.retain(|&t| t != tid);
+            e.out_tasks.push(did);
+            e.out_tasks.sort_unstable();
+        }
+        events[eprime].in_tasks.sort_unstable();
+    }
+    stats
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mk_task(id: usize, deps: &[usize], trigs: &[usize]) -> TaskDesc {
+        TaskDesc {
+            id,
+            kind: TaskKind::Dummy,
+            out_region: Region::new(vec![]),
+            launch: LaunchMode::Aot,
+            dependent_events: deps.to_vec(),
+            trigger_events: trigs.to_vec(),
+            device: 0,
+        }
+    }
+
+    fn check(tasks: &[TaskDesc], events: &[EventDesc]) {
+        // full bidirectional consistency + normalization property.
+        for t in tasks {
+            assert!(t.dependent_events.len() <= 1, "task {} fan-in", t.id);
+            assert!(t.trigger_events.len() <= 1, "task {} fan-out", t.id);
+            for &e in &t.dependent_events {
+                assert!(events[e].out_tasks.contains(&t.id));
+            }
+            for &e in &t.trigger_events {
+                assert!(events[e].in_tasks.contains(&t.id));
+            }
+        }
+        for e in events {
+            for &t in &e.in_tasks {
+                assert!(tasks[t].trigger_events.contains(&e.id));
+            }
+            for &t in &e.out_tasks {
+                assert!(tasks[t].dependent_events.contains(&e.id));
+            }
+        }
+    }
+
+    #[test]
+    fn fanout_rewrite_matches_figure_6a() {
+        // T0 triggers e0 and e1 (each feeding one consumer task).
+        let mut tasks = vec![mk_task(0, &[], &[0, 1]), mk_task(1, &[0], &[]), mk_task(2, &[1], &[])];
+        let mut events = vec![
+            EventDesc { id: 0, in_tasks: vec![0], out_tasks: vec![1] },
+            EventDesc { id: 1, in_tasks: vec![0], out_tasks: vec![2] },
+        ];
+        let stats = normalize(&mut tasks, &mut events);
+        assert_eq!(stats.fanout_rewrites, 1);
+        assert_eq!(stats.dummy_tasks_added, 2);
+        check(&tasks, &events);
+        // dependency is preserved transitively: T0 -> e' -> dummies -> e0/e1.
+        let eprime = tasks[0].trigger_events[0];
+        assert_eq!(events[eprime].in_tasks, vec![0]);
+        assert_eq!(events[eprime].out_tasks.len(), 2);
+    }
+
+    #[test]
+    fn fanin_rewrite_matches_figure_6b() {
+        let mut tasks = vec![mk_task(0, &[], &[0]), mk_task(1, &[], &[1]), mk_task(2, &[0, 1], &[])];
+        let mut events = vec![
+            EventDesc { id: 0, in_tasks: vec![0], out_tasks: vec![2] },
+            EventDesc { id: 1, in_tasks: vec![1], out_tasks: vec![2] },
+        ];
+        let stats = normalize(&mut tasks, &mut events);
+        assert_eq!(stats.fanin_rewrites, 1);
+        assert_eq!(stats.dummy_tasks_added, 2);
+        check(&tasks, &events);
+    }
+
+    #[test]
+    fn already_normal_graph_untouched() {
+        let mut tasks = vec![mk_task(0, &[], &[0]), mk_task(1, &[0], &[])];
+        let mut events = vec![EventDesc { id: 0, in_tasks: vec![0], out_tasks: vec![1] }];
+        let stats = normalize(&mut tasks, &mut events);
+        assert_eq!(stats.dummy_tasks_added, 0);
+        assert_eq!(tasks.len(), 2);
+        assert_eq!(events.len(), 1);
+        check(&tasks, &events);
+    }
+
+    #[test]
+    fn combined_fanin_and_fanout() {
+        // diamond: T0 -> {e0, e1}; e0 -> T1 -> e2; e1 -> T2 -> e3; {e2, e3} -> T3.
+        let mut tasks = vec![
+            mk_task(0, &[], &[0, 1]),
+            mk_task(1, &[0], &[2]),
+            mk_task(2, &[1], &[3]),
+            mk_task(3, &[2, 3], &[]),
+        ];
+        let mut events = vec![
+            EventDesc { id: 0, in_tasks: vec![0], out_tasks: vec![1] },
+            EventDesc { id: 1, in_tasks: vec![0], out_tasks: vec![2] },
+            EventDesc { id: 2, in_tasks: vec![1], out_tasks: vec![3] },
+            EventDesc { id: 3, in_tasks: vec![2], out_tasks: vec![3] },
+        ];
+        let stats = normalize(&mut tasks, &mut events);
+        assert_eq!(stats.fanout_rewrites, 1);
+        assert_eq!(stats.fanin_rewrites, 1);
+        check(&tasks, &events);
+    }
+}

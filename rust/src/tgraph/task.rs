@@ -1,0 +1,152 @@
+//! Task and event descriptors — the nodes of a *t*Graph (§3).
+//!
+//! Tasks and events alternate: a task has incoming edges only from its
+//! *dependent* events and outgoing edges only to its *triggering* events.
+//! Before normalization both lists may hold several events; after
+//! normalization ([`crate::tgraph::normalize`]) each holds at most one,
+//! which is what allows the fixed-size task descriptor the in-kernel
+//! runtime consumes (the paper's 352-byte record, §5.3).
+
+use crate::ops::{LaunchMode, OpKind, Region};
+
+pub type TaskId = usize;
+pub type EventId = usize;
+
+/// What a task does when a worker dequeues it.
+#[derive(Clone, Debug, PartialEq)]
+pub enum TaskKind {
+    /// Compute (or intra-op communication) tile of operator `op`.
+    Compute { op: usize, kind: OpKind },
+    /// Inter-GPU data transfer produced by collective lowering (§6.5):
+    /// move `bytes` from `src_dev` to `dst_dev`.
+    Transfer { op: usize, src_dev: usize, dst_dev: usize, bytes: u64 },
+    /// Empty task inserted by tGraph normalization (Figure 6); performs
+    /// no work, only propagates events.
+    Dummy,
+    /// The per-iteration bookkeeping task of §6.1: retire finished
+    /// requests, admit new ones, update KV metadata.
+    IterPrep,
+}
+
+impl TaskKind {
+    pub fn is_dummy(&self) -> bool {
+        matches!(self, TaskKind::Dummy)
+    }
+
+    pub fn is_comm(&self) -> bool {
+        match self {
+            TaskKind::Transfer { .. } => true,
+            TaskKind::Compute { kind, .. } => kind.is_comm(),
+            _ => false,
+        }
+    }
+}
+
+/// A unit of work executed on a single SM (worker thread).
+#[derive(Clone, Debug)]
+pub struct TaskDesc {
+    pub id: TaskId,
+    pub kind: TaskKind,
+    /// Tile of the producing operator's output tensor (empty for dummies).
+    pub out_region: Region,
+    pub launch: LaunchMode,
+    /// Events that must all be activated before this task may run.
+    /// Normalization shrinks this to exactly one.
+    pub dependent_events: Vec<EventId>,
+    /// Events notified on completion. Normalization shrinks this to at
+    /// most one (sink tasks trigger the graph's end event).
+    pub trigger_events: Vec<EventId>,
+    /// Device owning the task (tensor-parallel rank; 0 on single GPU).
+    pub device: usize,
+}
+
+impl TaskDesc {
+    pub fn op_id(&self) -> Option<usize> {
+        match self.kind {
+            TaskKind::Compute { op, .. } | TaskKind::Transfer { op, .. } => Some(op),
+            _ => None,
+        }
+    }
+}
+
+/// A synchronization point: activated once all of `in_tasks` have
+/// notified it; on activation, all of `out_tasks` become launchable.
+#[derive(Clone, Debug, Default)]
+pub struct EventDesc {
+    pub id: EventId,
+    pub in_tasks: Vec<TaskId>,
+    pub out_tasks: Vec<TaskId>,
+}
+
+impl EventDesc {
+    /// Number of notifications required for activation.
+    pub fn required_triggers(&self) -> usize {
+        self.in_tasks.len()
+    }
+}
+
+/// The SM-level graph: tasks + events (§3), plus the designated start
+/// event (no prerequisites) and end event (quiescence detection).
+#[derive(Clone, Debug)]
+pub struct TGraph {
+    pub tasks: Vec<TaskDesc>,
+    pub events: Vec<EventDesc>,
+    pub start_event: EventId,
+    pub end_event: EventId,
+    /// Per-compiler-stage statistics (Table 2), filled by the pipeline.
+    pub stats: super::compiler::StageStats,
+}
+
+impl TGraph {
+    /// Structural invariant check: edge lists are mutually consistent,
+    /// ids in range, the start event has no in-tasks.
+    pub fn check_consistent(&self) -> Result<(), String> {
+        for t in &self.tasks {
+            for &e in t.dependent_events.iter() {
+                if e >= self.events.len() {
+                    return Err(format!("task {} dependent event {e} out of range", t.id));
+                }
+                if !self.events[e].out_tasks.contains(&t.id) {
+                    return Err(format!("task {} missing from event {e} out_tasks", t.id));
+                }
+            }
+            for &e in t.trigger_events.iter() {
+                if e >= self.events.len() {
+                    return Err(format!("task {} trigger event {e} out of range", t.id));
+                }
+                if !self.events[e].in_tasks.contains(&t.id) {
+                    return Err(format!("task {} missing from event {e} in_tasks", t.id));
+                }
+            }
+        }
+        for ev in &self.events {
+            for &t in ev.out_tasks.iter() {
+                if !self.tasks[t].dependent_events.contains(&ev.id) {
+                    return Err(format!("event {} missing from task {t} dependents", ev.id));
+                }
+            }
+            for &t in ev.in_tasks.iter() {
+                if !self.tasks[t].trigger_events.contains(&ev.id) {
+                    return Err(format!("event {} missing from task {t} triggers", ev.id));
+                }
+            }
+        }
+        if !self.events[self.start_event].in_tasks.is_empty() {
+            return Err("start event has in-tasks".into());
+        }
+        Ok(())
+    }
+
+    /// True iff every task has ≤1 dependent and ≤1 triggering event
+    /// (the post-normalization property).
+    pub fn is_normalized(&self) -> bool {
+        self.tasks
+            .iter()
+            .all(|t| t.dependent_events.len() <= 1 && t.trigger_events.len() <= 1)
+    }
+
+    /// Number of non-dummy tasks.
+    pub fn real_task_count(&self) -> usize {
+        self.tasks.iter().filter(|t| !t.kind.is_dummy()).count()
+    }
+}

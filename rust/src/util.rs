@@ -1,0 +1,440 @@
+//! Small utilities: deterministic RNG, JSON writer, table formatting,
+//! timing helpers. (serde/criterion are unavailable offline — these are
+//! the minimal in-repo replacements.)
+
+//// xorshift64* — deterministic, seedable, fast. Used by the simulator,
+/// workload generators and the property-test runner.
+#[derive(Clone, Debug)]
+pub struct XorShift64 {
+    state: u64,
+}
+
+impl XorShift64 {
+    pub fn new(seed: u64) -> Self {
+        XorShift64 { state: seed.max(1) }
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        let mut x = self.state;
+        x ^= x >> 12;
+        x ^= x << 25;
+        x ^= x >> 27;
+        self.state = x;
+        x.wrapping_mul(0x2545_F491_4F6C_DD1D)
+    }
+
+    /// Uniform in `[0, n)`.
+    pub fn below(&mut self, n: usize) -> usize {
+        (self.next_u64() % n.max(1) as u64) as usize
+    }
+
+    /// Uniform in `[lo, hi]` inclusive.
+    pub fn range(&mut self, lo: usize, hi: usize) -> usize {
+        lo + self.below(hi - lo + 1)
+    }
+
+    /// Uniform float in `[0, 1)`.
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 / (1u64 << 53) as f64
+    }
+
+    /// Standard normal via Box–Muller.
+    pub fn gauss(&mut self) -> f64 {
+        let u1 = self.f64().max(1e-12);
+        let u2 = self.f64();
+        (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos()
+    }
+
+    /// Uniform f32 in [-1, 1) — used to synthesize model weights.
+    pub fn unit_f32(&mut self) -> f32 {
+        (self.f64() * 2.0 - 1.0) as f32
+    }
+}
+
+/// Minimal JSON value + writer (enough for result files / manifests).
+#[derive(Clone, Debug)]
+pub enum Json {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Json>),
+    Obj(Vec<(String, Json)>),
+}
+
+impl Json {
+    pub fn to_string(&self) -> String {
+        let mut s = String::new();
+        self.write(&mut s);
+        s
+    }
+
+    fn write(&self, out: &mut String) {
+        match self {
+            Json::Null => out.push_str("null"),
+            Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+            Json::Num(n) => {
+                if n.fract() == 0.0 && n.abs() < 1e15 {
+                    out.push_str(&format!("{}", *n as i64));
+                } else {
+                    out.push_str(&format!("{n}"));
+                }
+            }
+            Json::Str(s) => {
+                out.push('"');
+                for c in s.chars() {
+                    match c {
+                        '"' => out.push_str("\\\""),
+                        '\\' => out.push_str("\\\\"),
+                        '\n' => out.push_str("\\n"),
+                        c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+                        c => out.push(c),
+                    }
+                }
+                out.push('"');
+            }
+            Json::Arr(v) => {
+                out.push('[');
+                for (i, x) in v.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    x.write(out);
+                }
+                out.push(']');
+            }
+            Json::Obj(kv) => {
+                out.push('{');
+                for (i, (k, v)) in kv.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    Json::Str(k.clone()).write(out);
+                    out.push(':');
+                    v.write(out);
+                }
+                out.push('}');
+            }
+        }
+    }
+}
+
+/// Minimal JSON parser (for artifacts/manifest.json). Supports the
+/// subset our tooling emits: objects, arrays, strings, numbers, bools.
+pub mod json_parse {
+    use super::Json;
+
+    pub fn parse(s: &str) -> Result<Json, String> {
+        let b = s.as_bytes();
+        let mut i = 0;
+        let v = value(b, &mut i)?;
+        skip_ws(b, &mut i);
+        if i != b.len() {
+            return Err(format!("trailing data at byte {i}"));
+        }
+        Ok(v)
+    }
+
+    fn skip_ws(b: &[u8], i: &mut usize) {
+        while *i < b.len() && (b[*i] as char).is_ascii_whitespace() {
+            *i += 1;
+        }
+    }
+
+    fn value(b: &[u8], i: &mut usize) -> Result<Json, String> {
+        skip_ws(b, i);
+        if *i >= b.len() {
+            return Err("unexpected end".into());
+        }
+        match b[*i] {
+            b'{' => obj(b, i),
+            b'[' => arr(b, i),
+            b'"' => Ok(Json::Str(string(b, i)?)),
+            b't' => lit(b, i, "true", Json::Bool(true)),
+            b'f' => lit(b, i, "false", Json::Bool(false)),
+            b'n' => lit(b, i, "null", Json::Null),
+            _ => num(b, i),
+        }
+    }
+
+    fn lit(b: &[u8], i: &mut usize, word: &str, v: Json) -> Result<Json, String> {
+        if b[*i..].starts_with(word.as_bytes()) {
+            *i += word.len();
+            Ok(v)
+        } else {
+            Err(format!("bad literal at {i}", i = *i))
+        }
+    }
+
+    fn num(b: &[u8], i: &mut usize) -> Result<Json, String> {
+        let start = *i;
+        while *i < b.len() && matches!(b[*i], b'0'..=b'9' | b'-' | b'+' | b'.' | b'e' | b'E') {
+            *i += 1;
+        }
+        std::str::from_utf8(&b[start..*i])
+            .ok()
+            .and_then(|s| s.parse::<f64>().ok())
+            .map(Json::Num)
+            .ok_or_else(|| format!("bad number at {start}"))
+    }
+
+    fn string(b: &[u8], i: &mut usize) -> Result<String, String> {
+        *i += 1; // opening quote
+        let mut s = String::new();
+        while *i < b.len() {
+            match b[*i] {
+                b'"' => {
+                    *i += 1;
+                    return Ok(s);
+                }
+                b'\\' => {
+                    *i += 1;
+                    match b.get(*i) {
+                        Some(b'n') => s.push('\n'),
+                        Some(b't') => s.push('\t'),
+                        Some(b'"') => s.push('"'),
+                        Some(b'\\') => s.push('\\'),
+                        Some(b'/') => s.push('/'),
+                        Some(b'u') => {
+                            let hex = std::str::from_utf8(&b[*i + 1..*i + 5]).map_err(|e| e.to_string())?;
+                            let cp = u32::from_str_radix(hex, 16).map_err(|e| e.to_string())?;
+                            s.push(char::from_u32(cp).unwrap_or('\u{FFFD}'));
+                            *i += 4;
+                        }
+                        _ => return Err("bad escape".into()),
+                    }
+                    *i += 1;
+                }
+                c => {
+                    // UTF-8 passthrough
+                    let ch_len = utf8_len(c);
+                    s.push_str(std::str::from_utf8(&b[*i..*i + ch_len]).map_err(|e| e.to_string())?);
+                    *i += ch_len;
+                }
+            }
+        }
+        Err("unterminated string".into())
+    }
+
+    fn utf8_len(c: u8) -> usize {
+        if c < 0x80 {
+            1
+        } else if c >> 5 == 0b110 {
+            2
+        } else if c >> 4 == 0b1110 {
+            3
+        } else {
+            4
+        }
+    }
+
+    fn obj(b: &[u8], i: &mut usize) -> Result<Json, String> {
+        *i += 1;
+        let mut kv = Vec::new();
+        skip_ws(b, i);
+        if b.get(*i) == Some(&b'}') {
+            *i += 1;
+            return Ok(Json::Obj(kv));
+        }
+        loop {
+            skip_ws(b, i);
+            let k = string(b, i)?;
+            skip_ws(b, i);
+            if b.get(*i) != Some(&b':') {
+                return Err(format!("expected ':' at {i}", i = *i));
+            }
+            *i += 1;
+            let v = value(b, i)?;
+            kv.push((k, v));
+            skip_ws(b, i);
+            match b.get(*i) {
+                Some(b',') => *i += 1,
+                Some(b'}') => {
+                    *i += 1;
+                    return Ok(Json::Obj(kv));
+                }
+                _ => return Err(format!("expected ',' or '}}' at {i}", i = *i)),
+            }
+        }
+    }
+
+    fn arr(b: &[u8], i: &mut usize) -> Result<Json, String> {
+        *i += 1;
+        let mut v = Vec::new();
+        skip_ws(b, i);
+        if b.get(*i) == Some(&b']') {
+            *i += 1;
+            return Ok(Json::Arr(v));
+        }
+        loop {
+            v.push(value(b, i)?);
+            skip_ws(b, i);
+            match b.get(*i) {
+                Some(b',') => *i += 1,
+                Some(b']') => {
+                    *i += 1;
+                    return Ok(Json::Arr(v));
+                }
+                _ => return Err(format!("expected ',' or ']' at {i}", i = *i)),
+            }
+        }
+    }
+}
+
+impl Json {
+    /// Object field lookup.
+    pub fn get(&self, key: &str) -> Option<&Json> {
+        if let Json::Obj(kv) = self {
+            kv.iter().find(|(k, _)| k == key).map(|(_, v)| v)
+        } else {
+            None
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        if let Json::Str(s) = self {
+            Some(s)
+        } else {
+            None
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        if let Json::Num(n) = self {
+            Some(*n)
+        } else {
+            None
+        }
+    }
+
+    pub fn as_usize(&self) -> Option<usize> {
+        self.as_f64().map(|n| n as usize)
+    }
+
+    pub fn as_arr(&self) -> Option<&[Json]> {
+        if let Json::Arr(v) = self {
+            Some(v)
+        } else {
+            None
+        }
+    }
+}
+
+/// Fixed-width ASCII table printer for bench reports.
+pub struct Table {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(header: &[&str]) -> Self {
+        Table { header: header.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.header.len());
+        self.rows.push(cells);
+    }
+
+    pub fn render(&self) -> String {
+        let ncol = self.header.len();
+        let mut w = vec![0usize; ncol];
+        for (i, h) in self.header.iter().enumerate() {
+            w[i] = h.len();
+        }
+        for r in &self.rows {
+            for (i, c) in r.iter().enumerate() {
+                w[i] = w[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let fmt_row = |cells: &[String], w: &[usize]| -> String {
+            let mut s = String::from("| ");
+            for (i, c) in cells.iter().enumerate() {
+                s.push_str(&format!("{:<width$} | ", c, width = w[i]));
+            }
+            s.trim_end().to_string() + "\n"
+        };
+        out.push_str(&fmt_row(&self.header, &w));
+        out.push_str(&format!("|{}\n", w.iter().map(|x| "-".repeat(x + 2) + "|").collect::<String>()));
+        for r in &self.rows {
+            out.push_str(&fmt_row(r, &w));
+        }
+        out
+    }
+}
+
+/// Monotonic-clock micro-bench: warm up, then report the median of `n`
+/// timed runs in nanoseconds. The in-repo criterion replacement.
+pub fn bench_median_ns<F: FnMut()>(warmup: usize, n: usize, mut f: F) -> u64 {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples: Vec<u64> = (0..n.max(1))
+        .map(|_| {
+            let t0 = std::time::Instant::now();
+            f();
+            t0.elapsed().as_nanos() as u64
+        })
+        .collect();
+    samples.sort_unstable();
+    samples[samples.len() / 2]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rng_is_deterministic() {
+        let mut a = XorShift64::new(42);
+        let mut b = XorShift64::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn rng_below_in_range() {
+        let mut r = XorShift64::new(7);
+        for _ in 0..1000 {
+            assert!(r.below(10) < 10);
+            let x = r.range(3, 5);
+            assert!((3..=5).contains(&x));
+            let f = r.f64();
+            assert!((0.0..1.0).contains(&f));
+        }
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let j = Json::Obj(vec![
+            ("name".into(), Json::Str("q\"uote".into())),
+            ("n".into(), Json::Num(42.0)),
+            ("arr".into(), Json::Arr(vec![Json::Num(1.5), Json::Bool(true), Json::Null])),
+        ]);
+        let s = j.to_string();
+        let p = json_parse::parse(&s).unwrap();
+        assert_eq!(p.get("name").unwrap().as_str().unwrap(), "q\"uote");
+        assert_eq!(p.get("n").unwrap().as_usize().unwrap(), 42);
+        assert_eq!(p.get("arr").unwrap().as_arr().unwrap().len(), 3);
+    }
+
+    #[test]
+    fn json_parse_nested() {
+        let s = r#"{"a": {"b": [1, 2, {"c": "d"}]}, "e": -1.5e2}"#;
+        let p = json_parse::parse(s).unwrap();
+        assert_eq!(p.get("e").unwrap().as_f64().unwrap(), -150.0);
+        let arr = p.get("a").unwrap().get("b").unwrap().as_arr().unwrap();
+        assert_eq!(arr[2].get("c").unwrap().as_str().unwrap(), "d");
+    }
+
+    #[test]
+    fn table_renders() {
+        let mut t = Table::new(&["model", "speedup"]);
+        t.row(vec!["Qwen3-8B".into(), "1.7x".into()]);
+        let s = t.render();
+        assert!(s.contains("Qwen3-8B"));
+        assert!(s.lines().count() == 3);
+    }
+}

@@ -1,0 +1,171 @@
+//! Edge cases and failure injection across the stack: degenerate
+//! graphs, minimal runtime configurations, timeout behavior, and
+//! simulator monotonicity properties.
+
+use mpk::megakernel::{MegaConfig, MegaKernel};
+use mpk::models::{build_decode_graph, GraphOptions, ModelConfig};
+use mpk::ops::{CompGraph, DType, OpKind};
+use mpk::sim::{simulate_megakernel, GpuSpec, SimOptions};
+use mpk::tgraph::{compile, CompileOptions, DecomposeConfig, TaskDesc};
+use std::time::Duration;
+
+fn compile_default(g: &CompGraph) -> mpk::tgraph::CompiledGraph {
+    compile(g, &CompileOptions { decompose: DecomposeConfig { target_tasks: 4, min_tile_cols: 4 }, ..Default::default() })
+}
+
+#[test]
+fn single_op_graph_compiles_and_runs() {
+    let mut g = CompGraph::new();
+    let x = g.input("x", vec![2, 16], DType::F32);
+    let w = g.param("w", vec![16, 8], DType::F32);
+    g.op("mm", OpKind::MatMul, &[x, w], vec![2, 8], DType::F32);
+    let c = compile_default(&g);
+    c.tgraph.check_consistent().unwrap();
+    let mk = MegaKernel::new(&c, MegaConfig::default());
+    let r = mk.run(&|_: &TaskDesc| {}).unwrap();
+    assert_eq!(r.metrics.tasks_executed as usize, c.tgraph.tasks.len());
+}
+
+#[test]
+fn chain_of_elementwise_ops() {
+    // long sequential chain: degenerate parallelism, must not deadlock.
+    let mut g = CompGraph::new();
+    let mut x = g.input("x", vec![1, 8], DType::F32);
+    let y = g.input("y", vec![1, 8], DType::F32);
+    for i in 0..50 {
+        x = g.op(&format!("add{i}"), OpKind::Add, &[x, y], vec![1, 8], DType::F32);
+    }
+    let c = compile_default(&g);
+    let mk = MegaKernel::new(&c, MegaConfig { workers: 2, schedulers: 1, ..Default::default() });
+    let r = mk.run(&|_: &TaskDesc| {}).unwrap();
+    assert_eq!(r.metrics.tasks_executed as usize, c.tgraph.tasks.len());
+}
+
+#[test]
+fn wide_fanout_graph() {
+    // one producer feeding 30 consumers: stress fusion + normalization.
+    let mut g = CompGraph::new();
+    let x = g.input("x", vec![2, 32], DType::F32);
+    let w0 = g.param("w0", vec![32, 32], DType::F32);
+    let h = g.op("h", OpKind::MatMul, &[x, w0], vec![2, 32], DType::F32);
+    for i in 0..30 {
+        let w = g.param(&format!("w{}", i + 1), vec![32, 16], DType::F32);
+        g.op(&format!("mm{i}"), OpKind::MatMul, &[h, w], vec![2, 16], DType::F32);
+    }
+    let c = compile_default(&g);
+    c.tgraph.check_consistent().unwrap();
+    assert!(c.tgraph.is_normalized());
+    mpk::tgraph::linearize::verify(&c.linear, &c.tgraph.tasks, &c.tgraph.events).unwrap();
+}
+
+#[test]
+fn timeout_surfaces_as_error_not_hang() {
+    // an executor that blocks forever on one task must trip the
+    // watchdog, not hang the test suite.
+    let cfg = ModelConfig::tiny();
+    let g = build_decode_graph(&cfg, &GraphOptions { batch: 1, kv_len: 8, ..Default::default() });
+    let c = compile_default(&g);
+    let mk = MegaKernel::new(
+        &c,
+        MegaConfig { workers: 2, schedulers: 1, timeout: Duration::from_millis(300) },
+    );
+    let res = mk.run(&|t: &TaskDesc| {
+        if t.id == c.linear.order[0] {
+            std::thread::sleep(Duration::from_secs(10));
+        }
+    });
+    assert!(res.is_err(), "watchdog should have fired");
+    assert!(res.unwrap_err().contains("timed out"));
+}
+
+#[test]
+fn sim_makespan_monotone_in_batch() {
+    let gpu = GpuSpec::h100();
+    let cfg = ModelConfig::qwen3_0_6b();
+    let mut last = 0.0;
+    for b in [1usize, 4, 16] {
+        let g = build_decode_graph(&cfg, &GraphOptions { batch: b, kv_len: 128, ..Default::default() });
+        let c = compile(
+            &g,
+            &CompileOptions {
+                decompose: DecomposeConfig { target_tasks: gpu.workers, min_tile_cols: 8 },
+                ..Default::default()
+            },
+        );
+        let m = simulate_megakernel(&c, &gpu, &SimOptions { jitter: 0.0, ..Default::default() }).makespan_us;
+        assert!(m > last, "batch {b}: {m} <= {last}");
+        last = m;
+    }
+}
+
+#[test]
+fn sim_makespan_monotone_in_kv_len() {
+    let gpu = GpuSpec::a100();
+    let cfg = ModelConfig::qwen3_1_7b();
+    let mut last = 0.0;
+    for kv in [64usize, 512, 4096] {
+        let g = build_decode_graph(&cfg, &GraphOptions { batch: 4, kv_len: kv, ..Default::default() });
+        let c = compile(
+            &g,
+            &CompileOptions {
+                decompose: DecomposeConfig { target_tasks: gpu.workers, min_tile_cols: 8 },
+                ..Default::default()
+            },
+        );
+        let m = simulate_megakernel(&c, &gpu, &SimOptions { jitter: 0.0, ..Default::default() }).makespan_us;
+        assert!(m >= last, "kv {kv}: {m} < {last}");
+        last = m;
+    }
+}
+
+#[test]
+fn faster_gpu_is_faster() {
+    let cfg = ModelConfig::qwen3_1_7b();
+    let g = build_decode_graph(&cfg, &GraphOptions { batch: 1, kv_len: 256, ..Default::default() });
+    let mut times = Vec::new();
+    for gpu in [GpuSpec::a100(), GpuSpec::h100(), GpuSpec::b200()] {
+        let c = compile(
+            &g,
+            &CompileOptions {
+                decompose: DecomposeConfig { target_tasks: gpu.workers, min_tile_cols: 8 },
+                ..Default::default()
+            },
+        );
+        times.push(simulate_megakernel(&c, &gpu, &SimOptions { jitter: 0.0, ..Default::default() }).makespan_us);
+    }
+    assert!(times[0] > times[1] && times[1] > times[2], "{times:?}");
+}
+
+#[test]
+fn global_queue_policy_slower_but_correct() {
+    use mpk::sim::engine::SchedPolicy;
+    let gpu = GpuSpec::b200();
+    let cfg = ModelConfig::tiny();
+    let g = build_decode_graph(&cfg, &GraphOptions { batch: 4, kv_len: 16, ..Default::default() });
+    let c = compile(
+        &g,
+        &CompileOptions { decompose: DecomposeConfig { target_tasks: 16, min_tile_cols: 8 }, ..Default::default() },
+    );
+    let dec = simulate_megakernel(&c, &gpu, &SimOptions { jitter: 0.0, ..Default::default() });
+    let glob = simulate_megakernel(
+        &c,
+        &gpu,
+        &SimOptions { jitter: 0.0, policy: SchedPolicy::GlobalQueue, ..Default::default() },
+    );
+    assert_eq!(dec.tasks, glob.tasks);
+    assert!(glob.makespan_us > dec.makespan_us, "global {} <= dec {}", glob.makespan_us, dec.makespan_us);
+}
+
+#[test]
+fn zero_generation_requests_complete_immediately() {
+    use mpk::serving::{Batcher, KvAllocator, Request};
+    let mut b = Batcher::new(2, 64, KvAllocator::new(16, 8));
+    // max_new_tokens = 1: shortest legal request.
+    b.submit(Request::new(0, vec![1], 1));
+    b.step_admission();
+    assert_eq!(b.active.len(), 1);
+    b.active[0].generated.push(5);
+    let retired = b.step_admission();
+    assert_eq!(retired, vec![0]);
+    assert!(!b.has_work());
+}

@@ -1,0 +1,73 @@
+//! Cross-layer integration: compile → threaded megakernel → simulator
+//! agreement, and (when artifacts exist) the real-numerics path.
+
+use mpk::megakernel::{MegaConfig, MegaKernel};
+use mpk::models::{build_decode_graph, GraphOptions, ModelConfig};
+use mpk::sim::{simulate_megakernel, GpuSpec, SimOptions};
+use mpk::tgraph::{compile, CompileOptions, DecomposeConfig, TaskDesc};
+
+/// The threaded runtime and the DES replay the same policy over the same
+/// tGraph: both must execute the full task set.
+#[test]
+fn threaded_runtime_and_simulator_agree_on_task_count() {
+    let cfg = ModelConfig::tiny();
+    let g = build_decode_graph(&cfg, &GraphOptions { batch: 4, kv_len: 16, ..Default::default() });
+    let c = compile(
+        &g,
+        &CompileOptions { decompose: DecomposeConfig { target_tasks: 8, min_tile_cols: 8 }, ..Default::default() },
+    );
+    let mk = MegaKernel::new(&c, MegaConfig { workers: 4, schedulers: 1, ..Default::default() });
+    let r = mk.run(&|_: &TaskDesc| {}).unwrap();
+    let gpu = GpuSpec::a100();
+    let s = simulate_megakernel(&c, &gpu, &SimOptions::default());
+    assert_eq!(r.metrics.tasks_executed as usize, c.tgraph.tasks.len());
+    assert_eq!(s.tasks, c.tgraph.real_task_count());
+}
+
+/// All five paper models compile and simulate on all three GPUs without
+/// violating the basic ordering invariants (smoke over the full matrix).
+#[test]
+fn full_model_gpu_matrix_compiles_and_simulates() {
+    for cfg in ModelConfig::paper_models() {
+        // trim depth to keep the matrix fast; structure is per-layer.
+        let mut small = cfg.clone();
+        small.layers = 2;
+        let g = build_decode_graph(&small, &GraphOptions { batch: 2, kv_len: 64, ..Default::default() });
+        for gpu in GpuSpec::all() {
+            let c = compile(
+                &g,
+                &CompileOptions {
+                    decompose: DecomposeConfig { target_tasks: gpu.workers, min_tile_cols: 8 },
+                    ..Default::default()
+                },
+            );
+            c.tgraph.check_consistent().unwrap();
+            let r = simulate_megakernel(&c, &gpu, &SimOptions::default());
+            assert!(r.makespan_us > 0.0, "{} on {}", cfg.name, gpu.name);
+            assert!(r.utilization > 0.0 && r.utilization <= 1.0);
+        }
+    }
+}
+
+/// Real-numerics path (skipped when artifacts are absent): serving a
+/// request through the engine matches serving it through a second,
+/// freshly constructed engine (determinism across engine instances).
+#[test]
+fn serving_is_deterministic_across_engines() {
+    if mpk::runtime::Manifest::load(&mpk::runtime::Manifest::default_dir()).is_err() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    use mpk::serving::{Request, ServeEngine};
+    let mega = MegaConfig { workers: 4, schedulers: 1, ..Default::default() };
+    let run = || {
+        let mut e = ServeEngine::create(2, 2, 77, mega).unwrap();
+        e.submit(Request::new(0, vec![9, 17], 4));
+        e.submit(Request::new(1, vec![250], 4));
+        e.serve().unwrap().0
+    };
+    let a = run();
+    let b = run();
+    assert_eq!(a[&0], b[&0]);
+    assert_eq!(a[&1], b[&1]);
+}

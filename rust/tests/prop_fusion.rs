@@ -1,0 +1,159 @@
+//! Soundness properties of the event-reduction passes on *random
+//! bipartite task/event DAGs* (not just model-shaped graphs): fusion and
+//! fork-merging may add synchronization, but must never lose a
+//! producer→consumer pair or introduce a cycle.
+
+use mpk::ops::{LaunchMode, Region};
+use mpk::proputil::forall;
+use mpk::tgraph::fusion::{encoded_pairs, fuse_events, merge_task_forks};
+use mpk::tgraph::{EventDesc, TaskDesc, TaskKind};
+use mpk::util::XorShift64;
+use std::collections::HashSet;
+
+/// Random layered DAG: tasks in layers, pair events only forward.
+fn random_dag(rng: &mut XorShift64) -> (Vec<TaskDesc>, Vec<EventDesc>) {
+    let layers = rng.range(2, 5);
+    let per_layer = rng.range(1, 6);
+    let mut tasks: Vec<TaskDesc> = Vec::new();
+    let mut layer_ids: Vec<Vec<usize>> = Vec::new();
+    for _ in 0..layers {
+        let mut ids = Vec::new();
+        for _ in 0..per_layer {
+            let id = tasks.len();
+            ids.push(id);
+            tasks.push(TaskDesc {
+                id,
+                kind: TaskKind::Dummy,
+                out_region: Region::new(vec![]),
+                launch: LaunchMode::Aot,
+                dependent_events: Vec::new(),
+                trigger_events: Vec::new(),
+                device: 0,
+            });
+        }
+        layer_ids.push(ids);
+    }
+    let mut events = Vec::new();
+    for l in 1..layers {
+        for &c in &layer_ids[l] {
+            // each task depends on 1..=3 random tasks of earlier layers.
+            for _ in 0..rng.range(1, 3) {
+                let pl = rng.below(l);
+                let p = layer_ids[pl][rng.below(layer_ids[pl].len())];
+                let id = events.len();
+                events.push(EventDesc { id, in_tasks: vec![p], out_tasks: vec![c] });
+                tasks[p].trigger_events.push(id);
+                tasks[c].dependent_events.push(id);
+            }
+        }
+    }
+    (tasks, events)
+}
+
+fn is_acyclic(tasks: &[TaskDesc], events: &[EventDesc]) -> bool {
+    // Kahn over tasks through events.
+    let n = tasks.len();
+    let mut indeg = vec![0usize; n];
+    for t in tasks {
+        indeg[t.id] = t.dependent_events.iter().map(|&e| events[e].in_tasks.len()).sum();
+    }
+    let mut q: Vec<usize> = (0..n).filter(|&i| indeg[i] == 0).collect();
+    let mut seen = 0;
+    while let Some(t) = q.pop() {
+        seen += 1;
+        for &e in &tasks[t].trigger_events {
+            for &s in &events[e].out_tasks {
+                indeg[s] -= 1;
+                if indeg[s] == 0 {
+                    q.push(s);
+                }
+            }
+        }
+    }
+    seen == n
+}
+
+#[test]
+fn prop_fusion_preserves_pairs_and_acyclicity() {
+    forall("fusion soundness", 0xF051, 80, random_dag, |(tasks, events)| {
+        let before: HashSet<(usize, usize)> = encoded_pairs(events);
+        let mut tasks = tasks.clone();
+        let fused = fuse_events(&mut tasks, events.clone());
+        let after = encoded_pairs(&fused);
+        if !after.is_superset(&before) {
+            return Err("fusion lost a dependency pair".into());
+        }
+        if !is_acyclic(&tasks, &fused) {
+            return Err("fusion introduced a cycle".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_fork_merge_preserves_pairs_and_acyclicity() {
+    forall("fork-merge soundness", 0xF0C2, 80, random_dag, |(tasks, events)| {
+        let before: HashSet<(usize, usize)> = encoded_pairs(events);
+        let mut tasks = tasks.clone();
+        let fused = fuse_events(&mut tasks, events.clone());
+        let merged = merge_task_forks(&mut tasks, fused);
+        let after = encoded_pairs(&merged);
+        if !after.is_superset(&before) {
+            return Err("fork-merge lost a dependency pair".into());
+        }
+        if !is_acyclic(&tasks, &merged) {
+            return Err("fork-merge introduced a cycle".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_normalization_bounds_degrees_on_random_dags() {
+    forall("normalization degrees", 0x0123, 80, random_dag, |(tasks, events)| {
+        let mut tasks = tasks.clone();
+        let mut events = fuse_events(&mut tasks, events.clone());
+        let before: HashSet<(usize, usize)> = encoded_pairs(&events);
+        mpk::tgraph::normalize::normalize(&mut tasks, &mut events);
+        for t in &tasks {
+            if t.dependent_events.len() > 1 || t.trigger_events.len() > 1 {
+                return Err(format!("task {} degree bound violated", t.id));
+            }
+        }
+        if !is_acyclic(&tasks, &events) {
+            return Err("normalization introduced a cycle".into());
+        }
+        // pairs preserved transitively: check reachability for a sample.
+        let mut rng = XorShift64::new(1);
+        let sample: Vec<&(usize, usize)> = {
+            let v: Vec<&(usize, usize)> = before.iter().collect();
+            (0..v.len().min(20)).map(|_| v[rng.below(v.len())]).collect()
+        };
+        for &&(p, c) in &sample {
+            if !reaches(&tasks, &events, p, c) {
+                return Err(format!("normalization lost {p} -> {c}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+fn reaches(tasks: &[TaskDesc], events: &[EventDesc], from: usize, to: usize) -> bool {
+    let mut seen = vec![false; tasks.len()];
+    let mut stack = vec![from];
+    while let Some(t) = stack.pop() {
+        if t == to {
+            return true;
+        }
+        if seen[t] {
+            continue;
+        }
+        seen[t] = true;
+        for &e in &tasks[t].trigger_events {
+            for &s in &events[e].out_tasks {
+                stack.push(s);
+            }
+        }
+    }
+    false
+}

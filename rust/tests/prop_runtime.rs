@@ -1,0 +1,127 @@
+//! Property suite over the threaded in-kernel runtime: for random
+//! compiled graphs and random worker/scheduler splits, every run must
+//! execute each task exactly once, respect the dependency order, and
+//! terminate.
+
+use mpk::megakernel::{MegaConfig, MegaKernel};
+use mpk::models::{build_decode_graph, GraphOptions, ModelConfig};
+use mpk::proputil::forall;
+use mpk::tgraph::{compile, CompileOptions, CompiledGraph, DecomposeConfig, TaskDesc};
+use mpk::util::XorShift64;
+use std::sync::Mutex;
+
+struct Case {
+    compiled: CompiledGraph,
+    workers: usize,
+    schedulers: usize,
+}
+
+fn random_case(rng: &mut XorShift64) -> Case {
+    let cfg = ModelConfig {
+        name: "rand-rt",
+        layers: rng.range(1, 3),
+        d_model: [128, 256][rng.below(2)],
+        heads: 4,
+        kv_heads: 2,
+        head_dim: 32,
+        ffn: [128, 256][rng.below(2)],
+        vocab: 256,
+        moe: None,
+    };
+    let opt = GraphOptions {
+        batch: rng.range(1, 6),
+        kv_len: rng.range(4, 32),
+        unfused_qkv: rng.below(2) == 0,
+        fused_kv_append: rng.below(2) == 0,
+        ..Default::default()
+    };
+    let g = build_decode_graph(&cfg, &opt);
+    let compiled = compile(
+        &g,
+        &CompileOptions {
+            decompose: DecomposeConfig { target_tasks: rng.range(2, 16), min_tile_cols: 8 },
+            merge_forks: rng.below(2) == 0,
+            ..Default::default()
+        },
+    );
+    Case { compiled, workers: rng.range(1, 6), schedulers: rng.range(1, 3) }
+}
+
+#[test]
+fn prop_every_task_runs_exactly_once() {
+    forall("exactly-once execution", 0x51DE, 12, random_case, |case| {
+        let mk = MegaKernel::new(
+            &case.compiled,
+            MegaConfig { workers: case.workers, schedulers: case.schedulers, ..Default::default() },
+        );
+        let seen = Mutex::new(vec![0u32; case.compiled.tgraph.tasks.len()]);
+        let report = mk
+            .run(&|t: &TaskDesc| {
+                seen.lock().unwrap()[t.id] += 1;
+            })
+            .map_err(|e| e.to_string())?;
+        let seen = seen.lock().unwrap();
+        for (tid, &n) in seen.iter().enumerate() {
+            let dummy = case.compiled.tgraph.tasks[tid].kind.is_dummy();
+            let want = if dummy { 0 } else { 1 };
+            if n != want {
+                return Err(format!("task {tid} ran {n} times (dummy={dummy})"));
+            }
+        }
+        if report.metrics.tasks_executed as usize != case.compiled.tgraph.tasks.len() {
+            return Err("runtime lost tasks".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_execution_respects_dependencies() {
+    forall("dependency order", 0xAB1E, 10, random_case, |case| {
+        let mk = MegaKernel::new(
+            &case.compiled,
+            MegaConfig { workers: case.workers, schedulers: case.schedulers, ..Default::default() },
+        );
+        let order = Mutex::new(Vec::new());
+        mk.run(&|t: &TaskDesc| order.lock().unwrap().push(t.id)).map_err(|e| e.to_string())?;
+        let order = order.lock().unwrap();
+        let mut pos = vec![usize::MAX; case.compiled.tgraph.tasks.len()];
+        for (i, &t) in order.iter().enumerate() {
+            pos[t] = i;
+        }
+        let tg = &case.compiled.tgraph;
+        for t in &tg.tasks {
+            if t.kind.is_dummy() {
+                continue;
+            }
+            for &e in &t.dependent_events {
+                for &p in &tg.events[e].in_tasks {
+                    if tg.tasks[p].kind.is_dummy() {
+                        continue; // dummies not recorded by the executor
+                    }
+                    if pos[p] == usize::MAX || pos[p] > pos[t.id] {
+                        return Err(format!("task {} ran before producer {p}", t.id));
+                    }
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_repeat_runs_are_stable() {
+    forall("re-run stability", 0xD0, 6, random_case, |case| {
+        let mk = MegaKernel::new(
+            &case.compiled,
+            MegaConfig { workers: case.workers, schedulers: case.schedulers, ..Default::default() },
+        );
+        for _ in 0..3 {
+            let r = mk.run(&|_: &TaskDesc| {}).map_err(|e| e.to_string())?;
+            if r.metrics.tasks_executed as usize != case.compiled.tgraph.tasks.len() {
+                return Err("re-run dropped tasks".into());
+            }
+        }
+        Ok(())
+    });
+}

@@ -1,0 +1,138 @@
+//! Property suite over the serving substrate: random request mixes must
+//! conserve KV blocks, never exceed batch capacity, and complete every
+//! request with exactly the asked-for token count. (Scheduler-level —
+//! no artifacts needed; the real-numerics serving path is covered by
+//! `serving::engine` tests and `examples/serve_e2e`.)
+
+use mpk::proputil::forall;
+use mpk::serving::{Batcher, KvAllocator, Request};
+use mpk::util::XorShift64;
+
+struct Workload {
+    max_batch: usize,
+    blocks: usize,
+    requests: Vec<(usize, usize)>, // (prompt_len, gen_len)
+}
+
+fn random_workload(rng: &mut XorShift64) -> Workload {
+    Workload {
+        max_batch: rng.range(1, 6),
+        blocks: rng.range(4, 64),
+        requests: (0..rng.range(1, 20))
+            .map(|_| (rng.range(1, 8), rng.range(1, 8)))
+            .collect(),
+    }
+}
+
+/// Drive the batcher with a fake model (each iteration generates one
+/// token for every active request).
+fn drive(w: &Workload) -> Result<(), String> {
+    let kv = KvAllocator::new(w.blocks, 8);
+    let mut b = Batcher::new(w.max_batch, 64, kv);
+    for (i, &(p, g)) in w.requests.iter().enumerate() {
+        b.submit(Request::new(i as u64, vec![1; p], g));
+    }
+    let total_blocks = w.blocks;
+    let mut guard = 0;
+    while b.has_work() {
+        guard += 1;
+        if guard > 10_000 {
+            return Err("batcher livelock".into());
+        }
+        b.step_admission();
+        if b.active.is_empty() {
+            if b.pending() > 0 {
+                // a single waiting request must always fit eventually:
+                // worst-case demand ≤ pool size?
+                let (p, g) = w.requests[0];
+                if (p + g).div_ceil(8) > total_blocks {
+                    return Ok(()); // permanently oversized workload: fine to stall
+                }
+                return Err("stall with free capacity".into());
+            }
+            break;
+        }
+        if b.active.len() > w.max_batch {
+            return Err(format!("batch overflow: {}", b.active.len()));
+        }
+        // slots compact and unique.
+        let mut slots: Vec<_> = b.active.iter().map(|r| r.slot.unwrap()).collect();
+        slots.sort_unstable();
+        if slots != (0..b.active.len()).collect::<Vec<_>>() {
+            return Err(format!("non-compact slots {slots:?}"));
+        }
+        // fake decode step.
+        for r in b.active.iter_mut() {
+            r.cache_len += 1;
+            if r.in_prefill() {
+                r.prompt_pos += 1;
+                if !r.in_prefill() {
+                    r.generated.push(0);
+                }
+            } else {
+                r.generated.push(0);
+            }
+        }
+    }
+    // every request finished with the right token count.
+    if b.finished.len() != w.requests.len() {
+        return Err(format!("{} of {} finished", b.finished.len(), w.requests.len()));
+    }
+    for r in &b.finished {
+        let want = w.requests[r.id as usize].1;
+        if r.generated.len() != want {
+            return Err(format!("req {} generated {} of {want}", r.id, r.generated.len()));
+        }
+    }
+    // all KV blocks returned.
+    if b.kv.free_blocks() != total_blocks {
+        return Err(format!("leaked blocks: {} of {total_blocks} free", b.kv.free_blocks()));
+    }
+    Ok(())
+}
+
+#[test]
+fn prop_continuous_batching_conserves_blocks_and_completes() {
+    forall("serving invariants", 0x5E11, 60, random_workload, |w| {
+        // skip impossible workloads (a single request larger than pool).
+        if w.requests.iter().any(|&(p, g)| (p + g).div_ceil(8) > w.blocks) {
+            return Ok(());
+        }
+        drive(w)
+    });
+}
+
+#[test]
+fn prop_kv_allocator_never_oversubscribes() {
+    forall(
+        "kv allocator",
+        0xA110C,
+        100,
+        |rng: &mut XorShift64| {
+            let blocks = rng.range(1, 32);
+            let ops: Vec<(u64, usize, bool)> =
+                (0..rng.range(1, 60)).map(|_| (rng.below(8) as u64, rng.range(0, 40), rng.below(4) == 0)).collect();
+            (blocks, ops)
+        },
+        |(blocks, ops)| {
+            let mut a = KvAllocator::new(*blocks, 4);
+            let mut outstanding = 0usize;
+            let mut held: std::collections::HashMap<u64, usize> = Default::default();
+            for &(req, tokens, release) in ops {
+                if release {
+                    let freed = a.release(req);
+                    outstanding -= freed;
+                    held.remove(&req);
+                } else if a.ensure(req, tokens) {
+                    let new_held = a.held_by(req);
+                    let old = held.insert(req, new_held).unwrap_or(0);
+                    outstanding += new_held - old;
+                }
+                if outstanding + a.free_blocks() != *blocks {
+                    return Err("block conservation violated".into());
+                }
+            }
+            Ok(())
+        },
+    );
+}

@@ -53,9 +53,14 @@ fn main() {
     println!("decode iterations  : {}", stats.iterations);
     println!("total wall time    : {:?}", stats.total);
     println!("p50 iter latency   : {:?}", stats.p50_latency());
+    println!("p99 iter latency   : {:?}", stats.p99_latency());
     println!("throughput         : {:.1} tok/s", stats.throughput_tok_s());
     let max_b = stats.batch_sizes.iter().max().unwrap();
     println!("peak batch         : {max_b} (graphs specialized per power-of-two batch)");
+    println!(
+        "KV rows migrated   : {} (copies only on admit/slot-remap; steady-state decode stages zero)",
+        stats.kv_rows_migrated
+    );
     let mut sample: Vec<_> = outputs.iter().collect();
     sample.sort();
     for (id, toks) in sample.iter().take(3) {

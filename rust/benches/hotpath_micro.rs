@@ -63,17 +63,28 @@ fn main() {
         format!("{:.0} ktasks/s", tasks as f64 / (ns as f64 / 1e9) / 1000.0),
     ]);
 
-    // threaded megakernel dispatch-only throughput (no-op tasks)
+    // threaded megakernel dispatch-only throughput (no-op tasks):
+    // scoped (spawn/join per run) vs persistent (parked threads).
     let tiny = ModelConfig::tiny();
     let gt = build_decode_graph(&tiny, &GraphOptions { batch: 4, kv_len: 16, ..Default::default() });
-    let ct = compile(&gt, &CompileOptions { decompose: DecomposeConfig { target_tasks: 16, min_tile_cols: 8 }, ..Default::default() });
-    let mk = mpk::megakernel::MegaKernel::new(&ct, mpk::megakernel::MegaConfig { workers: 4, schedulers: 1, ..Default::default() });
+    let ct = std::sync::Arc::new(compile(&gt, &CompileOptions { decompose: DecomposeConfig { target_tasks: 16, min_tile_cols: 8 }, ..Default::default() }));
+    let kcfg = mpk::megakernel::MegaConfig { workers: 4, schedulers: 1, ..Default::default() };
+    let nt = ct.tgraph.tasks.len();
+    let mk = mpk::megakernel::MegaKernel::new(&ct, kcfg);
     let ns = bench_median_ns(2, 10, || {
         mk.run(&|_: &mpk::tgraph::TaskDesc| {}).unwrap();
     });
-    let nt = ct.tgraph.tasks.len();
     t.row(vec![
-        "threaded megakernel (no-op tasks)".into(),
+        "scoped megakernel (no-op tasks)".into(),
+        format!("{:.2} ms", ns as f64 / 1e6),
+        format!("{} tasks, {:.0} ns/task", nt, ns as f64 / nt as f64),
+    ]);
+    let mut pk = mpk::megakernel::PersistentMegaKernel::new(ct.clone(), kcfg);
+    let ns = bench_median_ns(2, 10, || {
+        pk.run(&|_: &mpk::tgraph::TaskDesc| {}).unwrap();
+    });
+    t.row(vec![
+        "persistent megakernel (no-op tasks)".into(),
         format!("{:.2} ms", ns as f64 / 1e6),
         format!("{} tasks, {:.0} ns/task", nt, ns as f64 / nt as f64),
     ]);

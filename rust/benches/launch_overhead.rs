@@ -1,14 +1,18 @@
 //! §6.6 kernel-launch reduction: kernels per token under the
 //! kernel-per-operator model (eager vs CUDA graphs) vs MPK's single
-//! launch, and the in-kernel scheduler's share of runtime — measured on
-//! the *real threaded megakernel* over the tiny model, and modeled for
-//! Qwen3-8B on B200.
+//! launch, the in-kernel scheduler's share of runtime, and — the real
+//! measurement this repo optimizes — per-iteration overhead of the
+//! spawn-per-run scoped kernel vs the persistent kernel (threads
+//! spawned once, re-armed per epoch). Emits `BENCH_launch_overhead.json`
+//! (path overridable via `MPK_BENCH_JSON`) so the perf trajectory is
+//! tracked across PRs.
 
-use mpk::megakernel::{MegaConfig, MegaKernel};
+use mpk::megakernel::{MegaConfig, MegaKernel, PersistentMegaKernel};
 use mpk::models::{build_decode_graph, GraphOptions, ModelConfig};
 use mpk::sim::{kernel_launches, GpuSpec};
 use mpk::tgraph::{compile, CompileOptions, DecomposeConfig, TaskDesc};
-use mpk::util::Table;
+use mpk::util::{bench_median_ns, Table};
+use std::sync::Arc;
 
 fn main() {
     println!("== §6.6: kernel-launch reduction ==\n");
@@ -30,16 +34,47 @@ fn main() {
     println!("{}", t.render());
     println!("paper: 293 launches -> 1.1 ms eager / 0.2 ms graphs; ours: {n} ops.\n");
 
-    // real threaded runtime: scheduler overhead share (paper: 0.28%).
-    println!("== in-kernel scheduler overhead (real threaded runtime, tiny model) ==");
+    // real threaded runtime: per-iteration launch overhead, spawn/join
+    // per run (scoped) vs persistent parked threads re-armed per epoch.
+    println!("== per-iteration overhead: spawn-per-run vs persistent (tiny model, no-op tasks) ==");
     let tiny = ModelConfig::tiny();
-    let g = build_decode_graph(&tiny, &GraphOptions { batch: 4, kv_len: 16, ..Default::default() });
-    let c = compile(
-        &g,
+    let gt = build_decode_graph(&tiny, &GraphOptions { batch: 4, kv_len: 16, ..Default::default() });
+    let ct = Arc::new(compile(
+        &gt,
         &CompileOptions { decompose: DecomposeConfig { target_tasks: 16, min_tile_cols: 8 }, ..Default::default() },
-    );
-    let mk = MegaKernel::new(&c, MegaConfig { workers: 4, schedulers: 1, ..Default::default() });
-    // simulate ~5 µs of work per task so overhead fractions are honest.
+    ));
+    let kcfg = MegaConfig { workers: 4, schedulers: 1, ..Default::default() };
+    let noop = |_: &TaskDesc| {};
+    let ntasks = ct.tgraph.tasks.len();
+
+    let scoped = MegaKernel::new(&ct, kcfg);
+    let scoped_ns = bench_median_ns(3, 30, || {
+        scoped.run(&noop).expect("scoped run");
+    });
+    let mut persistent = PersistentMegaKernel::new(ct.clone(), kcfg);
+    let persistent_ns = bench_median_ns(3, 30, || {
+        persistent.run(&noop).expect("persistent run");
+    });
+    let speedup = scoped_ns as f64 / persistent_ns.max(1) as f64;
+
+    let mut t = Table::new(&["runtime", "median/iter", "ns/task", "threads spawned/iter"]);
+    t.row(vec![
+        "scoped (spawn per run)".into(),
+        format!("{:.2} µs", scoped_ns as f64 / 1e3),
+        format!("{:.0}", scoped_ns as f64 / ntasks as f64),
+        format!("{}", kcfg.workers + kcfg.schedulers),
+    ]);
+    t.row(vec![
+        "persistent (parked)".into(),
+        format!("{:.2} µs", persistent_ns as f64 / 1e3),
+        format!("{:.0}", persistent_ns as f64 / ntasks as f64),
+        "0".into(),
+    ]);
+    println!("{}", t.render());
+    println!("persistent speedup: {speedup:.2}x over spawn-per-iteration ({ntasks} tasks/iter)\n");
+
+    // scheduler overhead share on the persistent runtime (paper: 0.28%).
+    println!("== in-kernel scheduler overhead (persistent runtime, ~5 µs tasks) ==");
     let busy = |_: &TaskDesc| {
         let t0 = std::time::Instant::now();
         while t0.elapsed().as_micros() < 5 {
@@ -48,10 +83,24 @@ fn main() {
     };
     let mut fracs = Vec::new();
     for _ in 0..5 {
-        let r = mk.run(&busy).expect("run");
+        let r = persistent.run(&busy).expect("run");
         fracs.push(r.metrics.sched_overhead() * 100.0);
     }
     fracs.sort_by(|a, b| a.partial_cmp(b).unwrap());
     println!("scheduler share of accounted runtime: {:.2}% (median of 5 runs)", fracs[2]);
     println!("paper: 0.28% on B200.");
+
+    // perf-trajectory record for CI (scripts/tier1.sh).
+    let json_path = std::env::var("MPK_BENCH_JSON")
+        .unwrap_or_else(|_| "BENCH_launch_overhead.json".to_string());
+    let json = format!(
+        "{{\n  \"bench\": \"launch_overhead\",\n  \"tasks_per_iteration\": {ntasks},\n  \
+         \"scoped_spawn_per_iter_ns\": {scoped_ns},\n  \"persistent_ns\": {persistent_ns},\n  \
+         \"persistent_speedup\": {speedup:.4},\n  \"sched_overhead_pct_median\": {:.4}\n}}\n",
+        fracs[2]
+    );
+    match std::fs::write(&json_path, json) {
+        Ok(()) => println!("\nwrote {json_path}"),
+        Err(e) => eprintln!("\ncould not write {json_path}: {e}"),
+    }
 }

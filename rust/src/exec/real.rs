@@ -97,16 +97,28 @@ pub fn init_weights(g: &CompGraph, store: &TensorStore, seed: u64) {
     }
 }
 
-/// Write this iteration's token ids into the store.
-pub fn set_ids(g: &CompGraph, store: &TensorStore, ids: &[i32]) {
-    let t = g.tensor_by_name("token_ids").expect("token_ids input");
-    store.set(t.id, ids.iter().map(|&i| i as f32).collect());
+/// Write this iteration's token ids into a known tensor id — the
+/// hot-path variant used by the serving engine, which resolves the id
+/// once at session creation instead of per iteration.
+pub fn set_ids_at(store: &TensorStore, t: crate::ops::TensorId, ids: &[i32]) {
+    store.set(t, ids.iter().map(|&i| i as f32).collect());
 }
 
-/// Fetch the logits produced by the last iteration.
+/// Write this iteration's token ids into the store (by-name lookup).
+pub fn set_ids(g: &CompGraph, store: &TensorStore, ids: &[i32]) {
+    let t = g.tensor_by_name("token_ids").expect("token_ids input");
+    set_ids_at(store, t.id, ids);
+}
+
+/// Fetch the logits at a known tensor id (hot-path variant).
+pub fn logits_at(store: &TensorStore, t: crate::ops::TensorId) -> Vec<f32> {
+    store.get(t)
+}
+
+/// Fetch the logits produced by the last iteration (by-name lookup).
 pub fn get_logits(g: &CompGraph, store: &TensorStore) -> Vec<f32> {
     let t = g.tensor_by_name("lm_head").expect("lm_head output");
-    store.get(t.id)
+    logits_at(store, t.id)
 }
 
 /// Run one decode iteration on the megakernel with real numerics.

@@ -62,14 +62,77 @@ impl TensorStore {
             offset += dst.len();
         });
     }
+
+    /// Copy a tile directly from another tensor into this one, run by
+    /// run, without materializing the tile in between — the KV
+    /// migration path for slot remaps, both across batch-size-
+    /// specialized session stores and within one store's cache tensor.
+    ///
+    /// Panics if the regions' per-dimension extents differ, or if
+    /// source and destination are the same tensor with *overlapping*
+    /// regions (slot moves are always disjoint). For distinct tensors
+    /// it locks source then destination: callers copying concurrently
+    /// in opposite directions between the same pair of tensors could
+    /// deadlock — the serving engine only migrates from the
+    /// single-threaded staging phase.
+    pub fn copy_tile_from(
+        &self,
+        t: TensorId,
+        r: &Region,
+        src: &TensorStore,
+        src_t: TensorId,
+        src_r: &Region,
+    ) {
+        assert_eq!(r.rank(), src_r.rank(), "tile rank mismatch");
+        for (d, (a, b)) in r.dims.iter().zip(src_r.dims.iter()).enumerate() {
+            assert_eq!(a.1 - a.0, b.1 - b.0, "extent mismatch in dim {d}");
+        }
+        let run = run_len(r);
+        if std::ptr::eq(self, src) && t == src_t {
+            // intra-tensor move (slot compaction): one lock, run-wise
+            // copy_within. Axis-aligned regions are disjoint iff the
+            // ranges of some dimension are.
+            assert!(
+                r.dims
+                    .iter()
+                    .zip(src_r.dims.iter())
+                    .any(|(&(d0, d1), &(s0, s1))| d1 <= s0 || s1 <= d0),
+                "same-tensor copy_tile_from requires disjoint regions"
+            );
+            let mut src_bases = Vec::new();
+            for_each_run(&self.shapes[t], src_r, &mut |b| src_bases.push(b));
+            let mut buf = self.bufs[t].lock().unwrap();
+            let mut i = 0;
+            for_each_run(&self.shapes[t], r, &mut |b| {
+                buf.copy_within(src_bases[i]..src_bases[i] + run, b);
+                i += 1;
+            });
+            return;
+        }
+        let mut dst_bases = Vec::new();
+        for_each_run(&self.shapes[t], r, &mut |b| dst_bases.push(b));
+        let src_buf = src.bufs[src_t].lock().unwrap();
+        let mut dst_buf = self.bufs[t].lock().unwrap();
+        let mut i = 0;
+        for_each_run(&src.shapes[src_t], src_r, &mut |b| {
+            dst_buf[dst_bases[i]..dst_bases[i] + run].copy_from_slice(&src_buf[b..b + run]);
+            i += 1;
+        });
+    }
 }
 
-/// Walk the contiguous innermost runs of `region` within a row-major
-/// buffer of `shape`, calling `f` with each source slice.
-fn copy_region(buf: &[f32], shape: &[usize], region: &Region, f: &mut impl FnMut(&[f32])) {
+/// Length of the contiguous innermost run of `region`.
+fn run_len(region: &Region) -> usize {
+    let (s, e) = region.dims[region.rank() - 1];
+    e - s
+}
+
+/// Call `f(base)` with the row-major start offset of each contiguous
+/// innermost run of `region` within a buffer of `shape`, in region
+/// row-major order.
+fn for_each_run(shape: &[usize], region: &Region, f: &mut impl FnMut(usize)) {
     let rank = shape.len();
-    let (last_s, last_e) = region.dims[rank - 1];
-    let run = last_e - last_s;
+    let (last_s, _) = region.dims[rank - 1];
     let mut strides = vec![1usize; rank];
     for d in (0..rank - 1).rev() {
         strides[d] = strides[d + 1] * shape[d + 1];
@@ -78,7 +141,7 @@ fn copy_region(buf: &[f32], shape: &[usize], region: &Region, f: &mut impl FnMut
     loop {
         let base: usize =
             idx.iter().zip(&strides[..rank - 1]).map(|(&i, &st)| i * st).sum::<usize>() + last_s;
-        f(&buf[base..base + run]);
+        f(base);
         // advance multi-index over the outer dims.
         let mut d = rank.wrapping_sub(2);
         loop {
@@ -95,32 +158,16 @@ fn copy_region(buf: &[f32], shape: &[usize], region: &Region, f: &mut impl FnMut
     }
 }
 
+/// Walk the contiguous innermost runs of `region` within a row-major
+/// buffer of `shape`, calling `f` with each source slice.
+fn copy_region(buf: &[f32], shape: &[usize], region: &Region, f: &mut impl FnMut(&[f32])) {
+    let run = run_len(region);
+    for_each_run(shape, region, &mut |base| f(&buf[base..base + run]));
+}
+
 fn write_region(buf: &mut [f32], shape: &[usize], region: &Region, f: &mut impl FnMut(&mut [f32])) {
-    let rank = shape.len();
-    let (last_s, last_e) = region.dims[rank - 1];
-    let run = last_e - last_s;
-    let mut strides = vec![1usize; rank];
-    for d in (0..rank - 1).rev() {
-        strides[d] = strides[d + 1] * shape[d + 1];
-    }
-    let mut idx: Vec<usize> = region.dims[..rank - 1].iter().map(|&(s, _)| s).collect();
-    loop {
-        let base: usize =
-            idx.iter().zip(&strides[..rank - 1]).map(|(&i, &st)| i * st).sum::<usize>() + last_s;
-        f(&mut buf[base..base + run]);
-        let mut d = rank.wrapping_sub(2);
-        loop {
-            if d == usize::MAX {
-                return;
-            }
-            idx[d] += 1;
-            if idx[d] < region.dims[d].1 {
-                break;
-            }
-            idx[d] = region.dims[d].0;
-            d = d.wrapping_sub(1);
-        }
-    }
+    let run = run_len(region);
+    for_each_run(shape, region, &mut |base| f(&mut buf[base..base + run]));
 }
 
 #[cfg(test)]
@@ -176,6 +223,74 @@ mod tests {
         s.write_tile(t, &Region::new(vec![(0, 1), (2, 3), (0, 4)]), &[9.0; 4]);
         let back = s.read_tile(t, &Region::new(vec![(0, 1), (2, 3), (0, 4)]));
         assert_eq!(back, vec![9.0; 4]);
+    }
+
+    #[test]
+    fn copy_tile_from_between_stores() {
+        // two stores with different batch dims, as in KV migration
+        // between batch-size-specialized sessions.
+        let mut g_src = CompGraph::new();
+        let ts = g_src.input("kc", vec![2, 4, 3], DType::F32);
+        let src = TensorStore::new(&g_src);
+        src.set(ts, (0..24).map(|i| i as f32).collect());
+
+        let mut g_dst = CompGraph::new();
+        let td = g_dst.input("kc", vec![4, 4, 3], DType::F32);
+        let dst = TensorStore::new(&g_dst);
+
+        // migrate src slot 1, rows 0..2 → dst slot 3, rows 0..2.
+        dst.copy_tile_from(
+            td,
+            &Region::new(vec![(3, 4), (0, 2), (0, 3)]),
+            &src,
+            ts,
+            &Region::new(vec![(1, 2), (0, 2), (0, 3)]),
+        );
+        let got = dst.read_tile(td, &Region::new(vec![(3, 4), (0, 2), (0, 3)]));
+        let want = src.read_tile(ts, &Region::new(vec![(1, 2), (0, 2), (0, 3)]));
+        assert_eq!(got, want);
+        assert_eq!(got, vec![12.0, 13.0, 14.0, 15.0, 16.0, 17.0]);
+        // rest of dst untouched.
+        assert_eq!(dst.read_tile(td, &Region::new(vec![(0, 3), (0, 4), (0, 3)])), vec![0.0; 36]);
+    }
+
+    #[test]
+    fn copy_tile_from_different_tensors_same_store() {
+        let mut g = CompGraph::new();
+        let a = g.input("a", vec![2, 6], DType::F32);
+        let b = g.input("b", vec![2, 6], DType::F32);
+        let s = TensorStore::new(&g);
+        s.set(a, (0..12).map(|i| i as f32).collect());
+        s.copy_tile_from(b, &Region::new(vec![(0, 2), (0, 6)]), &s, a, &Region::new(vec![(0, 2), (0, 6)]));
+        assert_eq!(s.get(b), s.get(a));
+    }
+
+    #[test]
+    fn copy_tile_from_same_tensor_disjoint_slots() {
+        // intra-tensor slot compaction: move slot 2's rows into slot 0.
+        let mut g = CompGraph::new();
+        let t = g.input("kc", vec![3, 4, 2], DType::F32);
+        let s = TensorStore::new(&g);
+        s.set(t, (0..24).map(|i| i as f32).collect());
+        let src = Region::new(vec![(2, 3), (0, 3), (0, 2)]);
+        let want = s.read_tile(t, &src);
+        s.copy_tile_from(t, &Region::new(vec![(0, 1), (0, 3), (0, 2)]), &s, t, &src);
+        assert_eq!(s.read_tile(t, &Region::new(vec![(0, 1), (0, 3), (0, 2)])), want);
+        // source slot is left as-is (dead data for the engine).
+        assert_eq!(s.read_tile(t, &src), want);
+    }
+
+    #[test]
+    #[should_panic(expected = "disjoint regions")]
+    fn copy_tile_from_same_tensor_overlap_panics() {
+        let (s, t) = store_2d();
+        s.copy_tile_from(
+            t,
+            &Region::new(vec![(0, 2), (0, 6)]),
+            &s,
+            t,
+            &Region::new(vec![(1, 3), (0, 6)]),
+        );
     }
 
     #[test]

@@ -97,11 +97,26 @@ impl<T> MpmcQueue<T> {
         }
     }
 
+    /// Queue capacity (after power-of-two rounding).
+    pub fn capacity(&self) -> usize {
+        self.mask + 1
+    }
+
     /// Approximate number of queued items (for load-aware dispatch).
+    ///
+    /// Reads `dequeue_pos` *first*: `enqueue_pos` read afterwards is
+    /// then always ≥ the dequeue snapshot (both counters are monotone
+    /// and `d ≤ e` holds at every instant), so the subtraction can
+    /// never underflow into a transient garbage length. Reading in the
+    /// opposite order lets consumers advance `d` past a stale `e`
+    /// snapshot, which would wrap to a huge value (or clamp a busy
+    /// queue to 0). The result may transiently *over*-count items
+    /// enqueued between the two reads, so it is clamped to capacity —
+    /// the return value is always in `[0, capacity]`.
     pub fn len_approx(&self) -> usize {
-        let e = self.enqueue_pos.load(Ordering::Relaxed);
-        let d = self.dequeue_pos.load(Ordering::Relaxed);
-        e.saturating_sub(d)
+        let d = self.dequeue_pos.load(Ordering::Acquire);
+        let e = self.enqueue_pos.load(Ordering::Acquire);
+        e.saturating_sub(d).min(self.capacity())
     }
 }
 
@@ -210,6 +225,69 @@ mod tests {
         all.sort_unstable();
         let expect: Vec<usize> = (0..PRODUCERS * PER).collect();
         assert_eq!(all, expect);
+    }
+
+    #[test]
+    fn len_approx_tracks_sequential_ops() {
+        let q = MpmcQueue::new(8);
+        assert_eq!(q.len_approx(), 0);
+        for i in 0..8 {
+            q.push(i).unwrap();
+            assert_eq!(q.len_approx(), i + 1);
+        }
+        for i in (0..8).rev() {
+            q.pop().unwrap();
+            assert_eq!(q.len_approx(), i);
+        }
+        // wrap around the ring a few times; length stays exact when
+        // quiescent.
+        for round in 0..5 {
+            for i in 0..3 {
+                q.push(round * 10 + i).unwrap();
+            }
+            assert_eq!(q.len_approx(), 3);
+            while q.pop().is_some() {}
+            assert_eq!(q.len_approx(), 0);
+        }
+    }
+
+    #[test]
+    fn len_approx_bounded_under_contention() {
+        // producers and consumers hammer the ring while observers
+        // sample len_approx: it must never report a value outside
+        // [0, capacity], in particular never a wrapped negative.
+        let q = Arc::new(MpmcQueue::new(64));
+        let stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
+        let mut handles = Vec::new();
+        for p in 0..2 {
+            let q = q.clone();
+            let stop = stop.clone();
+            handles.push(std::thread::spawn(move || {
+                let mut i = 0usize;
+                while !stop.load(std::sync::atomic::Ordering::Relaxed) {
+                    let _ = q.push(p * 1_000_000 + i);
+                    i += 1;
+                }
+            }));
+        }
+        for _ in 0..2 {
+            let q = q.clone();
+            let stop = stop.clone();
+            handles.push(std::thread::spawn(move || {
+                while !stop.load(std::sync::atomic::Ordering::Relaxed) {
+                    let _ = q.pop();
+                }
+            }));
+        }
+        let cap = q.capacity();
+        for _ in 0..200_000 {
+            let l = q.len_approx();
+            assert!(l <= cap, "len_approx {l} exceeds capacity {cap}");
+        }
+        stop.store(true, std::sync::atomic::Ordering::Relaxed);
+        for h in handles {
+            h.join().unwrap();
+        }
     }
 
     #[test]

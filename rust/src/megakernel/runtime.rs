@@ -1,4 +1,5 @@
-//! The in-kernel parallel runtime (§5), threaded.
+//! The in-kernel parallel runtime (§5), threaded — with persistent
+//! worker threads.
 //!
 //! One OS thread stands in for each SM. Workers own a JIT task queue
 //! (filled by schedulers) and an AOT queue (pre-filled in linearized
@@ -7,22 +8,45 @@
 //! notification that crosses the activation threshold hands the event to
 //! a scheduler (when it launches JIT tasks) — AOT tasks instead wait on
 //! their queue head for [`EventTable::activated`]. The designated end
-//! event raises the stop flag, terminating the "kernel".
+//! event raises the per-iteration stop flag, ending the epoch.
+//!
+//! Two front-ends share one scheduling substrate ([`KernelState`]):
+//!
+//! * [`PersistentMegaKernel`] is the paper-faithful model and the
+//!   serving hot path. The GPU megakernel is launched **once** and its
+//!   thread blocks then loop in-kernel over decode iterations; here,
+//!   worker and scheduler threads are spawned once at construction and
+//!   parked between iterations. `run()` is the analogue of the paper's
+//!   in-kernel re-processing of the start event: re-arm the event table
+//!   and queues under a fresh epoch (generation counter), publish the
+//!   executor, wake the parked threads, and wait for the end event —
+//!   no thread spawn or join on the hot path. Threads are only torn
+//!   down on `Drop`.
+//! * [`MegaKernel`] is the legacy scoped variant: every `run()` spawns
+//!   and joins the full thread complement via `std::thread::scope`. It
+//!   is kept as the measured "kernel-launch-per-iteration" baseline
+//!   (see `benches/launch_overhead.rs`) and for borrowed-graph
+//!   one-shot validation paths.
+//!
+//! Epoch protocol (persistent): `run()` may only re-arm while every
+//! thread is parked, which is guaranteed by a quiesce barrier — a run
+//! returns only after all workers and schedulers have finished the
+//! epoch and checked back in. That barrier is also what makes it sound
+//! to hand the borrowed [`TaskExecutor`] to the persistent threads for
+//! the duration of a single epoch.
 //!
 //! Differences from the CUDA implementation, by necessity of substrate:
-//! threads instead of SMs, `std::hint::spin_loop`+`yield_now` instead of
-//! `nanosleep`-free device spinning, and one `run()` per decode
-//! iteration (the GPU kernel instead re-processes the start event
-//! in-kernel; the serving engine owns that loop here — see
-//! `serving::engine`).
+//! threads instead of SMs, `std::hint::spin_loop`+`yield_now` instead
+//! of `nanosleep`-free device spinning, and condvar parking instead of
+//! the device-side wait on the start event's semaphore.
 
 use crate::megakernel::event::EventTable;
 use crate::megakernel::queue::{AotQueue, MpmcQueue};
 use crate::metrics::{MetricsSnapshot, RuntimeMetrics};
 use crate::ops::LaunchMode;
 use crate::tgraph::{CompiledGraph, TaskDesc, TaskId};
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
-use std::sync::Mutex;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 /// Runtime shape: how many SM threads play worker vs scheduler (Table 1).
@@ -63,11 +87,17 @@ pub struct RunReport {
     pub metrics: MetricsSnapshot,
     /// Tasks executed per worker (load-balance diagnostics).
     pub per_worker_tasks: Vec<u64>,
+    /// Epoch (generation) number of this iteration — 1-based, counted
+    /// across the kernel's lifetime.
+    pub epoch: u64,
 }
 
-/// The persistent mega-kernel over one compiled tGraph.
-pub struct MegaKernel<'g> {
-    graph: &'g CompiledGraph,
+/// The scheduling substrate shared by both kernel front-ends: event
+/// table, queues, metrics, and the per-epoch arming logic. Holds no
+/// reference to the graph — callers pass it in, so the same state works
+/// for both the borrowed (`MegaKernel<'g>`) and owned
+/// (`PersistentMegaKernel`) graph flavors.
+struct KernelState {
     cfg: MegaConfig,
     events: EventTable,
     /// Worker JIT queues (schedulers → worker).
@@ -76,82 +106,91 @@ pub struct MegaKernel<'g> {
     event_queues: Vec<MpmcQueue<usize>>,
     /// Round-robin cursor for JIT dispatch.
     dispatch_cursor: AtomicUsize,
-    stop: AtomicBool,
+    /// Per-iteration stop flag: raised by the end event or the
+    /// watchdog, cleared when the next epoch is armed.
+    iter_stop: AtomicBool,
     metrics: RuntimeMetrics,
-    /// AOT assignment per worker, rebuilt per run (interior mutability so
-    /// `run(&self)` can hand each worker its queue).
+    /// AOT assignment per worker, rebuilt per epoch (interior
+    /// mutability so arming through `&self` can refill each queue).
     aot_assignment: Vec<Mutex<AotQueue>>,
+    /// Tasks executed per worker this epoch.
+    per_worker_tasks: Vec<AtomicUsize>,
+    /// Generation counter: bumped once per armed epoch.
+    epoch: AtomicU64,
 }
 
-impl<'g> MegaKernel<'g> {
-    pub fn new(graph: &'g CompiledGraph, cfg: MegaConfig) -> Self {
+impl KernelState {
+    fn new(graph: &CompiledGraph, cfg: MegaConfig) -> Self {
         assert!(cfg.workers >= 1 && cfg.schedulers >= 1);
         let nev = graph.tgraph.events.len();
         let required: Vec<usize> = (0..nev).map(|e| graph.linear.required[e]).collect();
         let ntasks = graph.tgraph.tasks.len();
-        let jit_queues = (0..cfg.workers).map(|_| MpmcQueue::new(ntasks + 2)).collect();
-        let event_queues = (0..cfg.schedulers).map(|_| MpmcQueue::new(nev + 2)).collect();
-        let aot_assignment = (0..cfg.workers).map(|_| Mutex::new(AotQueue::default())).collect();
-        MegaKernel {
-            graph,
+        KernelState {
             cfg,
             events: EventTable::new(&required),
-            jit_queues,
-            event_queues,
+            jit_queues: (0..cfg.workers).map(|_| MpmcQueue::new(ntasks + 2)).collect(),
+            event_queues: (0..cfg.schedulers).map(|_| MpmcQueue::new(nev + 2)).collect(),
             dispatch_cursor: AtomicUsize::new(0),
-            stop: AtomicBool::new(false),
+            iter_stop: AtomicBool::new(false),
             metrics: RuntimeMetrics::default(),
-            aot_assignment,
+            aot_assignment: (0..cfg.workers).map(|_| Mutex::new(AotQueue::default())).collect(),
+            per_worker_tasks: (0..cfg.workers).map(|_| AtomicUsize::new(0)).collect(),
+            epoch: AtomicU64::new(0),
         }
+    }
+
+    /// Re-arm the substrate for a new iteration and seed the start
+    /// event. Returns the new epoch number.
+    ///
+    /// Caller must guarantee no worker or scheduler thread is inside an
+    /// epoch (threads parked, or not yet spawned) — the quiesce barrier
+    /// of both front-ends establishes this.
+    fn arm(&self, graph: &CompiledGraph) -> Result<u64, String> {
+        self.events.reset();
+        self.metrics.reset();
+        for c in &self.per_worker_tasks {
+            c.store(0, Ordering::Relaxed);
+        }
+        // A timed-out epoch can leave stale items behind; drain so they
+        // cannot leak into this iteration.
+        for q in &self.jit_queues {
+            while q.pop().is_some() {}
+        }
+        for q in &self.event_queues {
+            while q.pop().is_some() {}
+        }
+        self.iter_stop.store(false, Ordering::Release);
+        self.pre_enqueue_aot(graph);
+        // seed: the start event is born-activated; hand it to scheduler 0
+        // so JIT successors launch, AOT successors see `activated()`.
+        let start = graph.tgraph.start_event;
+        self.event_queues[0].push(start).map_err(|_| "event queue full at seed".to_string())?;
+        Ok(self.epoch.fetch_add(1, Ordering::Relaxed) + 1)
     }
 
     /// Pre-enqueue all AOT tasks round-robin across workers in
     /// linearized order (§5.2 "All AOT tasks are pre-enqueued").
-    fn pre_enqueue_aot(&self) {
-        let tasks = &self.graph.tgraph.tasks;
+    fn pre_enqueue_aot(&self, graph: &CompiledGraph) {
+        let tasks = &graph.tgraph.tasks;
         let mut per_worker: Vec<Vec<TaskId>> = vec![Vec::new(); self.cfg.workers];
         let mut cursor = 0usize;
-        for &tid in &self.graph.linear.order {
+        for &tid in &graph.linear.order {
             if tasks[tid].launch == LaunchMode::Aot {
                 per_worker[cursor % self.cfg.workers].push(tid);
                 cursor += 1;
             }
         }
         for (w, items) in per_worker.into_iter().enumerate() {
-            *self.aot_assignment[w].lock().unwrap() = AotQueue::new(items);
+            // poison recovery is safe: the queue is rebuilt from scratch
+            // every epoch (a panicking executor may have poisoned it).
+            *self.aot_assignment[w].lock().unwrap_or_else(|p| p.into_inner()) = AotQueue::new(items);
         }
     }
 
-    /// Execute the whole tGraph once. Returns a report, or an error
-    /// string on timeout (stuck dependency — indicates a compiler bug).
-    pub fn run<E: TaskExecutor>(&self, exec: &E) -> Result<RunReport, String> {
-        self.events.reset();
-        self.metrics.reset();
-        self.stop.store(false, Ordering::Release);
-        self.pre_enqueue_aot();
-
-        // seed: the start event is born-activated; hand it to scheduler 0
-        // so JIT successors launch, AOT successors see `activated()`.
-        let start = self.graph.tgraph.start_event;
-        self.event_queues[0].push(start).map_err(|_| "event queue full at seed".to_string())?;
-
-        let per_worker_counts: Vec<AtomicUsize> =
-            (0..self.cfg.workers).map(|_| AtomicUsize::new(0)).collect();
-        let t0 = Instant::now();
-        let deadline = t0 + self.cfg.timeout;
-
-        std::thread::scope(|s| {
-            for w in 0..self.cfg.workers {
-                let counts = &per_worker_counts;
-                s.spawn(move || self.worker_loop(w, exec, &counts[w], deadline));
-            }
-            for sc in 0..self.cfg.schedulers {
-                s.spawn(move || self.scheduler_loop(sc, deadline));
-            }
-        });
-
-        let elapsed = t0.elapsed();
-        if !self.events.activated(self.graph.tgraph.end_event) {
+    /// Build the report for a finished epoch, or the timeout error if
+    /// the end event never activated.
+    fn report(&self, graph: &CompiledGraph, elapsed: Duration, epoch: u64) -> Result<RunReport, String> {
+        if !self.events.activated(graph.tgraph.end_event) {
             return Err(format!(
                 "mega-kernel timed out after {elapsed:?}: end event not activated"
             ));
@@ -159,27 +198,35 @@ impl<'g> MegaKernel<'g> {
         Ok(RunReport {
             elapsed,
             metrics: self.metrics.snapshot(),
-            per_worker_tasks: per_worker_counts.iter().map(|c| c.load(Ordering::Relaxed) as u64).collect(),
+            per_worker_tasks: self
+                .per_worker_tasks
+                .iter()
+                .map(|c| c.load(Ordering::Relaxed) as u64)
+                .collect(),
+            epoch,
         })
     }
 
-    fn worker_loop<E: TaskExecutor>(
+    /// One worker's share of one epoch: drain JIT + AOT work until the
+    /// per-iteration stop flag rises.
+    fn worker_epoch<E: TaskExecutor + ?Sized>(
         &self,
+        graph: &CompiledGraph,
         w: usize,
         exec: &E,
-        count: &AtomicUsize,
         deadline: Instant,
     ) {
-        let tasks = &self.graph.tgraph.tasks;
-        let mut aot = self.aot_assignment[w].lock().unwrap();
+        let tasks = &graph.tgraph.tasks;
+        let mut aot = self.aot_assignment[w].lock().unwrap_or_else(|p| p.into_inner());
+        let count = &self.per_worker_tasks[w];
         let mut idle: u32 = 0;
         loop {
-            if self.stop.load(Ordering::Acquire) {
+            if self.iter_stop.load(Ordering::Acquire) {
                 break;
             }
             // 1. JIT queue has priority: those tasks are ready now.
             if let Some(tid) = self.jit_queues[w].pop() {
-                self.run_task(&tasks[tid], exec);
+                self.run_task(graph, &tasks[tid], exec);
                 count.fetch_add(1, Ordering::Relaxed);
                 idle = 0;
                 continue;
@@ -190,7 +237,7 @@ impl<'g> MegaKernel<'g> {
                 if self.events.activated(dep) {
                     aot.advance();
                     self.metrics.inc(&self.metrics.aot_hits);
-                    self.run_task(&tasks[tid], exec);
+                    self.run_task(graph, &tasks[tid], exec);
                     count.fetch_add(1, Ordering::Relaxed);
                     idle = 0;
                     continue;
@@ -202,7 +249,7 @@ impl<'g> MegaKernel<'g> {
             if idle % 64 == 0 {
                 std::thread::yield_now();
                 if Instant::now() > deadline {
-                    self.stop.store(true, Ordering::Release);
+                    self.iter_stop.store(true, Ordering::Release);
                     break;
                 }
             } else {
@@ -211,12 +258,14 @@ impl<'g> MegaKernel<'g> {
         }
     }
 
-    fn scheduler_loop(&self, sc: usize, deadline: Instant) {
-        let tgraph = &self.graph.tgraph;
-        let linear = &self.graph.linear;
+    /// One scheduler's share of one epoch: pop activated events and
+    /// dispatch their JIT successors.
+    fn scheduler_epoch(&self, graph: &CompiledGraph, sc: usize, deadline: Instant) {
+        let tgraph = &graph.tgraph;
+        let linear = &graph.linear;
         let mut idle: u32 = 0;
         loop {
-            if self.stop.load(Ordering::Acquire) {
+            if self.iter_stop.load(Ordering::Acquire) {
                 break;
             }
             match self.event_queues[sc].pop() {
@@ -243,7 +292,7 @@ impl<'g> MegaKernel<'g> {
                     if idle % 64 == 0 {
                         std::thread::yield_now();
                         if Instant::now() > deadline {
-                            self.stop.store(true, Ordering::Release);
+                            self.iter_stop.store(true, Ordering::Release);
                             break;
                         }
                     } else {
@@ -278,7 +327,7 @@ impl<'g> MegaKernel<'g> {
         }
     }
 
-    fn run_task<E: TaskExecutor>(&self, task: &TaskDesc, exec: &E) {
+    fn run_task<E: TaskExecutor + ?Sized>(&self, graph: &CompiledGraph, task: &TaskDesc, exec: &E) {
         let t0 = Instant::now();
         if task.kind.is_dummy() {
             self.metrics.inc(&self.metrics.dummy_tasks);
@@ -290,23 +339,23 @@ impl<'g> MegaKernel<'g> {
         // notify the triggering event (exactly one — graph is normalized).
         if let Some(&ev) = task.trigger_events.first() {
             if self.events.notify(ev) {
-                self.on_activation(ev);
+                self.on_activation(graph, ev);
             }
         }
     }
 
-    fn on_activation(&self, ev: usize) {
+    fn on_activation(&self, graph: &CompiledGraph, ev: usize) {
         self.metrics.inc(&self.metrics.events_activated);
-        if ev == self.graph.tgraph.end_event {
-            self.stop.store(true, Ordering::Release);
+        if ev == graph.tgraph.end_event {
+            self.iter_stop.store(true, Ordering::Release);
             return;
         }
         // hand to a scheduler only if the event launches JIT tasks; pure
         // AOT successors are found by their workers via `activated()`.
-        let linear = &self.graph.linear;
+        let linear = &graph.linear;
         let has_jit = linear.event_range[ev]
             .map(|(f, l)| {
-                (f..=l).any(|p| self.graph.tgraph.tasks[linear.order[p]].launch == LaunchMode::Jit)
+                (f..=l).any(|p| graph.tgraph.tasks[linear.order[p]].launch == LaunchMode::Jit)
             })
             .unwrap_or(false);
         if has_jit {
@@ -315,6 +364,310 @@ impl<'g> MegaKernel<'g> {
             while self.event_queues[target].push(ev).is_err() {
                 target = (target + 1) % self.cfg.schedulers;
             }
+        }
+    }
+}
+
+/// The scoped mega-kernel over one borrowed compiled tGraph: every
+/// `run()` spawns and joins the full worker/scheduler complement.
+///
+/// This models the kernel-launch-per-iteration world the paper argues
+/// against; [`PersistentMegaKernel`] is the persistent counterpart used
+/// on the serving hot path. Kept for one-shot validation and as the
+/// baseline in `benches/launch_overhead.rs`.
+pub struct MegaKernel<'g> {
+    graph: &'g CompiledGraph,
+    state: KernelState,
+}
+
+impl<'g> MegaKernel<'g> {
+    pub fn new(graph: &'g CompiledGraph, cfg: MegaConfig) -> Self {
+        MegaKernel { graph, state: KernelState::new(graph, cfg) }
+    }
+
+    /// Execute the whole tGraph once. Returns a report, or an error
+    /// string on timeout (stuck dependency — indicates a compiler bug).
+    pub fn run<E: TaskExecutor>(&self, exec: &E) -> Result<RunReport, String> {
+        let epoch = self.state.arm(self.graph)?;
+        let t0 = Instant::now();
+        let deadline = t0 + self.state.cfg.timeout;
+        std::thread::scope(|s| {
+            for w in 0..self.state.cfg.workers {
+                s.spawn(move || self.state.worker_epoch(self.graph, w, exec, deadline));
+            }
+            for sc in 0..self.state.cfg.schedulers {
+                s.spawn(move || self.state.scheduler_epoch(self.graph, sc, deadline));
+            }
+        });
+        self.state.report(self.graph, t0.elapsed(), epoch)
+    }
+}
+
+/// Which role a persistent thread plays.
+#[derive(Clone, Copy)]
+enum Role {
+    Worker(usize),
+    Scheduler(usize),
+}
+
+/// Handshake state between `run()` and the parked threads.
+struct Phase {
+    /// Epoch the threads have been told to run (0 = nothing armed yet).
+    armed_epoch: u64,
+    /// Threads that have finished the armed epoch and are parking.
+    quiesced: usize,
+    /// Lifetime-erased borrow of this epoch's executor. Only valid
+    /// between arming and the quiesce barrier; cleared by `run()`
+    /// before it returns (see the safety comment in `run`).
+    exec: Option<&'static dyn TaskExecutor>,
+    deadline: Instant,
+    /// An executor panicked during the armed epoch (caught so the
+    /// thread still reaches the quiesce barrier instead of deadlocking
+    /// `run()`); surfaced as an error from `run()`.
+    panicked: bool,
+    shutdown: bool,
+}
+
+struct Lifecycle {
+    phase: Mutex<Phase>,
+    /// Signals a newly armed epoch (or shutdown) to parked threads.
+    arm: Condvar,
+    /// Signals epoch completion (all threads quiesced) to `run()`.
+    done: Condvar,
+}
+
+struct PersistentInner {
+    graph: Arc<CompiledGraph>,
+    state: KernelState,
+    lifecycle: Lifecycle,
+}
+
+impl PersistentInner {
+    fn thread_total(&self) -> usize {
+        self.state.cfg.workers + self.state.cfg.schedulers
+    }
+}
+
+/// The persistent mega-kernel: worker and scheduler threads are spawned
+/// once here, parked between iterations, re-armed per `run()` via an
+/// epoch counter, and only torn down on `Drop` — the threaded analogue
+/// of launching the megakernel once and looping in-kernel (§5–6).
+pub struct PersistentMegaKernel {
+    inner: Arc<PersistentInner>,
+    threads: Vec<std::thread::JoinHandle<()>>,
+    /// Unique prefix of this kernel's thread names (`<prefix>-worker-N`
+    /// / `<prefix>-sched-N`), for leak diagnostics via /proc.
+    thread_prefix: String,
+}
+
+/// Monotone id so each kernel's resident threads are distinguishable in
+/// /proc and debuggers.
+static KERNEL_SEQ: AtomicUsize = AtomicUsize::new(0);
+
+impl PersistentMegaKernel {
+    /// Spawn the full worker/scheduler complement, parked until the
+    /// first `run()`.
+    pub fn new(graph: Arc<CompiledGraph>, cfg: MegaConfig) -> Self {
+        let state = KernelState::new(&graph, cfg);
+        let inner = Arc::new(PersistentInner {
+            graph,
+            state,
+            lifecycle: Lifecycle {
+                phase: Mutex::new(Phase {
+                    armed_epoch: 0,
+                    quiesced: 0,
+                    exec: None,
+                    deadline: Instant::now(),
+                    panicked: false,
+                    shutdown: false,
+                }),
+                arm: Condvar::new(),
+                done: Condvar::new(),
+            },
+        });
+        let thread_prefix = format!("mpk{}", KERNEL_SEQ.fetch_add(1, Ordering::Relaxed));
+        let mut threads = Vec::with_capacity(cfg.workers + cfg.schedulers);
+        for w in 0..cfg.workers {
+            let inner = inner.clone();
+            threads.push(
+                std::thread::Builder::new()
+                    .name(format!("{thread_prefix}-worker-{w}"))
+                    .spawn(move || persistent_thread(inner, Role::Worker(w)))
+                    .expect("spawn persistent worker"),
+            );
+        }
+        for sc in 0..cfg.schedulers {
+            let inner = inner.clone();
+            threads.push(
+                std::thread::Builder::new()
+                    .name(format!("{thread_prefix}-sched-{sc}"))
+                    .spawn(move || persistent_thread(inner, Role::Scheduler(sc)))
+                    .expect("spawn persistent scheduler"),
+            );
+        }
+        PersistentMegaKernel { inner, threads, thread_prefix }
+    }
+
+    /// Execute the whole tGraph once on the resident threads: re-arm,
+    /// publish the epoch, wake, wait for the end event. No thread is
+    /// spawned or joined here.
+    ///
+    /// Takes `&mut self` deliberately: exclusive access is what makes
+    /// the lifetime erasure below sound (no second `run` can re-arm
+    /// while this epoch's executor borrow is published).
+    pub fn run<E: TaskExecutor>(&mut self, exec: &E) -> Result<RunReport, String> {
+        let inner = &self.inner;
+        // Threads are parked here: either never armed, or quiesced at
+        // the end of the previous run (we do not return mid-epoch).
+        let epoch = inner.state.arm(&inner.graph)?;
+        let t0 = Instant::now();
+        let deadline = t0 + inner.state.cfg.timeout;
+        // SAFETY: the erased borrow is published for the duration of
+        // this call only. `run` does not return until every worker and
+        // scheduler has passed the quiesce barrier below, after which
+        // the slot is cleared — no thread can hold or dereference the
+        // borrow once `run` returns, so `exec` outlives every use.
+        // `&mut self` excludes a concurrent re-arm publishing a second
+        // borrow while this one is live.
+        let erased: &'static dyn TaskExecutor =
+            unsafe { &*(exec as &dyn TaskExecutor as *const dyn TaskExecutor) };
+        {
+            let mut ph = inner.lifecycle.phase.lock().unwrap();
+            ph.armed_epoch = epoch;
+            ph.quiesced = 0;
+            ph.exec = Some(erased);
+            ph.deadline = deadline;
+            ph.panicked = false;
+            inner.lifecycle.arm.notify_all();
+        }
+        // Wait for the epoch to drain — the host-side analogue of the
+        // paper's wait on the end event.
+        let total = inner.thread_total();
+        let mut ph = inner.lifecycle.phase.lock().unwrap();
+        while ph.quiesced < total {
+            let (guard, _) = inner
+                .lifecycle
+                .done
+                .wait_timeout(ph, Duration::from_millis(50))
+                .unwrap();
+            ph = guard;
+            // Belt-and-braces watchdog: workers check the deadline only
+            // while idle, so force the stop flag from here too once it
+            // has passed.
+            if Instant::now() > deadline {
+                inner.state.iter_stop.store(true, Ordering::Release);
+            }
+        }
+        ph.exec = None;
+        let panicked = ph.panicked;
+        drop(ph);
+        if panicked {
+            return Err(format!("task executor panicked during epoch {epoch}"));
+        }
+        inner.state.report(&inner.graph, t0.elapsed(), epoch)
+    }
+
+    pub fn graph(&self) -> &CompiledGraph {
+        &self.inner.graph
+    }
+
+    /// Prefix of this kernel's resident thread names (leak diagnostics).
+    pub fn thread_name_prefix(&self) -> &str {
+        &self.thread_prefix
+    }
+
+    pub fn config(&self) -> MegaConfig {
+        self.inner.state.cfg
+    }
+
+    /// Epochs (iterations) run so far over this kernel's lifetime.
+    pub fn epochs(&self) -> u64 {
+        self.inner.state.epoch.load(Ordering::Relaxed)
+    }
+
+    /// Resident thread count (workers + schedulers).
+    pub fn thread_count(&self) -> usize {
+        self.threads.len()
+    }
+}
+
+impl Drop for PersistentMegaKernel {
+    fn drop(&mut self) {
+        {
+            let mut ph = self
+                .inner
+                .lifecycle
+                .phase
+                .lock()
+                .unwrap_or_else(|poisoned| poisoned.into_inner());
+            ph.shutdown = true;
+            self.inner.lifecycle.arm.notify_all();
+        }
+        for t in self.threads.drain(..) {
+            let _ = t.join();
+        }
+    }
+}
+
+/// Body of one persistent thread: park → run epoch → quiesce → repeat,
+/// until shutdown.
+fn persistent_thread(inner: Arc<PersistentInner>, role: Role) {
+    let mut seen_epoch = 0u64;
+    loop {
+        {
+            // Park until a new epoch is armed (or shutdown). The erased
+            // executor borrow is confined to this block so it cannot
+            // outlive the epoch it belongs to.
+            let (exec, deadline) = {
+                let mut ph = inner.lifecycle.phase.lock().unwrap();
+                loop {
+                    if ph.shutdown {
+                        return;
+                    }
+                    if ph.armed_epoch != seen_epoch {
+                        break;
+                    }
+                    ph = inner.lifecycle.arm.wait(ph).unwrap();
+                }
+                seen_epoch = ph.armed_epoch;
+                (ph.exec, ph.deadline)
+            };
+            if let Some(exec) = exec {
+                // Catch executor panics: a dead thread would otherwise
+                // leave the quiesce barrier short forever, deadlocking
+                // `run()`. The panic is surfaced as a `run()` error.
+                let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                    match role {
+                        Role::Worker(w) => {
+                            inner.state.worker_epoch(&inner.graph, w, exec, deadline)
+                        }
+                        Role::Scheduler(sc) => {
+                            inner.state.scheduler_epoch(&inner.graph, sc, deadline)
+                        }
+                    }
+                }));
+                if outcome.is_err() {
+                    // free peers still spinning on this epoch, then
+                    // record the failure for `run()`.
+                    inner.state.iter_stop.store(true, Ordering::Release);
+                    inner
+                        .lifecycle
+                        .phase
+                        .lock()
+                        .unwrap_or_else(|poisoned| poisoned.into_inner())
+                        .panicked = true;
+                }
+            }
+        }
+        // Quiesce barrier: the last thread out releases `run()`.
+        let mut ph = inner
+            .lifecycle
+            .phase
+            .lock()
+            .unwrap_or_else(|poisoned| poisoned.into_inner());
+        ph.quiesced += 1;
+        if ph.quiesced == inner.thread_total() {
+            inner.lifecycle.done.notify_all();
         }
     }
 }
@@ -402,9 +755,10 @@ mod tests {
     fn rerun_reuses_kernel() {
         let c = compiled_tiny(2);
         let mk = MegaKernel::new(&c, MegaConfig::default());
-        for _ in 0..3 {
+        for i in 0..3 {
             let r = mk.run(&|_: &TaskDesc| {}).unwrap();
             assert_eq!(r.metrics.tasks_executed as usize, c.tgraph.tasks.len());
+            assert_eq!(r.epoch, i + 1);
         }
     }
 
@@ -432,5 +786,103 @@ mod tests {
         for (w, &n) in r.per_worker_tasks.iter().enumerate() {
             assert!(n > 0, "worker {w} starved entirely");
         }
+    }
+
+    #[test]
+    fn persistent_executes_every_task_exactly_once() {
+        let c = Arc::new(compiled_tiny(2));
+        let mut mk = PersistentMegaKernel::new(
+            c.clone(),
+            MegaConfig { workers: 4, schedulers: 2, ..Default::default() },
+        );
+        let seen = StdMutex::new(Vec::new());
+        let report = mk.run(&|t: &TaskDesc| seen.lock().unwrap().push(t.id)).unwrap();
+        let seen = seen.lock().unwrap();
+        let uniq: HashSet<_> = seen.iter().copied().collect();
+        assert_eq!(uniq.len(), seen.len(), "a task ran twice");
+        assert_eq!(seen.len(), c.tgraph.real_task_count());
+        assert_eq!(report.metrics.tasks_executed as usize, c.tgraph.tasks.len());
+        assert_eq!(report.epoch, 1);
+    }
+
+    #[test]
+    fn persistent_rearms_across_epochs() {
+        let c = Arc::new(compiled_tiny(4));
+        let mut mk = PersistentMegaKernel::new(
+            c.clone(),
+            MegaConfig { workers: 4, schedulers: 1, ..Default::default() },
+        );
+        let threads = mk.thread_count();
+        for i in 0..10 {
+            let r = mk.run(&|_: &TaskDesc| {}).unwrap();
+            assert_eq!(r.metrics.tasks_executed as usize, c.tgraph.tasks.len());
+            assert_eq!(r.epoch, i + 1);
+            assert_eq!(mk.thread_count(), threads, "thread complement changed");
+        }
+        assert_eq!(mk.epochs(), 10);
+    }
+
+    /// First task that actually reaches the executor (dummies don't).
+    fn first_real_task(c: &CompiledGraph) -> usize {
+        *c.linear
+            .order
+            .iter()
+            .find(|&&t| !c.tgraph.tasks[t].kind.is_dummy())
+            .expect("graph has a real task")
+    }
+
+    #[test]
+    fn persistent_recovers_after_timeout_epoch() {
+        let c = Arc::new(compiled_tiny(1));
+        let victim = first_real_task(&c);
+        let mut mk = PersistentMegaKernel::new(
+            c.clone(),
+            MegaConfig {
+                workers: 2,
+                schedulers: 1,
+                timeout: Duration::from_millis(100),
+            },
+        );
+        // epoch 1: one task overruns the watchdog → error, not hang.
+        let res = mk.run(&move |t: &TaskDesc| {
+            if t.id == victim {
+                std::thread::sleep(Duration::from_millis(400));
+            }
+        });
+        assert!(res.is_err(), "watchdog should have fired");
+        assert!(res.unwrap_err().contains("timed out"));
+        // epoch 2: same kernel re-arms cleanly and completes.
+        let r = mk.run(&|_: &TaskDesc| {}).unwrap();
+        assert_eq!(r.metrics.tasks_executed as usize, c.tgraph.tasks.len());
+    }
+
+    #[test]
+    fn persistent_survives_executor_panic() {
+        let c = Arc::new(compiled_tiny(1));
+        let victim = first_real_task(&c);
+        let mut mk = PersistentMegaKernel::new(
+            c.clone(),
+            MegaConfig { workers: 2, schedulers: 1, ..Default::default() },
+        );
+        // epoch 1: executor panics → surfaced as an error, threads and
+        // queues stay usable (no quiesce-barrier deadlock).
+        let res = mk.run(&move |t: &TaskDesc| {
+            if t.id == victim {
+                panic!("injected executor panic");
+            }
+        });
+        assert!(res.is_err(), "panic should surface as an error");
+        assert!(res.unwrap_err().contains("panicked"));
+        // epoch 2: same kernel re-arms cleanly and completes.
+        let r = mk.run(&|_: &TaskDesc| {}).unwrap();
+        assert_eq!(r.metrics.tasks_executed as usize, c.tgraph.tasks.len());
+    }
+
+    #[test]
+    fn persistent_drop_joins_threads() {
+        let c = Arc::new(compiled_tiny(1));
+        let mut mk = PersistentMegaKernel::new(c, MegaConfig::default());
+        mk.run(&|_: &TaskDesc| {}).unwrap();
+        drop(mk); // must not hang or leak (asserted via /proc in prop_runtime)
     }
 }

@@ -1,35 +1,46 @@
 //! The serving engine: continuous batching over the real-numerics
-//! megakernel (§6.1).
+//! megakernel (§6.1), with a persistent runtime and resident KV.
+//!
+//! Each batch-size specialization is a long-lived [`Session`]: the
+//! compiled graph (shared via `Arc` with its kernel), the tensor store
+//! holding weights *and the KV cache*, a [`PersistentMegaKernel`] whose
+//! worker/scheduler threads park between iterations, and tensor-id
+//! tables resolved once at creation.
 //!
 //! Per decode iteration: retire/admit (the paper's start-event task),
-//! pick the batch-size-specialized tGraph (powers of two), stage each
-//! active request's KV rows and input token into that graph's store,
-//! run the mega-kernel once, then harvest logits (greedy decoding) and
-//! updated KV rows back into per-request state.
+//! pick the batch-size-specialized session (powers of two), reconcile
+//! KV residency — the cache lives in the `TensorStore` across
+//! iterations, so rows are copied only when a request was admitted into
+//! a different store or its slot moved during compaction — stage the
+//! input tokens, re-arm the resident kernel, then harvest logits
+//! (greedy decoding). The newly appended KV row is written in-kernel by
+//! `KvAppend`; the engine never round-trips full cache tensors.
 
 use crate::exec::binder::TileExecutor;
 use crate::exec::real::{self, compile_real, init_weights};
 use crate::exec::store::TensorStore;
-use crate::megakernel::{MegaConfig, MegaKernel};
-use crate::ops::Region;
+use crate::megakernel::{MegaConfig, PersistentMegaKernel};
+use crate::ops::{Region, TensorId};
 use crate::runtime::pool::ExecPool;
 use crate::runtime::Manifest;
 use crate::serving::batcher::{Batcher, Request};
-use crate::serving::kvcache::KvAllocator;
+use crate::serving::kvcache::{KvAllocator, KvResidency};
 use crate::tgraph::CompiledGraph;
 use std::collections::HashMap;
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-/// One batch-size specialization: compiled graph + its tensor store.
+/// One batch-size specialization: compiled graph, its tensor store
+/// (weights + resident KV), the persistent kernel, and hot-path tensor
+/// ids resolved once at creation.
 struct Session {
-    compiled: CompiledGraph,
+    compiled: Arc<CompiledGraph>,
     store: TensorStore,
-}
-
-/// Per-request physical KV rows ([S_MAX × kv_dim] per layer).
-struct ReqCache {
-    k: Vec<Vec<f32>>,
-    v: Vec<Vec<f32>>,
+    kernel: PersistentMegaKernel,
+    /// Per-layer `(kcache, vcache)` tensor ids.
+    kv_ids: Vec<(TensorId, TensorId)>,
+    token_ids: TensorId,
+    logits: TensorId,
 }
 
 /// Serving statistics.
@@ -41,6 +52,11 @@ pub struct ServeStats {
     pub iter_latencies: Vec<Duration>,
     /// Tokens in flight per iteration (batch-utilization curve).
     pub batch_sizes: Vec<usize>,
+    /// K/V rows copied between (or within) session stores on admission
+    /// or slot remap, summed over layers. Zero on a steady-state
+    /// iteration — the residency check that the hot path stages only
+    /// the in-kernel-appended row.
+    pub kv_rows_migrated: usize,
 }
 
 impl ServeStats {
@@ -48,13 +64,25 @@ impl ServeStats {
         self.tokens_generated as f64 / self.total.as_secs_f64().max(1e-9)
     }
 
-    pub fn p50_latency(&self) -> Duration {
-        let mut v = self.iter_latencies.clone();
-        if v.is_empty() {
+    /// `q`-quantile of per-iteration latency via `select_nth_unstable`
+    /// — O(n), no full sort. One clone of the latency vector is still
+    /// needed because selection reorders in place.
+    fn latency_quantile(&self, q: f64) -> Duration {
+        if self.iter_latencies.is_empty() {
             return Duration::ZERO;
         }
-        v.sort();
-        v[v.len() / 2]
+        let mut v = self.iter_latencies.clone();
+        let idx = (((v.len() - 1) as f64) * q).floor() as usize;
+        let (_, nth, _) = v.select_nth_unstable(idx);
+        *nth
+    }
+
+    pub fn p50_latency(&self) -> Duration {
+        self.latency_quantile(0.50)
+    }
+
+    pub fn p99_latency(&self) -> Duration {
+        self.latency_quantile(0.99)
     }
 }
 
@@ -64,34 +92,87 @@ pub struct ServeEngine {
     pool: ExecPool,
     sessions: HashMap<usize, Session>,
     pub batcher: Batcher,
-    caches: HashMap<u64, ReqCache>,
-    mega: MegaConfig,
+    residency: KvResidency,
 }
 
 impl ServeEngine {
-    /// Build an engine with specialized graphs for each manifest batch
-    /// size. `max_batch` must be one of the manifest's batch sizes.
+    /// Build an engine with specialized sessions (graph + store +
+    /// persistent kernel) for each manifest batch size up to
+    /// `max_batch`. `max_batch` must be one of the manifest's sizes.
     pub fn create(max_batch: usize, pool_threads: usize, seed: u64, mega: MegaConfig) -> Result<Self, String> {
         let manifest = Manifest::load(&Manifest::default_dir())?;
         if !manifest.batch_sizes.contains(&max_batch) {
             return Err(format!("max_batch {max_batch} not among specialized sizes {:?}", manifest.batch_sizes));
         }
+        let m = manifest.model;
         let mut sessions = HashMap::new();
         for &b in manifest.batch_sizes.iter().filter(|&&b| b <= max_batch) {
-            let compiled = compile_real(&manifest, b);
+            let compiled = Arc::new(compile_real(&manifest, b));
             let store = TensorStore::new(&compiled.graph);
             init_weights(&compiled.graph, &store, seed);
-            sessions.insert(b, Session { compiled, store });
+            // hoist every per-iteration name lookup to creation time.
+            let id = |name: &str| -> Result<TensorId, String> {
+                Ok(compiled.graph.tensor_by_name(name).ok_or_else(|| format!("missing tensor {name}"))?.id)
+            };
+            let kv_ids = (0..m.layers)
+                .map(|l| Ok((id(&format!("l{l}.kcache"))?, id(&format!("l{l}.vcache"))?)))
+                .collect::<Result<Vec<_>, String>>()?;
+            let token_ids = id("token_ids")?;
+            let logits = id("lm_head")?;
+            let kernel = PersistentMegaKernel::new(compiled.clone(), mega);
+            sessions.insert(b, Session { compiled, store, kernel, kv_ids, token_ids, logits });
         }
         let pool = ExecPool::new(manifest.clone(), pool_threads)?;
         // one KV block = 8 tokens; pool sized for max_batch full seqs.
         let blocks = max_batch * manifest.s_max / 8;
         let batcher = Batcher::new(max_batch, manifest.s_max, KvAllocator::new(blocks, 8));
-        Ok(ServeEngine { manifest, pool, sessions, batcher, caches: HashMap::new(), mega })
+        Ok(ServeEngine { manifest, pool, sessions, batcher, residency: KvResidency::default() })
     }
 
     pub fn submit(&mut self, r: Request) {
         self.batcher.submit(r);
+    }
+
+    /// Make every active request's KV rows resident in session `gb` at
+    /// its assigned batcher slot, copying only on admission to a
+    /// different store or slot compaction; returns rows moved (×layers).
+    ///
+    /// Iterates in ascending slot order, which makes in-store
+    /// compaction safe without double-buffering: survivors only ever
+    /// move to *lower* slots (the batcher compacts with `swap_remove`
+    /// then reassigns 0..n in order), so if some move's destination
+    /// aliases another request's source slot, that request sits at a
+    /// lower destination and is migrated — its source read — first.
+    fn reconcile_residency(&mut self, gb: usize, kv_dim: usize) -> usize {
+        let layers = self.manifest.model.layers;
+        let mut moved = 0usize;
+        for (slot, r) in self.batcher.active.iter().enumerate() {
+            let cur = self.residency.home(r.id);
+            if cur == Some((gb, slot)) {
+                continue;
+            }
+            if let Some((hgb, hslot)) = cur {
+                let rows = r.cache_len;
+                if rows > 0 {
+                    // run-by-run copy, no staging buffer: intra-store
+                    // compaction (hgb == gb, disjoint slots) and
+                    // cross-store migration share one path.
+                    let dst_r = Region::new(vec![(slot, slot + 1), (0, rows), (0, kv_dim)]);
+                    let src_r = Region::new(vec![(hslot, hslot + 1), (0, rows), (0, kv_dim)]);
+                    let sh = &self.sessions[&hgb];
+                    let sd = &self.sessions[&gb];
+                    for l in 0..layers {
+                        let (skt, svt) = sh.kv_ids[l];
+                        let (dkt, dvt) = sd.kv_ids[l];
+                        sd.store.copy_tile_from(dkt, &dst_r, &sh.store, skt, &src_r);
+                        sd.store.copy_tile_from(dvt, &dst_r, &sh.store, svt, &src_r);
+                    }
+                    moved += rows * layers;
+                }
+            }
+            self.residency.set(r.id, gb, slot);
+        }
+        moved
     }
 
     /// Drive everything to completion; returns per-request outputs and
@@ -100,47 +181,41 @@ impl ServeEngine {
         let mut stats = ServeStats::default();
         let t0 = Instant::now();
         let m = self.manifest.model;
-        let (s_max, kv_dim, vocab) = (self.manifest.s_max, m.kv_dim(), m.vocab);
+        let (kv_dim, vocab) = (m.kv_dim(), m.vocab);
 
         while self.batcher.has_work() {
             for id in self.batcher.step_admission() {
-                self.caches.remove(&id);
+                self.residency.evict(id);
             }
             let active = self.batcher.active.len();
             if active == 0 {
                 break;
             }
             let gb = self.batcher.graph_batch();
-            let session = self.sessions.get(&gb).ok_or(format!("no session for batch {gb}"))?;
-            let g = &session.compiled.graph;
-            let store = &session.store;
+            if !self.sessions.contains_key(&gb) {
+                return Err(format!("no session for batch {gb}"));
+            }
 
-            // stage inputs: ids, per-row lens, KV rows.
+            // KV stays resident in the store: copy rows only on
+            // admit/slot-remap (zero rows on a steady-state iteration).
+            stats.kv_rows_migrated += self.reconcile_residency(gb, kv_dim);
+
+            // stage inputs: this iteration's token per row, row lengths.
             let mut ids = vec![0i32; gb];
             let mut lens = vec![0usize; gb];
             for (slot, r) in self.batcher.active.iter().enumerate() {
                 ids[slot] = r.next_input();
                 lens[slot] = r.cache_len;
-                let cache = self.caches.entry(r.id).or_insert_with(|| ReqCache {
-                    k: vec![vec![0.0; s_max * kv_dim]; m.layers],
-                    v: vec![vec![0.0; s_max * kv_dim]; m.layers],
-                });
-                for l in 0..m.layers {
-                    let kt = g.tensor_by_name(&format!("l{l}.kcache")).unwrap().id;
-                    let vt = g.tensor_by_name(&format!("l{l}.vcache")).unwrap().id;
-                    let row = Region::new(vec![(slot, slot + 1), (0, s_max), (0, kv_dim)]);
-                    store.write_tile(kt, &row, &cache.k[l]);
-                    store.write_tile(vt, &row, &cache.v[l]);
-                }
             }
-            real::set_ids(g, store, &ids);
+            let session = self.sessions.get_mut(&gb).unwrap();
+            real::set_ids_at(&session.store, session.token_ids, &ids);
 
-            // run the mega-kernel once.
-            let kernel = MegaKernel::new(&session.compiled, self.mega);
-            let exec = TileExecutor::new(g, store, &self.pool, gb);
+            // re-arm the resident mega-kernel: no thread spawn/join, no
+            // kernel construction, no name lookups on this path.
+            let exec = TileExecutor::new(&session.compiled.graph, &session.store, &self.pool, gb);
             exec.set_row_lens(&lens);
             let it0 = Instant::now();
-            kernel.run(&exec)?;
+            session.kernel.run(&exec)?;
             if let Some(e) = exec.take_error() {
                 return Err(e);
             }
@@ -149,18 +224,12 @@ impl ServeEngine {
             stats.iter_latencies.push(lat);
             stats.batch_sizes.push(active);
 
-            // harvest: logits → next token; cache rows → request state.
-            let logits = real::get_logits(g, store);
+            // harvest: logits → next token. KV needs no read-back —
+            // KvAppend already wrote this step's row in the resident
+            // cache.
+            let logits = real::logits_at(&session.store, session.logits);
             for slot in 0..active {
                 let r = &mut self.batcher.active[slot];
-                let cache = self.caches.get_mut(&r.id).unwrap();
-                for l in 0..m.layers {
-                    let kt = g.tensor_by_name(&format!("l{l}.kcache")).unwrap().id;
-                    let vt = g.tensor_by_name(&format!("l{l}.vcache")).unwrap().id;
-                    let row = Region::new(vec![(slot, slot + 1), (0, s_max), (0, kv_dim)]);
-                    cache.k[l] = store.read_tile(kt, &row);
-                    cache.v[l] = store.read_tile(vt, &row);
-                }
                 r.cache_len += 1;
                 let tok = real::argmax(&logits[slot * vocab..(slot + 1) * vocab]) as i32;
                 if r.in_prefill() {
@@ -218,6 +287,9 @@ mod tests {
         }
         assert_eq!(stats.tokens_generated, 12);
         assert!(stats.iterations >= 5, "prompt 2 + gen 4 - 1 overlap");
+        // all requests admitted at once into one session and never
+        // remapped: no KV rows should ever have been copied.
+        assert_eq!(stats.kv_rows_migrated, 0, "steady batch migrated KV rows");
     }
 
     #[test]
@@ -266,7 +338,7 @@ mod tests {
         let (out, _) = e.serve().unwrap();
 
         let s = crate::exec::real::RealSession::create(1, 2, 42).unwrap();
-        let kernel = MegaKernel::new(&s.compiled, mega());
+        let kernel = crate::megakernel::MegaKernel::new(&s.compiled, mega());
         let exec = TileExecutor::new(&s.compiled.graph, &s.store, &s.pool, 1);
         let mut ids = vec![7i32];
         let mut got = Vec::new();
@@ -282,5 +354,19 @@ mod tests {
         }
         // prompt len 1 → first iteration already yields generated[0].
         assert_eq!(out[&0], got[..3].to_vec());
+    }
+
+    #[test]
+    fn stats_quantiles() {
+        let mut s = ServeStats::default();
+        assert_eq!(s.p50_latency(), Duration::ZERO);
+        assert_eq!(s.p99_latency(), Duration::ZERO);
+        s.iter_latencies = (1..=100).map(Duration::from_millis).collect();
+        assert_eq!(s.p50_latency(), Duration::from_millis(50));
+        assert_eq!(s.p99_latency(), Duration::from_millis(99));
+        // selection must not depend on input order.
+        s.iter_latencies.reverse();
+        assert_eq!(s.p50_latency(), Duration::from_millis(50));
+        assert_eq!(s.p99_latency(), Duration::from_millis(99));
     }
 }

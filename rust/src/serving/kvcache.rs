@@ -76,9 +76,66 @@ impl KvAllocator {
     }
 }
 
+/// Tracks which batch-size-specialized session store (and slot within
+/// it) holds each active request's authoritative KV rows.
+///
+/// The serving engine keeps KV resident in the `TensorStore` across
+/// decode iterations: the in-kernel `KvAppend` task writes each new row
+/// in place, so the engine copies cache data only when this map says a
+/// request's rows live somewhere other than the slot the batcher just
+/// assigned (admission to a different store, or slot compaction after a
+/// retirement).
+#[derive(Debug, Default)]
+pub struct KvResidency {
+    /// request id → (graph batch size of the session store, slot).
+    home: std::collections::HashMap<u64, (usize, usize)>,
+}
+
+impl KvResidency {
+    /// Where `req`'s KV rows currently live, if anywhere.
+    pub fn home(&self, req: u64) -> Option<(usize, usize)> {
+        self.home.get(&req).copied()
+    }
+
+    /// Record that `req`'s rows now live in store `graph_batch` at
+    /// `slot` (after a migration, or on first admission).
+    pub fn set(&mut self, req: u64, graph_batch: usize, slot: usize) {
+        self.home.insert(req, (graph_batch, slot));
+    }
+
+    /// Forget a retired request; its store rows become dead data that
+    /// the next occupant of the slot overwrites lazily.
+    pub fn evict(&mut self, req: u64) -> Option<(usize, usize)> {
+        self.home.remove(&req)
+    }
+
+    /// Number of requests with resident KV rows.
+    pub fn resident_count(&self) -> usize {
+        self.home.len()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn residency_set_move_evict() {
+        let mut r = KvResidency::default();
+        assert_eq!(r.home(7), None);
+        r.set(7, 4, 2);
+        assert_eq!(r.home(7), Some((4, 2)));
+        // slot compaction within the same store
+        r.set(7, 4, 0);
+        assert_eq!(r.home(7), Some((4, 0)));
+        // migration to a smaller specialized store
+        r.set(7, 2, 1);
+        assert_eq!(r.home(7), Some((2, 1)));
+        assert_eq!(r.resident_count(), 1);
+        assert_eq!(r.evict(7), Some((2, 1)));
+        assert_eq!(r.evict(7), None);
+        assert_eq!(r.resident_count(), 0);
+    }
 
     #[test]
     fn allocate_grow_release() {

@@ -1,17 +1,20 @@
 //! Property suite over the threaded in-kernel runtime: for random
 //! compiled graphs and random worker/scheduler splits, every run must
 //! execute each task exactly once, respect the dependency order, and
-//! terminate.
+//! terminate — for both the scoped (spawn-per-run) and persistent
+//! (spawn-once, re-armed-per-epoch) kernels. The persistent kernel is
+//! additionally stress-tested for thread stability across ≥100
+//! consecutive epochs.
 
-use mpk::megakernel::{MegaConfig, MegaKernel};
+use mpk::megakernel::{MegaConfig, MegaKernel, PersistentMegaKernel};
 use mpk::models::{build_decode_graph, GraphOptions, ModelConfig};
 use mpk::proputil::forall;
 use mpk::tgraph::{compile, CompileOptions, CompiledGraph, DecomposeConfig, TaskDesc};
 use mpk::util::XorShift64;
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 
 struct Case {
-    compiled: CompiledGraph,
+    compiled: Arc<CompiledGraph>,
     workers: usize,
     schedulers: usize,
 }
@@ -44,7 +47,65 @@ fn random_case(rng: &mut XorShift64) -> Case {
             ..Default::default()
         },
     );
-    Case { compiled, workers: rng.range(1, 6), schedulers: rng.range(1, 3) }
+    Case { compiled: Arc::new(compiled), workers: rng.range(1, 6), schedulers: rng.range(1, 3) }
+}
+
+/// Exactly-once over non-dummy tasks.
+fn check_exactly_once(c: &CompiledGraph, order: &[usize]) -> Result<(), String> {
+    let mut seen = vec![0u32; c.tgraph.tasks.len()];
+    for &t in order {
+        seen[t] += 1;
+    }
+    for (tid, &n) in seen.iter().enumerate() {
+        let dummy = c.tgraph.tasks[tid].kind.is_dummy();
+        let want = if dummy { 0 } else { 1 };
+        if n != want {
+            return Err(format!("task {tid} ran {n} times (dummy={dummy})"));
+        }
+    }
+    Ok(())
+}
+
+/// Completion order must respect event dependencies.
+fn check_topological(c: &CompiledGraph, order: &[usize]) -> Result<(), String> {
+    let mut pos = vec![usize::MAX; c.tgraph.tasks.len()];
+    for (i, &t) in order.iter().enumerate() {
+        pos[t] = i;
+    }
+    let tg = &c.tgraph;
+    for t in &tg.tasks {
+        if t.kind.is_dummy() {
+            continue;
+        }
+        for &e in &t.dependent_events {
+            for &p in &tg.events[e].in_tasks {
+                if tg.tasks[p].kind.is_dummy() {
+                    continue; // dummies not recorded by the executor
+                }
+                if pos[p] == usize::MAX || pos[p] > pos[t.id] {
+                    return Err(format!("task {} ran before producer {p}", t.id));
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Count live OS threads of this process whose name starts with
+/// `prefix` (Linux /proc; `None` when unavailable). Persistent-kernel
+/// threads are named `<prefix>-worker-N` / `<prefix>-sched-N`, so this
+/// counts exactly one kernel's residents even while other tests spawn
+/// threads concurrently.
+fn named_thread_count(prefix: &str) -> Option<usize> {
+    let dir = std::fs::read_dir("/proc/self/task").ok()?;
+    let mut n = 0;
+    for entry in dir.flatten() {
+        let comm = std::fs::read_to_string(entry.path().join("comm")).unwrap_or_default();
+        if comm.trim_end().starts_with(prefix) {
+            n += 1;
+        }
+    }
+    Some(n)
 }
 
 #[test]
@@ -54,20 +115,13 @@ fn prop_every_task_runs_exactly_once() {
             &case.compiled,
             MegaConfig { workers: case.workers, schedulers: case.schedulers, ..Default::default() },
         );
-        let seen = Mutex::new(vec![0u32; case.compiled.tgraph.tasks.len()]);
+        let seen = Mutex::new(Vec::new());
         let report = mk
             .run(&|t: &TaskDesc| {
-                seen.lock().unwrap()[t.id] += 1;
+                seen.lock().unwrap().push(t.id);
             })
             .map_err(|e| e.to_string())?;
-        let seen = seen.lock().unwrap();
-        for (tid, &n) in seen.iter().enumerate() {
-            let dummy = case.compiled.tgraph.tasks[tid].kind.is_dummy();
-            let want = if dummy { 0 } else { 1 };
-            if n != want {
-                return Err(format!("task {tid} ran {n} times (dummy={dummy})"));
-            }
-        }
+        check_exactly_once(&case.compiled, &seen.lock().unwrap())?;
         if report.metrics.tasks_executed as usize != case.compiled.tgraph.tasks.len() {
             return Err("runtime lost tasks".into());
         }
@@ -84,28 +138,7 @@ fn prop_execution_respects_dependencies() {
         );
         let order = Mutex::new(Vec::new());
         mk.run(&|t: &TaskDesc| order.lock().unwrap().push(t.id)).map_err(|e| e.to_string())?;
-        let order = order.lock().unwrap();
-        let mut pos = vec![usize::MAX; case.compiled.tgraph.tasks.len()];
-        for (i, &t) in order.iter().enumerate() {
-            pos[t] = i;
-        }
-        let tg = &case.compiled.tgraph;
-        for t in &tg.tasks {
-            if t.kind.is_dummy() {
-                continue;
-            }
-            for &e in &t.dependent_events {
-                for &p in &tg.events[e].in_tasks {
-                    if tg.tasks[p].kind.is_dummy() {
-                        continue; // dummies not recorded by the executor
-                    }
-                    if pos[p] == usize::MAX || pos[p] > pos[t.id] {
-                        return Err(format!("task {} ran before producer {p}", t.id));
-                    }
-                }
-            }
-        }
-        Ok(())
+        check_topological(&case.compiled, &order.lock().unwrap())
     });
 }
 
@@ -124,4 +157,91 @@ fn prop_repeat_runs_are_stable() {
         }
         Ok(())
     });
+}
+
+#[test]
+fn prop_persistent_epochs_match_scoped_semantics() {
+    // the persistent kernel must give the same exactly-once +
+    // topological-order guarantees on every re-armed epoch.
+    forall("persistent epochs", 0x9E125, 8, random_case, |case| {
+        let mut mk = PersistentMegaKernel::new(
+            case.compiled.clone(),
+            MegaConfig { workers: case.workers, schedulers: case.schedulers, ..Default::default() },
+        );
+        for epoch in 1..=3u64 {
+            let order = Mutex::new(Vec::new());
+            let r = mk
+                .run(&|t: &TaskDesc| order.lock().unwrap().push(t.id))
+                .map_err(|e| e.to_string())?;
+            if r.epoch != epoch {
+                return Err(format!("epoch counter {} != {epoch}", r.epoch));
+            }
+            if r.metrics.tasks_executed as usize != case.compiled.tgraph.tasks.len() {
+                return Err(format!("epoch {epoch} lost tasks"));
+            }
+            let order = order.lock().unwrap();
+            check_exactly_once(&case.compiled, &order)
+                .map_err(|e| format!("epoch {epoch}: {e}"))?;
+            check_topological(&case.compiled, &order)
+                .map_err(|e| format!("epoch {epoch}: {e}"))?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn persistent_stress_100_epochs_no_thread_leak() {
+    let cfg = ModelConfig::tiny();
+    let g = build_decode_graph(&cfg, &GraphOptions { batch: 4, kv_len: 16, ..Default::default() });
+    let compiled = Arc::new(compile(
+        &g,
+        &CompileOptions {
+            decompose: DecomposeConfig { target_tasks: 12, min_tile_cols: 8 },
+            ..Default::default()
+        },
+    ));
+    let mut mk = PersistentMegaKernel::new(
+        compiled.clone(),
+        MegaConfig { workers: 4, schedulers: 2, ..Default::default() },
+    );
+    let complement = mk.thread_count();
+    assert_eq!(complement, 6, "4 workers + 2 schedulers");
+    // "mpkN-" — the trailing dash keeps mpk1 from matching mpk12.
+    let prefix = format!("{}-", mk.thread_name_prefix());
+    // first epoch brings every resident thread fully up.
+    mk.run(&|_: &TaskDesc| {}).unwrap();
+    let threads_before = named_thread_count(&prefix);
+    assert!(
+        threads_before.is_none() || threads_before == Some(complement),
+        "expected {complement} resident threads, found {threads_before:?}"
+    );
+    let expected_tasks = compiled.tgraph.tasks.len();
+    for epoch in 2..=101u64 {
+        let order = Mutex::new(Vec::new());
+        let r = mk.run(&|t: &TaskDesc| order.lock().unwrap().push(t.id)).unwrap();
+        assert_eq!(r.epoch, epoch);
+        assert_eq!(
+            r.metrics.tasks_executed as usize, expected_tasks,
+            "epoch {epoch}: task count drifted"
+        );
+        let order = order.lock().unwrap();
+        check_exactly_once(&compiled, &order).unwrap_or_else(|e| panic!("epoch {epoch}: {e}"));
+        check_topological(&compiled, &order).unwrap_or_else(|e| panic!("epoch {epoch}: {e}"));
+    }
+    assert_eq!(mk.epochs(), 101);
+    // 100 more epochs must not have spawned or leaked a single thread.
+    assert_eq!(
+        named_thread_count(&prefix),
+        threads_before,
+        "persistent kernel leaked threads across 100 epochs"
+    );
+    // teardown joins the full complement.
+    drop(mk);
+    if threads_before.is_some() {
+        assert_eq!(
+            named_thread_count(&prefix),
+            Some(0),
+            "drop did not join all resident threads"
+        );
+    }
 }

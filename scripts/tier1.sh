@@ -1,0 +1,43 @@
+#!/usr/bin/env bash
+# Tier-1 gate for the rust_pallas crate: release build, test suite, and
+# clippy with warnings denied, then (best-effort) the launch-overhead
+# bench so BENCH_launch_overhead.json tracks the perf trajectory across
+# PRs (spawn-per-iteration vs persistent runtime).
+#
+# Usage: scripts/tier1.sh [--no-bench]
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+if ! command -v cargo >/dev/null 2>&1; then
+    echo "tier1: cargo not found on PATH — cannot build/test in this environment" >&2
+    echo "tier1: (the repo's CI image bakes in the toolchain; locally: rustup default stable)" >&2
+    # A skipped gate must not look like a green gate: exit nonzero
+    # unless the caller explicitly acknowledges the missing toolchain.
+    if [[ "${MPK_ALLOW_MISSING_TOOLCHAIN:-0}" == "1" ]]; then
+        echo "tier1: SKIPPED (MPK_ALLOW_MISSING_TOOLCHAIN=1)" >&2
+        exit 0
+    fi
+    exit 2
+fi
+
+echo "== tier1: cargo build --release =="
+cargo build --release
+
+echo "== tier1: cargo test -q =="
+cargo test -q
+
+echo "== tier1: cargo clippy -- -D warnings =="
+cargo clippy --all-targets -- -D warnings
+
+if [[ "${1:-}" != "--no-bench" ]]; then
+    echo "== tier1: launch_overhead bench (perf trajectory) =="
+    # The benches are plain main() binaries (criterion unavailable
+    # offline); the bench writes BENCH_launch_overhead.json to the repo
+    # root via MPK_BENCH_JSON.
+    MPK_BENCH_JSON="$PWD/BENCH_launch_overhead.json" \
+        cargo bench --bench launch_overhead ||
+        echo "tier1: bench skipped (non-fatal)" >&2
+    [[ -f BENCH_launch_overhead.json ]] && cat BENCH_launch_overhead.json
+fi
+
+echo "tier1: OK"

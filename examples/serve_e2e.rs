@@ -5,13 +5,19 @@
 //! composing: Pallas kernels (L1) → JAX model artifacts (L2) → rust
 //! coordinator + PJRT runtime (L3).
 //!
+//! Since PR 2 the decode inner loop is zero-copy end to end: task
+//! inputs are slices borrowed from the session tensor arena, every
+//! batch-size specialization aliases one shared max-batch KV arena (so
+//! batch transitions move no cache rows), and the store's read-side
+//! counters prove it — this driver asserts both invariants.
+//!
 //! ```bash
 //! make artifacts && cargo run --release --example serve_e2e
 //! ```
 
 use mpk::exec::real::{self, RealSession};
 use mpk::exec::TileExecutor;
-use mpk::megakernel::{MegaConfig, MegaKernel};
+use mpk::megakernel::MegaConfig;
 use mpk::serving::{Request, ServeEngine};
 
 fn main() {
@@ -20,14 +26,16 @@ fn main() {
     // --- correctness gate: megakernel logits vs fused reference HLO ---
     println!("== validation: tiled megakernel vs fused reference (batch 2, 3 steps) ==");
     let s = RealSession::create(2, 2, 42).expect("run `make artifacts` first");
-    let kernel = MegaKernel::new(&s.compiled, mega);
+    // resident persistent kernel re-armed per step — the validation
+    // session outlives each run, same as serving.
+    let mut kernel = s.persistent_kernel(mega.workers, mega.schedulers);
     let exec = TileExecutor::new(&s.compiled.graph, &s.store, &s.pool, 2);
     let mut ids = vec![3i32, 11];
     for step in 0..3 {
         real::set_ids(&s.compiled.graph, &s.store, &ids);
         let want = real::run_reference(&s.manifest, &s.pool, &s.compiled.graph, &s.store, 2, &ids, step)
             .expect("reference");
-        real::run_iteration(&kernel, &exec, step).expect("megakernel");
+        real::run_iteration(&mut kernel, &exec, step).expect("megakernel");
         let got = real::get_logits(&s.compiled.graph, &s.store);
         let max_err = got.iter().zip(&want).map(|(a, b)| (a - b).abs()).fold(0.0f32, f32::max);
         println!("  step {step}: max |logit diff| = {max_err:.2e}");
@@ -35,15 +43,19 @@ fn main() {
         let vocab = s.manifest.model.vocab;
         ids = (0..2).map(|r| real::argmax(&got[r * vocab..(r + 1) * vocab]) as i32).collect();
     }
+    drop(kernel);
     drop(s);
 
     // --- the serving run ---
     println!("\n== serving: 12 requests, max batch 8, continuous batching ==");
     let mut engine = ServeEngine::create(8, 3, 42, mega).expect("engine");
     for i in 0..12u64 {
-        // staggered prompt lengths exercise per-row cache lengths.
-        let plen = 2 + (i as usize % 3);
-        let prompt: Vec<i32> = (0..plen as i32).map(|t| 1 + (i as i32 * 7 + t) % 500).collect();
+        // uniform lengths: the wave admits together and retires
+        // together, so the whole run is steady-state — the shared
+        // max-batch KV arena must move zero rows even as the batch size
+        // ramps 8 → 4 across waves. (Staggered per-row cache lengths
+        // are covered by the engine's continuous-batching tests.)
+        let prompt: Vec<i32> = (0..3).map(|t| 1 + (i as i32 * 7 + t) % 500).collect();
         engine.submit(Request::new(i, prompt, 8));
     }
     let (outputs, stats) = engine.serve().expect("serve");
@@ -58,9 +70,13 @@ fn main() {
     let max_b = stats.batch_sizes.iter().max().unwrap();
     println!("peak batch         : {max_b} (graphs specialized per power-of-two batch)");
     println!(
-        "KV rows migrated   : {} (copies only on admit/slot-remap; steady-state decode stages zero)",
+        "KV rows migrated   : {} (shared max-batch arena: batch transitions are pointer arithmetic)",
         stats.kv_rows_migrated
     );
+    assert_eq!(stats.kv_rows_migrated, 0, "steady-state serving must not move KV rows");
+    let (allocs, bytes) = engine.store_counters();
+    println!("store copies       : {allocs} allocs / {bytes} bytes (zero-copy borrowed-view hot path)");
+    assert_eq!((allocs, bytes), (0, 0), "decode hot path copied tensor data");
     let mut sample: Vec<_> = outputs.iter().collect();
     sample.sort();
     for (id, toks) in sample.iter().take(3) {

@@ -4,15 +4,81 @@
 //! (criterion unavailable offline): warmup + median-of-N on the
 //! monotonic clock.
 
+use mpk::exec::store::TensorStore;
 use mpk::megakernel::{EventTable, MpmcQueue};
 use mpk::models::{build_decode_graph, GraphOptions, ModelConfig};
+use mpk::ops::{CompGraph, DType, Region};
 use mpk::sim::{simulate_megakernel, GpuSpec, SimOptions};
 use mpk::tgraph::{analyze_deps, compile, decompose, CompileOptions, DecomposeConfig};
 use mpk::util::{bench_median_ns, Table};
+use std::sync::Mutex;
+
+/// The store hot path: the same strided weight-tile read through three
+/// generations of the storage layer — the pre-arena locked-clone
+/// (`Mutex<Vec<f32>>` + fresh `Vec` per read, reconstructed here), the
+/// arena's owned `read_tile` (no lock, still allocates), and the
+/// borrowed `TileView` gather into a reused per-worker scratch (no
+/// lock, no allocation — asserted via the store counters, not timing).
+/// Returns `(clone_ns, read_tile_ns, view_ns, view_allocs)`.
+fn bench_store_hotpath(t: &mut Table) -> (u64, u64, u64, u64) {
+    let rows = 256usize;
+    let cols = 512usize;
+    let tile = Region::new(vec![(0, rows), (128, 256)]); // strided matmul-style tile
+    let data: Vec<f32> = (0..rows * cols).map(|i| (i % 97) as f32).collect();
+
+    // legacy: one mutex per tensor, lock + gather into a fresh Vec.
+    let legacy = Mutex::new(data.clone());
+    let clone_ns = bench_median_ns(200, 2000, || {
+        let buf = legacy.lock().unwrap();
+        let mut out = Vec::with_capacity(tile.numel());
+        for r in tile.dims[0].0..tile.dims[0].1 {
+            let (c0, c1) = tile.dims[1];
+            out.extend_from_slice(&buf[r * cols + c0..r * cols + c1]);
+        }
+        std::hint::black_box(&out);
+    });
+
+    let mut g = CompGraph::new();
+    let w = g.input("w", vec![rows, cols], DType::F32);
+    let store = TensorStore::new(&g);
+    store.set(w, &data);
+
+    let read_ns = bench_median_ns(200, 2000, || {
+        std::hint::black_box(store.read_tile(w, &tile));
+    });
+
+    store.reset_counters();
+    let mut scratch: Vec<f32> = Vec::new();
+    let view_ns = bench_median_ns(200, 2000, || {
+        store.tile(w, &tile).gather_into(&mut scratch);
+        std::hint::black_box(&scratch);
+    });
+    let view_allocs = store.counters().allocs;
+    assert_eq!(view_allocs, 0, "borrowed-view path must not allocate in the store");
+
+    t.row(vec![
+        "store_hotpath: locked clone (legacy)".into(),
+        format!("{clone_ns} ns"),
+        "mutex + fresh Vec per tile read".into(),
+    ]);
+    t.row(vec![
+        "store_hotpath: arena read_tile".into(),
+        format!("{read_ns} ns"),
+        "no lock, owned Vec per read".into(),
+    ]);
+    t.row(vec![
+        "store_hotpath: arena borrowed view".into(),
+        format!("{view_ns} ns"),
+        "zero lock, zero alloc (counter-asserted)".into(),
+    ]);
+    (clone_ns, read_ns, view_ns, view_allocs)
+}
 
 fn main() {
     println!("== hot-path microbenchmarks (median ns unless noted) ==\n");
     let mut t = Table::new(&["benchmark", "median", "note"]);
+
+    let (clone_ns, read_ns, view_ns, view_allocs) = bench_store_hotpath(&mut t);
 
     // queue push+pop round trip
     let q: MpmcQueue<usize> = MpmcQueue::new(1024);
@@ -90,4 +156,20 @@ fn main() {
     ]);
 
     println!("{}", t.render());
+
+    // perf-trajectory record for CI (scripts/tier1.sh): the storage-
+    // layer read path across its three generations.
+    let json_path = std::env::var("MPK_BENCH_STORE_JSON")
+        .unwrap_or_else(|_| "BENCH_store_hotpath.json".to_string());
+    let json = format!(
+        "{{\n  \"bench\": \"store_hotpath\",\n  \"locked_clone_ns\": {clone_ns},\n  \
+         \"arena_read_tile_ns\": {read_ns},\n  \"arena_borrowed_view_ns\": {view_ns},\n  \
+         \"borrowed_view_store_allocs\": {view_allocs},\n  \
+         \"view_speedup_vs_locked_clone\": {:.4}\n}}\n",
+        clone_ns as f64 / view_ns.max(1) as f64
+    );
+    match std::fs::write(&json_path, json) {
+        Ok(()) => println!("\nwrote {json_path}"),
+        Err(e) => eprintln!("\ncould not write {json_path}: {e}"),
+    }
 }

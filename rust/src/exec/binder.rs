@@ -1,45 +1,115 @@
 //! Task → artifact binding: the executor that megakernel workers call
 //! on the real-numerics path.
 //!
-//! Each compute task's tile is mapped to one AOT artifact plus input
-//! slices from the [`TensorStore`]; results are written back to the
-//! task's output tile. `KvAppend` is executed natively (pure cache
-//! bookkeeping, zero flops — the §6.1 in-kernel KV metadata update).
+//! Each compute task's tile is mapped to one AOT artifact (index
+//! pre-resolved per op at executor construction — the hot path does no
+//! name formatting or manifest scanning) plus input slices *borrowed
+//! straight from the tensor arena* — whole-tensor inputs and contiguous
+//! per-row attention slices cross into the PJRT pool as
+//! [`Value::Borrowed`] with zero copies and zero allocations; only
+//! strided matmul weight tiles are gathered, into a per-worker scratch
+//! buffer that is reused across tasks (no allocation at steady state).
+//! Results are written back to the task's output tile.
+//! `KvAppend` is executed natively as a direct arena-to-arena row copy
+//! (pure cache bookkeeping, zero flops — the §6.1 in-kernel KV metadata
+//! update).
+//!
+//! Two executor front-ends share the binding logic via [`ExecCore`]:
+//!
+//! * [`TileExecutor`] borrows graph/store/pool — the one-shot
+//!   validation and example paths.
+//! * [`OwningTileExecutor`] owns `Arc`s of all three — the serving
+//!   engine hoists one into each long-lived `Session` so the decode hot
+//!   path constructs nothing per iteration.
 
 use crate::exec::store::TensorStore;
 use crate::megakernel::runtime::TaskExecutor;
 use crate::ops::{CompGraph, OpKind, Region};
 use crate::runtime::pool::{ExecPool, Value};
-use crate::runtime::Manifest;
-use crate::tgraph::{TaskDesc, TaskKind};
-use std::sync::Mutex;
+use crate::tgraph::{CompiledGraph, TaskDesc, TaskKind};
+use std::cell::RefCell;
+use std::sync::{Arc, Mutex};
 
-/// Executes tile tasks against the PJRT pool.
-pub struct TileExecutor<'a> {
-    pub graph: &'a CompGraph,
-    pub store: &'a TensorStore,
-    pub pool: &'a ExecPool,
-    pub batch: usize,
+/// Per-worker reusable staging buffers. Keyed by OS thread — megakernel
+/// workers are long-lived, so after warm-up every gather reuses
+/// capacity and the task hot path performs no heap allocation.
+#[derive(Default)]
+struct Scratch {
+    /// Strided-tile gather target (matmul weight columns).
+    tile: Vec<f32>,
+    /// i32 staging (embedding ids, attention valid-length).
+    ints: Vec<i32>,
+}
+
+thread_local! {
+    static SCRATCH: RefCell<Scratch> = RefCell::new(Scratch::default());
+}
+
+/// Resolve each op's AOT artifact index once, at executor construction:
+/// the per-task hot path then submits to the pool by index — no name
+/// formatting, no manifest scan, no allocation. Ops executed natively
+/// (`KvAppend`) or unsupported on the real path resolve to `None`.
+fn resolve_artifacts(graph: &CompGraph, pool: &ExecPool, batch: usize) -> Vec<Option<usize>> {
+    let manifest = pool.manifest();
+    let tile_n = manifest.tile_n;
+    graph
+        .ops
+        .iter()
+        .map(|op| {
+            let name = match &op.kind {
+                OpKind::Embedding => format!("embed_b{batch}"),
+                OpKind::RmsNorm => format!("rmsnorm_b{batch}"),
+                OpKind::MatMul => {
+                    let k = graph.tensor(op.inputs[0]).shape[1];
+                    format!("matmul_b{batch}_k{k}_n{tile_n}")
+                }
+                OpKind::Attention { .. } => "attn_q1".to_string(),
+                OpKind::Add => format!("add_b{batch}"),
+                OpKind::SwiGLU => format!("swiglu_b{batch}"),
+                _ => return None,
+            };
+            manifest.find(&name).map(|(i, _)| i)
+        })
+        .collect()
+}
+
+/// Executor state + binding logic shared by both front-ends.
+pub struct ExecCore {
+    batch: usize,
+    /// Per-op artifact index, resolved once (see [`resolve_artifacts`]).
+    artifacts: Vec<Option<usize>>,
     /// Valid cache length *before* this iteration's token, per batch
     /// row (continuous batching admits requests at different times, so
     /// rows carry different cache lengths). The new K/V row is written
     /// at this position.
-    pub row_lens: Mutex<Vec<usize>>,
+    row_lens: Mutex<Vec<usize>>,
     /// First execution error, if any (the runtime has no error channel;
-    /// tests assert this is None afterwards).
-    pub error: Mutex<Option<String>>,
+    /// callers check this after the epoch).
+    error: Mutex<Option<String>>,
 }
 
-impl<'a> TileExecutor<'a> {
-    pub fn new(graph: &'a CompGraph, store: &'a TensorStore, pool: &'a ExecPool, batch: usize) -> Self {
-        TileExecutor {
-            graph,
-            store,
-            pool,
+impl ExecCore {
+    fn new(graph: &CompGraph, pool: &ExecPool, batch: usize) -> Self {
+        ExecCore {
             batch,
+            artifacts: resolve_artifacts(graph, pool, batch),
             row_lens: Mutex::new(vec![0; batch]),
             error: Mutex::new(None),
         }
+    }
+
+    /// The op's pre-resolved artifact index, or a diagnostic error.
+    fn artifact(&self, graph: &CompGraph, op_id: usize) -> Result<usize, String> {
+        self.artifacts[op_id].ok_or_else(|| {
+            format!(
+                "no AOT artifact for op {} (missing batch/tile specialization?)",
+                graph.ops[op_id].name
+            )
+        })
+    }
+
+    pub fn batch(&self) -> usize {
+        self.batch
     }
 
     /// Uniform cache length for all rows (the validation path).
@@ -59,6 +129,7 @@ impl<'a> TileExecutor<'a> {
         self.row_lens.lock().unwrap()[r]
     }
 
+    /// First task error of the epoch, if any (cleared on read).
     pub fn take_error(&self) -> Option<String> {
         self.error.lock().unwrap().take()
     }
@@ -70,35 +141,55 @@ impl<'a> TileExecutor<'a> {
         }
     }
 
-    fn meta(&self) -> &Manifest {
-        self.pool.manifest()
+    fn execute_task(&self, graph: &CompGraph, store: &TensorStore, pool: &ExecPool, task: &TaskDesc) {
+        if let TaskKind::Compute { op, kind } = &task.kind {
+            if let Err(e) = self.run_compute(graph, store, pool, *op, kind, &task.out_region) {
+                self.fail(format!("task {} ({}): {e}", task.id, graph.ops[*op].name));
+            }
+        }
     }
 
-    fn run_compute(&self, op_id: usize, kind: &OpKind, out_region: &Region) -> Result<(), String> {
-        let op = &self.graph.ops[op_id];
-        let b = self.batch;
-        let m = self.meta().model;
+    fn run_compute(
+        &self,
+        graph: &CompGraph,
+        store: &TensorStore,
+        pool: &ExecPool,
+        op_id: usize,
+        kind: &OpKind,
+        out_region: &Region,
+    ) -> Result<(), String> {
+        let op = &graph.ops[op_id];
+        let m = pool.manifest().model;
         match kind {
             OpKind::Embedding => {
-                let ids: Vec<i32> =
-                    self.store.get(op.inputs[0]).iter().map(|&v| v as i32).collect();
-                let table = self.store.get(op.inputs[1]);
-                let out = self
-                    .pool
-                    .execute_by_name(&format!("embed_b{b}"), vec![Value::I32(ids), Value::F32(table)])?;
-                self.store.set(op.output, out.into_iter().next().unwrap());
+                // ids arrive as exact small floats; stage as i32 in the
+                // per-worker scratch, table is a borrowed arena view.
+                let art = self.artifact(graph, op_id)?;
+                let out = SCRATCH.with(|s| {
+                    let mut s = s.borrow_mut();
+                    s.ints.clear();
+                    s.ints.extend(store.view(op.inputs[0]).iter().map(|&v| v as i32));
+                    pool.execute(
+                        art,
+                        vec![Value::BorrowedI32(&s.ints), Value::Borrowed(store.view(op.inputs[1]))],
+                    )
+                })?;
+                store.set(op.output, &out[0]);
             }
             OpKind::RmsNorm => {
-                let x = self.store.get(op.inputs[0]);
-                let w = self.store.get(op.inputs[1]);
-                let out =
-                    self.pool.execute_by_name(&format!("rmsnorm_b{b}"), vec![Value::F32(x), Value::F32(w)])?;
-                self.store.set(op.output, out.into_iter().next().unwrap());
+                let out = pool.execute(
+                    self.artifact(graph, op_id)?,
+                    vec![
+                        Value::Borrowed(store.view(op.inputs[0])),
+                        Value::Borrowed(store.view(op.inputs[1])),
+                    ],
+                )?;
+                store.set(op.output, &out[0]);
             }
             OpKind::MatMul => {
-                let k = self.graph.tensor(op.inputs[0]).shape[1];
+                let k = graph.tensor(op.inputs[0]).shape[1];
                 let (c0, c1) = out_region.dims[1];
-                let tile_n = self.meta().tile_n;
+                let tile_n = pool.manifest().tile_n;
                 if c1 - c0 != tile_n {
                     return Err(format!(
                         "matmul tile width {} != artifact tile {}",
@@ -106,79 +197,99 @@ impl<'a> TileExecutor<'a> {
                         tile_n
                     ));
                 }
-                let x = self.store.get(op.inputs[0]);
-                let w = self.store.read_tile(op.inputs[1], &Region::new(vec![(0, k), (c0, c1)]));
-                let out = self.pool.execute_by_name(
-                    &format!("matmul_b{b}_k{k}_n{tile_n}"),
-                    vec![Value::F32(x), Value::F32(w)],
-                )?;
-                self.store.write_tile(op.output, out_region, &out.into_iter().next().unwrap());
+                let art = self.artifact(graph, op_id)?;
+                let w_region = Region::new(vec![(0, k), (c0, c1)]);
+                let x = Value::Borrowed(store.view(op.inputs[0]));
+                let wv = store.tile(op.inputs[1], &w_region);
+                let out = match wv.as_slice() {
+                    // full-width weight tile: zero-copy borrowed slice.
+                    Some(w) => pool.execute(art, vec![x, Value::Borrowed(w)])?,
+                    // strided columns: gather into the reused scratch.
+                    None => SCRATCH.with(|s| {
+                        let mut s = s.borrow_mut();
+                        wv.gather_into(&mut s.tile);
+                        pool.execute(art, vec![x, Value::Borrowed(&s.tile)])
+                    })?,
+                };
+                drop(wv);
+                store.write_tile(op.output, out_region, &out[0]);
             }
             OpKind::Attention { .. } => {
-                // one task per request row.
+                // one task per request row; q and the per-row cache
+                // slabs are contiguous in the arena → all borrowed.
                 let (r0, r1) = out_region.dims[0];
                 debug_assert_eq!(r1 - r0, 1, "attention tasks are per-request");
                 let r = r0;
                 let q_dim = m.q_dim();
                 let kv_dim = m.kv_dim();
-                let s_max = self.meta().s_max;
+                let s_max = pool.manifest().s_max;
                 // inputs: [qkv, kcache, vcache, kv_new]
-                let q = self.store.read_tile(op.inputs[0], &Region::new(vec![(r, r + 1), (0, q_dim)]));
-                let kc = self
-                    .store
-                    .read_tile(op.inputs[1], &Region::new(vec![(r, r + 1), (0, s_max), (0, kv_dim)]));
-                let vc = self
-                    .store
-                    .read_tile(op.inputs[2], &Region::new(vec![(r, r + 1), (0, s_max), (0, kv_dim)]));
+                let q_r = Region::new(vec![(r, r + 1), (0, q_dim)]);
+                let c_r = Region::new(vec![(r, r + 1), (0, s_max), (0, kv_dim)]);
+                let q = store.view_region(op.inputs[0], &q_r);
+                let kc = store.view_region(op.inputs[1], &c_r);
+                let vc = store.view_region(op.inputs[2], &c_r);
                 let valid = self.row_len(r) + 1;
-                let out = self.pool.execute_by_name(
-                    "attn_q1",
-                    vec![Value::F32(q), Value::F32(kc), Value::F32(vc), Value::I32(vec![valid as i32])],
-                )?;
-                self.store.write_tile(
-                    op.output,
-                    &Region::new(vec![(r, r + 1), (0, q_dim)]),
-                    &out.into_iter().next().unwrap(),
-                );
+                let art = self.artifact(graph, op_id)?;
+                let out = SCRATCH.with(|s| {
+                    let mut s = s.borrow_mut();
+                    s.ints.clear();
+                    s.ints.push(valid as i32);
+                    pool.execute(
+                        art,
+                        vec![
+                            Value::Borrowed(q),
+                            Value::Borrowed(kc),
+                            Value::Borrowed(vc),
+                            Value::BorrowedI32(&s.ints),
+                        ],
+                    )
+                })?;
+                store.write_tile(op.output, &q_r, &out[0]);
             }
             OpKind::KvAppend => {
                 // native: copy this step's K/V rows from the fused qkv
-                // output into the caches at position cur_len.
+                // output into the caches at position cur_len — a direct
+                // arena-to-arena copy, no staging buffer.
                 let q_dim = m.q_dim();
                 let kv_dim = m.kv_dim();
                 let qkv = op.inputs[0];
-                for r in 0..b {
+                for r in 0..self.batch {
                     let pos = self.row_len(r);
-                    let krow = self
-                        .store
-                        .read_tile(qkv, &Region::new(vec![(r, r + 1), (q_dim, q_dim + kv_dim)]));
-                    let vrow = self.store.read_tile(
+                    let krow = store
+                        .view_region(qkv, &Region::new(vec![(r, r + 1), (q_dim, q_dim + kv_dim)]));
+                    store.write_tile(
+                        op.inputs[2],
+                        &Region::new(vec![(r, r + 1), (pos, pos + 1), (0, kv_dim)]),
+                        krow,
+                    );
+                    let vrow = store.view_region(
                         qkv,
                         &Region::new(vec![(r, r + 1), (q_dim + kv_dim, q_dim + 2 * kv_dim)]),
                     );
-                    self.store.write_tile(
-                        op.inputs[2],
-                        &Region::new(vec![(r, r + 1), (pos, pos + 1), (0, kv_dim)]),
-                        &krow,
-                    );
-                    self.store.write_tile(
+                    store.write_tile(
                         op.inputs[3],
                         &Region::new(vec![(r, r + 1), (pos, pos + 1), (0, kv_dim)]),
-                        &vrow,
+                        vrow,
                     );
                 }
             }
             OpKind::Add => {
-                let a = self.store.get(op.inputs[0]);
-                let c = self.store.get(op.inputs[1]);
-                let out =
-                    self.pool.execute_by_name(&format!("add_b{b}"), vec![Value::F32(a), Value::F32(c)])?;
-                self.store.set(op.output, out.into_iter().next().unwrap());
+                let out = pool.execute(
+                    self.artifact(graph, op_id)?,
+                    vec![
+                        Value::Borrowed(store.view(op.inputs[0])),
+                        Value::Borrowed(store.view(op.inputs[1])),
+                    ],
+                )?;
+                store.set(op.output, &out[0]);
             }
             OpKind::SwiGLU => {
-                let gu = self.store.get(op.inputs[0]);
-                let out = self.pool.execute_by_name(&format!("swiglu_b{b}"), vec![Value::F32(gu)])?;
-                self.store.set(op.output, out.into_iter().next().unwrap());
+                let out = pool.execute(
+                    self.artifact(graph, op_id)?,
+                    vec![Value::Borrowed(store.view(op.inputs[0]))],
+                )?;
+                store.set(op.output, &out[0]);
             }
             other => {
                 return Err(format!("real path does not support op kind {other:?}"));
@@ -188,12 +299,79 @@ impl<'a> TileExecutor<'a> {
     }
 }
 
+/// Executes tile tasks against the PJRT pool over borrowed
+/// graph/store/pool (one-shot validation and example paths).
+pub struct TileExecutor<'a> {
+    pub graph: &'a CompGraph,
+    pub store: &'a TensorStore,
+    pub pool: &'a ExecPool,
+    core: ExecCore,
+}
+
+impl<'a> TileExecutor<'a> {
+    pub fn new(graph: &'a CompGraph, store: &'a TensorStore, pool: &'a ExecPool, batch: usize) -> Self {
+        TileExecutor { graph, store, pool, core: ExecCore::new(graph, pool, batch) }
+    }
+}
+
+/// Both front-ends deref to [`ExecCore`] for the shared control surface
+/// (`batch` / `set_cur_len` / `set_row_lens` / `take_error`) instead of
+/// duplicating delegation methods.
+impl std::ops::Deref for TileExecutor<'_> {
+    type Target = ExecCore;
+
+    fn deref(&self) -> &ExecCore {
+        &self.core
+    }
+}
+
 impl TaskExecutor for TileExecutor<'_> {
     fn execute(&self, task: &TaskDesc) {
-        if let TaskKind::Compute { op, kind } = &task.kind {
-            if let Err(e) = self.run_compute(*op, kind, &task.out_region) {
-                self.fail(format!("task {} ({}): {e}", task.id, self.graph.ops[*op].name));
-            }
-        }
+        self.core.execute_task(self.graph, self.store, self.pool, task);
+    }
+}
+
+/// Owning executor for long-lived sessions: holds `Arc`s of the
+/// compiled graph, the tensor arena, and the pool, so the serving
+/// engine constructs nothing on the per-iteration hot path — it just
+/// updates row lengths and re-arms the resident kernel with `&self`.
+pub struct OwningTileExecutor {
+    graph: Arc<CompiledGraph>,
+    store: Arc<TensorStore>,
+    pool: Arc<ExecPool>,
+    core: ExecCore,
+}
+
+impl OwningTileExecutor {
+    pub fn new(
+        graph: Arc<CompiledGraph>,
+        store: Arc<TensorStore>,
+        pool: Arc<ExecPool>,
+        batch: usize,
+    ) -> Self {
+        let core = ExecCore::new(&graph.graph, &pool, batch);
+        OwningTileExecutor { graph, store, pool, core }
+    }
+
+    pub fn store(&self) -> &TensorStore {
+        &self.store
+    }
+
+    pub fn graph(&self) -> &CompiledGraph {
+        &self.graph
+    }
+}
+
+impl std::ops::Deref for OwningTileExecutor {
+    type Target = ExecCore;
+
+    fn deref(&self) -> &ExecCore {
+        &self.core
+    }
+}
+
+impl TaskExecutor for OwningTileExecutor {
+    fn execute(&self, task: &TaskDesc) {
+        self.core.execute_task(&self.graph.graph, &self.store, &self.pool, task);
     }
 }

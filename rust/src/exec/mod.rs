@@ -1,9 +1,10 @@
-//! Real-numerics execution of compiled tGraphs: tensor store, task →
-//! artifact binding, and the end-to-end validated decode path.
+//! Real-numerics execution of compiled tGraphs: flat tensor arena with
+//! zero-copy views, task → artifact binding over borrowed slices, and
+//! the end-to-end validated decode path.
 pub mod binder;
 pub mod real;
 pub mod store;
 
-pub use binder::TileExecutor;
+pub use binder::{ExecCore, OwningTileExecutor, TileExecutor};
 pub use real::{build_real_graph, compile_real, init_weights, run_iteration, run_reference, RealSession};
-pub use store::TensorStore;
+pub use store::{SharedSlab, StoreCounters, TensorStore, TileView};

@@ -1,17 +1,18 @@
 //! The real-numerics end-to-end path: build the tiny-model graph with
 //! artifact-aligned partition hints, synthesize deterministic weights,
-//! run one decode iteration on the megakernel, and validate against the
-//! fused reference artifact.
+//! run decode iterations on the persistent megakernel, and validate
+//! against the fused reference artifact.
 
-use crate::exec::binder::TileExecutor;
+use crate::exec::binder::{OwningTileExecutor, TileExecutor};
 use crate::exec::store::TensorStore;
-use crate::megakernel::{MegaConfig, MegaKernel, RunReport};
+use crate::megakernel::{MegaConfig, PersistentMegaKernel, RunReport};
 use crate::models::{build_decode_graph, GraphOptions, ModelConfig};
 use crate::ops::{CompGraph, DType, OpKind};
 use crate::runtime::pool::{ExecPool, Value};
 use crate::runtime::Manifest;
 use crate::tgraph::{compile, CompileOptions, CompiledGraph, DecomposeConfig};
 use crate::util::XorShift64;
+use std::sync::Arc;
 
 /// Build the tiny-model decode graph whose tiles line up with the AOT
 /// artifacts: matmuls tiled to `tile_n` columns, attention per request,
@@ -83,7 +84,8 @@ pub fn init_weights(g: &CompGraph, store: &TensorStore, seed: u64) {
             continue;
         }
         if t.name.contains("ln") || t.name.contains("norm") {
-            store.set(t.id, vec![1.0; t.numel()]);
+            let ones = vec![1.0; t.numel()];
+            store.set(t.id, &ones);
         } else {
             // seed by *name* so the same weight tensor gets identical
             // values in every batch-size-specialized graph.
@@ -92,7 +94,8 @@ pub fn init_weights(g: &CompGraph, store: &TensorStore, seed: u64) {
                 h = (h ^ *b as u64).wrapping_mul(0x1000_0000_01b3);
             }
             let mut rng = XorShift64::new(seed ^ h);
-            store.set(t.id, (0..t.numel()).map(|_| rng.unit_f32() * 0.05).collect());
+            let w: Vec<f32> = (0..t.numel()).map(|_| rng.unit_f32() * 0.05).collect();
+            store.set(t.id, &w);
         }
     }
 }
@@ -101,7 +104,8 @@ pub fn init_weights(g: &CompGraph, store: &TensorStore, seed: u64) {
 /// hot-path variant used by the serving engine, which resolves the id
 /// once at session creation instead of per iteration.
 pub fn set_ids_at(store: &TensorStore, t: crate::ops::TensorId, ids: &[i32]) {
-    store.set(t, ids.iter().map(|&i| i as f32).collect());
+    let vals: Vec<f32> = ids.iter().map(|&i| i as f32).collect();
+    store.set(t, &vals);
 }
 
 /// Write this iteration's token ids into the store (by-name lookup).
@@ -110,7 +114,8 @@ pub fn set_ids(g: &CompGraph, store: &TensorStore, ids: &[i32]) {
     set_ids_at(store, t.id, ids);
 }
 
-/// Fetch the logits at a known tensor id (hot-path variant).
+/// Fetch the logits at a known tensor id (hot-path variant; the engine
+/// reads them zero-copy via `TensorStore::view` instead).
 pub fn logits_at(store: &TensorStore, t: crate::ops::TensorId) -> Vec<f32> {
     store.get(t)
 }
@@ -121,9 +126,12 @@ pub fn get_logits(g: &CompGraph, store: &TensorStore) -> Vec<f32> {
     logits_at(store, t.id)
 }
 
-/// Run one decode iteration on the megakernel with real numerics.
+/// Run one decode iteration on the resident persistent megakernel with
+/// real numerics. (One-shot validation paths use this too — PR 2
+/// retired the scoped `MegaKernel` from the real-numerics path; it
+/// survives only as the launch-overhead baseline.)
 pub fn run_iteration(
-    kernel: &MegaKernel,
+    kernel: &mut PersistentMegaKernel,
     exec: &TileExecutor,
     cur_len: usize,
 ) -> Result<RunReport, String> {
@@ -183,28 +191,41 @@ pub fn argmax(row: &[f32]) -> usize {
     row.iter().enumerate().max_by(|a, b| a.1.partial_cmp(b.1).unwrap()).map(|(i, _)| i).unwrap_or(0)
 }
 
-/// Convenience bundle for examples/tests: pool + graph + store + kernel
-/// inputs for a given batch size.
+/// Convenience bundle for examples/tests: pool + graph + store for a
+/// given batch size. Graph, store, and pool are `Arc`-shared so a
+/// session can hand out a resident [`PersistentMegaKernel`] and a
+/// long-lived [`OwningTileExecutor`] without borrow gymnastics.
 pub struct RealSession {
     pub manifest: Manifest,
-    pub pool: ExecPool,
+    pub pool: Arc<ExecPool>,
     pub batch: usize,
-    pub compiled: CompiledGraph,
-    pub store: TensorStore,
+    pub compiled: Arc<CompiledGraph>,
+    pub store: Arc<TensorStore>,
 }
 
 impl RealSession {
     pub fn create(batch: usize, pool_threads: usize, seed: u64) -> Result<RealSession, String> {
         let manifest = Manifest::load(&Manifest::default_dir())?;
-        let compiled = compile_real(&manifest, batch);
-        let store = TensorStore::new(&compiled.graph);
+        let compiled = Arc::new(compile_real(&manifest, batch));
+        let store = Arc::new(TensorStore::new(&compiled.graph));
         init_weights(&compiled.graph, &store, seed);
-        let pool = ExecPool::new(manifest.clone(), pool_threads)?;
+        let pool = Arc::new(ExecPool::new(manifest.clone(), pool_threads)?);
         Ok(RealSession { manifest, pool, batch, compiled, store })
     }
 
     pub fn mega_config(&self, workers: usize, schedulers: usize) -> MegaConfig {
         MegaConfig { workers, schedulers, ..Default::default() }
+    }
+
+    /// A resident kernel over this session's graph (threads parked
+    /// between iterations — the paper-faithful path).
+    pub fn persistent_kernel(&self, workers: usize, schedulers: usize) -> PersistentMegaKernel {
+        PersistentMegaKernel::new(self.compiled.clone(), self.mega_config(workers, schedulers))
+    }
+
+    /// A long-lived owning executor over this session's arena and pool.
+    pub fn owning_executor(&self) -> OwningTileExecutor {
+        OwningTileExecutor::new(self.compiled.clone(), self.store.clone(), self.pool.clone(), self.batch)
     }
 }
 
@@ -242,13 +263,13 @@ mod tests {
             return;
         }
         let s = RealSession::create(1, 2, 42).unwrap();
-        let kernel = MegaKernel::new(&s.compiled, s.mega_config(4, 1));
+        let mut kernel = s.persistent_kernel(4, 1);
         let exec = TileExecutor::new(&s.compiled.graph, &s.store, &s.pool, 1);
         // reference first (reads caches before KvAppend mutates them —
         // same values either way, but keep the clean order).
         set_ids(&s.compiled.graph, &s.store, &[7]);
         let want = run_reference(&s.manifest, &s.pool, &s.compiled.graph, &s.store, 1, &[7], 0).unwrap();
-        run_iteration(&kernel, &exec, 0).unwrap();
+        run_iteration(&mut kernel, &exec, 0).unwrap();
         let got = get_logits(&s.compiled.graph, &s.store);
         assert_eq!(got.len(), want.len());
         let max_err = got
@@ -266,14 +287,16 @@ mod tests {
             return;
         }
         let s = RealSession::create(2, 2, 7).unwrap();
-        let kernel = MegaKernel::new(&s.compiled, s.mega_config(4, 1));
+        // resident kernel re-armed across steps — the session outlives
+        // each run, so the persistent front-end is the right tool.
+        let mut kernel = s.persistent_kernel(4, 1);
         let exec = TileExecutor::new(&s.compiled.graph, &s.store, &s.pool, 2);
         let mut ids = vec![3i32, 11];
         for step in 0..3 {
             set_ids(&s.compiled.graph, &s.store, &ids);
             let want =
                 run_reference(&s.manifest, &s.pool, &s.compiled.graph, &s.store, 2, &ids, step).unwrap();
-            run_iteration(&kernel, &exec, step).unwrap();
+            run_iteration(&mut kernel, &exec, step).unwrap();
             let got = get_logits(&s.compiled.graph, &s.store);
             let max_err =
                 got.iter().zip(&want).map(|(a, b)| (a - b).abs()).fold(0.0f32, f32::max);
@@ -282,5 +305,32 @@ mod tests {
             let vocab = s.manifest.model.vocab;
             ids = (0..2).map(|r| argmax(&got[r * vocab..(r + 1) * vocab]) as i32).collect();
         }
+        assert_eq!(kernel.epochs(), 3, "one epoch per decode step");
+    }
+
+    #[test]
+    fn owning_executor_drives_decode() {
+        if !have_artifacts() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        // same decode through the owning executor (the serving-session
+        // configuration) must match the borrowed executor.
+        let s = RealSession::create(1, 2, 42).unwrap();
+        let mut kernel = s.persistent_kernel(4, 1);
+        let exec = s.owning_executor();
+        set_ids(&s.compiled.graph, &s.store, &[7]);
+        exec.set_cur_len(0);
+        kernel.run(&exec).unwrap();
+        assert!(exec.take_error().is_none());
+        let got = get_logits(&s.compiled.graph, &s.store);
+
+        let s2 = RealSession::create(1, 2, 42).unwrap();
+        let mut k2 = s2.persistent_kernel(4, 1);
+        let e2 = TileExecutor::new(&s2.compiled.graph, &s2.store, &s2.pool, 1);
+        set_ids(&s2.compiled.graph, &s2.store, &[7]);
+        run_iteration(&mut k2, &e2, 0).unwrap();
+        let want = get_logits(&s2.compiled.graph, &s2.store);
+        assert_eq!(got, want);
     }
 }

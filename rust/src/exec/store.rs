@@ -1,80 +1,464 @@
-//! Tensor store for the real-numerics path.
+//! Tensor arena for the real-numerics path — a memory-model note.
 //!
-//! One host buffer per computation-graph tensor (weights, activations,
-//! KV caches), each behind its own mutex. Tasks hold a lock only while
-//! memcpy-ing a tile in or out — the actual math happens in the PJRT
-//! pool — so contention stays negligible at tiny-model scale. Buffers
-//! are f32 throughout; integer tensors (token ids) store exact small
-//! ints and are converted at the artifact boundary.
+//! # Layout
+//!
+//! All of a graph's tensors live in **one contiguous `f32` slab** with a
+//! per-tensor offset table ([`TensorStore::new`] packs them in id
+//! order). Tensors may instead be *aliased* into a [`SharedSlab`] owned
+//! outside the store ([`TensorStore::new_with_aliases`]) — the serving
+//! engine uses this to point every batch-size-specialized session's KV
+//! cache tensors at one shared max-batch KV arena, so a request's cache
+//! rows never move when the engine switches specializations.
+//!
+//! # Who may read or write, and when
+//!
+//! There are **no per-access locks**. Synchronization is inherited from
+//! the compiled graph: the MPK compiler introduces an event edge between
+//! two tasks whenever a producer's output region overlaps a consumer's
+//! input region (§4.1), and the in-kernel runtime only launches a task
+//! once every dependent event has activated (§5). Event activation uses
+//! acquire/release atomics, so a writer's stores happen-before every
+//! reader that the graph orders after it. The aliasing contract is
+//! therefore:
+//!
+//! * A region may be written by at most one in-flight task; concurrent
+//!   tasks writing the same tensor must write **disjoint** regions
+//!   (operator decomposition partitions outputs into disjoint tiles).
+//! * A region may be read concurrently by any number of tasks, provided
+//!   no in-flight task writes an overlapping region. The event graph's
+//!   writer-before-reader edges establish exactly this.
+//! * Host-side staging (weight init, per-iteration token ids, logits
+//!   harvest, KV slot remaps) runs only while the kernel is quiesced —
+//!   the persistent kernel's `run()` does not return mid-epoch, so the
+//!   single-threaded engine loop never races the workers.
+//!
+//! Under that contract, borrowed views ([`TensorStore::view`],
+//! [`TileView`]) are sound: every `unsafe` block in this module reduces
+//! to "reads and writes that the event graph orders or keeps disjoint",
+//! and the raw-pointer slab means disjoint concurrent accesses touch
+//! disjoint memory locations — no Rust reference is ever constructed
+//! over a region another thread may mutate.
+//!
+//! This module is the **only** place allowed to dereference the slab;
+//! keep every `unsafe` here so it stays auditable (the tier-1 script
+//! runs `cargo miri test` over this module when miri is installed).
+//!
+//! # Debug assertions
+//!
+//! In debug builds every tile-granular operation registers its region
+//! in an in-flight table for the duration of the call (and for the
+//! lifetime of a [`TileView`]); a write overlapping any in-flight
+//! access, or any access overlapping an in-flight write, panics with
+//! both regions. Whole-tensor [`TensorStore::view`] borrows are
+//! deliberately untracked, and the slices returned by
+//! [`TensorStore::view_region`] are tracked only for the duration of
+//! the call that creates them — their soundness past that point is the
+//! event graph's responsibility — so the checker is a race *detector*
+//! for the tiled hot path, not a proof.
+//!
+//! # Counters
+//!
+//! The store counts read-side materializations: `allocs` (fresh `Vec`
+//! returned by [`TensorStore::get`] / [`TensorStore::read_tile`]) and
+//! `bytes_copied` (those reads plus [`TensorStore::copy_tile_from`]
+//! migrations). Writes that land results in the arena (`set`,
+//! `write_tile`) are not copies *of* a tensor and are not counted. The
+//! borrowed-view hot path keeps both counters at zero — asserted by
+//! `benches/hotpath_micro.rs` and the steady-state serving test.
 
 use crate::ops::{CompGraph, Region, TensorId};
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+#[cfg(debug_assertions)]
 use std::sync::Mutex;
 
-/// Named f32 buffers, indexed by graph tensor id.
+/// Maximum tensor rank the run walker supports (stack-allocated state —
+/// the tile hot path performs no heap allocation).
+const MAX_RANK: usize = 8;
+
+/// A raw `f32` slab. All access goes through the pointer; no Rust
+/// reference to the whole buffer is ever created after construction, so
+/// disjoint concurrent reads/writes are data-race-free plain memory
+/// operations.
+struct ArenaBuf {
+    ptr: *mut f32,
+    len: usize,
+}
+
+impl ArenaBuf {
+    fn new(len: usize) -> ArenaBuf {
+        let boxed: Box<[f32]> = vec![0.0f32; len].into_boxed_slice();
+        ArenaBuf { ptr: Box::into_raw(boxed) as *mut f32, len }
+    }
+}
+
+impl Drop for ArenaBuf {
+    fn drop(&mut self) {
+        // SAFETY: `ptr`/`len` came from `Box::into_raw` of a boxed slice
+        // of exactly `len` elements and are dropped exactly once.
+        unsafe {
+            drop(Box::from_raw(std::ptr::slice_from_raw_parts_mut(self.ptr, self.len)));
+        }
+    }
+}
+
+// SAFETY: the slab is plain `f32` storage; all mutation goes through raw
+// pointers under the aliasing contract in the module doc.
+unsafe impl Send for ArenaBuf {}
+unsafe impl Sync for ArenaBuf {}
+
+/// A reference-counted slab shared between stores — the backing memory
+/// of the serving engine's max-batch KV arena. Cloning the handle
+/// aliases the same memory.
+#[derive(Clone)]
+pub struct SharedSlab {
+    buf: Arc<ArenaBuf>,
+}
+
+impl SharedSlab {
+    /// Zero-initialized shared slab of `len` f32 elements.
+    pub fn new(len: usize) -> SharedSlab {
+        SharedSlab { buf: Arc::new(ArenaBuf::new(len)) }
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.len == 0
+    }
+
+    /// True if both handles alias the same memory.
+    pub fn same_slab(&self, other: &SharedSlab) -> bool {
+        Arc::ptr_eq(&self.buf, &other.buf)
+    }
+
+    /// Contiguous element copy within the slab — the KV-arena slot
+    /// remap primitive (a single memcpy per layer tensor). Ranges must
+    /// be disjoint and in bounds.
+    pub fn copy_within(&self, src: usize, dst: usize, len: usize) {
+        assert!(
+            src + len <= self.buf.len && dst + len <= self.buf.len,
+            "SharedSlab::copy_within out of bounds"
+        );
+        assert!(
+            src + len <= dst || dst + len <= src,
+            "SharedSlab::copy_within requires disjoint ranges"
+        );
+        // SAFETY: in-bounds (asserted) and disjoint (asserted); callers
+        // only move slots while the kernel is quiesced (module doc).
+        unsafe {
+            std::ptr::copy_nonoverlapping(self.buf.ptr.add(src), self.buf.ptr.add(dst), len);
+        }
+    }
+
+    /// Copy a range out (tests/diagnostics; not a hot-path API).
+    pub fn read(&self, off: usize, len: usize) -> Vec<f32> {
+        assert!(off + len <= self.buf.len, "SharedSlab::read out of bounds");
+        // SAFETY: in bounds; read-only snapshot under the contract.
+        unsafe { std::slice::from_raw_parts(self.buf.ptr.add(off), len).to_vec() }
+    }
+
+    /// Copy a range in (host staging while the kernel is quiesced).
+    pub fn write(&self, off: usize, data: &[f32]) {
+        assert!(off + data.len() <= self.buf.len, "SharedSlab::write out of bounds");
+        // SAFETY: in bounds; staging writes run only while no kernel
+        // task is in flight (module doc).
+        unsafe { std::ptr::copy(data.as_ptr(), self.buf.ptr.add(off), data.len()) }
+    }
+}
+
+/// Per-tensor placement: which slab, at what element offset.
+struct TensorEntry {
+    slab: usize,
+    offset: usize,
+    shape: Vec<usize>,
+    numel: usize,
+}
+
+/// Read-side materialization counters (atomics; see module doc).
+#[derive(Default)]
+struct Counters {
+    allocs: AtomicU64,
+    bytes_copied: AtomicU64,
+}
+
+/// Plain-data snapshot of the store counters.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct StoreCounters {
+    /// Buffers allocated to materialize reads (`get` / `read_tile`).
+    pub allocs: u64,
+    /// Bytes memcpy'd by owned reads and `copy_tile_from` migrations.
+    pub bytes_copied: u64,
+}
+
+#[cfg(debug_assertions)]
+struct InflightAccess {
+    id: u64,
+    t: TensorId,
+    region: Region,
+    write: bool,
+}
+
+/// Debug-build token for an in-flight tile access; deregisters on drop.
+/// Zero-sized in release builds.
+pub struct AccessGuard<'a> {
+    #[cfg(debug_assertions)]
+    store: &'a TensorStore,
+    #[cfg(debug_assertions)]
+    id: u64,
+    #[cfg(not(debug_assertions))]
+    _p: std::marker::PhantomData<&'a TensorStore>,
+}
+
+impl Drop for AccessGuard<'_> {
+    fn drop(&mut self) {
+        #[cfg(debug_assertions)]
+        {
+            let mut g = self.store.inflight.lock().unwrap_or_else(|p| p.into_inner());
+            if let Some(pos) = g.iter().position(|e| e.id == self.id) {
+                g.swap_remove(pos);
+            }
+        }
+    }
+}
+
+/// Flat-arena tensor storage, indexed by graph tensor id.
 pub struct TensorStore {
-    bufs: Vec<Mutex<Vec<f32>>>,
-    shapes: Vec<Vec<usize>>,
+    /// `slabs[0]` is the store's own packed slab; further entries are
+    /// shared slabs aliased in at construction (the KV arena).
+    slabs: Vec<Arc<ArenaBuf>>,
+    entries: Vec<TensorEntry>,
+    counters: Counters,
+    #[cfg(debug_assertions)]
+    inflight: Mutex<Vec<InflightAccess>>,
+    #[cfg(debug_assertions)]
+    next_access: AtomicU64,
 }
 
 impl TensorStore {
-    /// Zero-initialized buffers for every tensor of `g`.
+    /// Zero-initialized arena holding every tensor of `g`.
     pub fn new(g: &CompGraph) -> Self {
+        Self::new_with_aliases(g, Vec::new())
+    }
+
+    /// Arena where the listed tensors alias external [`SharedSlab`]s at
+    /// the given element offsets instead of living in the store's own
+    /// slab. The aliased spans must fit their slabs; distinct aliased
+    /// tensors must not overlap (the engine maps each KV tensor to its
+    /// own arena segment).
+    pub fn new_with_aliases(g: &CompGraph, aliases: Vec<(TensorId, SharedSlab, usize)>) -> Self {
+        let alias_map: HashMap<TensorId, (SharedSlab, usize)> =
+            aliases.into_iter().map(|(t, s, o)| (t, (s, o))).collect();
+        let mut shared: Vec<SharedSlab> = Vec::new();
+        let mut entries = Vec::with_capacity(g.tensors.len());
+        let mut own_len = 0usize;
+        for t in &g.tensors {
+            let numel = t.numel();
+            if let Some((slab, offset)) = alias_map.get(&t.id) {
+                assert!(
+                    offset + numel <= slab.len(),
+                    "aliased tensor {} ({} elems at offset {offset}) exceeds shared slab ({})",
+                    t.id,
+                    numel,
+                    slab.len()
+                );
+                let idx = match shared.iter().position(|s| s.same_slab(slab)) {
+                    Some(i) => i,
+                    None => {
+                        shared.push(slab.clone());
+                        shared.len() - 1
+                    }
+                };
+                entries.push(TensorEntry {
+                    slab: idx + 1,
+                    offset: *offset,
+                    shape: t.shape.clone(),
+                    numel,
+                });
+            } else {
+                entries.push(TensorEntry {
+                    slab: 0,
+                    offset: own_len,
+                    shape: t.shape.clone(),
+                    numel,
+                });
+                own_len += numel;
+            }
+        }
+        let mut slabs = Vec::with_capacity(1 + shared.len());
+        slabs.push(Arc::new(ArenaBuf::new(own_len)));
+        slabs.extend(shared.into_iter().map(|s| s.buf));
         TensorStore {
-            bufs: g.tensors.iter().map(|t| Mutex::new(vec![0.0; t.numel()])).collect(),
-            shapes: g.tensors.iter().map(|t| t.shape.clone()).collect(),
+            slabs,
+            entries,
+            counters: Counters::default(),
+            #[cfg(debug_assertions)]
+            inflight: Mutex::new(Vec::new()),
+            #[cfg(debug_assertions)]
+            next_access: AtomicU64::new(0),
         }
     }
 
     pub fn shape(&self, t: TensorId) -> &[usize] {
-        &self.shapes[t]
+        &self.entries[t].shape
     }
 
-    /// Replace the whole buffer.
-    pub fn set(&self, t: TensorId, data: Vec<f32>) {
-        let mut b = self.bufs[t].lock().unwrap();
-        assert_eq!(b.len(), data.len(), "tensor {t} size mismatch");
-        *b = data;
+    pub fn numel(&self, t: TensorId) -> usize {
+        self.entries[t].numel
     }
 
-    /// Copy of the whole buffer.
+    /// Snapshot of the read-side materialization counters.
+    pub fn counters(&self) -> StoreCounters {
+        StoreCounters {
+            allocs: self.counters.allocs.load(Ordering::Relaxed),
+            bytes_copied: self.counters.bytes_copied.load(Ordering::Relaxed),
+        }
+    }
+
+    pub fn reset_counters(&self) {
+        self.counters.allocs.store(0, Ordering::Relaxed);
+        self.counters.bytes_copied.store(0, Ordering::Relaxed);
+    }
+
+    fn base_ptr(&self, t: TensorId) -> *mut f32 {
+        let e = &self.entries[t];
+        // SAFETY: `offset + numel <= slab.len` by construction; the
+        // pointer stays within the slab allocation.
+        unsafe { self.slabs[e.slab].ptr.add(e.offset) }
+    }
+
+    /// Register an access in the debug in-flight table, panicking on a
+    /// write/any or any/write overlap. No-op in release builds.
+    #[allow(unused_variables)]
+    fn track(&self, t: TensorId, region: &Region, write: bool) -> AccessGuard<'_> {
+        #[cfg(debug_assertions)]
+        {
+            let mut g = self.inflight.lock().unwrap_or_else(|p| p.into_inner());
+            for e in g.iter() {
+                if e.t == t && (write || e.write) && e.region.overlaps(region) {
+                    panic!(
+                        "arena aliasing violation on tensor {t}: {} {region} overlaps in-flight {} {}",
+                        if write { "write" } else { "read" },
+                        if e.write { "write" } else { "read" },
+                        e.region,
+                    );
+                }
+            }
+            let id = self.next_access.fetch_add(1, Ordering::Relaxed);
+            g.push(InflightAccess { id, t, region: region.clone(), write });
+            drop(g);
+            return AccessGuard { store: self, id };
+        }
+        #[cfg(not(debug_assertions))]
+        {
+            AccessGuard { _p: std::marker::PhantomData }
+        }
+    }
+
+    /// Borrow the whole tensor, zero-copy. Sound under the module-doc
+    /// contract: the caller's task must be ordered after every writer of
+    /// this tensor by the event graph (untracked even in debug builds).
+    pub fn view(&self, t: TensorId) -> &[f32] {
+        let e = &self.entries[t];
+        // SAFETY: in-bounds span; no in-flight writer overlaps per the
+        // aliasing contract.
+        unsafe { std::slice::from_raw_parts(self.base_ptr(t), e.numel) }
+    }
+
+    /// Borrow an axis-aligned tile as a strided view (no copy). The view
+    /// is registered as an in-flight read in debug builds for its whole
+    /// lifetime.
+    pub fn tile<'s, 'r>(&'s self, t: TensorId, r: &'r Region) -> TileView<'s, 'r> {
+        let e = &self.entries[t];
+        check_region(&e.shape, r, t);
+        let guard = self.track(t, r, false);
+        TileView { store: self, t, region: r, run: run_len(r), _guard: guard }
+    }
+
+    /// Borrow a tile that is contiguous in the row-major layout (leading
+    /// unit dims, one free dim, full trailing dims) as a plain slice.
+    /// Panics if the region is strided — the binder uses this for the
+    /// per-row attention/KV slices that are contiguous by construction.
+    /// Debug builds register a *call-scoped* read (an in-flight
+    /// overlapping write at creation time panics); the returned slice
+    /// itself is untracked, like [`TensorStore::view`].
+    pub fn view_region(&self, t: TensorId, r: &Region) -> &[f32] {
+        let e = &self.entries[t];
+        check_region(&e.shape, r, t);
+        let _g = self.track(t, r, false);
+        let (start, len) = contiguous_span(&e.shape, r)
+            .unwrap_or_else(|| panic!("region {r} of tensor {t} is not contiguous"));
+        // SAFETY: `start + len` lies within the tensor span (region is
+        // bounds-checked); aliasing per the module contract.
+        unsafe { std::slice::from_raw_parts(self.base_ptr(t).add(start), len) }
+    }
+
+    /// Overwrite the whole tensor from a slice (host staging: weights,
+    /// token ids). Not counted as a copy — results/staging must land in
+    /// the arena.
+    pub fn set(&self, t: TensorId, data: &[f32]) {
+        let e = &self.entries[t];
+        assert_eq!(e.numel, data.len(), "tensor {t} size mismatch");
+        let full = Region::full(&e.shape);
+        let _g = self.track(t, &full, true);
+        // SAFETY: exact-span write; `copy` (memmove) tolerates a caller
+        // passing a view of this very tensor.
+        unsafe { std::ptr::copy(data.as_ptr(), self.base_ptr(t), data.len()) }
+    }
+
+    /// Copy of the whole buffer (validation/harvest paths — counted).
     pub fn get(&self, t: TensorId) -> Vec<f32> {
-        self.bufs[t].lock().unwrap().clone()
+        self.counters.allocs.fetch_add(1, Ordering::Relaxed);
+        self.counters
+            .bytes_copied
+            .fetch_add((self.entries[t].numel * 4) as u64, Ordering::Relaxed);
+        self.view(t).to_vec()
     }
 
-    /// Copy out an axis-aligned tile.
+    /// Copy out an axis-aligned tile into a fresh `Vec` (counted). The
+    /// hot path uses [`TensorStore::tile`] / [`TensorStore::view_region`]
+    /// instead.
     pub fn read_tile(&self, t: TensorId, r: &Region) -> Vec<f32> {
-        let shape = &self.shapes[t];
-        assert_eq!(r.rank(), shape.len(), "tile rank mismatch for tensor {t}");
-        let buf = self.bufs[t].lock().unwrap();
-        let mut out = Vec::with_capacity(r.numel());
-        copy_region(&buf, shape, r, &mut |src| out.extend_from_slice(src));
-        out
+        self.counters.allocs.fetch_add(1, Ordering::Relaxed);
+        self.counters.bytes_copied.fetch_add((r.numel() * 4) as u64, Ordering::Relaxed);
+        self.tile(t, r).to_vec()
     }
 
     /// Copy a tile in (row-major within the tile).
     pub fn write_tile(&self, t: TensorId, r: &Region, data: &[f32]) {
-        let shape = self.shapes[t].clone();
+        let e = &self.entries[t];
+        check_region(&e.shape, r, t);
         assert_eq!(r.numel(), data.len(), "tile data size mismatch for tensor {t}");
-        let mut buf = self.bufs[t].lock().unwrap();
-        let mut offset = 0;
-        write_region(&mut buf, &shape, r, &mut |dst| {
-            dst.copy_from_slice(&data[offset..offset + dst.len()]);
-            offset += dst.len();
+        if r.is_empty() {
+            return;
+        }
+        let _g = self.track(t, r, true);
+        let run = run_len(r);
+        let base = self.base_ptr(t);
+        let mut off = 0usize;
+        for_each_run(&e.shape, r, &mut |b| {
+            // SAFETY: `b + run` is inside the tensor span (region is
+            // bounds-checked); `copy` tolerates `data` borrowing another
+            // region of the same slab (KvAppend copies qkv → cache).
+            unsafe { std::ptr::copy(data.as_ptr().add(off), base.add(b), run) };
+            off += run;
         });
     }
 
-    /// Copy a tile directly from another tensor into this one, run by
-    /// run, without materializing the tile in between — the KV
-    /// migration path for slot remaps, both across batch-size-
-    /// specialized session stores and within one store's cache tensor.
-    ///
-    /// Panics if the regions' per-dimension extents differ, or if
-    /// source and destination are the same tensor with *overlapping*
-    /// regions (slot moves are always disjoint). For distinct tensors
-    /// it locks source then destination: callers copying concurrently
-    /// in opposite directions between the same pair of tensors could
-    /// deadlock — the serving engine only migrates from the
-    /// single-threaded staging phase.
+    /// Copy a tile from another tensor into this one (counted as
+    /// migration bytes). Panics if the regions' per-dimension extents
+    /// differ, or if source and destination are the same tensor with
+    /// *overlapping* regions (slot moves are always disjoint — kept as
+    /// a contract even though the buffered implementation would
+    /// tolerate overlap). This is a **cold host-staging path** built on
+    /// the safe tile primitives — materialize, then write — so it adds
+    /// no unsafe surface and is trivially correct for tensors aliasing
+    /// the same [`SharedSlab`]; the serving engine's hot KV slot remaps
+    /// go through [`SharedSlab::copy_within`] instead.
     pub fn copy_tile_from(
         &self,
         t: TensorId,
@@ -87,11 +471,10 @@ impl TensorStore {
         for (d, (a, b)) in r.dims.iter().zip(src_r.dims.iter()).enumerate() {
             assert_eq!(a.1 - a.0, b.1 - b.0, "extent mismatch in dim {d}");
         }
-        let run = run_len(r);
+        if r.is_empty() {
+            return;
+        }
         if std::ptr::eq(self, src) && t == src_t {
-            // intra-tensor move (slot compaction): one lock, run-wise
-            // copy_within. Axis-aligned regions are disjoint iff the
-            // ranges of some dimension are.
             assert!(
                 r.dims
                     .iter()
@@ -99,25 +482,83 @@ impl TensorStore {
                     .any(|(&(d0, d1), &(s0, s1))| d1 <= s0 || s1 <= d0),
                 "same-tensor copy_tile_from requires disjoint regions"
             );
-            let mut src_bases = Vec::new();
-            for_each_run(&self.shapes[t], src_r, &mut |b| src_bases.push(b));
-            let mut buf = self.bufs[t].lock().unwrap();
-            let mut i = 0;
-            for_each_run(&self.shapes[t], r, &mut |b| {
-                buf.copy_within(src_bases[i]..src_bases[i] + run, b);
-                i += 1;
-            });
+        }
+        self.counters.bytes_copied.fetch_add((r.numel() * 4) as u64, Ordering::Relaxed);
+        let data = src.tile(src_t, src_r).to_vec();
+        self.write_tile(t, r, &data);
+    }
+}
+
+/// Strided, zero-copy view over an axis-aligned tile.
+pub struct TileView<'s, 'r> {
+    store: &'s TensorStore,
+    t: TensorId,
+    region: &'r Region,
+    run: usize,
+    _guard: AccessGuard<'s>,
+}
+
+impl<'s> TileView<'s, '_> {
+    pub fn numel(&self) -> usize {
+        self.region.numel()
+    }
+
+    /// Length of the contiguous innermost run.
+    pub fn run_len(&self) -> usize {
+        self.run
+    }
+
+    /// Visit each contiguous innermost run as a borrowed slice, in
+    /// region row-major order. No heap allocation.
+    pub fn for_each_run(&self, f: &mut impl FnMut(&[f32])) {
+        if self.region.is_empty() {
             return;
         }
-        let mut dst_bases = Vec::new();
-        for_each_run(&self.shapes[t], r, &mut |b| dst_bases.push(b));
-        let src_buf = src.bufs[src_t].lock().unwrap();
-        let mut dst_buf = self.bufs[t].lock().unwrap();
-        let mut i = 0;
-        for_each_run(&src.shapes[src_t], src_r, &mut |b| {
-            dst_buf[dst_bases[i]..dst_bases[i] + run].copy_from_slice(&src_buf[b..b + run]);
-            i += 1;
+        let shape = &self.store.entries[self.t].shape;
+        let base = self.store.base_ptr(self.t);
+        let run = self.run;
+        for_each_run(shape, self.region, &mut |b| {
+            // SAFETY: run bounds-checked at construction; read-only
+            // under the aliasing contract.
+            f(unsafe { std::slice::from_raw_parts(base.add(b), run) });
         });
+    }
+
+    /// Gather the tile into a reusable buffer (cleared first). After
+    /// warm-up the buffer's capacity suffices and this performs zero
+    /// allocations — the per-worker scratch path in the binder.
+    pub fn gather_into(&self, out: &mut Vec<f32>) {
+        out.clear();
+        out.reserve(self.numel());
+        self.for_each_run(&mut |r| out.extend_from_slice(r));
+    }
+
+    /// Materialize into a fresh `Vec` (cold paths).
+    pub fn to_vec(&self) -> Vec<f32> {
+        let mut v = Vec::with_capacity(self.numel());
+        self.for_each_run(&mut |r| v.extend_from_slice(r));
+        v
+    }
+
+    /// The tile as one borrowed slice, if it is contiguous in the
+    /// tensor's row-major layout. The slice borrows the *store* (not
+    /// this view), so it may outlive the view's debug read-tracking.
+    pub fn as_slice(&self) -> Option<&'s [f32]> {
+        let shape = &self.store.entries[self.t].shape;
+        contiguous_span(shape, self.region).map(|(start, len)| {
+            // SAFETY: span is inside the tensor (bounds-checked at
+            // construction); aliasing per the module contract.
+            unsafe { std::slice::from_raw_parts(self.store.base_ptr(self.t).add(start), len) }
+        })
+    }
+}
+
+/// Panic unless `r` is a well-formed region inside `shape`.
+fn check_region(shape: &[usize], r: &Region, t: TensorId) {
+    assert_eq!(r.rank(), shape.len(), "tile rank mismatch for tensor {t}");
+    assert!(r.rank() >= 1 && r.rank() <= MAX_RANK, "unsupported rank {} for tensor {t}", r.rank());
+    for (d, &(s, e)) in r.dims.iter().enumerate() {
+        assert!(s <= e && e <= shape[d], "region {r} out of bounds in dim {d} for tensor {t}");
     }
 }
 
@@ -127,20 +568,51 @@ fn run_len(region: &Region) -> usize {
     e - s
 }
 
+/// `Some((start_offset, len))` if `region` maps to one contiguous
+/// row-major span of its tensor: any leading unit-extent dims, then at
+/// most one free dim, then full trailing dims.
+fn contiguous_span(shape: &[usize], region: &Region) -> Option<(usize, usize)> {
+    let rank = shape.len();
+    let mut d = 0;
+    while d < rank && region.extent(d) == 1 {
+        d += 1;
+    }
+    for q in (d + 1)..rank {
+        if region.dims[q] != (0, shape[q]) {
+            return None;
+        }
+    }
+    let mut start = 0usize;
+    let mut stride = 1usize;
+    for q in (0..rank).rev() {
+        start += region.dims[q].0 * stride;
+        stride *= shape[q];
+    }
+    Some((start, region.numel()))
+}
+
 /// Call `f(base)` with the row-major start offset of each contiguous
 /// innermost run of `region` within a buffer of `shape`, in region
-/// row-major order.
+/// row-major order. Stack state only (rank ≤ [`MAX_RANK`]) — the tile
+/// hot path allocates nothing.
 fn for_each_run(shape: &[usize], region: &Region, f: &mut impl FnMut(usize)) {
     let rank = shape.len();
-    let (last_s, _) = region.dims[rank - 1];
-    let mut strides = vec![1usize; rank];
-    for d in (0..rank - 1).rev() {
+    debug_assert!(rank >= 1 && rank <= MAX_RANK);
+    if region.is_empty() {
+        return;
+    }
+    let mut strides = [1usize; MAX_RANK];
+    for d in (0..rank.saturating_sub(1)).rev() {
         strides[d] = strides[d + 1] * shape[d + 1];
     }
-    let mut idx: Vec<usize> = region.dims[..rank - 1].iter().map(|&(s, _)| s).collect();
+    let (last_s, _) = region.dims[rank - 1];
+    let mut idx = [0usize; MAX_RANK];
+    for d in 0..rank - 1 {
+        idx[d] = region.dims[d].0;
+    }
     loop {
         let base: usize =
-            idx.iter().zip(&strides[..rank - 1]).map(|(&i, &st)| i * st).sum::<usize>() + last_s;
+            (0..rank - 1).map(|d| idx[d] * strides[d]).sum::<usize>() + last_s;
         f(base);
         // advance multi-index over the outer dims.
         let mut d = rank.wrapping_sub(2);
@@ -156,18 +628,6 @@ fn for_each_run(shape: &[usize], region: &Region, f: &mut impl FnMut(usize)) {
             d = d.wrapping_sub(1);
         }
     }
-}
-
-/// Walk the contiguous innermost runs of `region` within a row-major
-/// buffer of `shape`, calling `f` with each source slice.
-fn copy_region(buf: &[f32], shape: &[usize], region: &Region, f: &mut impl FnMut(&[f32])) {
-    let run = run_len(region);
-    for_each_run(shape, region, &mut |base| f(&buf[base..base + run]));
-}
-
-fn write_region(buf: &mut [f32], shape: &[usize], region: &Region, f: &mut impl FnMut(&mut [f32])) {
-    let run = run_len(region);
-    for_each_run(shape, region, &mut |base| f(&mut buf[base..base + run]));
 }
 
 #[cfg(test)]
@@ -187,17 +647,25 @@ mod tests {
     fn whole_tensor_roundtrip() {
         let (s, t) = store_2d();
         let data: Vec<f32> = (0..24).map(|i| i as f32).collect();
-        s.set(t, data.clone());
+        s.set(t, &data);
         assert_eq!(s.get(t), data);
+        assert_eq!(s.view(t), &data[..]);
     }
 
     #[test]
     fn tile_read_matches_manual_slice() {
         let (s, t) = store_2d();
-        s.set(t, (0..24).map(|i| i as f32).collect());
+        s.set(t, &(0..24).map(|i| i as f32).collect::<Vec<_>>());
         // rows 1..3, cols 2..5 of a 4x6 row-major buffer
         let tile = s.read_tile(t, &Region::new(vec![(1, 3), (2, 5)]));
         assert_eq!(tile, vec![8.0, 9.0, 10.0, 14.0, 15.0, 16.0]);
+        // borrowed view gathers the same data without counting an alloc.
+        s.reset_counters();
+        let r = Region::new(vec![(1, 3), (2, 5)]);
+        let mut buf = Vec::new();
+        s.tile(t, &r).gather_into(&mut buf);
+        assert_eq!(buf, tile);
+        assert_eq!(s.counters(), StoreCounters::default());
     }
 
     #[test]
@@ -215,7 +683,7 @@ mod tests {
         let mut g = CompGraph::new();
         let t = g.input("c", vec![2, 3, 4], DType::F32);
         let s = TensorStore::new(&g);
-        s.set(t, (0..24).map(|i| i as f32).collect());
+        s.set(t, &(0..24).map(|i| i as f32).collect::<Vec<_>>());
         // [1:2, 0:3, 1:3]
         let tile = s.read_tile(t, &Region::new(vec![(1, 2), (0, 3), (1, 3)]));
         assert_eq!(tile, vec![13.0, 14.0, 17.0, 18.0, 21.0, 22.0]);
@@ -226,13 +694,40 @@ mod tests {
     }
 
     #[test]
+    fn contiguous_view_region() {
+        let mut g = CompGraph::new();
+        let t = g.input("kc", vec![4, 8, 2], DType::F32);
+        let s = TensorStore::new(&g);
+        s.set(t, &(0..64).map(|i| i as f32).collect::<Vec<_>>());
+        // one full slot: [2:3, 0:8, 0:2] is contiguous.
+        let v = s.view_region(t, &Region::new(vec![(2, 3), (0, 8), (0, 2)]));
+        assert_eq!(v, (32..48).map(|i| i as f32).collect::<Vec<_>>());
+        // one cache row: [1:2, 3:4, 0:2] is contiguous.
+        let v = s.view_region(t, &Region::new(vec![(1, 2), (3, 4), (0, 2)]));
+        assert_eq!(v, vec![22.0, 23.0]);
+        // leading free dim over full trailing dims is contiguous too.
+        let v = s.view_region(t, &Region::new(vec![(1, 3), (0, 8), (0, 2)]));
+        assert_eq!(v.len(), 32);
+        // a strided tile is not.
+        let r = Region::new(vec![(0, 2), (1, 3), (0, 2)]);
+        assert!(s.tile(t, &r).as_slice().is_none());
+    }
+
+    #[test]
+    #[should_panic(expected = "not contiguous")]
+    fn strided_view_region_panics() {
+        let (s, t) = store_2d();
+        s.view_region(t, &Region::new(vec![(0, 2), (1, 3)]));
+    }
+
+    #[test]
     fn copy_tile_from_between_stores() {
         // two stores with different batch dims, as in KV migration
         // between batch-size-specialized sessions.
         let mut g_src = CompGraph::new();
         let ts = g_src.input("kc", vec![2, 4, 3], DType::F32);
         let src = TensorStore::new(&g_src);
-        src.set(ts, (0..24).map(|i| i as f32).collect());
+        src.set(ts, &(0..24).map(|i| i as f32).collect::<Vec<_>>());
 
         let mut g_dst = CompGraph::new();
         let td = g_dst.input("kc", vec![4, 4, 3], DType::F32);
@@ -260,7 +755,7 @@ mod tests {
         let a = g.input("a", vec![2, 6], DType::F32);
         let b = g.input("b", vec![2, 6], DType::F32);
         let s = TensorStore::new(&g);
-        s.set(a, (0..12).map(|i| i as f32).collect());
+        s.set(a, &(0..12).map(|i| i as f32).collect::<Vec<_>>());
         s.copy_tile_from(b, &Region::new(vec![(0, 2), (0, 6)]), &s, a, &Region::new(vec![(0, 2), (0, 6)]));
         assert_eq!(s.get(b), s.get(a));
     }
@@ -271,7 +766,7 @@ mod tests {
         let mut g = CompGraph::new();
         let t = g.input("kc", vec![3, 4, 2], DType::F32);
         let s = TensorStore::new(&g);
-        s.set(t, (0..24).map(|i| i as f32).collect());
+        s.set(t, &(0..24).map(|i| i as f32).collect::<Vec<_>>());
         let src = Region::new(vec![(2, 3), (0, 3), (0, 2)]);
         let want = s.read_tile(t, &src);
         s.copy_tile_from(t, &Region::new(vec![(0, 1), (0, 3), (0, 2)]), &s, t, &src);
@@ -308,5 +803,83 @@ mod tests {
             let tile = s.read_tile(t, &Region::new(vec![(row, row + 1), (0, 6)]));
             assert_eq!(tile, vec![row as f32; 6]);
         }
+    }
+
+    #[test]
+    fn counters_track_owned_reads_only() {
+        let (s, t) = store_2d();
+        s.set(t, &[1.0; 24]);
+        assert_eq!(s.counters(), StoreCounters::default(), "set must not count");
+        let _ = s.view(t);
+        let r = Region::new(vec![(0, 2), (0, 6)]);
+        let v = s.tile(t, &r);
+        let mut acc = 0.0;
+        v.for_each_run(&mut |run| acc += run.iter().sum::<f32>());
+        drop(v);
+        assert_eq!(acc, 12.0);
+        assert_eq!(s.counters(), StoreCounters::default(), "views must not count");
+        let _ = s.get(t);
+        let _ = s.read_tile(t, &r);
+        let c = s.counters();
+        assert_eq!(c.allocs, 2);
+        assert_eq!(c.bytes_copied, (24 + 12) * 4);
+        s.reset_counters();
+        assert_eq!(s.counters(), StoreCounters::default());
+    }
+
+    #[test]
+    fn shared_slab_aliases_across_stores() {
+        // two "sessions" with different batch dims aliasing one KV slab:
+        // writes through one store are visible through the other, and
+        // the small store's tensor is a prefix of the big one's.
+        let slab = SharedSlab::new(4 * 4 * 2); // 4 slots × 4 rows × kv_dim 2
+        let mut g_small = CompGraph::new();
+        let ts = g_small.input("kc", vec![2, 4, 2], DType::F32);
+        let small = TensorStore::new_with_aliases(&g_small, vec![(ts, slab.clone(), 0)]);
+        let mut g_big = CompGraph::new();
+        let tb = g_big.input("kc", vec![4, 4, 2], DType::F32);
+        let big = TensorStore::new_with_aliases(&g_big, vec![(tb, slab.clone(), 0)]);
+
+        small.write_tile(ts, &Region::new(vec![(1, 2), (0, 1), (0, 2)]), &[7.0, 8.0]);
+        assert_eq!(
+            big.read_tile(tb, &Region::new(vec![(1, 2), (0, 1), (0, 2)])),
+            vec![7.0, 8.0]
+        );
+        // slot remap = one contiguous memmove on the slab: slot 1 → 3.
+        slab.copy_within(8, 24, 8);
+        assert_eq!(
+            big.read_tile(tb, &Region::new(vec![(3, 4), (0, 1), (0, 2)])),
+            vec![7.0, 8.0]
+        );
+        // the small store never sees slots beyond its batch dim.
+        assert_eq!(small.numel(ts), 16);
+        assert_eq!(big.numel(tb), 32);
+    }
+
+    #[test]
+    #[should_panic(expected = "exceeds shared slab")]
+    fn oversized_alias_rejected() {
+        let slab = SharedSlab::new(4);
+        let mut g = CompGraph::new();
+        let t = g.input("kc", vec![2, 4], DType::F32);
+        let _ = TensorStore::new_with_aliases(&g, vec![(t, slab, 0)]);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of bounds")]
+    fn out_of_bounds_region_rejected() {
+        let (s, t) = store_2d();
+        s.write_tile(t, &Region::new(vec![(0, 5), (0, 6)]), &[0.0; 30]);
+    }
+
+    #[cfg(debug_assertions)]
+    #[test]
+    #[should_panic(expected = "aliasing violation")]
+    fn debug_mode_catches_overlapping_write_during_read() {
+        let (s, t) = store_2d();
+        let r = Region::new(vec![(0, 2), (0, 6)]);
+        let v = s.tile(t, &r); // in-flight read
+        s.write_tile(t, &Region::new(vec![(1, 3), (0, 6)]), &[0.0; 12]);
+        drop(v);
     }
 }

@@ -4,28 +4,44 @@
 //! `execute()` clones that `Rc` per output buffer — so a client must
 //! never be shared across threads. The pool therefore runs K *executor
 //! threads, each owning its own client and its own compiled copy of
-//! every artifact*; megakernel workers submit plain `Vec<f32>`/`Vec<i32>`
-//! tensors over a channel and block on a per-request reply channel.
-//! Python is never involved: artifacts are HLO text on disk, compiled
-//! once per executor thread at pool construction.
+//! every artifact*; megakernel workers submit host tensors over a
+//! channel and block on a per-request reply channel. Python is never
+//! involved: artifacts are HLO text on disk, compiled once per executor
+//! thread at pool construction.
+//!
+//! Inputs may be **borrowed** ([`Value::Borrowed`] /
+//! [`Value::BorrowedI32`]): the zero-copy hot path hands the pool
+//! slices that point straight into the `exec::store` tensor arena, so a
+//! matmul/attention task marshals no input buffer at all. Borrowed
+//! slices cross the thread boundary as raw pointer + length
+//! ([`RawValue`]); this is sound because [`ExecPool::execute`] blocks
+//! on the reply channel until the executor thread has finished building
+//! input literals and replied (or died) — the borrow outlives every
+//! read. See the safety note on `execute`.
 
 use crate::runtime::manifest::{ArgType, Manifest};
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Condvar, Mutex};
 
-/// A host tensor crossing the pool boundary.
+/// A host tensor crossing the pool boundary. Borrowed variants carry a
+/// slice borrowed from the caller (typically a tensor-arena view) for
+/// the duration of the `execute` call.
 #[derive(Clone, Debug)]
-pub enum Value {
+pub enum Value<'a> {
     F32(Vec<f32>),
     I32(Vec<i32>),
+    Borrowed(&'a [f32]),
+    BorrowedI32(&'a [i32]),
 }
 
-impl Value {
+impl Value<'_> {
     pub fn len(&self) -> usize {
         match self {
             Value::F32(v) => v.len(),
             Value::I32(v) => v.len(),
+            Value::Borrowed(s) => s.len(),
+            Value::BorrowedI32(s) => s.len(),
         }
     }
 
@@ -36,14 +52,40 @@ impl Value {
     pub fn as_f32(&self) -> &[f32] {
         match self {
             Value::F32(v) => v,
-            Value::I32(_) => panic!("expected f32 value"),
+            Value::Borrowed(s) => *s,
+            _ => panic!("expected f32 value"),
+        }
+    }
+}
+
+/// Lifetime-erased value stored in the request queue. Borrowed slices
+/// become raw pointer + length so no reference type crosses the channel
+/// (a reference must never dangle, even unused; a raw pointer may).
+enum RawValue {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+    BorrowedF32(*const f32, usize),
+    BorrowedI32(*const i32, usize),
+}
+
+// SAFETY: the raw pointers are only dereferenced by the executor thread
+// while the submitting thread is parked inside `execute` keeping the
+// borrow alive (see `execute`'s safety note); `f32`/`i32` data is Send.
+unsafe impl Send for RawValue {}
+
+impl RawValue {
+    fn len(&self) -> usize {
+        match self {
+            RawValue::F32(v) => v.len(),
+            RawValue::I32(v) => v.len(),
+            RawValue::BorrowedF32(_, n) | RawValue::BorrowedI32(_, n) => *n,
         }
     }
 }
 
 struct Request {
     artifact: usize,
-    inputs: Vec<Value>,
+    inputs: Vec<RawValue>,
     reply: mpsc::SyncSender<Result<Vec<Vec<f32>>, String>>,
 }
 
@@ -102,7 +144,25 @@ impl ExecPool {
     /// Execute artifact `artifact` (index into the manifest) with the
     /// given inputs; blocks until the result tuple (each element
     /// flattened to f32) is ready.
-    pub fn execute(&self, artifact: usize, inputs: Vec<Value>) -> Result<Vec<Vec<f32>>, String> {
+    ///
+    /// SAFETY (borrowed inputs): the borrowed slices are erased to raw
+    /// pointers before entering the queue. This function does not
+    /// return until `rx.recv()` resolves, which happens only after the
+    /// executor thread has (a) finished `run_one` — every read of the
+    /// inputs done — and sent the reply, or (b) died, dropping the
+    /// reply sender after its last read. Either way the caller's
+    /// borrow, which lives across this entire call, outlives every
+    /// dereference.
+    pub fn execute(&self, artifact: usize, inputs: Vec<Value<'_>>) -> Result<Vec<Vec<f32>>, String> {
+        let inputs: Vec<RawValue> = inputs
+            .into_iter()
+            .map(|v| match v {
+                Value::F32(d) => RawValue::F32(d),
+                Value::I32(d) => RawValue::I32(d),
+                Value::Borrowed(s) => RawValue::BorrowedF32(s.as_ptr(), s.len()),
+                Value::BorrowedI32(s) => RawValue::BorrowedI32(s.as_ptr(), s.len()),
+            })
+            .collect();
         let (tx, rx) = mpsc::sync_channel(1);
         {
             let mut q = self.queue.q.lock().unwrap();
@@ -113,7 +173,7 @@ impl ExecPool {
     }
 
     /// Execute by artifact name (convenience for tests/examples).
-    pub fn execute_by_name(&self, name: &str, inputs: Vec<Value>) -> Result<Vec<Vec<f32>>, String> {
+    pub fn execute_by_name(&self, name: &str, inputs: Vec<Value<'_>>) -> Result<Vec<Vec<f32>>, String> {
         let (idx, _) = self.manifest.find(name).ok_or_else(|| format!("unknown artifact {name}"))?;
         self.execute(idx, inputs)
     }
@@ -206,10 +266,21 @@ fn run_one(
         }
         let dims: Vec<i64> = s.shape.iter().map(|&d| d as i64).collect();
         let lit = match (v, s.ty) {
-            (Value::F32(data), ArgType::F32) => {
+            (RawValue::F32(data), ArgType::F32) => {
                 xla::Literal::vec1(data).reshape(&dims).map_err(|e| e.to_string())?
             }
-            (Value::I32(data), ArgType::I32) => {
+            (RawValue::I32(data), ArgType::I32) => {
+                xla::Literal::vec1(data).reshape(&dims).map_err(|e| e.to_string())?
+            }
+            (RawValue::BorrowedF32(p, n), ArgType::F32) => {
+                // SAFETY: the submitter is blocked in `execute` keeping
+                // the arena borrow alive until we reply (see there).
+                let data = unsafe { std::slice::from_raw_parts(*p, *n) };
+                xla::Literal::vec1(data).reshape(&dims).map_err(|e| e.to_string())?
+            }
+            (RawValue::BorrowedI32(p, n), ArgType::I32) => {
+                // SAFETY: as above.
+                let data = unsafe { std::slice::from_raw_parts(*p, *n) };
                 xla::Literal::vec1(data).reshape(&dims).map_err(|e| e.to_string())?
             }
             _ => return Err(format!("{}: dtype mismatch", spec.name)),
@@ -265,6 +336,23 @@ mod tests {
     }
 
     #[test]
+    fn borrowed_inputs_match_owned() {
+        let Some(p) = pool(1) else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let a = vec![3.0f32; 256];
+        let b = vec![4.0f32; 256];
+        let owned = p
+            .execute_by_name("add_b1", vec![Value::F32(a.clone()), Value::F32(b.clone())])
+            .unwrap();
+        let borrowed = p
+            .execute_by_name("add_b1", vec![Value::Borrowed(&a), Value::Borrowed(&b)])
+            .unwrap();
+        assert_eq!(owned, borrowed);
+    }
+
+    #[test]
     fn concurrent_execution_from_many_threads() {
         let Some(p) = pool(2) else {
             eprintln!("skipping: artifacts not built");
@@ -279,8 +367,11 @@ mod tests {
                         let scale = (t * 4 + i + 1) as f32;
                         let a = vec![scale; 256];
                         let b = vec![1.0f32; 256];
+                        // exercise the borrowed path under concurrency:
+                        // the submitting thread parks in `execute`
+                        // while the executor reads the slices.
                         let out = p
-                            .execute_by_name("add_b1", vec![Value::F32(a), Value::F32(b)])
+                            .execute_by_name("add_b1", vec![Value::Borrowed(&a), Value::Borrowed(&b)])
                             .unwrap();
                         for &v in &out[0] {
                             assert!((v - (scale + 1.0)).abs() < 1e-6);

@@ -1,44 +1,45 @@
 //! The serving engine: continuous batching over the real-numerics
-//! megakernel (§6.1), with a persistent runtime and resident KV.
+//! megakernel (§6.1), with a persistent runtime, resident KV, and a
+//! zero-copy decode hot path.
 //!
-//! Each batch-size specialization is a long-lived [`Session`]: the
-//! compiled graph (shared via `Arc` with its kernel), the tensor store
-//! holding weights *and the KV cache*, a [`PersistentMegaKernel`] whose
-//! worker/scheduler threads park between iterations, and tensor-id
-//! tables resolved once at creation.
+//! Each batch-size specialization is a long-lived [`Session`]: a tensor
+//! arena holding weights and activations, a [`PersistentMegaKernel`]
+//! whose worker/scheduler threads park between iterations, a resident
+//! `OwningTileExecutor`, and tensor ids resolved once at creation. All
+//! sessions alias **one shared max-batch [`KvArena`]** for their KV
+//! cache tensors: a batch-`b` graph's `l{l}.kcache` is the first `b`
+//! slots of the arena's layer segment, so switching specializations
+//! re-interprets the same memory instead of migrating rows.
 //!
 //! Per decode iteration: retire/admit (the paper's start-event task),
 //! pick the batch-size-specialized session (powers of two), reconcile
-//! KV residency — the cache lives in the `TensorStore` across
-//! iterations, so rows are copied only when a request was admitted into
-//! a different store or its slot moved during compaction — stage the
-//! input tokens, re-arm the resident kernel, then harvest logits
-//! (greedy decoding). The newly appended KV row is written in-kernel by
-//! `KvAppend`; the engine never round-trips full cache tensors.
+//! KV residency — rows move only on slot compaction after a retirement,
+//! never on a batch-size transition — stage the input tokens, re-arm
+//! the resident kernel, then harvest logits through a borrowed arena
+//! view (greedy decoding). The newly appended KV row is written
+//! in-kernel by `KvAppend`; the engine never copies a tensor on the
+//! steady-state path (asserted via the store's read-side counters).
 
-use crate::exec::binder::TileExecutor;
+use crate::exec::binder::OwningTileExecutor;
 use crate::exec::real::{self, compile_real, init_weights};
 use crate::exec::store::TensorStore;
 use crate::megakernel::{MegaConfig, PersistentMegaKernel};
-use crate::ops::{Region, TensorId};
+use crate::ops::TensorId;
 use crate::runtime::pool::ExecPool;
 use crate::runtime::Manifest;
 use crate::serving::batcher::{Batcher, Request};
-use crate::serving::kvcache::{KvAllocator, KvResidency};
-use crate::tgraph::CompiledGraph;
+use crate::serving::kvcache::{KvAllocator, KvArena, KvResidency};
 use std::collections::HashMap;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-/// One batch-size specialization: compiled graph, its tensor store
-/// (weights + resident KV), the persistent kernel, and hot-path tensor
-/// ids resolved once at creation.
+/// One batch-size specialization: tensor arena (weights + activations,
+/// KV aliased into the shared arena), the persistent kernel, the
+/// resident executor, and hot-path tensor ids resolved once at creation.
 struct Session {
-    compiled: Arc<CompiledGraph>,
-    store: TensorStore,
+    store: Arc<TensorStore>,
     kernel: PersistentMegaKernel,
-    /// Per-layer `(kcache, vcache)` tensor ids.
-    kv_ids: Vec<(TensorId, TensorId)>,
+    exec: OwningTileExecutor,
     token_ids: TensorId,
     logits: TensorId,
 }
@@ -52,10 +53,10 @@ pub struct ServeStats {
     pub iter_latencies: Vec<Duration>,
     /// Tokens in flight per iteration (batch-utilization curve).
     pub batch_sizes: Vec<usize>,
-    /// K/V rows copied between (or within) session stores on admission
-    /// or slot remap, summed over layers. Zero on a steady-state
-    /// iteration — the residency check that the hot path stages only
-    /// the in-kernel-appended row.
+    /// K/V rows moved within the shared max-batch arena on slot
+    /// compaction after a retirement, summed over layers. Zero on a
+    /// steady-state iteration — and zero across batch-size transitions,
+    /// because every specialization aliases the same arena.
     pub kv_rows_migrated: usize,
 }
 
@@ -89,88 +90,112 @@ impl ServeStats {
 /// The engine.
 pub struct ServeEngine {
     pub manifest: Manifest,
-    pool: ExecPool,
+    pool: Arc<ExecPool>,
     sessions: HashMap<usize, Session>,
     pub batcher: Batcher,
     residency: KvResidency,
+    kv_arena: KvArena,
 }
 
 impl ServeEngine {
-    /// Build an engine with specialized sessions (graph + store +
-    /// persistent kernel) for each manifest batch size up to
-    /// `max_batch`. `max_batch` must be one of the manifest's sizes.
+    /// Build an engine with specialized sessions (graph + arena +
+    /// persistent kernel + resident executor) for each manifest batch
+    /// size up to `max_batch`, all aliasing one max-batch KV arena.
+    /// `max_batch` must be one of the manifest's sizes.
     pub fn create(max_batch: usize, pool_threads: usize, seed: u64, mega: MegaConfig) -> Result<Self, String> {
         let manifest = Manifest::load(&Manifest::default_dir())?;
         if !manifest.batch_sizes.contains(&max_batch) {
             return Err(format!("max_batch {max_batch} not among specialized sizes {:?}", manifest.batch_sizes));
         }
         let m = manifest.model;
+        let pool = Arc::new(ExecPool::new(manifest.clone(), pool_threads)?);
+        let kv_arena = KvArena::new(m.layers, max_batch, manifest.s_max, m.kv_dim());
         let mut sessions = HashMap::new();
         for &b in manifest.batch_sizes.iter().filter(|&&b| b <= max_batch) {
             let compiled = Arc::new(compile_real(&manifest, b));
-            let store = TensorStore::new(&compiled.graph);
-            init_weights(&compiled.graph, &store, seed);
             // hoist every per-iteration name lookup to creation time.
             let id = |name: &str| -> Result<TensorId, String> {
                 Ok(compiled.graph.tensor_by_name(name).ok_or_else(|| format!("missing tensor {name}"))?.id)
             };
-            let kv_ids = (0..m.layers)
-                .map(|l| Ok((id(&format!("l{l}.kcache"))?, id(&format!("l{l}.vcache"))?)))
-                .collect::<Result<Vec<_>, String>>()?;
+            // alias this session's KV tensors into the shared arena: a
+            // batch-b cache tensor [b, s_max, kv_dim] is the first b
+            // slots of the layer's [max_batch, s_max, kv_dim] segment.
+            let mut aliases = Vec::with_capacity(2 * m.layers);
+            for l in 0..m.layers {
+                aliases.push((id(&format!("l{l}.kcache"))?, kv_arena.slab(), kv_arena.k_offset(l)));
+                aliases.push((id(&format!("l{l}.vcache"))?, kv_arena.slab(), kv_arena.v_offset(l)));
+            }
+            let store = Arc::new(TensorStore::new_with_aliases(&compiled.graph, aliases));
+            init_weights(&compiled.graph, &store, seed);
             let token_ids = id("token_ids")?;
             let logits = id("lm_head")?;
             let kernel = PersistentMegaKernel::new(compiled.clone(), mega);
-            sessions.insert(b, Session { compiled, store, kernel, kv_ids, token_ids, logits });
+            let exec = OwningTileExecutor::new(compiled, store.clone(), pool.clone(), b);
+            sessions.insert(b, Session { store, kernel, exec, token_ids, logits });
         }
-        let pool = ExecPool::new(manifest.clone(), pool_threads)?;
         // one KV block = 8 tokens; pool sized for max_batch full seqs.
         let blocks = max_batch * manifest.s_max / 8;
         let batcher = Batcher::new(max_batch, manifest.s_max, KvAllocator::new(blocks, 8));
-        Ok(ServeEngine { manifest, pool, sessions, batcher, residency: KvResidency::default() })
+        Ok(ServeEngine {
+            manifest,
+            pool,
+            sessions,
+            batcher,
+            residency: KvResidency::default(),
+            kv_arena,
+        })
     }
 
     pub fn submit(&mut self, r: Request) {
         self.batcher.submit(r);
     }
 
-    /// Make every active request's KV rows resident in session `gb` at
-    /// its assigned batcher slot, copying only on admission to a
-    /// different store or slot compaction; returns rows moved (×layers).
+    /// The engine's PJRT pool (shared by every session's executor).
+    pub fn pool(&self) -> &ExecPool {
+        &self.pool
+    }
+
+    /// Sum of read-side `(allocs, bytes_copied)` store counters across
+    /// all session arenas — the zero-copy invariant: steady-state
+    /// serving leaves both at zero (weight/token staging and in-place
+    /// kernel writes are not counted; see `exec::store`).
+    pub fn store_counters(&self) -> (u64, u64) {
+        self.sessions.values().fold((0, 0), |(a, b), s| {
+            let c = s.store.counters();
+            (a + c.allocs, b + c.bytes_copied)
+        })
+    }
+
+    /// Make every active request's KV rows resident at its assigned
+    /// batcher slot of the shared arena; returns rows moved (×layers).
+    /// Batch-size transitions are free — every session aliases the same
+    /// arena — so rows move only on slot compaction after a retirement.
     ///
-    /// Iterates in ascending slot order, which makes in-store
-    /// compaction safe without double-buffering: survivors only ever
-    /// move to *lower* slots (the batcher compacts with `swap_remove`
-    /// then reassigns 0..n in order), so if some move's destination
-    /// aliases another request's source slot, that request sits at a
-    /// lower destination and is migrated — its source read — first.
-    fn reconcile_residency(&mut self, gb: usize, kv_dim: usize) -> usize {
-        let layers = self.manifest.model.layers;
+    /// Iterates in ascending slot order, which makes compaction safe
+    /// without double-buffering: survivors only ever move to *lower*
+    /// slots (the batcher compacts with `swap_remove` then reassigns
+    /// 0..n in order), so if some move's destination aliases another
+    /// request's source slot, that request sits at a lower destination
+    /// and is moved — its source read — first.
+    fn reconcile_residency(&mut self) -> usize {
         let mut moved = 0usize;
         for (slot, r) in self.batcher.active.iter().enumerate() {
-            let cur = self.residency.home(r.id);
-            if cur == Some((gb, slot)) {
-                continue;
-            }
-            if let Some((hgb, hslot)) = cur {
-                let rows = r.cache_len;
-                if rows > 0 {
-                    // run-by-run copy, no staging buffer: intra-store
-                    // compaction (hgb == gb, disjoint slots) and
-                    // cross-store migration share one path.
-                    let dst_r = Region::new(vec![(slot, slot + 1), (0, rows), (0, kv_dim)]);
-                    let src_r = Region::new(vec![(hslot, hslot + 1), (0, rows), (0, kv_dim)]);
-                    let sh = &self.sessions[&hgb];
-                    let sd = &self.sessions[&gb];
-                    for l in 0..layers {
-                        let (skt, svt) = sh.kv_ids[l];
-                        let (dkt, dvt) = sd.kv_ids[l];
-                        sd.store.copy_tile_from(dkt, &dst_r, &sh.store, skt, &src_r);
-                        sd.store.copy_tile_from(dvt, &dst_r, &sh.store, svt, &src_r);
-                    }
-                    moved += rows * layers;
+            match self.residency.home(r.id) {
+                Some(cur) if cur == slot => {}
+                Some(cur) => {
+                    // the single-pass ascending walk is only sound while
+                    // survivors move strictly downward — pin the batcher
+                    // invariant this relies on.
+                    debug_assert!(
+                        cur > slot,
+                        "compaction moved a survivor upward ({cur} -> {slot}); \
+                         reconcile_residency's ordering argument no longer holds"
+                    );
+                    moved += self.kv_arena.move_slot(cur, slot, r.cache_len);
+                    self.residency.set(r.id, slot);
                 }
+                None => self.residency.set(r.id, slot),
             }
-            self.residency.set(r.id, gb, slot);
         }
         moved
     }
@@ -180,8 +205,7 @@ impl ServeEngine {
     pub fn serve(&mut self) -> Result<(HashMap<u64, Vec<i32>>, ServeStats), String> {
         let mut stats = ServeStats::default();
         let t0 = Instant::now();
-        let m = self.manifest.model;
-        let (kv_dim, vocab) = (m.kv_dim(), m.vocab);
+        let vocab = self.manifest.model.vocab;
 
         while self.batcher.has_work() {
             for id in self.batcher.step_admission() {
@@ -196,9 +220,10 @@ impl ServeEngine {
                 return Err(format!("no session for batch {gb}"));
             }
 
-            // KV stays resident in the store: copy rows only on
-            // admit/slot-remap (zero rows on a steady-state iteration).
-            stats.kv_rows_migrated += self.reconcile_residency(gb, kv_dim);
+            // KV stays resident in the shared arena: rows move only on
+            // slot compaction (zero on a steady-state iteration, zero
+            // on batch-size transitions).
+            stats.kv_rows_migrated += self.reconcile_residency();
 
             // stage inputs: this iteration's token per row, row lengths.
             let mut ids = vec![0i32; gb];
@@ -210,13 +235,13 @@ impl ServeEngine {
             let session = self.sessions.get_mut(&gb).unwrap();
             real::set_ids_at(&session.store, session.token_ids, &ids);
 
-            // re-arm the resident mega-kernel: no thread spawn/join, no
-            // kernel construction, no name lookups on this path.
-            let exec = TileExecutor::new(&session.compiled.graph, &session.store, &self.pool, gb);
-            exec.set_row_lens(&lens);
+            // re-arm the resident mega-kernel through the session's
+            // long-lived executor: no thread spawn/join, no kernel or
+            // executor construction, no name lookups on this path.
+            session.exec.set_row_lens(&lens);
             let it0 = Instant::now();
-            session.kernel.run(&exec)?;
-            if let Some(e) = exec.take_error() {
+            session.kernel.run(&session.exec)?;
+            if let Some(e) = session.exec.take_error() {
                 return Err(e);
             }
             let lat = it0.elapsed();
@@ -224,10 +249,10 @@ impl ServeEngine {
             stats.iter_latencies.push(lat);
             stats.batch_sizes.push(active);
 
-            // harvest: logits → next token. KV needs no read-back —
-            // KvAppend already wrote this step's row in the resident
-            // cache.
-            let logits = real::logits_at(&session.store, session.logits);
+            // harvest: logits → next token, through a borrowed arena
+            // view (no copy). KV needs no read-back — KvAppend already
+            // wrote this step's row in the resident arena.
+            let logits = session.store.view(session.logits);
             for slot in 0..active {
                 let r = &mut self.batcher.active[slot];
                 r.cache_len += 1;
@@ -258,6 +283,7 @@ impl ServeEngine {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::exec::binder::TileExecutor;
 
     fn have_artifacts() -> bool {
         Manifest::load(&Manifest::default_dir()).is_ok()
@@ -287,9 +313,49 @@ mod tests {
         }
         assert_eq!(stats.tokens_generated, 12);
         assert!(stats.iterations >= 5, "prompt 2 + gen 4 - 1 overlap");
-        // all requests admitted at once into one session and never
-        // remapped: no KV rows should ever have been copied.
+        // all requests admitted at once and never remapped: no KV rows
+        // should ever have moved in the arena.
         assert_eq!(stats.kv_rows_migrated, 0, "steady batch migrated KV rows");
+    }
+
+    #[test]
+    fn steady_state_decode_is_zero_copy() {
+        if !have_artifacts() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        // a uniform wave (same prompt + generation lengths) is admitted
+        // together and retired together: the whole run is the steady
+        // state the zero-copy invariant promises.
+        let mut e = ServeEngine::create(4, 2, 42, mega()).unwrap();
+        for i in 0..4u64 {
+            e.submit(Request::new(i, vec![(i as i32) + 1, 9], 5));
+        }
+        let (out, stats) = e.serve().unwrap();
+        assert_eq!(out.len(), 4);
+        assert_eq!(stats.kv_rows_migrated, 0, "arena moved rows in steady state");
+        let (allocs, bytes) = e.store_counters();
+        assert_eq!(allocs, 0, "decode hot path materialized an input buffer");
+        assert_eq!(bytes, 0, "decode hot path copied tensor data");
+    }
+
+    #[test]
+    fn batch_size_transitions_do_not_migrate_kv() {
+        if !have_artifacts() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        // second wave admitted after the first fully retires: the batch
+        // size transitions 2 → 0 → 1 but no surviving request ever
+        // changes slot, so the shared arena moves nothing.
+        let mut e = ServeEngine::create(2, 2, 13, mega()).unwrap();
+        e.submit(Request::new(0, vec![3, 4], 3));
+        e.submit(Request::new(1, vec![5, 6], 3));
+        e.submit(Request::new(2, vec![7], 2));
+        let (out, stats) = e.serve().unwrap();
+        assert_eq!(out.len(), 3);
+        assert!(stats.batch_sizes.contains(&2) && stats.batch_sizes.contains(&1));
+        assert_eq!(stats.kv_rows_migrated, 0, "batch transition migrated KV rows");
     }
 
     #[test]
@@ -338,18 +404,16 @@ mod tests {
         let (out, _) = e.serve().unwrap();
 
         let s = crate::exec::real::RealSession::create(1, 2, 42).unwrap();
-        let kernel = crate::megakernel::MegaKernel::new(&s.compiled, mega());
+        let mut kernel = s.persistent_kernel(4, 1);
         let exec = TileExecutor::new(&s.compiled.graph, &s.store, &s.pool, 1);
         let mut ids = vec![7i32];
         let mut got = Vec::new();
         for step in 0..4 {
             real::set_ids(&s.compiled.graph, &s.store, &ids);
-            crate::exec::real::run_iteration(&kernel, &exec, step).unwrap();
+            crate::exec::real::run_iteration(&mut kernel, &exec, step).unwrap();
             let logits = real::get_logits(&s.compiled.graph, &s.store);
             let tok = real::argmax(&logits) as i32;
-            if step >= 0 {
-                got.push(tok);
-            }
+            got.push(tok);
             ids = vec![tok];
         }
         // prompt len 1 → first iteration already yields generated[0].

@@ -1,10 +1,23 @@
-//! Paged KV-cache block allocator (§6.1 / PagedAttention-class).
+//! Paged KV-cache block allocator (§6.1 / PagedAttention-class) and the
+//! shared max-batch KV arena.
 //!
 //! Physical cache memory is divided into fixed-size blocks of
 //! `block_tokens` tokens; each active request holds a growing list of
 //! blocks per layer. The serving engine uses this for admission control
 //! (a request is admitted only if its worst-case block demand fits) and
 //! frees blocks when requests retire.
+//!
+//! The [`KvArena`] is the storage those blocks account for: **one**
+//! `[slots, s_max, kv_dim]` K and V segment per layer, sized for the
+//! maximum batch, shared (via [`SharedSlab`] aliasing) by every
+//! batch-size-specialized session store. A batch-`b` session's
+//! `l{l}.kcache` tensor is exactly the first `b` slots of the layer's
+//! segment, so switching specializations re-interprets the same memory
+//! — pointer arithmetic, not row migration. Rows move only on slot
+//! compaction after a retirement ([`KvArena::move_slot`], one memcpy
+//! per layer segment); steady-state decode moves zero rows.
+
+use crate::exec::store::SharedSlab;
 
 /// Block-grained KV allocator.
 #[derive(Debug)]
@@ -76,36 +89,114 @@ impl KvAllocator {
     }
 }
 
-/// Tracks which batch-size-specialized session store (and slot within
-/// it) holds each active request's authoritative KV rows.
+/// The shared max-batch KV arena: per-layer K/V segments in one
+/// [`SharedSlab`] that every batch-size-specialized session store
+/// aliases. Layout (element offsets): layer `l`'s K segment starts at
+/// `2·l·slots·s_max·kv_dim`, its V segment one segment later; within a
+/// segment, slot `s` occupies the contiguous `[s·s_max·kv_dim,
+/// (s+1)·s_max·kv_dim)` span.
+pub struct KvArena {
+    slab: SharedSlab,
+    layers: usize,
+    slots: usize,
+    s_max: usize,
+    kv_dim: usize,
+}
+
+impl KvArena {
+    pub fn new(layers: usize, slots: usize, s_max: usize, kv_dim: usize) -> Self {
+        assert!(layers > 0 && slots > 0 && s_max > 0 && kv_dim > 0);
+        KvArena {
+            slab: SharedSlab::new(layers * 2 * slots * s_max * kv_dim),
+            layers,
+            slots,
+            s_max,
+            kv_dim,
+        }
+    }
+
+    fn seg(&self) -> usize {
+        self.slots * self.s_max * self.kv_dim
+    }
+
+    /// Element offset of layer `l`'s K segment within the slab.
+    pub fn k_offset(&self, l: usize) -> usize {
+        assert!(l < self.layers);
+        2 * l * self.seg()
+    }
+
+    /// Element offset of layer `l`'s V segment within the slab.
+    pub fn v_offset(&self, l: usize) -> usize {
+        assert!(l < self.layers);
+        (2 * l + 1) * self.seg()
+    }
+
+    /// Handle to the backing slab (for aliasing into session stores).
+    pub fn slab(&self) -> SharedSlab {
+        self.slab.clone()
+    }
+
+    pub fn slots(&self) -> usize {
+        self.slots
+    }
+
+    pub fn layers(&self) -> usize {
+        self.layers
+    }
+
+    /// Move the first `rows` cached rows of slot `src` into slot `dst`
+    /// across every layer's K and V segments (slot compaction after a
+    /// retirement). One contiguous memcpy per segment. Returns rows
+    /// moved × layers — the engine's `kv_rows_migrated` unit.
+    pub fn move_slot(&self, src: usize, dst: usize, rows: usize) -> usize {
+        assert!(src < self.slots && dst < self.slots && src != dst, "bad slot move {src}->{dst}");
+        assert!(rows <= self.s_max, "slot move rows {rows} > s_max {}", self.s_max);
+        if rows == 0 {
+            return 0;
+        }
+        let slot_span = self.s_max * self.kv_dim;
+        let n = rows * self.kv_dim;
+        for l in 0..self.layers {
+            for base in [self.k_offset(l), self.v_offset(l)] {
+                self.slab.copy_within(base + src * slot_span, base + dst * slot_span, n);
+            }
+        }
+        rows * self.layers
+    }
+}
+
+/// Tracks which arena slot holds each active request's authoritative KV
+/// rows.
 ///
-/// The serving engine keeps KV resident in the `TensorStore` across
-/// decode iterations: the in-kernel `KvAppend` task writes each new row
-/// in place, so the engine copies cache data only when this map says a
-/// request's rows live somewhere other than the slot the batcher just
-/// assigned (admission to a different store, or slot compaction after a
-/// retirement).
+/// The serving engine keeps KV resident in the shared [`KvArena`]
+/// across decode iterations *and* across batch-size specializations
+/// (every session store aliases the same slab): the in-kernel
+/// `KvAppend` task writes each new row in place, so the engine moves
+/// cache rows only when this map says a request's rows live in a
+/// different slot than the one the batcher just assigned (slot
+/// compaction after a retirement). Switching batch sizes never moves
+/// rows.
 #[derive(Debug, Default)]
 pub struct KvResidency {
-    /// request id → (graph batch size of the session store, slot).
-    home: std::collections::HashMap<u64, (usize, usize)>,
+    /// request id → arena slot.
+    home: std::collections::HashMap<u64, usize>,
 }
 
 impl KvResidency {
-    /// Where `req`'s KV rows currently live, if anywhere.
-    pub fn home(&self, req: u64) -> Option<(usize, usize)> {
+    /// Which arena slot `req`'s KV rows currently occupy, if any.
+    pub fn home(&self, req: u64) -> Option<usize> {
         self.home.get(&req).copied()
     }
 
-    /// Record that `req`'s rows now live in store `graph_batch` at
-    /// `slot` (after a migration, or on first admission).
-    pub fn set(&mut self, req: u64, graph_batch: usize, slot: usize) {
-        self.home.insert(req, (graph_batch, slot));
+    /// Record that `req`'s rows now live at `slot` (after a compaction
+    /// move, or on first admission).
+    pub fn set(&mut self, req: u64, slot: usize) {
+        self.home.insert(req, slot);
     }
 
-    /// Forget a retired request; its store rows become dead data that
+    /// Forget a retired request; its arena rows become dead data that
     /// the next occupant of the slot overwrites lazily.
-    pub fn evict(&mut self, req: u64) -> Option<(usize, usize)> {
+    pub fn evict(&mut self, req: u64) -> Option<usize> {
         self.home.remove(&req)
     }
 
@@ -123,18 +214,53 @@ mod tests {
     fn residency_set_move_evict() {
         let mut r = KvResidency::default();
         assert_eq!(r.home(7), None);
-        r.set(7, 4, 2);
-        assert_eq!(r.home(7), Some((4, 2)));
-        // slot compaction within the same store
-        r.set(7, 4, 0);
-        assert_eq!(r.home(7), Some((4, 0)));
-        // migration to a smaller specialized store
-        r.set(7, 2, 1);
-        assert_eq!(r.home(7), Some((2, 1)));
+        r.set(7, 2);
+        assert_eq!(r.home(7), Some(2));
+        // slot compaction
+        r.set(7, 0);
+        assert_eq!(r.home(7), Some(0));
         assert_eq!(r.resident_count(), 1);
-        assert_eq!(r.evict(7), Some((2, 1)));
+        assert_eq!(r.evict(7), Some(0));
         assert_eq!(r.evict(7), None);
         assert_eq!(r.resident_count(), 0);
+    }
+
+    #[test]
+    fn arena_layout_is_disjoint_and_covering() {
+        let a = KvArena::new(3, 4, 8, 2);
+        let seg = 4 * 8 * 2;
+        let mut offs: Vec<usize> = (0..3).flat_map(|l| [a.k_offset(l), a.v_offset(l)]).collect();
+        offs.sort_unstable();
+        // segments tile the slab exactly: 6 segments, stride `seg`.
+        assert_eq!(offs, (0..6).map(|i| i * seg).collect::<Vec<_>>());
+        assert_eq!(a.slab().len(), 6 * seg);
+    }
+
+    #[test]
+    fn arena_move_slot_moves_rows_every_layer() {
+        let a = KvArena::new(2, 4, 4, 2);
+        let slab = a.slab();
+        // paint slot 3, rows 0..2 in every segment with layer-tagged data
+        // (row-major: slot 3's first two rows = 4 elements).
+        let slot_span = 4 * 2;
+        for l in 0..2 {
+            for (si, base) in [a.k_offset(l), a.v_offset(l)].into_iter().enumerate() {
+                let tag = (l * 10 + si) as f32;
+                let rows: Vec<f32> = (0..4).map(|e| tag + e as f32).collect();
+                slab.write(base + 3 * slot_span, &rows);
+            }
+        }
+        let moved = a.move_slot(3, 1, 2);
+        assert_eq!(moved, 2 * 2, "rows × layers");
+        for l in 0..2 {
+            for (si, base) in [a.k_offset(l), a.v_offset(l)].into_iter().enumerate() {
+                let tag = (l * 10 + si) as f32;
+                let got = slab.read(base + slot_span, 4);
+                assert_eq!(got, (0..4).map(|e| tag + e as f32).collect::<Vec<_>>());
+            }
+        }
+        // zero-row move is free.
+        assert_eq!(a.move_slot(0, 2, 0), 0);
     }
 
     #[test]

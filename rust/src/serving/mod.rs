@@ -6,4 +6,4 @@ pub mod kvcache;
 
 pub use batcher::{Batcher, Request};
 pub use engine::{ServeEngine, ServeStats};
-pub use kvcache::{KvAllocator, KvResidency};
+pub use kvcache::{KvAllocator, KvArena, KvResidency};

@@ -1,0 +1,225 @@
+//! Property suite over the tensor arena (`exec::store`): tile
+//! writes/reads must agree with a plain reference model, borrowed views
+//! must equal owned reads without touching the copy counters, the
+//! aliasing contract must hold under concurrent disjoint readers +
+//! writers, and shared-slab aliasing across stores must behave like the
+//! serving engine's max-batch KV arena.
+
+use mpk::exec::store::{SharedSlab, StoreCounters, TensorStore};
+use mpk::ops::{CompGraph, DType, Region};
+use mpk::proputil::forall;
+use mpk::util::XorShift64;
+
+/// A random tensor shape (rank 1..=3, small dims) plus a random
+/// non-empty region inside it.
+struct Case {
+    shape: Vec<usize>,
+    region: Region,
+}
+
+fn random_case(rng: &mut XorShift64) -> Case {
+    let rank = rng.range(1, 3);
+    let shape: Vec<usize> = (0..rank).map(|_| rng.range(1, 6)).collect();
+    let region = Region::new(
+        shape
+            .iter()
+            .map(|&d| {
+                let s = rng.below(d);
+                let e = rng.range(s + 1, d);
+                (s, e)
+            })
+            .collect(),
+    );
+    Case { shape, region }
+}
+
+fn store_for(shape: &[usize]) -> (TensorStore, usize) {
+    let mut g = CompGraph::new();
+    let t = g.input("x", shape.to_vec(), DType::F32);
+    (TensorStore::new(&g), t)
+}
+
+/// Reference model: plain row-major Vec with nested index arithmetic.
+fn ref_write(buf: &mut [f32], shape: &[usize], r: &Region, data: &[f32]) {
+    let mut di = 0;
+    let mut idx: Vec<usize> = r.dims.iter().map(|&(s, _)| s).collect();
+    loop {
+        let mut off = 0;
+        let mut stride = 1;
+        for d in (0..shape.len()).rev() {
+            off += idx[d] * stride;
+            stride *= shape[d];
+        }
+        buf[off] = data[di];
+        di += 1;
+        // odometer over the region
+        let mut d = shape.len();
+        loop {
+            if d == 0 {
+                return;
+            }
+            d -= 1;
+            idx[d] += 1;
+            if idx[d] < r.dims[d].1 {
+                break;
+            }
+            idx[d] = r.dims[d].0;
+            if d == 0 {
+                return;
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_tile_roundtrip_matches_reference_model() {
+    forall("tile write/read vs reference", 0x57031, 200, random_case, |c| {
+        let (store, t) = store_for(&c.shape);
+        let numel: usize = c.shape.iter().product();
+        let base: Vec<f32> = (0..numel).map(|i| i as f32).collect();
+        store.set(t, &base);
+        let tile: Vec<f32> = (0..c.region.numel()).map(|i| 1000.0 + i as f32).collect();
+        store.write_tile(t, &c.region, &tile);
+
+        let mut want = base.clone();
+        ref_write(&mut want, &c.shape, &c.region, &tile);
+        if store.get(t) != want {
+            return Err(format!("tile write mismatch for shape {:?} region {}", c.shape, c.region));
+        }
+        if store.read_tile(t, &c.region) != tile {
+            return Err("readback of written tile differs".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_views_equal_owned_reads_and_count_nothing() {
+    forall("views vs owned reads", 0xB0880, 200, random_case, |c| {
+        let (store, t) = store_for(&c.shape);
+        let numel: usize = c.shape.iter().product();
+        let data: Vec<f32> = (0..numel).map(|i| (i * 3) as f32).collect();
+        store.set(t, &data);
+        store.reset_counters();
+
+        // whole-tensor view == data, no counter movement.
+        if store.view(t) != &data[..] {
+            return Err("view != set data".into());
+        }
+        // borrowed tile gather == owned read_tile.
+        let mut scratch = Vec::new();
+        store.tile(t, &c.region).gather_into(&mut scratch);
+        if store.counters() != StoreCounters::default() {
+            return Err("borrowed path moved the counters".into());
+        }
+        let owned = store.read_tile(t, &c.region);
+        if scratch != owned {
+            return Err(format!("gather != read_tile for region {}", c.region));
+        }
+        // contiguous regions must also agree via as_slice.
+        let tv = store.tile(t, &c.region);
+        if let Some(s) = tv.as_slice() {
+            if s != &owned[..] {
+                return Err("as_slice != read_tile on contiguous region".into());
+            }
+        }
+        drop(tv);
+        let after = store.counters();
+        if after.allocs != 1 || after.bytes_copied != (c.region.numel() * 4) as u64 {
+            return Err(format!("owned read counted wrong: {after:?}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn concurrent_disjoint_writers_and_readers_stress() {
+    // The arena aliasing contract under load: writer threads own
+    // disjoint row bands of one tensor; reader threads repeatedly take
+    // borrowed views of *other* rows that are never written. Interleave
+    // for many rounds, then verify every band.
+    let rows = 8usize;
+    let cols = 64usize;
+    let mut g = CompGraph::new();
+    let t = g.input("x", vec![rows * 2, cols], DType::F32);
+    let store = TensorStore::new(&g);
+    // rows [rows, 2*rows) are pre-set and read-only throughout.
+    for r in rows..rows * 2 {
+        let band = vec![r as f32; cols];
+        store.write_tile(t, &Region::new(vec![(r, r + 1), (0, cols)]), &band);
+    }
+    std::thread::scope(|sc| {
+        for w in 0..rows {
+            let store = &store;
+            sc.spawn(move || {
+                let mut band = vec![0.0f32; cols];
+                for round in 0..200u32 {
+                    let val = (w * 1000 + round as usize) as f32;
+                    band.iter_mut().for_each(|x| *x = val);
+                    store.write_tile(t, &Region::new(vec![(w, w + 1), (0, cols)]), &band);
+                }
+            });
+        }
+        for rdr in 0..4 {
+            let store = &store;
+            sc.spawn(move || {
+                let mut scratch = Vec::new();
+                for i in 0..200usize {
+                    let r = rows + (rdr + i) % rows;
+                    let reg = Region::new(vec![(r, r + 1), (0, cols)]);
+                    store.tile(t, &reg).gather_into(&mut scratch);
+                    assert_eq!(scratch, vec![r as f32; cols], "read-only band corrupted");
+                    let v = store.view_region(t, &reg);
+                    assert!(v.iter().all(|&x| x == r as f32));
+                }
+            });
+        }
+    });
+    for w in 0..rows {
+        let band = store.read_tile(t, &Region::new(vec![(w, w + 1), (0, cols)]));
+        assert_eq!(band, vec![(w * 1000 + 199) as f32; cols], "writer band {w} lost its last write");
+    }
+}
+
+#[test]
+fn shared_arena_stress_across_aliased_stores() {
+    // Two stores aliasing one slab, as batch-size-specialized serving
+    // sessions do: writes through the small store must be visible
+    // through the big one, concurrently with reads of disjoint slots.
+    let slots = 4usize;
+    let s_max = 8usize;
+    let kv = 4usize;
+    let slab = SharedSlab::new(slots * s_max * kv);
+    let mut g_small = CompGraph::new();
+    let ts = g_small.input("kc", vec![2, s_max, kv], DType::F32);
+    let small = TensorStore::new_with_aliases(&g_small, vec![(ts, slab.clone(), 0)]);
+    let mut g_big = CompGraph::new();
+    let tb = g_big.input("kc", vec![slots, s_max, kv], DType::F32);
+    let big = TensorStore::new_with_aliases(&g_big, vec![(tb, slab.clone(), 0)]);
+
+    // slot 3 (visible only to the big store) is the read-only band.
+    let nines = vec![9.0; s_max * kv];
+    big.write_tile(tb, &Region::new(vec![(3, 4), (0, s_max), (0, kv)]), &nines);
+    std::thread::scope(|sc| {
+        let small = &small;
+        let big = &big;
+        sc.spawn(move || {
+            let mut rowbuf = vec![0.0f32; kv];
+            for round in 0..200u32 {
+                let row = (round as usize) % s_max;
+                rowbuf.iter_mut().for_each(|x| *x = round as f32);
+                small.write_tile(ts, &Region::new(vec![(1, 2), (row, row + 1), (0, kv)]), &rowbuf);
+            }
+        });
+        sc.spawn(move || {
+            for _ in 0..200 {
+                let v = big.view_region(tb, &Region::new(vec![(3, 4), (0, s_max), (0, kv)]));
+                assert!(v.iter().all(|&x| x == 9.0), "disjoint slot corrupted");
+            }
+        });
+    });
+    // last write through `small` is visible through `big`.
+    let last_row = 199 % s_max;
+    let got = big.read_tile(tb, &Region::new(vec![(1, 2), (last_row, last_row + 1), (0, kv)]));
+    assert_eq!(got, vec![199.0; kv]);
+}

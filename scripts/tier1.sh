@@ -1,8 +1,11 @@
 #!/usr/bin/env bash
 # Tier-1 gate for the rust_pallas crate: release build, test suite, and
-# clippy with warnings denied, then (best-effort) the launch-overhead
-# bench so BENCH_launch_overhead.json tracks the perf trajectory across
-# PRs (spawn-per-iteration vs persistent runtime).
+# clippy with warnings denied; an optional miri pass over the tensor
+# arena (the one module holding unsafe — skipped with a warning when
+# miri is absent); then (best-effort) the perf-trajectory benches so
+# BENCH_launch_overhead.json and BENCH_store_hotpath.json track the hot
+# paths across PRs (spawn-per-iteration vs persistent runtime;
+# locked-clone vs borrowed-view tile reads).
 #
 # Usage: scripts/tier1.sh [--no-bench]
 set -euo pipefail
@@ -29,15 +32,33 @@ cargo test -q
 echo "== tier1: cargo clippy -- -D warnings =="
 cargo clippy --all-targets -- -D warnings
 
+# The tensor arena (rust/src/exec/store.rs) is the one module holding
+# unsafe; when miri is installed, run it under the interpreter to check
+# the aliasing contract (UB detection). Like the missing-cargo path
+# above, absence is a loud skip, not a silent green.
+if cargo miri --version >/dev/null 2>&1; then
+    echo "== tier1: cargo miri test (arena aliasing contract) =="
+    cargo miri test --lib exec::store
+else
+    echo "tier1: miri not installed — skipping arena aliasing gate (rustup component add miri)" >&2
+fi
+
 if [[ "${1:-}" != "--no-bench" ]]; then
     echo "== tier1: launch_overhead bench (perf trajectory) =="
     # The benches are plain main() binaries (criterion unavailable
-    # offline); the bench writes BENCH_launch_overhead.json to the repo
-    # root via MPK_BENCH_JSON.
+    # offline); each writes its JSON record to the repo root via the
+    # MPK_BENCH_*JSON env vars.
     MPK_BENCH_JSON="$PWD/BENCH_launch_overhead.json" \
         cargo bench --bench launch_overhead ||
         echo "tier1: bench skipped (non-fatal)" >&2
-    [[ -f BENCH_launch_overhead.json ]] && cat BENCH_launch_overhead.json
+    # `if` (not `&&`) so a missing bench file cannot trip errexit.
+    if [[ -f BENCH_launch_overhead.json ]]; then cat BENCH_launch_overhead.json; fi
+
+    echo "== tier1: hotpath_micro bench (store hot path) =="
+    MPK_BENCH_STORE_JSON="$PWD/BENCH_store_hotpath.json" \
+        cargo bench --bench hotpath_micro ||
+        echo "tier1: bench skipped (non-fatal)" >&2
+    if [[ -f BENCH_store_hotpath.json ]]; then cat BENCH_store_hotpath.json; fi
 fi
 
 echo "tier1: OK"

@@ -5,11 +5,14 @@
 //! composing: Pallas kernels (L1) → JAX model artifacts (L2) → rust
 //! coordinator + PJRT runtime (L3).
 //!
-//! Since PR 2 the decode inner loop is zero-copy end to end: task
-//! inputs are slices borrowed from the session tensor arena, every
-//! batch-size specialization aliases one shared max-batch KV arena (so
-//! batch transitions move no cache rows), and the store's read-side
-//! counters prove it — this driver asserts both invariants.
+//! The decode inner loop is zero-copy end to end: task inputs are
+//! slices borrowed from the session tensor arena, every batch-size
+//! specialization aliases one shared max-batch KV arena (batch
+//! transitions move no cache rows) and one shared weight arena
+//! (weights synthesized exactly once, whatever the number of
+//! specializations), batch slots are stable (retirements never remap a
+//! survivor), and the store's read-side counters prove it — this
+//! driver asserts all of those invariants.
 //!
 //! ```bash
 //! make artifacts && cargo run --release --example serve_e2e
@@ -56,7 +59,7 @@ fn main() {
         // ramps 8 → 4 across waves. (Staggered per-row cache lengths
         // are covered by the engine's continuous-batching tests.)
         let prompt: Vec<i32> = (0..3).map(|t| 1 + (i as i32 * 7 + t) % 500).collect();
-        engine.submit(Request::new(i, prompt, 8));
+        engine.submit(Request::new(i, prompt, 8)).expect("request within max_seq");
     }
     let (outputs, stats) = engine.serve().expect("serve");
 
@@ -70,13 +73,19 @@ fn main() {
     let max_b = stats.batch_sizes.iter().max().unwrap();
     println!("peak batch         : {max_b} (graphs specialized per power-of-two batch)");
     println!(
-        "KV rows migrated   : {} (shared max-batch arena: batch transitions are pointer arithmetic)",
+        "KV rows migrated   : {} (stable slots + shared max-batch arena: structurally zero)",
         stats.kv_rows_migrated
     );
-    assert_eq!(stats.kv_rows_migrated, 0, "steady-state serving must not move KV rows");
+    assert_eq!(stats.kv_rows_migrated, 0, "serving must not move KV rows");
     let (allocs, bytes) = engine.store_counters();
     println!("store copies       : {allocs} allocs / {bytes} bytes (zero-copy borrowed-view hot path)");
     assert_eq!((allocs, bytes), (0, 0), "decode hot path copied tensor data");
+    println!(
+        "weight arena       : {} f32 elements shared by every specialization, {} init run(s)",
+        engine.weight_arena_len(),
+        engine.weight_init_runs()
+    );
+    assert_eq!(engine.weight_init_runs(), 1, "weights must be synthesized exactly once");
     let mut sample: Vec<_> = outputs.iter().collect();
     sample.sort();
     for (id, toks) in sample.iter().take(3) {

@@ -4,6 +4,7 @@
 //! (criterion unavailable offline): warmup + median-of-N on the
 //! monotonic clock.
 
+use mpk::exec::real::{init_weights, WeightArena};
 use mpk::exec::store::TensorStore;
 use mpk::megakernel::{EventTable, MpmcQueue};
 use mpk::models::{build_decode_graph, GraphOptions, ModelConfig};
@@ -74,11 +75,80 @@ fn bench_store_hotpath(t: &mut Table) -> (u64, u64, u64, u64) {
     (clone_ns, read_ns, view_ns, view_allocs)
 }
 
+/// Weight initialization across the batch-size specializations of the
+/// tiny model, two generations: per-session (every specialization packs
+/// and synthesizes a private copy — the pre-arena serving engine) vs
+/// one shared [`WeightArena`] that every session store aliases (one
+/// layout, one synthesis, one allocation). Returns `(per_session_ns,
+/// shared_ns, duplicated_bytes, shared_bytes)`.
+fn bench_weight_arena(t: &mut Table) -> (u64, u64, u64, u64) {
+    let mk = |b: usize| {
+        build_decode_graph(
+            &ModelConfig::tiny(),
+            // f32, like the real-numerics serving path: param_bytes then
+            // agrees with the 4-byte arena elements below.
+            &GraphOptions { batch: b, kv_len: 15, dtype: DType::F32, ..Default::default() },
+        )
+    };
+    let graphs: Vec<CompGraph> = [1usize, 2, 4, 8].iter().map(|&b| mk(b)).collect();
+
+    // legacy: every batch-size session synthesizes its own copy. Store
+    // construction happens outside the timed closure on both sides, so
+    // the ratio compares synthesis work only (4 inits vs 1), not
+    // store-allocation overhead.
+    let legacy_stores: Vec<TensorStore> = graphs.iter().map(TensorStore::new).collect();
+    let per_session_ns = bench_median_ns(1, 5, || {
+        for (g, store) in graphs.iter().zip(&legacy_stores) {
+            init_weights(g, store, 42);
+            std::hint::black_box(store);
+        }
+    });
+
+    // shared arena: one synthesis for all sessions (layout pre-built,
+    // mirroring the pre-built stores above).
+    let shared_arena = WeightArena::build(&graphs[3]);
+    let shared_ns = bench_median_ns(1, 5, || {
+        shared_arena.init(&graphs[3], 42);
+        std::hint::black_box(&shared_arena);
+    });
+
+    // and the aliasing really shares memory: sessions' param views are
+    // pointer-identical, so serving weight memory is `shared_bytes`
+    // instead of `dup_bytes` (× the number of specializations).
+    let arena = WeightArena::build(&graphs[3]);
+    arena.init(&graphs[3], 42);
+    let stores: Vec<TensorStore> =
+        graphs.iter().map(|g| TensorStore::new_with_aliases(g, arena.aliases_for(g))).collect();
+    let embed: Vec<*const f32> = graphs
+        .iter()
+        .zip(&stores)
+        .map(|(g, s)| s.view(g.tensor_by_name("embed.weight").unwrap().id).as_ptr())
+        .collect();
+    assert!(embed.windows(2).all(|w| w[0] == w[1]), "weight arena failed to alias");
+    assert_eq!(arena.init_runs(), 1);
+
+    let dup_bytes: u64 = graphs.iter().map(|g| g.param_bytes()).sum();
+    let shared_bytes = (arena.len() * 4) as u64;
+
+    t.row(vec![
+        "weight_arena: per-session init (legacy)".into(),
+        format!("{per_session_ns} ns"),
+        format!("{} sessions × private weight copies", graphs.len()),
+    ]);
+    t.row(vec![
+        "weight_arena: shared-arena init".into(),
+        format!("{shared_ns} ns"),
+        "one synthesis, all sessions alias (ptr-asserted)".into(),
+    ]);
+    (per_session_ns, shared_ns, dup_bytes, shared_bytes)
+}
+
 fn main() {
     println!("== hot-path microbenchmarks (median ns unless noted) ==\n");
     let mut t = Table::new(&["benchmark", "median", "note"]);
 
     let (clone_ns, read_ns, view_ns, view_allocs) = bench_store_hotpath(&mut t);
+    let (per_session_ns, shared_ns, dup_bytes, shared_bytes) = bench_weight_arena(&mut t);
 
     // queue push+pop round trip
     let q: MpmcQueue<usize> = MpmcQueue::new(1024);
@@ -171,5 +241,22 @@ fn main() {
     match std::fs::write(&json_path, json) {
         Ok(()) => println!("\nwrote {json_path}"),
         Err(e) => eprintln!("\ncould not write {json_path}: {e}"),
+    }
+
+    // weight-arena record: serving weight memory and init cost across
+    // batch-size specializations, duplicated vs shared.
+    let weight_json_path = std::env::var("MPK_BENCH_WEIGHT_JSON")
+        .unwrap_or_else(|_| "BENCH_weight_arena.json".to_string());
+    let weight_json = format!(
+        "{{\n  \"bench\": \"weight_arena\",\n  \"sessions\": 4,\n  \
+         \"per_session_init_ns\": {per_session_ns},\n  \"shared_arena_init_ns\": {shared_ns},\n  \
+         \"duplicated_weight_bytes\": {dup_bytes},\n  \"shared_weight_bytes\": {shared_bytes},\n  \
+         \"memory_reduction\": {:.4},\n  \"init_speedup\": {:.4}\n}}\n",
+        dup_bytes as f64 / shared_bytes.max(1) as f64,
+        per_session_ns as f64 / shared_ns.max(1) as f64
+    );
+    match std::fs::write(&weight_json_path, weight_json) {
+        Ok(()) => println!("wrote {weight_json_path}"),
+        Err(e) => eprintln!("could not write {weight_json_path}: {e}"),
     }
 }

@@ -6,5 +6,8 @@ pub mod real;
 pub mod store;
 
 pub use binder::{ExecCore, OwningTileExecutor, TileExecutor};
-pub use real::{build_real_graph, compile_real, init_weights, run_iteration, run_reference, RealSession};
+pub use real::{
+    build_real_graph, compile_real, init_weights, run_iteration, run_reference, RealSession,
+    WeightArena,
+};
 pub use store::{SharedSlab, StoreCounters, TensorStore, TileView};

@@ -4,14 +4,16 @@
 //! against the fused reference artifact.
 
 use crate::exec::binder::{OwningTileExecutor, TileExecutor};
-use crate::exec::store::TensorStore;
+use crate::exec::store::{SharedSlab, TensorStore};
 use crate::megakernel::{MegaConfig, PersistentMegaKernel, RunReport};
 use crate::models::{build_decode_graph, GraphOptions, ModelConfig};
-use crate::ops::{CompGraph, DType, OpKind};
+use crate::ops::{CompGraph, DType, OpKind, TensorId};
 use crate::runtime::pool::{ExecPool, Value};
 use crate::runtime::Manifest;
 use crate::tgraph::{compile, CompileOptions, CompiledGraph, DecomposeConfig};
 use crate::util::XorShift64;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 
 /// Build the tiny-model decode graph whose tiles line up with the AOT
@@ -76,27 +78,139 @@ pub fn compile_real(manifest: &Manifest, batch: usize) -> CompiledGraph {
     )
 }
 
+/// Deterministically synthesize one parameter's values: norm weights =
+/// 1, projections ~ U(-0.05, 0.05). Seeded by tensor *name* so the same
+/// weight gets identical values in every batch-size-specialized graph —
+/// which is what lets every specialization alias one shared
+/// [`WeightArena`] without re-initialization.
+fn synth_param(name: &str, numel: usize, seed: u64) -> Vec<f32> {
+    if name.contains("ln") || name.contains("norm") {
+        vec![1.0; numel]
+    } else {
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+        for b in name.as_bytes() {
+            h = (h ^ *b as u64).wrapping_mul(0x1000_0000_01b3);
+        }
+        let mut rng = XorShift64::new(seed ^ h);
+        (0..numel).map(|_| rng.unit_f32() * 0.05).collect()
+    }
+}
+
 /// Deterministically synthesize weights into the store (seeded per
-/// tensor id): norm weights = 1, projections ~ U(-0.05, 0.05).
+/// tensor name; see [`synth_param`]). The single-session path — the
+/// serving engine instead initializes one shared [`WeightArena`] that
+/// all of its sessions alias.
 pub fn init_weights(g: &CompGraph, store: &TensorStore, seed: u64) {
     for t in &g.tensors {
-        if !t.is_param {
-            continue;
+        if t.is_param {
+            store.set(t.id, &synth_param(&t.name, t.numel(), seed));
         }
-        if t.name.contains("ln") || t.name.contains("norm") {
-            let ones = vec![1.0; t.numel()];
-            store.set(t.id, &ones);
-        } else {
-            // seed by *name* so the same weight tensor gets identical
-            // values in every batch-size-specialized graph.
-            let mut h: u64 = 0xcbf2_9ce4_8422_2325;
-            for b in t.name.as_bytes() {
-                h = (h ^ *b as u64).wrapping_mul(0x1000_0000_01b3);
+    }
+}
+
+/// One shared weight arena aliased by every batch-size specialization.
+///
+/// Parameter tensors are batch-independent — a `[d_model, q_dim]`
+/// projection has the same shape in the batch-1 and batch-8 graphs —
+/// and [`init_weights`] seeds values by *name*, so per-session weight
+/// stores of the same model always held byte-identical copies. This
+/// arena hoists them into one [`SharedSlab`] (the same aliasing
+/// machinery as the serving engine's max-batch KV arena): each
+/// specialization's session store maps its param tensors at this
+/// arena's offsets, cutting serving weight memory by the number of
+/// specializations and running `create`-time initialization exactly
+/// once. After [`WeightArena::init`] the arena is **read-only** — no
+/// compiled-graph task writes a param tensor — so cross-session
+/// concurrent reads need no ordering (see the memory-model note in
+/// `exec::store`).
+pub struct WeightArena {
+    slab: SharedSlab,
+    /// param name → (element offset, numel). Layout follows the
+    /// build graph's tensor order.
+    offsets: HashMap<String, (usize, usize)>,
+    /// Times [`WeightArena::init`] has run — the serving engine asserts
+    /// this stays at 1 no matter how many specializations it builds.
+    init_runs: AtomicU64,
+}
+
+impl WeightArena {
+    /// Lay out every param tensor of `g` contiguously. Any batch-size
+    /// specialization of the model works as the build graph — params
+    /// are batch-independent.
+    pub fn build(g: &CompGraph) -> WeightArena {
+        let mut offsets = HashMap::new();
+        let mut len = 0usize;
+        for t in &g.tensors {
+            if t.is_param {
+                let prev = offsets.insert(t.name.clone(), (len, t.numel()));
+                assert!(prev.is_none(), "duplicate param name {}", t.name);
+                len += t.numel();
             }
-            let mut rng = XorShift64::new(seed ^ h);
-            let w: Vec<f32> = (0..t.numel()).map(|_| rng.unit_f32() * 0.05).collect();
-            store.set(t.id, &w);
         }
+        WeightArena { slab: SharedSlab::new(len), offsets, init_runs: AtomicU64::new(0) }
+    }
+
+    /// Handle to the backing slab.
+    pub fn slab(&self) -> SharedSlab {
+        self.slab.clone()
+    }
+
+    /// Total elements across all params.
+    pub fn len(&self) -> usize {
+        self.slab.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.slab.is_empty()
+    }
+
+    /// Times [`WeightArena::init`] has run.
+    pub fn init_runs(&self) -> u64 {
+        self.init_runs.load(Ordering::Relaxed)
+    }
+
+    /// Alias list mapping every param tensor of `g` (a batch-size
+    /// specialization of the build model) into this arena, for
+    /// [`TensorStore::new_with_aliases`]. Panics if `g` carries a param
+    /// this arena does not know or whose size disagrees — weights are
+    /// batch-independent, so every specialization must match exactly.
+    pub fn aliases_for(&self, g: &CompGraph) -> Vec<(TensorId, SharedSlab, usize)> {
+        g.tensors
+            .iter()
+            .filter(|t| t.is_param)
+            .map(|t| {
+                let &(off, numel) = self
+                    .offsets
+                    .get(&t.name)
+                    .unwrap_or_else(|| panic!("weight arena has no param {}", t.name));
+                assert_eq!(
+                    numel,
+                    t.numel(),
+                    "param {} size differs across specializations",
+                    t.name
+                );
+                (t.id, self.slab.clone(), off)
+            })
+            .collect()
+    }
+
+    /// Synthesize every param of `g` into the arena — same name-seeded
+    /// values as [`init_weights`], written **once** for all aliasing
+    /// sessions. Host staging: callers run this before any kernel
+    /// exists (the serving engine does it at `create`).
+    pub fn init(&self, g: &CompGraph, seed: u64) {
+        for t in &g.tensors {
+            if !t.is_param {
+                continue;
+            }
+            let &(off, numel) = self
+                .offsets
+                .get(&t.name)
+                .unwrap_or_else(|| panic!("weight arena has no param {}", t.name));
+            assert_eq!(numel, t.numel(), "param {} size differs from build graph", t.name);
+            self.slab.write(off, &synth_param(&t.name, numel, seed));
+        }
+        self.init_runs.fetch_add(1, Ordering::Relaxed);
     }
 }
 
@@ -235,6 +349,76 @@ mod tests {
 
     fn have_artifacts() -> bool {
         Manifest::load(&Manifest::default_dir()).is_ok()
+    }
+
+    /// Batch-`b` tiny-model decode graph — no artifacts needed, so the
+    /// weight-arena tests below run everywhere.
+    fn tiny_graph(b: usize) -> CompGraph {
+        build_decode_graph(
+            &ModelConfig::tiny(),
+            &GraphOptions { batch: b, kv_len: 15, dtype: DType::F32, ..Default::default() },
+        )
+    }
+
+    #[test]
+    fn weight_arena_matches_per_store_init() {
+        // the arena's name-seeded values must be byte-identical to what
+        // per-session init_weights writes, for every specialization.
+        let g8 = tiny_graph(8);
+        let arena = WeightArena::build(&g8);
+        arena.init(&g8, 42);
+        assert_eq!(arena.init_runs(), 1);
+        for b in [1usize, 4] {
+            let g = tiny_graph(b);
+            let aliased = TensorStore::new_with_aliases(&g, arena.aliases_for(&g));
+            let owned = TensorStore::new(&g);
+            init_weights(&g, &owned, 42);
+            for t in g.tensors.iter().filter(|t| t.is_param) {
+                assert_eq!(aliased.view(t.id), owned.view(t.id), "param {} batch {b}", t.name);
+            }
+        }
+    }
+
+    #[test]
+    fn weight_arena_is_shared_memory_not_a_copy() {
+        let g2 = tiny_graph(2);
+        let g4 = tiny_graph(4);
+        let arena = WeightArena::build(&g4);
+        arena.init(&g4, 7);
+        let s2 = TensorStore::new_with_aliases(&g2, arena.aliases_for(&g2));
+        let s4 = TensorStore::new_with_aliases(&g4, arena.aliases_for(&g4));
+        let params: usize = g4.tensors.iter().filter(|t| t.is_param).map(|t| t.numel()).sum();
+        assert_eq!(arena.len(), params);
+        for t in g2.tensors.iter().filter(|t| t.is_param) {
+            let t4 = g4.tensor_by_name(&t.name).unwrap().id;
+            // same pointer, not merely equal values: one allocation.
+            assert_eq!(
+                s2.view(t.id).as_ptr(),
+                s4.view(t4).as_ptr(),
+                "param {} duplicated across sessions",
+                t.name
+            );
+        }
+        // neither session's own slab holds the weights any more.
+        assert!(s2.owned_len() < params, "batch-2 store still packs weights");
+        assert!(s4.owned_len() < params, "batch-4 store still packs weights");
+        // a write through one session is visible to the other (staging
+        // semantics — post-init the arena is read-only by contract).
+        let e2 = g2.tensor_by_name("embed.weight").unwrap().id;
+        let e4 = g4.tensor_by_name("embed.weight").unwrap().id;
+        let mut v = s2.view(e2).to_vec();
+        v[0] += 1.0;
+        s2.set(e2, &v);
+        assert_eq!(s4.view(e4)[0], v[0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "has no param")]
+    fn weight_arena_rejects_foreign_graph() {
+        let arena = WeightArena::build(&tiny_graph(1));
+        let mut other = CompGraph::new();
+        other.param("not.a.tiny.param", vec![2, 2], DType::F32);
+        let _ = arena.aliases_for(&other);
     }
 
     #[test]

@@ -6,9 +6,12 @@
 //! per-tensor offset table ([`TensorStore::new`] packs them in id
 //! order). Tensors may instead be *aliased* into a [`SharedSlab`] owned
 //! outside the store ([`TensorStore::new_with_aliases`]) — the serving
-//! engine uses this to point every batch-size-specialized session's KV
-//! cache tensors at one shared max-batch KV arena, so a request's cache
-//! rows never move when the engine switches specializations.
+//! engine uses this twice: every batch-size-specialized session's KV
+//! cache tensors point at one shared max-batch KV arena (so a request's
+//! cache rows never move when the engine switches specializations), and
+//! every session's **parameter tensors** point at one shared weight
+//! arena (`exec::real::WeightArena`), initialized once and read-only
+//! thereafter.
 //!
 //! # Who may read or write, and when
 //!
@@ -31,6 +34,22 @@
 //!   harvest, KV slot remaps) runs only while the kernel is quiesced —
 //!   the persistent kernel's `run()` does not return mid-epoch, so the
 //!   single-threaded engine loop never races the workers.
+//! * **Read-only cross-session aliasing (the weight arena).** A tensor
+//!   aliased into a shared slab by *several* stores at once is sound
+//!   under a stricter discipline than the per-graph event order, which
+//!   only sequences tasks of one compiled graph: the region must be
+//!   written only before any aliasing kernel first runs, and never
+//!   again (re-initialization while another session's kernel is
+//!   mid-epoch would race). The serving engine's weight arena obeys
+//!   this by construction — weights are synthesized once at engine
+//!   `create`, before any session kernel has executed, and no
+//!   compiled-graph task ever has a param tensor as its output — so
+//!   concurrent reads from different sessions need no ordering at all.
+//!   The shared max-batch KV arena is the *mutable* counterpart; it
+//!   stays sound because the engine runs one session's kernel at a
+//!   time and slots are stable (no two sessions' tasks are ever in
+//!   flight together, and slot ownership never changes while a request
+//!   lives).
 //!
 //! Under that contract, borrowed views ([`TensorStore::view`],
 //! [`TileView`]) are sound: every `unsafe` block in this module reduces
@@ -307,6 +326,14 @@ impl TensorStore {
         &self.entries[t].shape
     }
 
+    /// Elements in the store's **own** packed slab — excludes tensors
+    /// aliased into shared slabs. The serving engine asserts with this
+    /// that per-session stores no longer duplicate weights or KV: a
+    /// session's own slab holds only its activations.
+    pub fn owned_len(&self) -> usize {
+        self.slabs[0].len
+    }
+
     pub fn numel(&self, t: TensorId) -> usize {
         self.entries[t].numel
     }
@@ -403,8 +430,11 @@ impl TensorStore {
     pub fn set(&self, t: TensorId, data: &[f32]) {
         let e = &self.entries[t];
         assert_eq!(e.numel, data.len(), "tensor {t} size mismatch");
-        let full = Region::full(&e.shape);
-        let _g = self.track(t, &full, true);
+        // the debug tracker needs a Region, which is heap-backed —
+        // build it only where the tracker exists (release `track` is a
+        // no-op; staging writes must not pay a per-call allocation).
+        #[cfg(debug_assertions)]
+        let _g = self.track(t, &Region::full(&e.shape), true);
         // SAFETY: exact-span write; `copy` (memmove) tolerates a caller
         // passing a view of this very tensor.
         unsafe { std::ptr::copy(data.as_ptr(), self.base_ptr(t), data.len()) }

@@ -70,7 +70,7 @@ fn main() {
                 .expect("serving needs artifacts: run `make artifacts`");
             for i in 0..n as u64 {
                 let prompt: Vec<i32> = (0..3).map(|t| 1 + (i as i32 * 13 + t) % 500).collect();
-                e.submit(Request::new(i, prompt, 6));
+                e.submit(Request::new(i, prompt, 6)).expect("request within max_seq");
             }
             let (out, stats) = e.serve().expect("serve");
             println!(

@@ -122,9 +122,25 @@ impl Manifest {
         self.artifacts.iter().enumerate().find(|(_, a)| a.name == name)
     }
 
-    /// Default artifacts directory: `$MPK_ARTIFACTS` or `./artifacts`.
+    /// Default artifacts directory: `$MPK_ARTIFACTS`, else `./artifacts`,
+    /// else the repo-root `artifacts/` anchored at the crate directory
+    /// (compile-time `CARGO_MANIFEST_DIR`, *not* the CWD — a CWD-relative
+    /// guess could silently pick up a foreign directory). The crate
+    /// lives in `rust/` while the AOT pipeline writes artifacts at the
+    /// repo root, so `cargo test` and examples run from the crate
+    /// directory still find them.
     pub fn default_dir() -> PathBuf {
-        std::env::var("MPK_ARTIFACTS").map(PathBuf::from).unwrap_or_else(|_| PathBuf::from("artifacts"))
+        if let Ok(p) = std::env::var("MPK_ARTIFACTS") {
+            return PathBuf::from(p);
+        }
+        let local = PathBuf::from("artifacts");
+        if !local.is_dir() {
+            let repo_root = Path::new(env!("CARGO_MANIFEST_DIR")).join("../artifacts");
+            if repo_root.is_dir() {
+                return repo_root;
+            }
+        }
+        local
     }
 }
 

@@ -1,4 +1,5 @@
-//! Requests and continuous batching (§6.1, Orca-style).
+//! Requests and continuous batching (§6.1, Orca-style) over **stable
+//! slots**.
 //!
 //! Each decode iteration the engine (1) retires finished requests,
 //! (2) admits waiting requests while KV blocks and batch slots allow,
@@ -6,9 +7,23 @@
 //! size. In the paper this bookkeeping runs *inside* the mega-kernel as
 //! the start event's task; here it is the host-side `IterPrep`
 //! counterpart driving the same state.
+//!
+//! # Slot policy: lowest-free-slot, no compaction
+//!
+//! An active request keeps the slot it was admitted into until it
+//! retires — retirements free the slot but never move a survivor.
+//! Because every batch-size specialization aliases one shared max-batch
+//! KV arena keyed by slot, stable slots make `kv_rows_migrated`
+//! *structurally* zero: there is no code path that relocates a live
+//! request's cache rows. The cost is fragmentation: after retirements
+//! the highest occupied slot (not the active count) bounds which
+//! specialized graph must run, so the engine occasionally executes the
+//! next-larger graph than the active count strictly needs. New
+//! admissions take the **lowest** free slot, so fragmentation heals
+//! through churn instead of through copies.
 
 use crate::serving::kvcache::KvAllocator;
-use std::collections::VecDeque;
+use std::collections::{HashSet, VecDeque};
 
 /// A generation request.
 #[derive(Clone, Debug)]
@@ -22,7 +37,8 @@ pub struct Request {
     pub prompt_pos: usize,
     /// Cache length (tokens already appended).
     pub cache_len: usize,
-    /// Batch slot while active.
+    /// Batch slot while active. Stable: assigned at admission, held
+    /// until retirement.
     pub slot: Option<usize>,
 }
 
@@ -57,29 +73,70 @@ impl Request {
     }
 }
 
-/// Continuous batcher over a bounded slot array.
+/// Continuous batcher over a bounded slot array with stable slots.
 pub struct Batcher {
     pub max_batch: usize,
     pub max_seq: usize,
     waiting: VecDeque<Request>,
+    /// Active requests, unordered (retirement uses `swap_remove`) —
+    /// each request carries its own stable `slot`; never index this by
+    /// slot.
     pub active: Vec<Request>,
     pub finished: Vec<Request>,
     pub kv: KvAllocator,
+    /// slot → occupying request id. The allocator state: admission
+    /// claims the lowest `None`, retirement clears its entry, nothing
+    /// else ever writes it.
+    slots: Vec<Option<u64>>,
+    /// Every id this batcher has ever accepted (waiting, active, or
+    /// finished). Ids key KV residency, slots, and the output map, so a
+    /// duplicate is rejected at submit — O(1), never pruned (finished
+    /// requests keep their ids reserved).
+    known_ids: HashSet<u64>,
 }
 
 impl Batcher {
     pub fn new(max_batch: usize, max_seq: usize, kv: KvAllocator) -> Self {
-        Batcher { max_batch, max_seq, waiting: VecDeque::new(), active: Vec::new(), finished: Vec::new(), kv }
+        Batcher {
+            max_batch,
+            max_seq,
+            waiting: VecDeque::new(),
+            active: Vec::new(),
+            finished: Vec::new(),
+            kv,
+            slots: vec![None; max_batch],
+            known_ids: HashSet::new(),
+        }
     }
 
-    pub fn submit(&mut self, r: Request) {
-        assert!(
-            r.prompt.len() + r.max_new_tokens <= self.max_seq,
-            "request {} exceeds max_seq {}",
-            r.id,
-            self.max_seq
-        );
+    /// Queue a request, or reject it if it can never be served safely:
+    /// client-supplied input must not abort the engine *or* vanish, so
+    /// an oversized request (beyond `max_seq`, or whose worst-case KV
+    /// demand exceeds the whole block pool — it would wait forever and
+    /// stall everything queued behind it) — or a duplicate id, which
+    /// would alias another request's KV residency and slot — is an
+    /// `Err`, not a panic or a silent drop.
+    pub fn submit(&mut self, r: Request) -> Result<(), String> {
+        let worst = r.prompt.len() + r.max_new_tokens;
+        if worst > self.max_seq {
+            return Err(format!(
+                "request {} rejected: worst-case {} tokens exceeds max_seq {}",
+                r.id, worst, self.max_seq
+            ));
+        }
+        let need = self.kv.blocks_for(worst);
+        if need > self.kv.total_blocks() {
+            return Err(format!(
+                "request {} rejected: worst-case {worst} tokens needs {need} KV blocks, pool has {}",
+                r.id,
+                self.kv.total_blocks()
+            ));
+        }
+        if !self.known_ids.insert(r.id) {
+            return Err(format!("request id {} rejected: already known to this batcher", r.id));
+        }
         self.waiting.push_back(r);
+        Ok(())
     }
 
     pub fn pending(&self) -> usize {
@@ -90,45 +147,68 @@ impl Batcher {
         !self.waiting.is_empty() || !self.active.is_empty()
     }
 
+    /// Lowest unoccupied slot, if any.
+    fn lowest_free_slot(&self) -> Option<usize> {
+        self.slots.iter().position(Option::is_none)
+    }
+
+    /// One past the highest occupied slot (0 when idle). Because slots
+    /// are never compacted this — not `active.len()` — is what the
+    /// specialized graph must cover.
+    pub fn slot_bound(&self) -> usize {
+        self.slots.iter().rposition(Option::is_some).map_or(0, |i| i + 1)
+    }
+
     /// One scheduling step: retire finished, admit waiting (§6.1 order).
-    /// Returns ids of requests retired this step.
+    /// Returns ids of requests retired this step. Survivors keep their
+    /// slots; freed slots are immediately reusable (lowest first).
     pub fn step_admission(&mut self) -> Vec<u64> {
-        // 1. retire
+        // 1. retire: free the slot, never touch survivors.
         let mut retired = Vec::new();
         let mut i = 0;
         while i < self.active.len() {
             if self.active[i].finished() {
                 let mut r = self.active.swap_remove(i);
                 self.kv.release(r.id);
-                r.slot = None;
+                let slot = r.slot.take().expect("active request without slot");
+                debug_assert_eq!(self.slots[slot], Some(r.id), "slot table out of sync");
+                self.slots[slot] = None;
                 retired.push(r.id);
                 self.finished.push(r);
             } else {
                 i += 1;
             }
         }
-        // 2. admit while slots + KV blocks allow (worst-case reservation).
-        while self.active.len() < self.max_batch {
+        // 2. admit into the lowest free slot while slots + KV blocks
+        // allow (worst-case reservation).
+        while let Some(slot) = self.lowest_free_slot() {
             let Some(front) = self.waiting.front() else { break };
             let worst = front.prompt.len() + front.max_new_tokens;
             if !self.kv.ensure(front.id, worst) {
                 break; // KV pressure: wait for retirements
             }
             let mut r = self.waiting.pop_front().unwrap();
-            r.slot = None; // assigned by compaction below
-            self.active.push(r);
-        }
-        // 3. compact slots: active requests occupy slots 0..n in order.
-        for (slot, r) in self.active.iter_mut().enumerate() {
             r.slot = Some(slot);
+            self.slots[slot] = Some(r.id);
+            self.active.push(r);
         }
         retired
     }
 
-    /// Specialized-graph batch size for the current active set: next
-    /// power of two (§6.1 "powers of two up to the maximum batch size").
+    /// Specialized-graph batch size for the current active set: the next
+    /// power of two covering the highest occupied **slot** (§6.1 "powers
+    /// of two up to the maximum batch size"), since slots are stable and
+    /// may be fragmented after retirements. Returns **0** for an empty
+    /// active set — `0.next_power_of_two()` is 1, and running a batch-1
+    /// graph with no work is not a real iteration; the decode loop skips
+    /// it.
     pub fn graph_batch(&self) -> usize {
-        self.active.len().next_power_of_two().min(self.max_batch.next_power_of_two())
+        match self.slot_bound() {
+            0 => 0,
+            // slot_bound ≤ max_batch by construction (the slot table
+            // has exactly max_batch entries), so no clamp is needed.
+            b => b.next_power_of_two(),
+        }
     }
 }
 
@@ -144,11 +224,19 @@ mod tests {
         Request::new(id, (0..prompt_len as i32).collect(), gen)
     }
 
+    /// Finish the active request with the given id.
+    fn finish(b: &mut Batcher, id: u64) {
+        let r = b.active.iter_mut().find(|r| r.id == id).unwrap();
+        while r.generated.len() < r.max_new_tokens {
+            r.generated.push(0);
+        }
+    }
+
     #[test]
     fn admits_up_to_batch_capacity() {
         let mut b = batcher(2, 100);
         for i in 0..4 {
-            b.submit(req(i, 4, 4));
+            b.submit(req(i, 4, 4)).unwrap();
         }
         b.step_admission();
         assert_eq!(b.active.len(), 2);
@@ -162,8 +250,8 @@ mod tests {
         // 2 blocks of 8 tokens = 16 tokens capacity; each request needs
         // 8+8 = 16 → only one fits.
         let mut b = batcher(4, 2);
-        b.submit(req(1, 8, 8));
-        b.submit(req(2, 8, 8));
+        b.submit(req(1, 8, 8)).unwrap();
+        b.submit(req(2, 8, 8)).unwrap();
         b.step_admission();
         assert_eq!(b.active.len(), 1);
         assert_eq!(b.pending(), 1);
@@ -172,8 +260,8 @@ mod tests {
     #[test]
     fn retirement_frees_kv_and_admits_next() {
         let mut b = batcher(4, 2);
-        b.submit(req(1, 8, 1));
-        b.submit(req(2, 8, 8));
+        b.submit(req(1, 8, 1)).unwrap();
+        b.submit(req(2, 8, 8)).unwrap();
         b.step_admission();
         assert_eq!(b.active.len(), 1);
         // finish request 1
@@ -182,18 +270,74 @@ mod tests {
         assert_eq!(retired, vec![1]);
         assert_eq!(b.active.len(), 1);
         assert_eq!(b.active[0].id, 2);
+        // freed slot 0 is the lowest free slot → reused immediately.
+        assert_eq!(b.active[0].slot, Some(0));
         assert_eq!(b.kv.held_by(1), 0);
+    }
+
+    #[test]
+    fn survivors_keep_slots_across_retirement() {
+        let mut b = batcher(4, 100);
+        for i in 0..3 {
+            b.submit(req(i, 2, 4)).unwrap();
+        }
+        b.step_admission();
+        // retire the middle slot; neighbours must not move.
+        finish(&mut b, 1);
+        let retired = b.step_admission();
+        assert_eq!(retired, vec![1]);
+        let slot_of = |b: &Batcher, id: u64| b.active.iter().find(|r| r.id == id).unwrap().slot;
+        assert_eq!(slot_of(&b, 0), Some(0));
+        assert_eq!(slot_of(&b, 2), Some(2), "survivor must not be compacted");
+        assert_eq!(b.slot_bound(), 3, "highest occupied slot bounds the graph");
+        // the hole is filled by the next admission, lowest-first.
+        b.submit(req(9, 2, 4)).unwrap();
+        b.step_admission();
+        assert_eq!(slot_of(&b, 9), Some(1));
+        assert_eq!(slot_of(&b, 0), Some(0));
+        assert_eq!(slot_of(&b, 2), Some(2));
+    }
+
+    #[test]
+    fn graph_batch_covers_fragmented_slots() {
+        let mut b = batcher(8, 1000);
+        for i in 0..3 {
+            b.submit(req(i, 2, 4)).unwrap();
+        }
+        b.step_admission();
+        assert_eq!(b.graph_batch(), 4, "3 occupied slots → batch-4 graph");
+        // retire slots 0 and 1: one survivor at slot 2 still needs the
+        // batch-4 graph (the accepted cost of never moving rows).
+        finish(&mut b, 0);
+        finish(&mut b, 1);
+        b.step_admission();
+        assert_eq!(b.active.len(), 1);
+        assert_eq!(b.slot_bound(), 3);
+        assert_eq!(b.graph_batch(), 4);
     }
 
     #[test]
     fn graph_batch_is_power_of_two() {
         let mut b = batcher(8, 1000);
         for i in 0..5 {
-            b.submit(req(i, 2, 2));
+            b.submit(req(i, 2, 2)).unwrap();
         }
         b.step_admission();
         assert_eq!(b.active.len(), 5);
         assert_eq!(b.graph_batch(), 8);
+    }
+
+    #[test]
+    fn graph_batch_zero_when_idle() {
+        let b = batcher(4, 100);
+        assert_eq!(b.graph_batch(), 0, "no active slots → no graph to run");
+        let mut b = batcher(4, 100);
+        b.submit(req(1, 2, 1)).unwrap();
+        b.step_admission();
+        assert_eq!(b.graph_batch(), 1);
+        finish(&mut b, 1);
+        b.step_admission();
+        assert_eq!(b.graph_batch(), 0, "all retired → back to 0");
     }
 
     #[test]
@@ -210,9 +354,46 @@ mod tests {
     }
 
     #[test]
-    #[should_panic(expected = "exceeds max_seq")]
-    fn oversized_request_rejected() {
+    fn request_larger_than_kv_pool_rejected_not_dropped() {
+        // 2 blocks × 8 tokens = 16-token pool; a 17-token worst case
+        // passes max_seq but could never be admitted — accepting it
+        // would stall the queue forever and silently drop the request.
+        let mut b = batcher(4, 2);
+        let err = b.submit(req(1, 9, 8)).unwrap_err();
+        assert!(err.contains("KV blocks"), "got: {err}");
+        assert!(!b.has_work());
+        // exactly pool-sized is fine.
+        b.submit(req(2, 8, 8)).unwrap();
+        assert_eq!(b.pending(), 1);
+    }
+
+    #[test]
+    fn duplicate_request_id_rejected() {
+        let mut b = batcher(4, 100);
+        b.submit(req(7, 2, 2)).unwrap();
+        // duplicate while waiting.
+        assert!(b.submit(req(7, 2, 2)).unwrap_err().contains("already known"));
+        b.step_admission();
+        // duplicate while active: would alias request 7's slot and KV
+        // residency (keyed by id) — must be rejected, not admitted.
+        assert!(b.submit(req(7, 2, 2)).unwrap_err().contains("already known"));
+        finish(&mut b, 7);
+        b.step_admission();
+        // duplicate after retirement: outputs are keyed by id too.
+        assert!(b.submit(req(7, 2, 2)).unwrap_err().contains("already known"));
+        // a fresh id is unaffected.
+        b.submit(req(8, 2, 2)).unwrap();
+    }
+
+    #[test]
+    fn oversized_request_rejected_not_panicked() {
         let mut b = batcher(1, 100);
-        b.submit(req(1, 60, 10));
+        let err = b.submit(req(1, 60, 10)).unwrap_err();
+        assert!(err.contains("exceeds max_seq"), "got: {err}");
+        assert_eq!(b.pending(), 0, "rejected request must not be queued");
+        assert!(!b.has_work());
+        // a legal request right after is unaffected.
+        b.submit(req(2, 30, 30)).unwrap();
+        assert_eq!(b.pending(), 1);
     }
 }

@@ -1,27 +1,35 @@
 //! The serving engine: continuous batching over the real-numerics
-//! megakernel (§6.1), with a persistent runtime, resident KV, and a
-//! zero-copy decode hot path.
+//! megakernel (§6.1), with a persistent runtime, resident KV, stable
+//! batch slots, and a zero-copy decode hot path.
 //!
 //! Each batch-size specialization is a long-lived [`Session`]: a tensor
-//! arena holding weights and activations, a [`PersistentMegaKernel`]
-//! whose worker/scheduler threads park between iterations, a resident
+//! arena holding activations, a [`PersistentMegaKernel`] whose
+//! worker/scheduler threads park between iterations, a resident
 //! `OwningTileExecutor`, and tensor ids resolved once at creation. All
 //! sessions alias **one shared max-batch [`KvArena`]** for their KV
-//! cache tensors: a batch-`b` graph's `l{l}.kcache` is the first `b`
-//! slots of the arena's layer segment, so switching specializations
-//! re-interprets the same memory instead of migrating rows.
+//! cache tensors (a batch-`b` graph's `l{l}.kcache` is the first `b`
+//! slots of the arena's layer segment) and **one shared
+//! [`WeightArena`]** for their parameter tensors (initialized once at
+//! `create`, read-only thereafter) — switching specializations
+//! re-interprets the same memory, and weight memory does not scale with
+//! the number of specializations.
 //!
 //! Per decode iteration: retire/admit (the paper's start-event task),
-//! pick the batch-size-specialized session (powers of two), reconcile
-//! KV residency — rows move only on slot compaction after a retirement,
-//! never on a batch-size transition — stage the input tokens, re-arm
-//! the resident kernel, then harvest logits through a borrowed arena
-//! view (greedy decoding). The newly appended KV row is written
-//! in-kernel by `KvAppend`; the engine never copies a tensor on the
-//! steady-state path (asserted via the store's read-side counters).
+//! pick the batch-size-specialized session covering the highest
+//! occupied **slot** (powers of two — slots are stable, so after
+//! retirements the occupied set may be fragmented and the engine
+//! accepts occasionally running the next-larger graph), stage each
+//! request's token at its slot index, re-arm the resident kernel, then
+//! harvest each request's logits row through a borrowed arena view
+//! (greedy decoding). A request keeps its slot from admission to
+//! retirement, so no code path moves KV rows: `kv_rows_migrated` is
+//! structurally zero, not merely zero in steady state. The newly
+//! appended KV row is written in-kernel by `KvAppend`; the engine never
+//! copies a tensor on the decode path (asserted via the store's
+//! read-side counters).
 
 use crate::exec::binder::OwningTileExecutor;
-use crate::exec::real::{self, compile_real, init_weights};
+use crate::exec::real::{self, compile_real, WeightArena};
 use crate::exec::store::TensorStore;
 use crate::megakernel::{MegaConfig, PersistentMegaKernel};
 use crate::ops::TensorId;
@@ -33,9 +41,10 @@ use std::collections::HashMap;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-/// One batch-size specialization: tensor arena (weights + activations,
-/// KV aliased into the shared arena), the persistent kernel, the
-/// resident executor, and hot-path tensor ids resolved once at creation.
+/// One batch-size specialization: tensor arena (activations only — KV
+/// and weights aliased into the shared arenas), the persistent kernel,
+/// the resident executor, and hot-path tensor ids resolved once at
+/// creation.
 struct Session {
     store: Arc<TensorStore>,
     kernel: PersistentMegaKernel,
@@ -53,10 +62,12 @@ pub struct ServeStats {
     pub iter_latencies: Vec<Duration>,
     /// Tokens in flight per iteration (batch-utilization curve).
     pub batch_sizes: Vec<usize>,
-    /// K/V rows moved within the shared max-batch arena on slot
-    /// compaction after a retirement, summed over layers. Zero on a
-    /// steady-state iteration — and zero across batch-size transitions,
-    /// because every specialization aliases the same arena.
+    /// K/V rows moved within the shared max-batch arena, summed over
+    /// layers. With stable slots this is structurally zero — requests
+    /// keep their slot from admission to retirement and every
+    /// specialization aliases the same arena, so neither retirements
+    /// nor batch-size transitions move rows. Kept as a counter so the
+    /// tests can assert the invariant instead of trusting it.
     pub kv_rows_migrated: usize,
 }
 
@@ -68,12 +79,19 @@ impl ServeStats {
     /// `q`-quantile of per-iteration latency via `select_nth_unstable`
     /// — O(n), no full sort. One clone of the latency vector is still
     /// needed because selection reorders in place.
+    ///
+    /// Nearest-rank definition: the smallest sample ≥ the requested
+    /// fraction of the distribution, i.e. rank `⌈q·n⌉` (1-based). The
+    /// earlier `floor((n-1)·q)` indexing under-reported tail quantiles
+    /// — e.g. p99 of 10 samples picked the 9th, not the 10th.
     fn latency_quantile(&self, q: f64) -> Duration {
-        if self.iter_latencies.is_empty() {
+        let n = self.iter_latencies.len();
+        if n == 0 {
             return Duration::ZERO;
         }
+        let rank = (q * n as f64).ceil() as usize;
+        let idx = rank.clamp(1, n) - 1;
         let mut v = self.iter_latencies.clone();
-        let idx = (((v.len() - 1) as f64) * q).floor() as usize;
         let (_, nth, _) = v.select_nth_unstable(idx);
         *nth
     }
@@ -95,12 +113,14 @@ pub struct ServeEngine {
     pub batcher: Batcher,
     residency: KvResidency,
     kv_arena: KvArena,
+    weights: WeightArena,
 }
 
 impl ServeEngine {
     /// Build an engine with specialized sessions (graph + arena +
     /// persistent kernel + resident executor) for each manifest batch
-    /// size up to `max_batch`, all aliasing one max-batch KV arena.
+    /// size up to `max_batch`, all aliasing one max-batch KV arena and
+    /// one weight arena (weights synthesized exactly once, here).
     /// `max_batch` must be one of the manifest's sizes.
     pub fn create(max_batch: usize, pool_threads: usize, seed: u64, mega: MegaConfig) -> Result<Self, String> {
         let manifest = Manifest::load(&Manifest::default_dir())?;
@@ -110,23 +130,35 @@ impl ServeEngine {
         let m = manifest.model;
         let pool = Arc::new(ExecPool::new(manifest.clone(), pool_threads)?);
         let kv_arena = KvArena::new(m.layers, max_batch, manifest.s_max, m.kv_dim());
+        let specs: Vec<(usize, Arc<crate::tgraph::CompiledGraph>)> = manifest
+            .batch_sizes
+            .iter()
+            .filter(|&&b| b <= max_batch)
+            .map(|&b| (b, Arc::new(compile_real(&manifest, b))))
+            .collect();
+        // one shared weight arena, initialized once: params are
+        // batch-independent and name-seeded, so every specialization
+        // aliases the same values instead of re-synthesizing them.
+        let (_, max_compiled) =
+            specs.iter().find(|(b, _)| *b == max_batch).expect("max_batch spec compiled");
+        let weights = WeightArena::build(&max_compiled.graph);
+        weights.init(&max_compiled.graph, seed);
         let mut sessions = HashMap::new();
-        for &b in manifest.batch_sizes.iter().filter(|&&b| b <= max_batch) {
-            let compiled = Arc::new(compile_real(&manifest, b));
+        for (b, compiled) in specs {
             // hoist every per-iteration name lookup to creation time.
             let id = |name: &str| -> Result<TensorId, String> {
                 Ok(compiled.graph.tensor_by_name(name).ok_or_else(|| format!("missing tensor {name}"))?.id)
             };
-            // alias this session's KV tensors into the shared arena: a
-            // batch-b cache tensor [b, s_max, kv_dim] is the first b
-            // slots of the layer's [max_batch, s_max, kv_dim] segment.
-            let mut aliases = Vec::with_capacity(2 * m.layers);
+            // alias this session's KV tensors into the shared KV arena
+            // (a batch-b cache tensor [b, s_max, kv_dim] is the first b
+            // slots of the layer's [max_batch, s_max, kv_dim] segment)
+            // and its param tensors into the shared weight arena.
+            let mut aliases = weights.aliases_for(&compiled.graph);
             for l in 0..m.layers {
                 aliases.push((id(&format!("l{l}.kcache"))?, kv_arena.slab(), kv_arena.k_offset(l)));
                 aliases.push((id(&format!("l{l}.vcache"))?, kv_arena.slab(), kv_arena.v_offset(l)));
             }
             let store = Arc::new(TensorStore::new_with_aliases(&compiled.graph, aliases));
-            init_weights(&compiled.graph, &store, seed);
             let token_ids = id("token_ids")?;
             let logits = id("lm_head")?;
             let kernel = PersistentMegaKernel::new(compiled.clone(), mega);
@@ -143,16 +175,39 @@ impl ServeEngine {
             batcher,
             residency: KvResidency::default(),
             kv_arena,
+            weights,
         })
     }
 
-    pub fn submit(&mut self, r: Request) {
-        self.batcher.submit(r);
+    /// Queue a request; a request whose worst-case length exceeds the
+    /// engine's `max_seq`, or whose id duplicates one this engine has
+    /// seen, is rejected (client input must not abort a serving
+    /// process — and residency/outputs are keyed by id).
+    pub fn submit(&mut self, r: Request) -> Result<(), String> {
+        self.batcher.submit(r)
     }
 
     /// The engine's PJRT pool (shared by every session's executor).
     pub fn pool(&self) -> &ExecPool {
         &self.pool
+    }
+
+    /// The shared max-batch KV arena every session aliases (the engine
+    /// owns it; sessions hold slab handles).
+    pub fn kv_arena(&self) -> &KvArena {
+        &self.kv_arena
+    }
+
+    /// Times the shared weight arena has been initialized — exactly 1
+    /// regardless of how many batch-size specializations exist.
+    pub fn weight_init_runs(&self) -> u64 {
+        self.weights.init_runs()
+    }
+
+    /// Elements in the shared weight arena (the only weight storage —
+    /// per-session stores hold activations only).
+    pub fn weight_arena_len(&self) -> usize {
+        self.weights.len()
     }
 
     /// Sum of read-side `(allocs, bytes_copied)` store counters across
@@ -166,38 +221,33 @@ impl ServeEngine {
         })
     }
 
-    /// Make every active request's KV rows resident at its assigned
-    /// batcher slot of the shared arena; returns rows moved (×layers).
-    /// Batch-size transitions are free — every session aliases the same
-    /// arena — so rows move only on slot compaction after a retirement.
-    ///
-    /// Iterates in ascending slot order, which makes compaction safe
-    /// without double-buffering: survivors only ever move to *lower*
-    /// slots (the batcher compacts with `swap_remove` then reassigns
-    /// 0..n in order), so if some move's destination aliases another
-    /// request's source slot, that request sits at a lower destination
-    /// and is moved — its source read — first.
-    fn reconcile_residency(&mut self) -> usize {
-        let mut moved = 0usize;
-        for (slot, r) in self.batcher.active.iter().enumerate() {
+    /// Record where each active request's KV rows live. With stable
+    /// slots a request's arena home *is* its batcher slot for its whole
+    /// lifetime, so this only ever inserts on admission. A mismatch
+    /// means a batcher change reintroduced slot remaps — an internal
+    /// invariant violation, not something to "repair": a set of
+    /// conflicting moves applied in arbitrary order could overwrite
+    /// live rows (the old compaction path needed an ascending-walk
+    /// ordering argument for exactly this), so the engine refuses and
+    /// errors out instead. Always `Ok(0)` today; returns the row count
+    /// so `kv_rows_migrated` keeps its unit if a deliberate relocation
+    /// policy (e.g. anti-fragmentation compaction) is ever added.
+    fn reconcile_residency(&mut self) -> Result<usize, String> {
+        for r in &self.batcher.active {
+            let slot = r.slot.expect("active request without slot");
             match self.residency.home(r.id) {
                 Some(cur) if cur == slot => {}
                 Some(cur) => {
-                    // the single-pass ascending walk is only sound while
-                    // survivors move strictly downward — pin the batcher
-                    // invariant this relies on.
-                    debug_assert!(
-                        cur > slot,
-                        "compaction moved a survivor upward ({cur} -> {slot}); \
-                         reconcile_residency's ordering argument no longer holds"
-                    );
-                    moved += self.kv_arena.move_slot(cur, slot, r.cache_len);
-                    self.residency.set(r.id, slot);
+                    return Err(format!(
+                        "request {} moved slot {cur} -> {slot} despite stable-slot batching \
+                         (batcher invariant violation; refusing to relocate live KV rows)",
+                        r.id
+                    ));
                 }
                 None => self.residency.set(r.id, slot),
             }
         }
-        moved
+        Ok(0)
     }
 
     /// Drive everything to completion; returns per-request outputs and
@@ -211,24 +261,34 @@ impl ServeEngine {
             for id in self.batcher.step_admission() {
                 self.residency.evict(id);
             }
-            let active = self.batcher.active.len();
-            if active == 0 {
+            // graph_batch is 0 exactly when no slot is occupied — and
+            // then only when nothing is waiting either: submit rejects
+            // any request whose worst case exceeds the whole KV pool,
+            // so a lone waiting request always admits into an empty
+            // batcher. The break is a clean idle exit, not a drop.
+            let gb = self.batcher.graph_batch();
+            if gb == 0 {
+                debug_assert_eq!(self.batcher.pending(), 0, "accepted request stuck unadmittable");
                 break;
             }
-            let gb = self.batcher.graph_batch();
             if !self.sessions.contains_key(&gb) {
                 return Err(format!("no session for batch {gb}"));
             }
+            let active = self.batcher.active.len();
 
-            // KV stays resident in the shared arena: rows move only on
-            // slot compaction (zero on a steady-state iteration, zero
-            // on batch-size transitions).
-            stats.kv_rows_migrated += self.reconcile_residency();
+            // KV stays resident at each request's stable slot of the
+            // shared arena — structurally zero rows moved.
+            stats.kv_rows_migrated += self.reconcile_residency()?;
 
-            // stage inputs: this iteration's token per row, row lengths.
+            // stage inputs by slot index: this iteration's token per
+            // occupied row, row cache lengths. Vacant slots (stable
+            // slots fragment after retirements) decode token 0 into
+            // dead arena rows that the slot's next occupant overwrites
+            // from position 0 — their logits are never read.
             let mut ids = vec![0i32; gb];
             let mut lens = vec![0usize; gb];
-            for (slot, r) in self.batcher.active.iter().enumerate() {
+            for r in &self.batcher.active {
+                let slot = r.slot.expect("active request without slot");
                 ids[slot] = r.next_input();
                 lens[slot] = r.cache_len;
             }
@@ -249,12 +309,13 @@ impl ServeEngine {
             stats.iter_latencies.push(lat);
             stats.batch_sizes.push(active);
 
-            // harvest: logits → next token, through a borrowed arena
-            // view (no copy). KV needs no read-back — KvAppend already
-            // wrote this step's row in the resident arena.
+            // harvest: each request's logits row (at its slot) → next
+            // token, through a borrowed arena view (no copy). KV needs
+            // no read-back — KvAppend already wrote this step's row in
+            // the resident arena.
             let logits = session.store.view(session.logits);
-            for slot in 0..active {
-                let r = &mut self.batcher.active[slot];
+            for r in self.batcher.active.iter_mut() {
+                let slot = r.slot.expect("active request without slot");
                 r.cache_len += 1;
                 let tok = real::argmax(&logits[slot * vocab..(slot + 1) * vocab]) as i32;
                 if r.in_prefill() {
@@ -301,7 +362,7 @@ mod tests {
         }
         let mut e = ServeEngine::create(4, 2, 42, mega()).unwrap();
         for i in 0..3u64 {
-            e.submit(Request::new(i, vec![(i as i32) + 1, 7], 4));
+            e.submit(Request::new(i, vec![(i as i32) + 1, 7], 4)).unwrap();
         }
         let (out, stats) = e.serve().unwrap();
         assert_eq!(out.len(), 3);
@@ -313,8 +374,7 @@ mod tests {
         }
         assert_eq!(stats.tokens_generated, 12);
         assert!(stats.iterations >= 5, "prompt 2 + gen 4 - 1 overlap");
-        // all requests admitted at once and never remapped: no KV rows
-        // should ever have moved in the arena.
+        // slots are stable: no KV rows ever move in the arena.
         assert_eq!(stats.kv_rows_migrated, 0, "steady batch migrated KV rows");
     }
 
@@ -329,7 +389,7 @@ mod tests {
         // state the zero-copy invariant promises.
         let mut e = ServeEngine::create(4, 2, 42, mega()).unwrap();
         for i in 0..4u64 {
-            e.submit(Request::new(i, vec![(i as i32) + 1, 9], 5));
+            e.submit(Request::new(i, vec![(i as i32) + 1, 9], 5)).unwrap();
         }
         let (out, stats) = e.serve().unwrap();
         assert_eq!(out.len(), 4);
@@ -337,6 +397,81 @@ mod tests {
         let (allocs, bytes) = e.store_counters();
         assert_eq!(allocs, 0, "decode hot path materialized an input buffer");
         assert_eq!(bytes, 0, "decode hot path copied tensor data");
+    }
+
+    #[test]
+    fn retirements_do_not_migrate_kv() {
+        if !have_artifacts() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        // staggered generation lengths: requests retire one at a time
+        // while the rest keep decoding. Under prefix compaction every
+        // retirement remapped the survivors' slots and moved their KV
+        // rows; with stable slots the counter must stay at zero across
+        // retirements — not just across batch-size transitions.
+        let mut e = ServeEngine::create(4, 2, 42, mega()).unwrap();
+        for i in 0..4u64 {
+            e.submit(Request::new(i, vec![(i as i32) + 1, 3], 2 + i as usize)).unwrap();
+        }
+        let (out, stats) = e.serve().unwrap();
+        assert_eq!(out.len(), 4);
+        for (id, toks) in &out {
+            assert_eq!(toks.len(), 2 + *id as usize, "req {id}");
+        }
+        assert_eq!(stats.kv_rows_migrated, 0, "retirement migrated KV rows");
+        let (allocs, bytes) = e.store_counters();
+        assert_eq!((allocs, bytes), (0, 0), "decode hot path copied tensor data");
+        // the batch ramps down as requests retire.
+        assert!(stats.batch_sizes.iter().any(|&b| b < 4));
+    }
+
+    #[test]
+    fn weights_initialized_once_and_shared() {
+        if !have_artifacts() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        // four specializations (1, 2, 4, 8) — still one weight init and
+        // one weight allocation.
+        let e = ServeEngine::create(8, 2, 42, mega()).unwrap();
+        assert_eq!(e.sessions.len(), 4);
+        assert_eq!(e.weight_init_runs(), 1, "weights synthesized more than once");
+        // every session's embed table is the *same memory*.
+        let ptrs: Vec<_> = e
+            .sessions
+            .values()
+            .map(|s| {
+                let id = s.exec.graph().graph.tensor_by_name("embed.weight").unwrap().id;
+                s.store.view(id).as_ptr()
+            })
+            .collect();
+        assert!(ptrs.windows(2).all(|w| w[0] == w[1]), "weight tensors not aliased");
+        // no session's own slab is large enough to be hiding a weight
+        // copy: activations are strictly smaller than the params.
+        for s in e.sessions.values() {
+            assert!(
+                s.store.owned_len() < e.weight_arena_len(),
+                "session store still packs a private weight copy"
+            );
+        }
+    }
+
+    #[test]
+    fn oversized_request_is_rejected_not_fatal() {
+        if !have_artifacts() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let mut e = ServeEngine::create(2, 2, 5, mega()).unwrap();
+        let s_max = e.manifest.s_max;
+        let err = e.submit(Request::new(0, vec![1; s_max], 1)).unwrap_err();
+        assert!(err.contains("exceeds max_seq"), "got: {err}");
+        // the engine keeps serving legal requests afterwards.
+        e.submit(Request::new(1, vec![5], 2)).unwrap();
+        let (out, _) = e.serve().unwrap();
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[&1].len(), 2);
     }
 
     #[test]
@@ -349,9 +484,9 @@ mod tests {
         // size transitions 2 → 0 → 1 but no surviving request ever
         // changes slot, so the shared arena moves nothing.
         let mut e = ServeEngine::create(2, 2, 13, mega()).unwrap();
-        e.submit(Request::new(0, vec![3, 4], 3));
-        e.submit(Request::new(1, vec![5, 6], 3));
-        e.submit(Request::new(2, vec![7], 2));
+        e.submit(Request::new(0, vec![3, 4], 3)).unwrap();
+        e.submit(Request::new(1, vec![5, 6], 3)).unwrap();
+        e.submit(Request::new(2, vec![7], 2)).unwrap();
         let (out, stats) = e.serve().unwrap();
         assert_eq!(out.len(), 3);
         assert!(stats.batch_sizes.contains(&2) && stats.batch_sizes.contains(&1));
@@ -366,7 +501,7 @@ mod tests {
         }
         let run = || {
             let mut e = ServeEngine::create(2, 2, 9, mega()).unwrap();
-            e.submit(Request::new(0, vec![5, 6, 7], 5));
+            e.submit(Request::new(0, vec![5, 6, 7], 5)).unwrap();
             e.serve().unwrap().0
         };
         assert_eq!(run()[&0], run()[&0]);
@@ -381,7 +516,7 @@ mod tests {
         // more requests than slots: later ones admitted as earlier retire.
         let mut e = ServeEngine::create(2, 2, 11, mega()).unwrap();
         for i in 0..5u64 {
-            e.submit(Request::new(i, vec![1 + i as i32], 2 + (i as usize % 2)));
+            e.submit(Request::new(i, vec![1 + i as i32], 2 + (i as usize % 2))).unwrap();
         }
         let (out, stats) = e.serve().unwrap();
         assert_eq!(out.len(), 5);
@@ -390,6 +525,8 @@ mod tests {
         }
         // batch ramps: some iterations ran with 2 active requests.
         assert!(stats.batch_sizes.iter().any(|&b| b == 2));
+        // churn through retirements and re-admissions never moves rows.
+        assert_eq!(stats.kv_rows_migrated, 0);
     }
 
     #[test]
@@ -400,7 +537,7 @@ mod tests {
         }
         // engine output for one request == direct RealSession loop.
         let mut e = ServeEngine::create(1, 2, 42, mega()).unwrap();
-        e.submit(Request::new(0, vec![7], 3));
+        e.submit(Request::new(0, vec![7], 3)).unwrap();
         let (out, _) = e.serve().unwrap();
 
         let s = crate::exec::real::RealSession::create(1, 2, 42).unwrap();
@@ -421,7 +558,7 @@ mod tests {
     }
 
     #[test]
-    fn stats_quantiles() {
+    fn stats_quantiles_nearest_rank() {
         let mut s = ServeStats::default();
         assert_eq!(s.p50_latency(), Duration::ZERO);
         assert_eq!(s.p99_latency(), Duration::ZERO);
@@ -432,5 +569,14 @@ mod tests {
         s.iter_latencies.reverse();
         assert_eq!(s.p50_latency(), Duration::from_millis(50));
         assert_eq!(s.p99_latency(), Duration::from_millis(99));
+        // nearest-rank on a small sample: p99 of 10 is the max — the
+        // old floor((n-1)·q) indexing returned the 9th of 10 here.
+        s.iter_latencies = (1..=10).map(Duration::from_millis).collect();
+        assert_eq!(s.p99_latency(), Duration::from_millis(10));
+        assert_eq!(s.p50_latency(), Duration::from_millis(5));
+        // single sample: every quantile is that sample.
+        s.iter_latencies = vec![Duration::from_millis(3)];
+        assert_eq!(s.p50_latency(), Duration::from_millis(3));
+        assert_eq!(s.p99_latency(), Duration::from_millis(3));
     }
 }

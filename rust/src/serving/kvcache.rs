@@ -13,9 +13,14 @@
 //! batch-size-specialized session store. A batch-`b` session's
 //! `l{l}.kcache` tensor is exactly the first `b` slots of the layer's
 //! segment, so switching specializations re-interprets the same memory
-//! — pointer arithmetic, not row migration. Rows move only on slot
-//! compaction after a retirement ([`KvArena::move_slot`], one memcpy
-//! per layer segment); steady-state decode moves zero rows.
+//! — pointer arithmetic, not row migration. Since the batcher moved to
+//! stable slots (lowest-free-slot admission, no compaction), a
+//! request's rows stay put for its whole lifetime and decode moves zero
+//! rows structurally; [`KvArena::move_slot`] (one memcpy per layer
+//! segment) remains the relocation primitive for tooling and any
+//! future deliberate relocation policy (the engine itself refuses to
+//! relocate — a detected remap is an invariant violation it surfaces
+//! as an error).
 
 use crate::exec::store::SharedSlab;
 
@@ -145,9 +150,13 @@ impl KvArena {
     }
 
     /// Move the first `rows` cached rows of slot `src` into slot `dst`
-    /// across every layer's K and V segments (slot compaction after a
-    /// retirement). One contiguous memcpy per segment. Returns rows
-    /// moved × layers — the engine's `kv_rows_migrated` unit.
+    /// across every layer's K and V segments. One contiguous memcpy per
+    /// segment. Returns rows moved × layers — the engine's
+    /// `kv_rows_migrated` unit. The stable-slot serving path never
+    /// calls this; it survives as the relocation primitive for tooling
+    /// and for any future deliberate compaction policy. Callers doing
+    /// multiple moves own the ordering problem (a destination may be
+    /// another pending move's source).
     pub fn move_slot(&self, src: usize, dst: usize, rows: usize) -> usize {
         assert!(src < self.slots && dst < self.slots && src != dst, "bad slot move {src}->{dst}");
         assert!(rows <= self.s_max, "slot move rows {rows} > s_max {}", self.s_max);
@@ -171,11 +180,10 @@ impl KvArena {
 /// The serving engine keeps KV resident in the shared [`KvArena`]
 /// across decode iterations *and* across batch-size specializations
 /// (every session store aliases the same slab): the in-kernel
-/// `KvAppend` task writes each new row in place, so the engine moves
-/// cache rows only when this map says a request's rows live in a
-/// different slot than the one the batcher just assigned (slot
-/// compaction after a retirement). Switching batch sizes never moves
-/// rows.
+/// `KvAppend` task writes each new row in place. With stable batcher
+/// slots a request's home never changes between admission and
+/// retirement, so this map is written once per request and otherwise
+/// serves as the invariant check that no slot remap slipped back in.
 #[derive(Debug, Default)]
 pub struct KvResidency {
     /// request id → arena slot.
@@ -188,8 +196,8 @@ impl KvResidency {
         self.home.get(&req).copied()
     }
 
-    /// Record that `req`'s rows now live at `slot` (after a compaction
-    /// move, or on first admission).
+    /// Record that `req`'s rows live at `slot` (on admission; with
+    /// stable batcher slots this is the only write per request).
     pub fn set(&mut self, req: u64, slot: usize) {
         self.home.insert(req, slot);
     }
@@ -216,7 +224,7 @@ mod tests {
         assert_eq!(r.home(7), None);
         r.set(7, 2);
         assert_eq!(r.home(7), Some(2));
-        // slot compaction
+        // relocation (the engine's fallback path only)
         r.set(7, 0);
         assert_eq!(r.home(7), Some(0));
         assert_eq!(r.resident_count(), 1);

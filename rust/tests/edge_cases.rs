@@ -161,7 +161,7 @@ fn zero_generation_requests_complete_immediately() {
     use mpk::serving::{Batcher, KvAllocator, Request};
     let mut b = Batcher::new(2, 64, KvAllocator::new(16, 8));
     // max_new_tokens = 1: shortest legal request.
-    b.submit(Request::new(0, vec![1], 1));
+    b.submit(Request::new(0, vec![1], 1)).unwrap();
     b.step_admission();
     assert_eq!(b.active.len(), 1);
     b.active[0].generated.push(5);

@@ -62,8 +62,8 @@ fn serving_is_deterministic_across_engines() {
     let mega = MegaConfig { workers: 4, schedulers: 1, ..Default::default() };
     let run = || {
         let mut e = ServeEngine::create(2, 2, 77, mega).unwrap();
-        e.submit(Request::new(0, vec![9, 17], 4));
-        e.submit(Request::new(1, vec![250], 4));
+        e.submit(Request::new(0, vec![9, 17], 4)).unwrap();
+        e.submit(Request::new(1, vec![250], 4)).unwrap();
         e.serve().unwrap().0
     };
     let a = run();

@@ -1,12 +1,15 @@
 //! Property suite over the serving substrate: random request mixes must
-//! conserve KV blocks, never exceed batch capacity, and complete every
-//! request with exactly the asked-for token count. (Scheduler-level —
-//! no artifacts needed; the real-numerics serving path is covered by
-//! `serving::engine` tests and `examples/serve_e2e`.)
+//! conserve KV blocks, never exceed batch capacity, keep every active
+//! request's slot **stable** from admission to retirement
+//! (lowest-free-slot batching), and complete every request with exactly
+//! the asked-for token count. (Scheduler-level — no artifacts needed;
+//! the real-numerics serving path is covered by `serving::engine` tests
+//! and `examples/serve_e2e`.)
 
 use mpk::proputil::forall;
 use mpk::serving::{Batcher, KvAllocator, Request};
 use mpk::util::XorShift64;
+use std::collections::HashMap;
 
 struct Workload {
     max_batch: usize,
@@ -24,22 +27,53 @@ fn random_workload(rng: &mut XorShift64) -> Workload {
     }
 }
 
+/// Check the slot invariants for the current active set against the
+/// stability ledger: slots are unique, in bounds, and — for requests
+/// seen active before — unchanged since admission.
+fn check_slots(b: &Batcher, ledger: &mut HashMap<u64, usize>) -> Result<(), String> {
+    let mut seen = vec![false; b.max_batch];
+    for r in &b.active {
+        let slot = r.slot.ok_or_else(|| format!("active req {} without slot", r.id))?;
+        if slot >= b.max_batch {
+            return Err(format!("req {} slot {slot} out of bounds", r.id));
+        }
+        if seen[slot] {
+            return Err(format!("slot {slot} occupied twice"));
+        }
+        seen[slot] = true;
+        match ledger.get(&r.id) {
+            None => {
+                ledger.insert(r.id, slot);
+            }
+            Some(&home) if home == slot => {}
+            Some(&home) => {
+                return Err(format!("req {} moved slot {home} -> {slot}", r.id));
+            }
+        }
+    }
+    Ok(())
+}
+
 /// Drive the batcher with a fake model (each iteration generates one
 /// token for every active request).
 fn drive(w: &Workload) -> Result<(), String> {
     let kv = KvAllocator::new(w.blocks, 8);
     let mut b = Batcher::new(w.max_batch, 64, kv);
     for (i, &(p, g)) in w.requests.iter().enumerate() {
-        b.submit(Request::new(i as u64, vec![1; p], g));
+        b.submit(Request::new(i as u64, vec![1; p], g))?;
     }
     let total_blocks = w.blocks;
+    let mut slot_ledger: HashMap<u64, usize> = HashMap::new();
     let mut guard = 0;
     while b.has_work() {
         guard += 1;
         if guard > 10_000 {
             return Err("batcher livelock".into());
         }
-        b.step_admission();
+        let retired = b.step_admission();
+        for id in retired {
+            slot_ledger.remove(&id);
+        }
         if b.active.is_empty() {
             if b.pending() > 0 {
                 // a single waiting request must always fit eventually:
@@ -55,11 +89,12 @@ fn drive(w: &Workload) -> Result<(), String> {
         if b.active.len() > w.max_batch {
             return Err(format!("batch overflow: {}", b.active.len()));
         }
-        // slots compact and unique.
-        let mut slots: Vec<_> = b.active.iter().map(|r| r.slot.unwrap()).collect();
-        slots.sort_unstable();
-        if slots != (0..b.active.len()).collect::<Vec<_>>() {
-            return Err(format!("non-compact slots {slots:?}"));
+        // slots unique, in bounds, and stable across the request's life.
+        check_slots(&b, &mut slot_ledger)?;
+        // the specialized graph must cover every occupied slot.
+        let bound = b.active.iter().map(|r| r.slot.unwrap() + 1).max().unwrap();
+        if b.graph_batch() < bound {
+            return Err(format!("graph_batch {} < slot bound {bound}", b.graph_batch()));
         }
         // fake decode step.
         for r in b.active.iter_mut() {
@@ -100,6 +135,75 @@ fn prop_continuous_batching_conserves_blocks_and_completes() {
         }
         drive(w)
     });
+}
+
+/// Arbitrary retire/admit sequences — not just run-to-completion decode:
+/// each step force-finishes a random subset of the active set and
+/// trickles in new submissions, which is exactly the churn that used to
+/// trigger prefix compaction. No surviving request's slot may ever
+/// change, and freed slots must be re-issued lowest-first.
+#[test]
+fn prop_slots_stable_under_arbitrary_retire_admit() {
+    forall(
+        "slot stability",
+        0x5107_AB1E,
+        80,
+        |rng: &mut XorShift64| {
+            let max_batch = rng.range(1, 9);
+            let steps: Vec<(u64, bool)> =
+                (0..rng.range(5, 60)).map(|_| (rng.next_u64(), rng.below(3) == 0)).collect();
+            (max_batch, steps)
+        },
+        |(max_batch, steps)| {
+            let mut b = Batcher::new(*max_batch, 64, KvAllocator::new(1024, 8));
+            let mut ledger: HashMap<u64, usize> = HashMap::new();
+            let mut next_id = 0u64;
+            for &(roll, submit_burst) in steps {
+                // retire a random subset of the active set.
+                let n = b.active.len();
+                for i in 0..n {
+                    if (roll >> i) & 1 == 1 {
+                        let r = &mut b.active[i];
+                        while r.generated.len() < r.max_new_tokens {
+                            r.generated.push(0);
+                        }
+                    }
+                }
+                if submit_burst {
+                    for _ in 0..=(roll % 3) {
+                        b.submit(Request::new(next_id, vec![1, 2], 4)).unwrap();
+                        next_id += 1;
+                    }
+                }
+                let retired = b.step_admission();
+                for id in &retired {
+                    if ledger.remove(id).is_none() {
+                        return Err(format!("retired req {id} was never active"));
+                    }
+                }
+                let before: HashMap<u64, usize> = ledger.clone();
+                check_slots(&b, &mut ledger)?;
+                // lowest-free-slot: every *newly* admitted request must
+                // sit below every free slot at or under the bound.
+                let occupied: Vec<usize> = b.active.iter().map(|r| r.slot.unwrap()).collect();
+                for r in &b.active {
+                    if before.contains_key(&r.id) {
+                        continue; // pre-existing: stability already checked
+                    }
+                    let slot = r.slot.unwrap();
+                    for lower in 0..slot {
+                        if !occupied.contains(&lower) {
+                            return Err(format!(
+                                "req {} admitted at {slot} while slot {lower} was free",
+                                r.id
+                            ));
+                        }
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
 }
 
 #[test]

@@ -223,3 +223,60 @@ fn shared_arena_stress_across_aliased_stores() {
     let got = big.read_tile(tb, &Region::new(vec![(1, 2), (last_row, last_row + 1), (0, kv)]));
     assert_eq!(got, vec![199.0; kv]);
 }
+
+/// The weight-arena flavour of cross-store aliasing: a random subset of
+/// batch-size specializations aliases one [`mpk::exec::WeightArena`];
+/// every session's view of every param must agree element-for-element
+/// (and pointer-for-pointer) with the per-store `init_weights` result,
+/// under arbitrary seeds — the property that makes one shared init
+/// sound.
+#[test]
+fn prop_weight_arena_agrees_with_per_store_init() {
+    use mpk::exec::{init_weights, WeightArena};
+    use mpk::models::{build_decode_graph, GraphOptions, ModelConfig};
+    forall(
+        "weight arena",
+        0x3EED5,
+        8,
+        |rng: &mut XorShift64| {
+            let seed = rng.next_u64();
+            // a subset of specializations (kept small: every case
+            // synthesizes full model weights per store in debug builds).
+            let sizes: Vec<usize> =
+                [1usize, 2, 8].into_iter().filter(|_| rng.below(2) == 0).collect();
+            (seed, if sizes.is_empty() { vec![1] } else { sizes })
+        },
+        |(seed, sizes)| {
+            let mk = |b: usize| {
+                build_decode_graph(
+                    &ModelConfig::tiny(),
+                    &GraphOptions { batch: b, kv_len: 7, ..Default::default() },
+                )
+            };
+            let build = mk(*sizes.iter().max().unwrap());
+            let arena = WeightArena::build(&build);
+            arena.init(&build, *seed);
+            let mut first_ptr: Option<*const f32> = None;
+            for &b in sizes {
+                let g = mk(b);
+                let aliased = TensorStore::new_with_aliases(&g, arena.aliases_for(&g));
+                let owned = TensorStore::new(&g);
+                init_weights(&g, &owned, *seed);
+                for t in g.tensors.iter().filter(|t| t.is_param) {
+                    if aliased.view(t.id) != owned.view(t.id) {
+                        return Err(format!("param {} disagrees at batch {b}", t.name));
+                    }
+                }
+                let embed = g.tensor_by_name("embed.weight").unwrap().id;
+                let p = aliased.view(embed).as_ptr();
+                if *first_ptr.get_or_insert(p) != p {
+                    return Err(format!("batch {b} got a private weight copy"));
+                }
+            }
+            if arena.init_runs() != 1 {
+                return Err(format!("init ran {} times", arena.init_runs()));
+            }
+            Ok(())
+        },
+    );
+}

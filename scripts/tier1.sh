@@ -3,13 +3,22 @@
 # clippy with warnings denied; an optional miri pass over the tensor
 # arena (the one module holding unsafe — skipped with a warning when
 # miri is absent); then (best-effort) the perf-trajectory benches so
-# BENCH_launch_overhead.json and BENCH_store_hotpath.json track the hot
-# paths across PRs (spawn-per-iteration vs persistent runtime;
-# locked-clone vs borrowed-view tile reads).
+# BENCH_launch_overhead.json, BENCH_store_hotpath.json, and
+# BENCH_weight_arena.json track the hot paths across PRs
+# (spawn-per-iteration vs persistent runtime; locked-clone vs
+# borrowed-view tile reads; per-session vs shared-arena weight init).
 #
 # Usage: scripts/tier1.sh [--no-bench]
 set -euo pipefail
-cd "$(dirname "$0")/.."
+ROOT="$(cd "$(dirname "$0")/.." && pwd)"
+# the crate manifest lives in rust/ (examples stay at the repo level,
+# wired up via explicit [[example]] paths).
+cd "$ROOT/rust"
+# AOT artifacts are built at the repo root (`make artifacts` /
+# `python -m compile.aot --out ../artifacts`); test binaries now run
+# with cwd=rust/, so anchor the lookup or the artifact-gated tests
+# would skip vacuously.
+export MPK_ARTIFACTS="${MPK_ARTIFACTS:-$ROOT/artifacts}"
 
 if ! command -v cargo >/dev/null 2>&1; then
     echo "tier1: cargo not found on PATH — cannot build/test in this environment" >&2
@@ -48,17 +57,19 @@ if [[ "${1:-}" != "--no-bench" ]]; then
     # The benches are plain main() binaries (criterion unavailable
     # offline); each writes its JSON record to the repo root via the
     # MPK_BENCH_*JSON env vars.
-    MPK_BENCH_JSON="$PWD/BENCH_launch_overhead.json" \
+    MPK_BENCH_JSON="$ROOT/BENCH_launch_overhead.json" \
         cargo bench --bench launch_overhead ||
         echo "tier1: bench skipped (non-fatal)" >&2
     # `if` (not `&&`) so a missing bench file cannot trip errexit.
-    if [[ -f BENCH_launch_overhead.json ]]; then cat BENCH_launch_overhead.json; fi
+    if [[ -f "$ROOT/BENCH_launch_overhead.json" ]]; then cat "$ROOT/BENCH_launch_overhead.json"; fi
 
-    echo "== tier1: hotpath_micro bench (store hot path) =="
-    MPK_BENCH_STORE_JSON="$PWD/BENCH_store_hotpath.json" \
+    echo "== tier1: hotpath_micro bench (store hot path + weight arena) =="
+    MPK_BENCH_STORE_JSON="$ROOT/BENCH_store_hotpath.json" \
+    MPK_BENCH_WEIGHT_JSON="$ROOT/BENCH_weight_arena.json" \
         cargo bench --bench hotpath_micro ||
         echo "tier1: bench skipped (non-fatal)" >&2
-    if [[ -f BENCH_store_hotpath.json ]]; then cat BENCH_store_hotpath.json; fi
+    if [[ -f "$ROOT/BENCH_store_hotpath.json" ]]; then cat "$ROOT/BENCH_store_hotpath.json"; fi
+    if [[ -f "$ROOT/BENCH_weight_arena.json" ]]; then cat "$ROOT/BENCH_weight_arena.json"; fi
 fi
 
 echo "tier1: OK"

@@ -5,13 +5,15 @@
 //! composing: Pallas kernels (L1) → JAX model artifacts (L2) → rust
 //! coordinator + PJRT runtime (L3).
 //!
-//! The decode inner loop is zero-copy end to end: task inputs are
-//! slices borrowed from the session tensor arena, every batch-size
-//! specialization aliases one shared max-batch KV arena (batch
-//! transitions move no cache rows) and one shared weight arena
-//! (weights synthesized exactly once, whatever the number of
-//! specializations), batch slots are stable (retirements never remap a
-//! survivor), and the store's read-side counters prove it — this
+//! The decode inner loop is zero-copy **and allocation-free** end to
+//! end: task inputs are slices borrowed from the session tensor arena,
+//! task results land directly in their destination tensors through the
+//! pool's write-into boundary (`execute_into` — no output `Vec` per
+//! task), every batch-size specialization aliases one shared max-batch
+//! KV arena (batch transitions move no cache rows) and one shared
+//! weight arena (weights synthesized exactly once, whatever the number
+//! of specializations), batch slots are stable (retirements never
+//! remap a survivor), and the store + pool counters prove it — this
 //! driver asserts all of those invariants.
 //!
 //! ```bash
@@ -28,7 +30,8 @@ fn main() {
 
     // --- correctness gate: megakernel logits vs fused reference HLO ---
     println!("== validation: tiled megakernel vs fused reference (batch 2, 3 steps) ==");
-    let s = RealSession::create(2, 2, 42).expect("run `make artifacts` first");
+    let s = RealSession::create(2, 2, 42)
+        .expect("needs `make artifacts` and a real PJRT backend (offline builds ship the xla stub)");
     // resident persistent kernel re-armed per step — the validation
     // session outlives each run, same as serving.
     let mut kernel = s.persistent_kernel(mega.workers, mega.schedulers);
@@ -80,6 +83,11 @@ fn main() {
     let (allocs, bytes) = engine.store_counters();
     println!("store copies       : {allocs} allocs / {bytes} bytes (zero-copy borrowed-view hot path)");
     assert_eq!((allocs, bytes), (0, 0), "decode hot path copied tensor data");
+    println!(
+        "pool output allocs : {} (execute_into boundary: results land in the arena)",
+        engine.output_allocs()
+    );
+    assert_eq!(engine.output_allocs(), 0, "decode hot path received an allocated output buffer");
     println!(
         "weight arena       : {} f32 elements shared by every specialization, {} init run(s)",
         engine.weight_arena_len(),

@@ -9,6 +9,7 @@ use mpk::exec::store::TensorStore;
 use mpk::megakernel::{EventTable, MpmcQueue};
 use mpk::models::{build_decode_graph, GraphOptions, ModelConfig};
 use mpk::ops::{CompGraph, DType, Region};
+use mpk::runtime::{ExecPool, Manifest, OutView, Value};
 use mpk::sim::{simulate_megakernel, GpuSpec, SimOptions};
 use mpk::tgraph::{analyze_deps, compile, decompose, CompileOptions, DecomposeConfig};
 use mpk::util::{bench_median_ns, Table};
@@ -143,12 +144,97 @@ fn bench_weight_arena(t: &mut Table) -> (u64, u64, u64, u64) {
     (per_session_ns, shared_ns, dup_bytes, shared_bytes)
 }
 
+/// The pool output boundary across its two generations: alloc-per-call
+/// (`execute` replies with a fresh `Vec` the caller then copies into
+/// the arena) vs write-into (`execute_into`: the executor scatters the
+/// result straight into the caller's arena destination). With AOT
+/// artifacts and a PJRT backend available this times the real pool on
+/// `add_b1`; offline it times the same boundary shapes on the store
+/// primitives (reply-alloc + caller scatter vs direct scatter through a
+/// mutable view), flagged `"mode": "synthetic"` in the JSON. Returns
+/// `(alloc_per_call_ns, write_into_ns, mode, into_path_output_allocs)`.
+fn bench_exec_into(t: &mut Table) -> (u64, u64, &'static str, u64) {
+    if let Ok(m) = Manifest::load(&Manifest::default_dir()) {
+        if let Ok(pool) = ExecPool::new(m, 1) {
+            if let Some((idx, _)) = pool.manifest().find("add_b1") {
+                let a = vec![1.5f32; 256];
+                let b = vec![2.5f32; 256];
+                let alloc_ns = bench_median_ns(20, 200, || {
+                    let out = pool
+                        .execute(idx, vec![Value::Borrowed(&a), Value::Borrowed(&b)])
+                        .unwrap();
+                    std::hint::black_box(&out);
+                });
+                let before = pool.output_allocs();
+                let mut dst = vec![0.0f32; 256];
+                let into_ns = bench_median_ns(20, 200, || {
+                    pool.execute_into(
+                        idx,
+                        vec![Value::Borrowed(&a), Value::Borrowed(&b)],
+                        &mut [OutView::from_slice(&mut dst)],
+                    )
+                    .unwrap();
+                    std::hint::black_box(&dst);
+                });
+                let into_allocs = (pool.output_allocs() - before) as u64;
+                assert_eq!(into_allocs, 0, "write-into boundary allocated output buffers");
+                t.row(vec![
+                    "exec_into: alloc-per-call (legacy execute)".into(),
+                    format!("{alloc_ns} ns"),
+                    "pool replies with a fresh Vec per output".into(),
+                ]);
+                t.row(vec![
+                    "exec_into: write-into (execute_into)".into(),
+                    format!("{into_ns} ns"),
+                    "result lands in the caller's arena region".into(),
+                ]);
+                return (alloc_ns, into_ns, "pjrt", into_allocs);
+            }
+        }
+    }
+
+    // offline: no artifacts/backend — time the boundary shapes on the
+    // store. Destination is a strided matmul-style tile; "alloc" is
+    // the legacy reply Vec + caller write_tile, "into" scatters the
+    // same data through a held mutable view (what the executor thread
+    // does on the caller's behalf).
+    let rows = 8usize;
+    let cols = 512usize;
+    let tile = Region::new(vec![(0, rows), (128, 256)]);
+    let src: Vec<f32> = (0..tile.numel()).map(|i| (i % 89) as f32).collect();
+    let mut g = CompGraph::new();
+    let w = g.input("out", vec![rows, cols], DType::F32);
+    let store = TensorStore::new(&g);
+
+    let alloc_ns = bench_median_ns(200, 2000, || {
+        let out = src.to_vec(); // the reply allocation
+        store.write_tile(w, &tile, &out); // the caller's copy-in
+        std::hint::black_box(&out);
+    });
+    let into_ns = bench_median_ns(200, 2000, || {
+        store.tile_mut(w, &tile).scatter_from(&src);
+        std::hint::black_box(&store);
+    });
+    t.row(vec![
+        "exec_into: alloc-per-call (synthetic)".into(),
+        format!("{alloc_ns} ns"),
+        "reply Vec + caller write_tile".into(),
+    ]);
+    t.row(vec![
+        "exec_into: write-into (synthetic)".into(),
+        format!("{into_ns} ns"),
+        "direct scatter through a mutable arena view".into(),
+    ]);
+    (alloc_ns, into_ns, "synthetic", 0)
+}
+
 fn main() {
     println!("== hot-path microbenchmarks (median ns unless noted) ==\n");
     let mut t = Table::new(&["benchmark", "median", "note"]);
 
     let (clone_ns, read_ns, view_ns, view_allocs) = bench_store_hotpath(&mut t);
     let (per_session_ns, shared_ns, dup_bytes, shared_bytes) = bench_weight_arena(&mut t);
+    let (exec_alloc_ns, exec_into_ns, exec_mode, exec_into_allocs) = bench_exec_into(&mut t);
 
     // queue push+pop round trip
     let q: MpmcQueue<usize> = MpmcQueue::new(1024);
@@ -258,5 +344,22 @@ fn main() {
     match std::fs::write(&weight_json_path, weight_json) {
         Ok(()) => println!("wrote {weight_json_path}"),
         Err(e) => eprintln!("could not write {weight_json_path}: {e}"),
+    }
+
+    // pool-output-boundary record: alloc-per-call vs write-into. `mode`
+    // says whether the real PJRT pool or the offline synthetic boundary
+    // was measured.
+    let exec_json_path = std::env::var("MPK_BENCH_EXEC_INTO_JSON")
+        .unwrap_or_else(|_| "BENCH_exec_into.json".to_string());
+    let exec_json = format!(
+        "{{\n  \"bench\": \"exec_into\",\n  \"mode\": \"{exec_mode}\",\n  \
+         \"alloc_per_call_ns\": {exec_alloc_ns},\n  \"write_into_ns\": {exec_into_ns},\n  \
+         \"into_path_output_allocs\": {exec_into_allocs},\n  \
+         \"write_into_speedup\": {:.4}\n}}\n",
+        exec_alloc_ns as f64 / exec_into_ns.max(1) as f64
+    );
+    match std::fs::write(&exec_json_path, exec_json) {
+        Ok(()) => println!("wrote {exec_json_path}"),
+        Err(e) => eprintln!("could not write {exec_json_path}: {e}"),
     }
 }

@@ -9,10 +9,19 @@
 //! [`Value::Borrowed`] with zero copies and zero allocations; only
 //! strided matmul weight tiles are gathered, into a per-worker scratch
 //! buffer that is reused across tasks (no allocation at steady state).
-//! Results are written back to the task's output tile.
-//! `KvAppend` is executed natively as a direct arena-to-arena row copy
-//! (pure cache bookkeeping, zero flops — the §6.1 in-kernel KV metadata
-//! update).
+//!
+//! Results take the mirror path out: every task body passes its output
+//! tile to the pool as a mutable arena destination
+//! (`TensorStore::tile_mut` → `OutView` → [`ExecPool::execute_into`]),
+//! so matmul, attention, and the elementwise ops land their results
+//! directly in the destination tensor — the pool allocates no output
+//! buffer and the task copies nothing afterwards (`output_allocs`
+//! stays 0; per-op full-output regions are pre-resolved at executor
+//! construction like the artifact indices, so whole-tensor writes
+//! build no `Region` per task either). `KvAppend` is executed natively
+//! as a direct arena-to-arena row copy through
+//! `TensorStore::view_region_mut` (pure cache bookkeeping, zero flops
+//! — the §6.1 in-kernel KV metadata update).
 //!
 //! Two executor front-ends share the binding logic via [`ExecCore`]:
 //!
@@ -78,6 +87,12 @@ pub struct ExecCore {
     batch: usize,
     /// Per-op artifact index, resolved once (see [`resolve_artifacts`]).
     artifacts: Vec<Option<usize>>,
+    /// Per-op full region of the output tensor, resolved once at
+    /// construction like the artifact indices: whole-tensor result
+    /// writes (embedding, rmsnorm, add, swiglu) borrow their pool
+    /// destination through this instead of building a fresh `Region`
+    /// per task.
+    out_full: Vec<Region>,
     /// Valid cache length *before* this iteration's token, per batch
     /// row (continuous batching admits requests at different times, so
     /// rows carry different cache lengths). The new K/V row is written
@@ -93,6 +108,11 @@ impl ExecCore {
         ExecCore {
             batch,
             artifacts: resolve_artifacts(graph, pool, batch),
+            out_full: graph
+                .ops
+                .iter()
+                .map(|op| graph.tensor(op.output).full_region())
+                .collect(),
             row_lens: Mutex::new(vec![0; batch]),
             error: Mutex::new(None),
         }
@@ -165,26 +185,31 @@ impl ExecCore {
                 // ids arrive as exact small floats; stage as i32 in the
                 // per-worker scratch, table is a borrowed arena view.
                 let art = self.artifact(graph, op_id)?;
-                let out = SCRATCH.with(|s| {
+                let mut out = store.tile_mut(op.output, &self.out_full[op_id]);
+                let dst = out.out_view().expect("whole-tensor output is contiguous");
+                SCRATCH.with(|s| {
                     let mut s = s.borrow_mut();
                     s.ints.clear();
                     s.ints.extend(store.view(op.inputs[0]).iter().map(|&v| v as i32));
-                    pool.execute(
+                    pool.execute_into(
                         art,
                         vec![Value::BorrowedI32(&s.ints), Value::Borrowed(store.view(op.inputs[1]))],
+                        &mut [dst],
                     )
                 })?;
-                store.set(op.output, &out[0]);
             }
             OpKind::RmsNorm => {
-                let out = pool.execute(
-                    self.artifact(graph, op_id)?,
+                let art = self.artifact(graph, op_id)?;
+                let mut out = store.tile_mut(op.output, &self.out_full[op_id]);
+                let dst = out.out_view().expect("whole-tensor output is contiguous");
+                pool.execute_into(
+                    art,
                     vec![
                         Value::Borrowed(store.view(op.inputs[0])),
                         Value::Borrowed(store.view(op.inputs[1])),
                     ],
+                    &mut [dst],
                 )?;
-                store.set(op.output, &out[0]);
             }
             OpKind::MatMul => {
                 let k = graph.tensor(op.inputs[0]).shape[1];
@@ -199,24 +224,36 @@ impl ExecCore {
                 }
                 let art = self.artifact(graph, op_id)?;
                 let w_region = Region::new(vec![(0, k), (c0, c1)]);
-                let x = Value::Borrowed(store.view(op.inputs[0]));
+                let x = store.view(op.inputs[0]);
                 let wv = store.tile(op.inputs[1], &w_region);
-                let out = match wv.as_slice() {
+                // rank-2 output tiles are always regularly strided (one
+                // run per output row), so the artifact's result lands
+                // straight in the arena at the output row stride.
+                let mut out = store.tile_mut(op.output, out_region);
+                let dst = out.out_view().expect("rank-2 matmul tile is regularly strided");
+                match wv.as_slice() {
                     // full-width weight tile: zero-copy borrowed slice.
-                    Some(w) => pool.execute(art, vec![x, Value::Borrowed(w)])?,
+                    Some(w) => pool.execute_into(
+                        art,
+                        vec![Value::Borrowed(x), Value::Borrowed(w)],
+                        &mut [dst],
+                    )?,
                     // strided columns: gather into the reused scratch.
                     None => SCRATCH.with(|s| {
                         let mut s = s.borrow_mut();
                         wv.gather_into(&mut s.tile);
-                        pool.execute(art, vec![x, Value::Borrowed(&s.tile)])
+                        pool.execute_into(
+                            art,
+                            vec![Value::Borrowed(x), Value::Borrowed(&s.tile)],
+                            &mut [dst],
+                        )
                     })?,
-                };
-                drop(wv);
-                store.write_tile(op.output, out_region, &out[0]);
+                }
             }
             OpKind::Attention { .. } => {
                 // one task per request row; q and the per-row cache
-                // slabs are contiguous in the arena → all borrowed.
+                // slabs are contiguous in the arena → all borrowed, and
+                // the per-row output is a contiguous arena destination.
                 let (r0, r1) = out_region.dims[0];
                 debug_assert_eq!(r1 - r0, 1, "attention tasks are per-request");
                 let r = r0;
@@ -231,11 +268,13 @@ impl ExecCore {
                 let vc = store.view_region(op.inputs[2], &c_r);
                 let valid = self.row_len(r) + 1;
                 let art = self.artifact(graph, op_id)?;
-                let out = SCRATCH.with(|s| {
+                let mut out = store.tile_mut(op.output, &q_r);
+                let dst = out.out_view().expect("per-row attention output is contiguous");
+                SCRATCH.with(|s| {
                     let mut s = s.borrow_mut();
                     s.ints.clear();
                     s.ints.push(valid as i32);
-                    pool.execute(
+                    pool.execute_into(
                         art,
                         vec![
                             Value::Borrowed(q),
@@ -243,53 +282,57 @@ impl ExecCore {
                             Value::Borrowed(vc),
                             Value::BorrowedI32(&s.ints),
                         ],
+                        &mut [dst],
                     )
                 })?;
-                store.write_tile(op.output, &q_r, &out[0]);
             }
             OpKind::KvAppend => {
                 // native: copy this step's K/V rows from the fused qkv
                 // output into the caches at position cur_len — a direct
-                // arena-to-arena copy, no staging buffer.
+                // arena-to-arena copy through mutable row views whose
+                // debug write registration spans each copy, no staging
+                // buffer.
                 let q_dim = m.q_dim();
                 let kv_dim = m.kv_dim();
                 let qkv = op.inputs[0];
                 for r in 0..self.batch {
                     let pos = self.row_len(r);
+                    let row_r = Region::new(vec![(r, r + 1), (pos, pos + 1), (0, kv_dim)]);
                     let krow = store
                         .view_region(qkv, &Region::new(vec![(r, r + 1), (q_dim, q_dim + kv_dim)]));
-                    store.write_tile(
-                        op.inputs[2],
-                        &Region::new(vec![(r, r + 1), (pos, pos + 1), (0, kv_dim)]),
-                        krow,
-                    );
+                    let mut kdst = store.tile_mut(op.inputs[2], &row_r);
+                    kdst.as_slice_mut().expect("cache row is contiguous").copy_from_slice(krow);
+                    drop(kdst);
                     let vrow = store.view_region(
                         qkv,
                         &Region::new(vec![(r, r + 1), (q_dim + kv_dim, q_dim + 2 * kv_dim)]),
                     );
-                    store.write_tile(
-                        op.inputs[3],
-                        &Region::new(vec![(r, r + 1), (pos, pos + 1), (0, kv_dim)]),
-                        vrow,
-                    );
+                    let mut vdst = store.tile_mut(op.inputs[3], &row_r);
+                    vdst.as_slice_mut().expect("cache row is contiguous").copy_from_slice(vrow);
                 }
             }
             OpKind::Add => {
-                let out = pool.execute(
-                    self.artifact(graph, op_id)?,
+                let art = self.artifact(graph, op_id)?;
+                let mut out = store.tile_mut(op.output, &self.out_full[op_id]);
+                let dst = out.out_view().expect("whole-tensor output is contiguous");
+                pool.execute_into(
+                    art,
                     vec![
                         Value::Borrowed(store.view(op.inputs[0])),
                         Value::Borrowed(store.view(op.inputs[1])),
                     ],
+                    &mut [dst],
                 )?;
-                store.set(op.output, &out[0]);
             }
             OpKind::SwiGLU => {
-                let out = pool.execute(
-                    self.artifact(graph, op_id)?,
+                let art = self.artifact(graph, op_id)?;
+                let mut out = store.tile_mut(op.output, &self.out_full[op_id]);
+                let dst = out.out_view().expect("whole-tensor output is contiguous");
+                pool.execute_into(
+                    art,
                     vec![Value::Borrowed(store.view(op.inputs[0]))],
+                    &mut [dst],
                 )?;
-                store.set(op.output, &out[0]);
             }
             other => {
                 return Err(format!("real path does not support op kind {other:?}"));

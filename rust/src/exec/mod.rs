@@ -10,4 +10,4 @@ pub use real::{
     build_real_graph, compile_real, init_weights, run_iteration, run_reference, RealSession,
     WeightArena,
 };
-pub use store::{SharedSlab, StoreCounters, TensorStore, TileView};
+pub use store::{SharedSlab, StoreCounters, TensorStore, TileView, TileViewMut};

@@ -51,12 +51,27 @@
 //!   flight together, and slot ownership never changes while a request
 //!   lives).
 //!
+//! * **Mutable views (pool output destinations).** A task that owns an
+//!   output region may borrow it mutably ([`TensorStore::view_region_mut`],
+//!   [`TensorStore::tile_mut`] / [`TileViewMut`]) and hand it to the
+//!   PJRT pool as an [`OutView`] destination (`ExecPool::execute_into`):
+//!   the executor thread then writes the result straight into the
+//!   arena while the task's worker is parked in the call — the worker's
+//!   exclusive borrow spans the whole call, so the executor is the
+//!   region's only writer, and the event graph already guarantees no
+//!   other task reads or writes an overlapping region while this task
+//!   is in flight (same writer-before-reader argument as above, with
+//!   the executor thread acting *as* the task). A mutable view of a
+//!   region is a **write** for the purposes of the contract whether or
+//!   not anything is ultimately stored through it.
+//!
 //! Under that contract, borrowed views ([`TensorStore::view`],
-//! [`TileView`]) are sound: every `unsafe` block in this module reduces
-//! to "reads and writes that the event graph orders or keeps disjoint",
-//! and the raw-pointer slab means disjoint concurrent accesses touch
-//! disjoint memory locations — no Rust reference is ever constructed
-//! over a region another thread may mutate.
+//! [`TileView`], [`TileViewMut`]) are sound: every `unsafe` block in
+//! this module reduces to "reads and writes that the event graph orders
+//! or keeps disjoint", and the raw-pointer slab means disjoint
+//! concurrent accesses touch disjoint memory locations — no Rust
+//! reference is ever constructed over a region another thread may
+//! mutate.
 //!
 //! This module is the **only** place allowed to dereference the slab;
 //! keep every `unsafe` here so it stays auditable (the tier-1 script
@@ -66,14 +81,17 @@
 //!
 //! In debug builds every tile-granular operation registers its region
 //! in an in-flight table for the duration of the call (and for the
-//! lifetime of a [`TileView`]); a write overlapping any in-flight
-//! access, or any access overlapping an in-flight write, panics with
-//! both regions. Whole-tensor [`TensorStore::view`] borrows are
-//! deliberately untracked, and the slices returned by
-//! [`TensorStore::view_region`] are tracked only for the duration of
-//! the call that creates them — their soundness past that point is the
-//! event graph's responsibility — so the checker is a race *detector*
-//! for the tiled hot path, not a proof.
+//! lifetime of a [`TileView`] or [`TileViewMut`]); a write overlapping
+//! any in-flight access, or any access overlapping an in-flight write,
+//! panics with both regions. Whole-tensor [`TensorStore::view`] borrows
+//! are deliberately untracked, and the slices returned by
+//! [`TensorStore::view_region`] / [`TensorStore::view_region_mut`] are
+//! tracked only for the duration of the call that creates them — their
+//! soundness past that point is the event graph's responsibility — so
+//! the checker is a race *detector* for the tiled hot path, not a
+//! proof. Task bodies that hold an output destination across a pool
+//! call use [`TileViewMut`], whose write registration spans the whole
+//! call.
 //!
 //! # Counters
 //!
@@ -81,11 +99,14 @@
 //! returned by [`TensorStore::get`] / [`TensorStore::read_tile`]) and
 //! `bytes_copied` (those reads plus [`TensorStore::copy_tile_from`]
 //! migrations). Writes that land results in the arena (`set`,
-//! `write_tile`) are not copies *of* a tensor and are not counted. The
-//! borrowed-view hot path keeps both counters at zero — asserted by
-//! `benches/hotpath_micro.rs` and the steady-state serving test.
+//! `write_tile`, mutable views) are not copies *of* a tensor and are
+//! not counted; output buffers allocated at the pool boundary are
+//! counted separately by `ExecPool::output_allocs`. The borrowed-view
+//! hot path keeps all of them at zero — asserted by
+//! `benches/hotpath_micro.rs` and the steady-state serving tests.
 
 use crate::ops::{CompGraph, Region, TensorId};
+use crate::runtime::pool::OutView;
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
@@ -424,6 +445,50 @@ impl TensorStore {
         unsafe { std::slice::from_raw_parts(self.base_ptr(t).add(start), len) }
     }
 
+    /// Borrow a contiguous tile **mutably** — the write counterpart of
+    /// [`TensorStore::view_region`], for host staging of an exclusively
+    /// owned region. Panics if the region is strided.
+    ///
+    /// **Contract (sharper than the read-side views):** the caller must
+    /// own this region for the whole life of the returned slice — two
+    /// live `view_region_mut` slices over overlapping regions, or one
+    /// overlapping any concurrent access, is undefined behavior exactly
+    /// like any `&mut` aliasing, and the event graph is what rules it
+    /// out for task code. Debug builds register only a *call-scoped*
+    /// write (an in-flight overlapping access at creation time panics);
+    /// the returned slice itself is untracked. Prefer
+    /// [`TensorStore::tile_mut`], whose registration (and borrow) spans
+    /// the whole use — the binder and pool destinations use that form;
+    /// this one exists for short staging writes and tests.
+    // clippy::mut_from_ref: the arena is shared and lock-free by
+    // design; disjoint mutable regions are handed out from `&self`
+    // under the module aliasing contract (there is no `&mut self` to
+    // thread through concurrently executing tasks).
+    #[allow(clippy::mut_from_ref)]
+    pub fn view_region_mut(&self, t: TensorId, r: &Region) -> &mut [f32] {
+        let e = &self.entries[t];
+        check_region(&e.shape, r, t);
+        let _g = self.track(t, r, true);
+        let (start, len) = contiguous_span(&e.shape, r)
+            .unwrap_or_else(|| panic!("region {r} of tensor {t} is not contiguous"));
+        // SAFETY: `start + len` lies within the tensor span (region is
+        // bounds-checked); the caller owns this write region under the
+        // module aliasing contract, so no other live reference overlaps.
+        unsafe { std::slice::from_raw_parts_mut(self.base_ptr(t).add(start), len) }
+    }
+
+    /// Borrow an axis-aligned tile **mutably** as a strided view. The
+    /// view is registered as an in-flight write in debug builds for its
+    /// whole lifetime — the form task bodies hold across an
+    /// `ExecPool::execute_into` call so the tracker sees the executor
+    /// thread's writes as this task's.
+    pub fn tile_mut<'s, 'r>(&'s self, t: TensorId, r: &'r Region) -> TileViewMut<'s, 'r> {
+        let e = &self.entries[t];
+        check_region(&e.shape, r, t);
+        let guard = self.track(t, r, true);
+        TileViewMut { store: self, t, region: r, run: run_len(r), _guard: guard }
+    }
+
     /// Overwrite the whole tensor from a slice (host staging: weights,
     /// token ids). Not counted as a copy — results/staging must land in
     /// the arena.
@@ -579,6 +644,123 @@ impl<'s> TileView<'s, '_> {
             // SAFETY: span is inside the tensor (bounds-checked at
             // construction); aliasing per the module contract.
             unsafe { std::slice::from_raw_parts(self.store.base_ptr(self.t).add(start), len) }
+        })
+    }
+}
+
+/// Strided, mutable view over an axis-aligned tile — the destination
+/// side of the zero-copy hot path. Registered as an in-flight write in
+/// debug builds for its whole lifetime.
+pub struct TileViewMut<'s, 'r> {
+    store: &'s TensorStore,
+    t: TensorId,
+    region: &'r Region,
+    run: usize,
+    _guard: AccessGuard<'s>,
+}
+
+impl TileViewMut<'_, '_> {
+    pub fn numel(&self) -> usize {
+        self.region.numel()
+    }
+
+    /// Length of the contiguous innermost run.
+    pub fn run_len(&self) -> usize {
+        self.run
+    }
+
+    /// Visit each contiguous innermost run as a mutable slice, in
+    /// region row-major order. No heap allocation.
+    pub fn for_each_run_mut(&mut self, f: &mut impl FnMut(&mut [f32])) {
+        if self.region.is_empty() {
+            return;
+        }
+        let shape = &self.store.entries[self.t].shape;
+        let base = self.store.base_ptr(self.t);
+        let run = self.run;
+        for_each_run(shape, self.region, &mut |b| {
+            // SAFETY: run bounds-checked at construction; this view is
+            // the region's only writer under the aliasing contract, and
+            // the runs it visits are disjoint.
+            f(unsafe { std::slice::from_raw_parts_mut(base.add(b), run) });
+        });
+    }
+
+    /// Copy `data` (tile row-major) into the tile — `write_tile`
+    /// through an already-registered mutable view (the binder's
+    /// fallback when a pool output cannot land directly).
+    pub fn scatter_from(&mut self, data: &[f32]) {
+        assert_eq!(data.len(), self.numel(), "tile data size mismatch for tensor {}", self.t);
+        let run = self.run;
+        let mut off = 0usize;
+        self.for_each_run_mut(&mut |dst| {
+            dst.copy_from_slice(&data[off..off + run]);
+            off += run;
+        });
+    }
+
+    /// The tile as one mutable slice, if it is contiguous in the
+    /// tensor's row-major layout.
+    pub fn as_slice_mut(&mut self) -> Option<&mut [f32]> {
+        let shape = &self.store.entries[self.t].shape;
+        contiguous_span(shape, self.region).map(|(start, len)| {
+            // SAFETY: span is inside the tensor (bounds-checked at
+            // construction); exclusive under the aliasing contract.
+            unsafe { std::slice::from_raw_parts_mut(self.store.base_ptr(self.t).add(start), len) }
+        })
+    }
+
+    /// Pool output destination covering this tile, if the tile maps to
+    /// **regularly strided** runs: contiguous, or exactly one non-unit
+    /// dim before the innermost run (runs then advance by that dim's
+    /// row-major stride). Every output tile the real decode graph
+    /// produces is regular — whole tensors and per-row attention
+    /// outputs are contiguous, matmul column tiles are one run per
+    /// output row — so the persistent-kernel task bodies pass these to
+    /// `ExecPool::execute_into` and results land in the arena with no
+    /// intermediate buffer. Returns `None` for an irregular tile
+    /// (caller scatters via [`TileViewMut::scatter_from`] instead).
+    ///
+    /// The returned view borrows this `TileViewMut` mutably, so the
+    /// debug write registration (and the exclusive borrow) spans the
+    /// whole pool call it is used in.
+    pub fn out_view(&mut self) -> Option<OutView<'_>> {
+        let e = &self.store.entries[self.t];
+        let rank = e.shape.len();
+        if let Some((start, len)) = contiguous_span(&e.shape, self.region) {
+            // SAFETY: in-bounds span (bounds-checked at construction);
+            // this view holds the region's exclusive write borrow.
+            return Some(unsafe {
+                OutView::from_raw_strided(self.store.base_ptr(self.t).add(start), 1, len, len)
+            });
+        }
+        // not contiguous ⇒ at least one non-unit outer dim; regular
+        // exactly when there is only one.
+        let mut strides = [1usize; MAX_RANK];
+        for d in (0..rank.saturating_sub(1)).rev() {
+            strides[d] = strides[d + 1] * e.shape[d + 1];
+        }
+        let mut free: Option<usize> = None;
+        for d in 0..rank - 1 {
+            if self.region.extent(d) > 1 {
+                if free.is_some() {
+                    return None;
+                }
+                free = Some(d);
+            }
+        }
+        let d = free?;
+        let start: usize = (0..rank).map(|q| self.region.dims[q].0 * strides[q]).sum();
+        // SAFETY: every run lies inside the tensor span (the region is
+        // bounds-checked and runs follow its row-major walk); exclusive
+        // write borrow as above. run ≤ stride keeps the runs disjoint.
+        Some(unsafe {
+            OutView::from_raw_strided(
+                self.store.base_ptr(self.t).add(start),
+                self.region.extent(d),
+                self.run,
+                strides[d],
+            )
         })
     }
 }
@@ -910,6 +1092,86 @@ mod tests {
         let r = Region::new(vec![(0, 2), (0, 6)]);
         let v = s.tile(t, &r); // in-flight read
         s.write_tile(t, &Region::new(vec![(1, 3), (0, 6)]), &[0.0; 12]);
+        drop(v);
+    }
+
+    #[test]
+    fn view_region_mut_writes_land_in_the_arena() {
+        let (s, t) = store_2d();
+        s.set(t, &[0.0; 24]);
+        // one full row of the 4x6 tensor is contiguous.
+        let r = Region::new(vec![(2, 3), (0, 6)]);
+        s.view_region_mut(t, &r).copy_from_slice(&[1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        assert_eq!(s.read_tile(t, &r), vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        // neighbours untouched, and the write counted nothing.
+        assert_eq!(s.read_tile(t, &Region::new(vec![(0, 2), (0, 6)])), vec![0.0; 12]);
+        s.reset_counters();
+        s.view_region_mut(t, &r)[0] = 9.0;
+        assert_eq!(s.counters(), StoreCounters::default(), "mutable view moved the counters");
+    }
+
+    #[test]
+    #[should_panic(expected = "not contiguous")]
+    fn strided_view_region_mut_panics() {
+        let (s, t) = store_2d();
+        s.view_region_mut(t, &Region::new(vec![(0, 2), (1, 3)]));
+    }
+
+    #[test]
+    fn tile_mut_scatter_matches_write_tile() {
+        let (s, t) = store_2d();
+        let (s2, t2) = store_2d();
+        let r = Region::new(vec![(1, 3), (2, 5)]);
+        let data: Vec<f32> = (0..6).map(|i| 100.0 + i as f32).collect();
+        s.write_tile(t, &r, &data);
+        s2.tile_mut(t2, &r).scatter_from(&data);
+        assert_eq!(s.get(t), s2.get(t2));
+    }
+
+    #[test]
+    fn out_view_layouts_match_the_binder_cases() {
+        let mut g = CompGraph::new();
+        let mm = g.input("mm_out", vec![4, 6], DType::F32); // matmul output [b, N]
+        let q = g.input("attn_out", vec![4, 8], DType::F32); // attention output [b, q_dim]
+        let c = g.input("kc", vec![2, 3, 4], DType::F32); // cache [slots, s_max, kv]
+        let s = TensorStore::new(&g);
+        // whole tensor: contiguous.
+        assert!(s.tile_mut(mm, &Region::full(&[4, 6])).out_view().is_some());
+        // matmul column tile: strided but regular (one run per row).
+        assert!(s.tile_mut(mm, &Region::new(vec![(0, 4), (2, 4)])).out_view().is_some());
+        // per-row attention output: contiguous.
+        assert!(s.tile_mut(q, &Region::new(vec![(2, 3), (0, 8)])).out_view().is_some());
+        // one cache row: contiguous.
+        assert!(s
+            .tile_mut(c, &Region::new(vec![(1, 2), (2, 3), (0, 4)]))
+            .out_view()
+            .is_some());
+        // two non-unit outer dims with a partial tail: irregular.
+        assert!(s
+            .tile_mut(c, &Region::new(vec![(0, 2), (0, 2), (1, 3)]))
+            .out_view()
+            .is_none());
+    }
+
+    #[cfg(debug_assertions)]
+    #[test]
+    #[should_panic(expected = "aliasing violation")]
+    fn debug_mode_catches_write_write_overlap_on_mut_views() {
+        let (s, t) = store_2d();
+        let r = Region::new(vec![(0, 2), (0, 6)]);
+        let v = s.tile_mut(t, &r); // in-flight write
+        let _ = s.tile_mut(t, &Region::new(vec![(1, 3), (0, 6)]));
+        drop(v);
+    }
+
+    #[cfg(debug_assertions)]
+    #[test]
+    #[should_panic(expected = "aliasing violation")]
+    fn debug_mode_catches_read_during_mut_view() {
+        let (s, t) = store_2d();
+        let r = Region::new(vec![(0, 2), (0, 6)]);
+        let v = s.tile_mut(t, &r); // in-flight write
+        let _ = s.read_tile(t, &Region::new(vec![(1, 3), (0, 6)]));
         drop(v);
     }
 }

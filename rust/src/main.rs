@@ -66,8 +66,10 @@ fn main() {
             let n: usize = flag(&args, "--requests").and_then(|v| v.parse().ok()).unwrap_or(8);
             let batch: usize = flag(&args, "--batch").and_then(|v| v.parse().ok()).unwrap_or(4);
             let mega = MegaConfig { workers: 6, schedulers: 2, ..Default::default() };
-            let mut e = ServeEngine::create(batch, 3, 42, mega)
-                .expect("serving needs artifacts: run `make artifacts`");
+            let mut e = ServeEngine::create(batch, 3, 42, mega).expect(
+                "serving needs `make artifacts` and a real PJRT backend \
+                 (offline builds ship the xla stub)",
+            );
             for i in 0..n as u64 {
                 let prompt: Vec<i32> = (0..3).map(|t| 1 + (i as i32 * 13 + t) % 500).collect();
                 e.submit(Request::new(i, prompt, 6)).expect("request within max_seq");

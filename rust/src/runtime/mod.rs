@@ -1,8 +1,11 @@
 //! PJRT-backed artifact execution: manifest loading and the thread-
 //! confined exec pool. Python builds the artifacts once (`make
-//! artifacts`); this module runs them from the rust hot path.
+//! artifacts`); this module runs them from the rust hot path. The
+//! `xla` submodule is the offline stand-in for the PJRT binding so the
+//! pool (and its protocol tests) compile in the stdlib-only build.
 pub mod manifest;
 pub mod pool;
+pub mod xla;
 
 pub use manifest::{ArgSpec, ArgType, ArtifactSpec, Manifest, TinyModelMeta};
-pub use pool::{ExecPool, Value};
+pub use pool::{ExecPool, OutView, Value};

@@ -7,20 +7,40 @@
 //! every artifact*; megakernel workers submit host tensors over a
 //! channel and block on a per-request reply channel. Python is never
 //! involved: artifacts are HLO text on disk, compiled once per executor
-//! thread at pool construction.
+//! thread at pool construction. (Offline builds use the in-tree stub
+//! binding in `runtime::xla`, which fails loudly at client creation;
+//! the pool protocol is identical either way.)
 //!
 //! Inputs may be **borrowed** ([`Value::Borrowed`] /
 //! [`Value::BorrowedI32`]): the zero-copy hot path hands the pool
 //! slices that point straight into the `exec::store` tensor arena, so a
 //! matmul/attention task marshals no input buffer at all. Borrowed
 //! slices cross the thread boundary as raw pointer + length
-//! ([`RawValue`]); this is sound because [`ExecPool::execute`] blocks
-//! on the reply channel until the executor thread has finished building
-//! input literals and replied (or died) — the borrow outlives every
-//! read. See the safety note on `execute`.
+//! ([`RawValue`]); this is sound because the submitter blocks on the
+//! reply channel until the executor thread has finished building input
+//! literals and replied (or died) — the borrow outlives every read. See
+//! the safety note on [`ExecPool::execute`].
+//!
+//! **Outputs** may land the same way: [`ExecPool::execute_into`] takes
+//! a caller-owned destination per artifact output ([`OutView`], a
+//! mutable arena region), and the executor thread scatters results
+//! straight into them — no `Vec` is allocated at the boundary and the
+//! caller copies nothing afterwards. Destinations cross the channel
+//! lifetime-erased as raw pointer + run layout ([`RawOutView`]),
+//! mirroring `RawValue::BorrowedF32`, and are sound via the same
+//! blocking reply protocol: the caller's exclusive borrows of the
+//! destination regions live across the whole call, so the executor is
+//! the only writer while it runs. Destinations are validated (count,
+//! then every length) **before** the first element is written — a
+//! failed `execute_into` never leaves a partial write. The pool counts
+//! every output buffer it does allocate (the legacy [`ExecPool::execute`]
+//! reply path) in [`ExecPool::output_allocs`]; the persistent-kernel
+//! decode path asserts this stays at zero.
 
 use crate::runtime::manifest::{ArgType, Manifest};
+use crate::runtime::xla;
 use std::collections::VecDeque;
+use std::marker::PhantomData;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Condvar, Mutex};
 
@@ -58,6 +78,57 @@ impl Value<'_> {
     }
 }
 
+/// A caller-owned output destination: a mutable f32 region (typically
+/// an arena tile) the executor thread writes one artifact output into.
+///
+/// The region is a sequence of `runs` contiguous spans of `run`
+/// elements whose starts are `stride` elements apart — `runs == 1` is
+/// the plain contiguous case ([`OutView::from_slice`]), and the strided
+/// form covers every regularly-tiled arena destination (e.g. a matmul
+/// column tile: one run per output row, advancing by the row stride).
+/// `exec::store::TileViewMut::out_view` builds these over arena tiles.
+pub struct OutView<'a> {
+    ptr: *mut f32,
+    runs: usize,
+    run: usize,
+    stride: usize,
+    _borrow: PhantomData<&'a mut [f32]>,
+}
+
+impl<'a> OutView<'a> {
+    /// Contiguous destination over a caller-owned slice.
+    pub fn from_slice(data: &'a mut [f32]) -> OutView<'a> {
+        let run = data.len();
+        OutView { ptr: data.as_mut_ptr(), runs: 1, run, stride: run, _borrow: PhantomData }
+    }
+
+    /// Strided destination from raw parts.
+    ///
+    /// SAFETY: for the lifetime `'a` the caller must hold exclusive
+    /// write access to every run (`runs` spans of `run` elements,
+    /// starting `stride` apart from `ptr`), all within one live
+    /// allocation. `run <= stride` keeps the runs disjoint.
+    pub(crate) unsafe fn from_raw_strided(
+        ptr: *mut f32,
+        runs: usize,
+        run: usize,
+        stride: usize,
+    ) -> OutView<'a> {
+        assert!(runs <= 1 || run <= stride, "overlapping output runs");
+        OutView { ptr, runs, run, stride, _borrow: PhantomData }
+    }
+
+    /// Total elements this destination receives (the artifact output's
+    /// numel must match exactly).
+    pub fn len(&self) -> usize {
+        self.runs * self.run
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
 /// Lifetime-erased value stored in the request queue. Borrowed slices
 /// become raw pointer + length so no reference type crosses the channel
 /// (a reference must never dangle, even unused; a raw pointer may).
@@ -83,9 +154,55 @@ impl RawValue {
     }
 }
 
+/// Lifetime-erased [`OutView`] in the request queue: the mutable
+/// counterpart of `RawValue::BorrowedF32`.
+struct RawOutView {
+    ptr: *mut f32,
+    runs: usize,
+    run: usize,
+    stride: usize,
+}
+
+// SAFETY: dereferenced only by the executor thread while the submitter
+// is parked in `execute_into` keeping its exclusive destination borrows
+// alive (blocking reply protocol — see `execute`'s safety note).
+unsafe impl Send for RawOutView {}
+
+impl RawOutView {
+    fn len(&self) -> usize {
+        self.runs * self.run
+    }
+
+    /// Scatter `src` (run-major) into the destination runs.
+    ///
+    /// SAFETY: the submitting thread must be parked keeping the
+    /// destination borrow alive, and `src.len() == self.len()`.
+    unsafe fn write(&self, src: &[f32]) {
+        debug_assert_eq!(src.len(), self.len());
+        for i in 0..self.runs {
+            std::ptr::copy_nonoverlapping(
+                src.as_ptr().add(i * self.run),
+                self.ptr.add(i * self.stride),
+                self.run,
+            );
+        }
+    }
+}
+
+/// Where a request's outputs go.
+enum RawOut {
+    /// Legacy boundary: the reply carries freshly allocated `Vec`s
+    /// (each one counted in `ExecPool::output_allocs`).
+    Alloc,
+    /// Write-into boundary: results are scattered into caller-owned
+    /// destinations; the reply carries nothing.
+    Into(Vec<RawOutView>),
+}
+
 struct Request {
     artifact: usize,
     inputs: Vec<RawValue>,
+    out: RawOut,
     reply: mpsc::SyncSender<Result<Vec<Vec<f32>>, String>>,
 }
 
@@ -101,6 +218,9 @@ pub struct ExecPool {
     handles: Vec<std::thread::JoinHandle<()>>,
     /// Requests executed (per-pool counter, for perf accounting).
     pub executed: Arc<AtomicUsize>,
+    /// Output buffers allocated at the boundary (legacy `execute` reply
+    /// `Vec`s). `execute_into` never moves it.
+    out_allocs: Arc<AtomicUsize>,
     manifest: Arc<Manifest>,
 }
 
@@ -115,6 +235,7 @@ impl ExecPool {
             closed: Mutex::new(false),
         });
         let executed = Arc::new(AtomicUsize::new(0));
+        let out_allocs = Arc::new(AtomicUsize::new(0));
         // compile-check on the main thread first for a clean error.
         let mut handles = Vec::new();
         let (ready_tx, ready_rx) = mpsc::channel::<Result<(), String>>();
@@ -122,11 +243,12 @@ impl ExecPool {
             let queue = queue.clone();
             let manifest = manifest.clone();
             let executed = executed.clone();
+            let out_allocs = out_allocs.clone();
             let ready = ready_tx.clone();
             handles.push(
                 std::thread::Builder::new()
                     .name(format!("pjrt-exec-{t}"))
-                    .spawn(move || executor_thread(queue, manifest, executed, ready))
+                    .spawn(move || executor_thread(queue, manifest, executed, out_allocs, ready))
                     .map_err(|e| e.to_string())?,
             );
         }
@@ -134,26 +256,37 @@ impl ExecPool {
         for _ in 0..threads.max(1) {
             ready_rx.recv().map_err(|e| e.to_string())??;
         }
-        Ok(ExecPool { queue, handles, executed, manifest })
+        Ok(ExecPool { queue, handles, executed, out_allocs, manifest })
     }
 
     pub fn manifest(&self) -> &Manifest {
         &self.manifest
     }
 
-    /// Execute artifact `artifact` (index into the manifest) with the
-    /// given inputs; blocks until the result tuple (each element
-    /// flattened to f32) is ready.
+    /// Output buffers allocated at the pool boundary so far. The
+    /// write-into path keeps this frozen; only the allocating `execute`
+    /// reply moves it (one per output `Vec` handed to a caller).
+    pub fn output_allocs(&self) -> usize {
+        self.out_allocs.load(Ordering::Relaxed)
+    }
+
+    /// Erase lifetimes, enqueue, and block for the reply.
     ///
-    /// SAFETY (borrowed inputs): the borrowed slices are erased to raw
-    /// pointers before entering the queue. This function does not
-    /// return until `rx.recv()` resolves, which happens only after the
-    /// executor thread has (a) finished `run_one` — every read of the
-    /// inputs done — and sent the reply, or (b) died, dropping the
-    /// reply sender after its last read. Either way the caller's
-    /// borrow, which lives across this entire call, outlives every
+    /// SAFETY (borrowed inputs *and* output destinations): borrowed
+    /// slices and `OutView`s are erased to raw pointers before entering
+    /// the queue. This function does not return until `rx.recv()`
+    /// resolves, which happens only after the executor thread has (a)
+    /// finished `run_one` — every read of the inputs and every write to
+    /// the destinations done — and sent the reply, or (b) died, dropping
+    /// the reply sender after its last access. Either way the caller's
+    /// borrows, which live across this entire call, outlive every
     /// dereference.
-    pub fn execute(&self, artifact: usize, inputs: Vec<Value<'_>>) -> Result<Vec<Vec<f32>>, String> {
+    fn submit(
+        &self,
+        artifact: usize,
+        inputs: Vec<Value<'_>>,
+        out: RawOut,
+    ) -> Result<Vec<Vec<f32>>, String> {
         let inputs: Vec<RawValue> = inputs
             .into_iter()
             .map(|v| match v {
@@ -166,16 +299,61 @@ impl ExecPool {
         let (tx, rx) = mpsc::sync_channel(1);
         {
             let mut q = self.queue.q.lock().unwrap();
-            q.push_back(Request { artifact, inputs, reply: tx });
+            q.push_back(Request { artifact, inputs, out, reply: tx });
         }
         self.queue.cv.notify_one();
         rx.recv().map_err(|_| "executor thread died".to_string())?
+    }
+
+    /// Execute artifact `artifact` (index into the manifest) with the
+    /// given inputs; blocks until the result tuple (each element
+    /// flattened to f32, freshly allocated) is ready. Compat wrapper
+    /// over the same submission path as [`ExecPool::execute_into`] —
+    /// output sizes are unknown until the artifact runs, so this is the
+    /// boundary that allocates (counted in [`ExecPool::output_allocs`]).
+    /// See [`ExecPool::submit`] for the borrowed-input safety argument.
+    pub fn execute(&self, artifact: usize, inputs: Vec<Value<'_>>) -> Result<Vec<Vec<f32>>, String> {
+        self.submit(artifact, inputs, RawOut::Alloc)
+    }
+
+    /// Execute artifact `artifact`, writing each output into the
+    /// corresponding caller-owned destination — the allocation-free
+    /// boundary the persistent-kernel task bodies use. `outs` must
+    /// carry exactly one [`OutView`] per artifact output, each sized to
+    /// that output's numel; any mismatch returns `Err` **before a
+    /// single element is written** (destination count is checked before
+    /// execution, every destination length before the first scatter).
+    /// Blocks until the executor thread has finished writing; the
+    /// mutable destination borrows live across the call, which is what
+    /// makes the erased pointers sound (see [`ExecPool::submit`]).
+    pub fn execute_into(
+        &self,
+        artifact: usize,
+        inputs: Vec<Value<'_>>,
+        outs: &mut [OutView<'_>],
+    ) -> Result<(), String> {
+        let raw = outs
+            .iter()
+            .map(|o| RawOutView { ptr: o.ptr, runs: o.runs, run: o.run, stride: o.stride })
+            .collect();
+        self.submit(artifact, inputs, RawOut::Into(raw)).map(|_| ())
     }
 
     /// Execute by artifact name (convenience for tests/examples).
     pub fn execute_by_name(&self, name: &str, inputs: Vec<Value<'_>>) -> Result<Vec<Vec<f32>>, String> {
         let (idx, _) = self.manifest.find(name).ok_or_else(|| format!("unknown artifact {name}"))?;
         self.execute(idx, inputs)
+    }
+
+    /// [`ExecPool::execute_into`] by artifact name.
+    pub fn execute_into_by_name(
+        &self,
+        name: &str,
+        inputs: Vec<Value<'_>>,
+        outs: &mut [OutView<'_>],
+    ) -> Result<(), String> {
+        let (idx, _) = self.manifest.find(name).ok_or_else(|| format!("unknown artifact {name}"))?;
+        self.execute_into(idx, inputs, outs)
     }
 }
 
@@ -193,6 +371,7 @@ fn executor_thread(
     queue: Arc<SharedQueue>,
     manifest: Arc<Manifest>,
     executed: Arc<AtomicUsize>,
+    out_allocs: Arc<AtomicUsize>,
     ready: mpsc::Sender<Result<(), String>>,
 ) {
     // Own client + own compiled executables: nothing here is Send.
@@ -224,7 +403,7 @@ fn executor_thread(
                 q = queue.cv.wait(q).unwrap();
             }
         };
-        let result = run_one(&client, &mut exes, &manifest, &req);
+        let result = run_one(&client, &mut exes, &manifest, &req, &out_allocs);
         executed.fetch_add(1, Ordering::Relaxed);
         let _ = req.reply.send(result);
     }
@@ -235,8 +414,21 @@ fn run_one(
     exes: &mut [Option<xla::PjRtLoadedExecutable>],
     manifest: &Manifest,
     req: &Request,
+    out_allocs: &AtomicUsize,
 ) -> Result<Vec<Vec<f32>>, String> {
     let spec = &manifest.artifacts[req.artifact];
+    // destination *count* is known statically — reject before running
+    // so a miscounted call can never write anything at all.
+    if let RawOut::Into(dsts) = &req.out {
+        if dsts.len() != spec.outputs {
+            return Err(format!(
+                "{}: expected {} output destinations, got {}",
+                spec.name,
+                spec.outputs,
+                dsts.len()
+            ));
+        }
+    }
     if exes[req.artifact].is_none() {
         let proto = xla::HloModuleProto::from_text_file(
             spec.path.to_str().ok_or("non-utf8 path")?,
@@ -267,14 +459,14 @@ fn run_one(
         let dims: Vec<i64> = s.shape.iter().map(|&d| d as i64).collect();
         let lit = match (v, s.ty) {
             (RawValue::F32(data), ArgType::F32) => {
-                xla::Literal::vec1(data).reshape(&dims).map_err(|e| e.to_string())?
+                xla::Literal::vec1(data.as_slice()).reshape(&dims).map_err(|e| e.to_string())?
             }
             (RawValue::I32(data), ArgType::I32) => {
-                xla::Literal::vec1(data).reshape(&dims).map_err(|e| e.to_string())?
+                xla::Literal::vec1(data.as_slice()).reshape(&dims).map_err(|e| e.to_string())?
             }
             (RawValue::BorrowedF32(p, n), ArgType::F32) => {
                 // SAFETY: the submitter is blocked in `execute` keeping
-                // the arena borrow alive until we reply (see there).
+                // the arena borrow alive until we reply (see `submit`).
                 let data = unsafe { std::slice::from_raw_parts(*p, *n) };
                 xla::Literal::vec1(data).reshape(&dims).map_err(|e| e.to_string())?
             }
@@ -297,10 +489,36 @@ fn run_one(
     if parts.len() != spec.outputs {
         return Err(format!("{}: expected {} outputs, got {}", spec.name, spec.outputs, parts.len()));
     }
-    parts
+    let parts: Vec<Vec<f32>> = parts
         .into_iter()
         .map(|p| p.to_vec::<f32>().map_err(|e| e.to_string()))
-        .collect()
+        .collect::<Result<_, String>>()?;
+    match &req.out {
+        RawOut::Alloc => {
+            out_allocs.fetch_add(parts.len(), Ordering::Relaxed);
+            Ok(parts)
+        }
+        RawOut::Into(dsts) => {
+            // validate *every* destination length before writing any
+            // element: a failed call must never leave a partial write.
+            for (i, (p, d)) in parts.iter().zip(dsts.iter()).enumerate() {
+                if p.len() != d.len() {
+                    return Err(format!(
+                        "{}: output {i} numel mismatch: artifact produced {}, destination holds {}",
+                        spec.name,
+                        p.len(),
+                        d.len()
+                    ));
+                }
+            }
+            for (p, d) in parts.iter().zip(dsts.iter()) {
+                // SAFETY: submitter parked in `execute_into`, lengths
+                // validated just above (see `submit`).
+                unsafe { d.write(p) };
+            }
+            Ok(Vec::new())
+        }
+    }
 }
 
 #[cfg(test)]
@@ -310,8 +528,79 @@ mod tests {
 
     fn pool(threads: usize) -> Option<ExecPool> {
         let m = Manifest::load(&Manifest::default_dir()).ok()?;
-        Some(ExecPool::new(m, threads).expect("pool construction"))
+        match ExecPool::new(m, threads) {
+            Ok(p) => Some(p),
+            Err(e) => {
+                // artifacts exist but no PJRT backend (stub xla build).
+                eprintln!("skipping: pool unavailable ({e})");
+                None
+            }
+        }
     }
+
+    // -- protocol-level tests: no artifacts or backend needed (these
+    //    are the ones the miri gate runs over the channel-crossing
+    //    unsafe in RawOutView). --
+
+    #[test]
+    fn out_view_scatter_writes_strided_runs_only() {
+        // 4×6 row-major buffer; destination = rows 0..4, cols 2..5
+        // (runs of 3, stride 6, starting at offset 2).
+        let mut dst = vec![0.0f32; 24];
+        let raw = {
+            let v = unsafe { OutView::from_raw_strided(dst.as_mut_ptr().add(2), 4, 3, 6) };
+            assert_eq!(v.len(), 12);
+            RawOutView { ptr: v.ptr, runs: v.runs, run: v.run, stride: v.stride }
+        };
+        let src: Vec<f32> = (1..=12).map(|i| i as f32).collect();
+        // SAFETY: `dst` outlives the write and nothing else touches it.
+        unsafe { raw.write(&src) };
+        for r in 0..4 {
+            for c in 0..6 {
+                let want = if (2..5).contains(&c) { (r * 3 + (c - 2) + 1) as f32 } else { 0.0 };
+                assert_eq!(dst[r * 6 + c], want, "row {r} col {c}");
+            }
+        }
+    }
+
+    #[test]
+    fn out_view_from_slice_is_one_contiguous_run() {
+        let mut dst = vec![0.0f32; 8];
+        let v = OutView::from_slice(&mut dst);
+        assert_eq!((v.runs, v.run, v.len()), (1, 8, 8));
+        let raw = RawOutView { ptr: v.ptr, runs: v.runs, run: v.run, stride: v.stride };
+        // SAFETY: `dst` outlives the write and nothing else touches it.
+        unsafe { raw.write(&[1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0, 8.0]) };
+        assert_eq!(dst, vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0, 8.0]);
+    }
+
+    #[test]
+    fn out_view_crosses_threads_like_the_reply_protocol() {
+        // the erased destination is written by another thread while
+        // this one "blocks" (the scope join models the reply recv) —
+        // the exact shape of the execute_into channel crossing.
+        let mut dst = vec![0.0f32; 12];
+        let raw = RawOutView { ptr: dst.as_mut_ptr(), runs: 3, run: 2, stride: 4 };
+        std::thread::scope(|s| {
+            s.spawn(move || {
+                // SAFETY: the owning thread is parked in scope-join
+                // until this write completes (blocking reply protocol).
+                unsafe { raw.write(&[1.0, 2.0, 3.0, 4.0, 5.0, 6.0]) };
+            });
+        });
+        assert_eq!(dst, vec![1.0, 2.0, 0.0, 0.0, 3.0, 4.0, 0.0, 0.0, 5.0, 6.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "overlapping output runs")]
+    fn overlapping_strided_runs_rejected() {
+        let mut dst = vec![0.0f32; 8];
+        // run 4 > stride 2 would self-overlap.
+        let _ = unsafe { OutView::from_raw_strided(dst.as_mut_ptr(), 2, 4, 2) };
+    }
+
+    // -- artifact-gated tests (skip without `make artifacts` + a real
+    //    PJRT backend). --
 
     #[test]
     fn matmul_artifact_computes() {
@@ -353,6 +642,64 @@ mod tests {
     }
 
     #[test]
+    fn execute_into_matches_execute_bitwise() {
+        let Some(p) = pool(1) else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let a = vec![3.5f32; 256];
+        let b = vec![0.25f32; 256];
+        let owned = p
+            .execute_by_name("add_b1", vec![Value::Borrowed(&a), Value::Borrowed(&b)])
+            .unwrap();
+        let before = p.output_allocs();
+        let mut dst = vec![0.0f32; 256];
+        p.execute_into_by_name(
+            "add_b1",
+            vec![Value::Borrowed(&a), Value::Borrowed(&b)],
+            &mut [OutView::from_slice(&mut dst)],
+        )
+        .unwrap();
+        // bit-identical results, and the write-into boundary allocated
+        // no output buffer.
+        assert_eq!(owned[0], dst);
+        assert_eq!(p.output_allocs(), before, "execute_into moved the alloc counter");
+    }
+
+    #[test]
+    fn execute_into_validates_before_writing() {
+        let Some(p) = pool(1) else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let a = vec![1.0f32; 256];
+        let b = vec![2.0f32; 256];
+        // wrong destination count: rejected before execution.
+        let mut d0 = vec![-7.0f32; 256];
+        let mut d1 = vec![-7.0f32; 256];
+        let err = p
+            .execute_into_by_name(
+                "add_b1",
+                vec![Value::Borrowed(&a), Value::Borrowed(&b)],
+                &mut [OutView::from_slice(&mut d0), OutView::from_slice(&mut d1)],
+            )
+            .unwrap_err();
+        assert!(err.contains("output destinations"), "{err}");
+        assert!(d0.iter().chain(&d1).all(|&v| v == -7.0), "partial write on count mismatch");
+        // wrong destination length: rejected before the first element.
+        let mut short = vec![-7.0f32; 8];
+        let err = p
+            .execute_into_by_name(
+                "add_b1",
+                vec![Value::Borrowed(&a), Value::Borrowed(&b)],
+                &mut [OutView::from_slice(&mut short)],
+            )
+            .unwrap_err();
+        assert!(err.contains("numel mismatch"), "{err}");
+        assert!(short.iter().all(|&v| v == -7.0), "partial write on length mismatch");
+    }
+
+    #[test]
     fn concurrent_execution_from_many_threads() {
         let Some(p) = pool(2) else {
             eprintln!("skipping: artifacts not built");
@@ -368,12 +715,17 @@ mod tests {
                         let a = vec![scale; 256];
                         let b = vec![1.0f32; 256];
                         // exercise the borrowed path under concurrency:
-                        // the submitting thread parks in `execute`
-                        // while the executor reads the slices.
-                        let out = p
-                            .execute_by_name("add_b1", vec![Value::Borrowed(&a), Value::Borrowed(&b)])
-                            .unwrap();
-                        for &v in &out[0] {
+                        // the submitting thread parks in `execute_into`
+                        // while the executor reads the inputs and
+                        // writes the destination.
+                        let mut out = vec![0.0f32; 256];
+                        p.execute_into_by_name(
+                            "add_b1",
+                            vec![Value::Borrowed(&a), Value::Borrowed(&b)],
+                            &mut [OutView::from_slice(&mut out)],
+                        )
+                        .unwrap();
+                        for &v in &out {
                             assert!((v - (scale + 1.0)).abs() < 1e-6);
                         }
                     }
@@ -381,6 +733,7 @@ mod tests {
             }
         });
         assert_eq!(p.executed.load(Ordering::Relaxed), 32);
+        assert_eq!(p.output_allocs(), 0, "write-into boundary allocated output buffers");
     }
 
     #[test]

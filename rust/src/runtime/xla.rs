@@ -1,0 +1,231 @@
+//! Offline stand-in for the `xla` PJRT binding.
+//!
+//! The crate is stdlib-only by policy (the dev/CI environment is
+//! offline), but the execution pool is written against the `xla`
+//! crate's PJRT surface: `Rc`-based thread-confined clients, HLO-text
+//! compilation, literal marshalling. This module pins that exact
+//! surface so `runtime::pool` compiles and its protocol-level tests
+//! (value erasure, output scatter, validation ordering) run everywhere.
+//! Every entry point that would need a real backend fails at **client
+//! construction** ([`PjRtClient::cpu`]) with a descriptive error, which
+//! `ExecPool::new` surfaces before any request is queued.
+//!
+//! Swapping in the real binding is a one-line change in
+//! `runtime/pool.rs` (import the external crate instead of this
+//! module); nothing else in the crate touches these types. Tests that
+//! need real execution gate on **both** the artifacts and a working
+//! backend — they attempt pool construction and skip on error (see
+//! `have_runtime` in the `exec::real` / `serving::engine` test
+//! modules and the pool test helper) — so a stub build on a machine
+//! where `make artifacts` *has* run skips cleanly instead of
+//! panicking on the `cpu()` error.
+
+use std::fmt;
+use std::rc::Rc;
+
+/// Stringly error type mirroring the binding's (`Display`-able, so
+/// callers' `map_err(|e| e.to_string())` works unchanged).
+#[derive(Debug)]
+pub struct Error(String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+const UNAVAILABLE: &str = "PJRT backend unavailable: this build uses the offline `xla` stub \
+     (rust/src/runtime/xla.rs); vendor the real binding to execute artifacts";
+
+/// Thread-confined PJRT client. `Rc`-based and deliberately `!Send`,
+/// matching the real binding — the pool gives each executor thread its
+/// own client and never shares one across threads.
+pub struct PjRtClient {
+    _not_send: Rc<()>,
+}
+
+impl PjRtClient {
+    /// Always fails in the stub: there is no backend to construct.
+    pub fn cpu() -> Result<PjRtClient, Error> {
+        Err(Error(UNAVAILABLE.into()))
+    }
+
+    pub fn compile(&self, _c: &XlaComputation) -> Result<PjRtLoadedExecutable, Error> {
+        Err(Error(UNAVAILABLE.into()))
+    }
+}
+
+/// Parsed HLO module (the text artifacts written by `make artifacts`).
+pub struct HloModuleProto {
+    _text: String,
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(path: &str) -> Result<HloModuleProto, Error> {
+        std::fs::read_to_string(path)
+            .map(|text| HloModuleProto { _text: text })
+            .map_err(|e| Error(format!("{path}: {e}")))
+    }
+}
+
+/// An HLO computation ready for compilation.
+pub struct XlaComputation {
+    _proto: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_p: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _proto: () }
+    }
+}
+
+/// A compiled executable owned by one client (and thus one thread).
+pub struct PjRtLoadedExecutable {
+    _not_send: Rc<()>,
+}
+
+impl PjRtLoadedExecutable {
+    /// Run with the given argument literals; the result nesting mirrors
+    /// the binding's per-device, per-output buffer layout.
+    pub fn execute<L: std::borrow::Borrow<Literal>>(
+        &self,
+        _args: &[L],
+    ) -> Result<Vec<Vec<PjRtBuffer>>, Error> {
+        Err(Error(UNAVAILABLE.into()))
+    }
+}
+
+/// Device-resident buffer handle returned by `execute`.
+pub struct PjRtBuffer {
+    _not_send: Rc<()>,
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal, Error> {
+        Err(Error(UNAVAILABLE.into()))
+    }
+}
+
+/// Element types a literal can carry across the pool boundary.
+pub trait NativeType: Copy {
+    fn wrap(data: Vec<Self>) -> LiteralData;
+    fn unwrap(data: &LiteralData) -> Option<&[Self]>;
+}
+
+impl NativeType for f32 {
+    fn wrap(data: Vec<f32>) -> LiteralData {
+        LiteralData::F32(data)
+    }
+
+    fn unwrap(data: &LiteralData) -> Option<&[f32]> {
+        match data {
+            LiteralData::F32(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+impl NativeType for i32 {
+    fn wrap(data: Vec<i32>) -> LiteralData {
+        LiteralData::I32(data)
+    }
+
+    fn unwrap(data: &LiteralData) -> Option<&[i32]> {
+        match data {
+            LiteralData::I32(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+/// Backing storage of a literal: flat typed data or a tuple of parts.
+pub enum LiteralData {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+    Tuple(Vec<Literal>),
+}
+
+/// Host literal: typed data plus a shape.
+pub struct Literal {
+    data: LiteralData,
+    dims: Vec<i64>,
+}
+
+impl Literal {
+    /// Rank-1 literal over a typed slice.
+    pub fn vec1<T: NativeType>(data: &[T]) -> Literal {
+        Literal { data: T::wrap(data.to_vec()), dims: vec![data.len() as i64] }
+    }
+
+    /// Tuple literal (the artifact output container).
+    pub fn tuple(parts: Vec<Literal>) -> Literal {
+        let n = parts.len() as i64;
+        Literal { data: LiteralData::Tuple(parts), dims: vec![n] }
+    }
+
+    pub fn shape(&self) -> &[i64] {
+        &self.dims
+    }
+
+    pub fn reshape(self, dims: &[i64]) -> Result<Literal, Error> {
+        let have = match &self.data {
+            LiteralData::F32(v) => v.len(),
+            LiteralData::I32(v) => v.len(),
+            LiteralData::Tuple(_) => return Err(Error("cannot reshape a tuple literal".into())),
+        };
+        let want: i64 = dims.iter().product();
+        if want < 0 || want as usize != have {
+            return Err(Error(format!("reshape {have} elements to {dims:?}")));
+        }
+        Ok(Literal { data: self.data, dims: dims.to_vec() })
+    }
+
+    pub fn to_tuple(self) -> Result<Vec<Literal>, Error> {
+        match self.data {
+            LiteralData::Tuple(parts) => Ok(parts),
+            _ => Err(Error("literal is not a tuple".into())),
+        }
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>, Error> {
+        T::unwrap(&self.data).map(<[T]>::to_vec).ok_or_else(|| Error("literal dtype mismatch".into()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn client_construction_reports_stub() {
+        let err = PjRtClient::cpu().err().expect("stub must not hand out a client");
+        assert!(err.to_string().contains("stub"), "{err}");
+    }
+
+    #[test]
+    fn literal_roundtrip_f32_and_i32() {
+        let f = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0][..]).reshape(&[2, 2]).unwrap();
+        assert_eq!(f.shape(), &[2, 2]);
+        assert_eq!(f.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert!(f.to_vec::<i32>().is_err(), "dtype mismatch must not reinterpret");
+        let i = Literal::vec1(&[7i32, 8][..]);
+        assert_eq!(i.to_vec::<i32>().unwrap(), vec![7, 8]);
+    }
+
+    #[test]
+    fn reshape_rejects_numel_mismatch() {
+        assert!(Literal::vec1(&[0.0f32; 6][..]).reshape(&[4, 2]).is_err());
+    }
+
+    #[test]
+    fn tuple_roundtrip() {
+        let t = Literal::tuple(vec![Literal::vec1(&[1.0f32][..]), Literal::vec1(&[2i32][..])]);
+        assert!(Literal::vec1(&[0.0f32][..]).to_tuple().is_err());
+        let parts = t.to_tuple().unwrap();
+        assert_eq!(parts.len(), 2);
+        assert_eq!(parts[0].to_vec::<f32>().unwrap(), vec![1.0]);
+        assert_eq!(parts[1].to_vec::<i32>().unwrap(), vec![2]);
+    }
+}

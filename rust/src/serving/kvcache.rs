@@ -152,15 +152,19 @@ impl KvArena {
     /// Move the first `rows` cached rows of slot `src` into slot `dst`
     /// across every layer's K and V segments. One contiguous memcpy per
     /// segment. Returns rows moved × layers — the engine's
-    /// `kv_rows_migrated` unit. The stable-slot serving path never
-    /// calls this; it survives as the relocation primitive for tooling
-    /// and for any future deliberate compaction policy. Callers doing
-    /// multiple moves own the ordering problem (a destination may be
-    /// another pending move's source).
+    /// `kv_rows_migrated` unit. A `src == dst` move is a **no-op
+    /// returning 0**: the rows are already home, nothing is copied and
+    /// nothing is counted (a compaction policy that resolves a slot to
+    /// itself must not trip `SharedSlab::copy_within`'s disjointness
+    /// contract with a self-overlapping copy). The stable-slot serving
+    /// path never calls this; it survives as the relocation primitive
+    /// for tooling and for any future deliberate compaction policy.
+    /// Callers doing multiple moves own the ordering problem (a
+    /// destination may be another pending move's source).
     pub fn move_slot(&self, src: usize, dst: usize, rows: usize) -> usize {
-        assert!(src < self.slots && dst < self.slots && src != dst, "bad slot move {src}->{dst}");
+        assert!(src < self.slots && dst < self.slots, "bad slot move {src}->{dst}");
         assert!(rows <= self.s_max, "slot move rows {rows} > s_max {}", self.s_max);
-        if rows == 0 {
+        if rows == 0 || src == dst {
             return 0;
         }
         let slot_span = self.s_max * self.kv_dim;
@@ -269,6 +273,30 @@ mod tests {
         }
         // zero-row move is free.
         assert_eq!(a.move_slot(0, 2, 0), 0);
+    }
+
+    #[test]
+    fn move_slot_to_itself_is_a_noop() {
+        // regression: a self-move used to be rejected outright (and
+        // without the guard would have reached SharedSlab::copy_within
+        // with identical, fully overlapping ranges, which asserts on
+        // non-disjoint copies). It must instead count zero rows and
+        // leave every byte in place.
+        let a = KvArena::new(2, 4, 4, 2);
+        let slab = a.slab();
+        let slot_span = 4 * 2;
+        for l in 0..2 {
+            for (si, base) in [a.k_offset(l), a.v_offset(l)].into_iter().enumerate() {
+                let tag = (l * 10 + si) as f32;
+                let rows: Vec<f32> = (0..slot_span).map(|e| tag + e as f32).collect();
+                slab.write(base + 2 * slot_span, &rows);
+            }
+        }
+        let before = slab.read(0, slab.len());
+        assert_eq!(a.move_slot(2, 2, 4), 0, "self-move must move no rows");
+        assert_eq!(slab.read(0, slab.len()), before, "self-move must not touch the arena");
+        // bounds are still enforced on the degenerate path.
+        assert_eq!(a.move_slot(3, 3, 0), 0);
     }
 
     #[test]

@@ -133,6 +133,126 @@ fn prop_views_equal_owned_reads_and_count_nothing() {
 }
 
 #[test]
+fn prop_mut_views_agree_with_write_tile() {
+    forall("mutable views vs write_tile", 0xD00D5, 200, random_case, |c| {
+        let (via_tile, t1) = store_for(&c.shape);
+        let (via_view, t2) = store_for(&c.shape);
+        let numel: usize = c.shape.iter().product();
+        let base: Vec<f32> = (0..numel).map(|i| i as f32).collect();
+        via_tile.set(t1, &base);
+        via_view.set(t2, &base);
+        let tile: Vec<f32> = (0..c.region.numel()).map(|i| 5000.0 + i as f32).collect();
+        via_tile.write_tile(t1, &c.region, &tile);
+
+        // write the same tile through the mutable-view surface: the
+        // contiguous fast path when the region allows it, the strided
+        // scatter otherwise — and neither moves the copy counters.
+        via_view.reset_counters();
+        {
+            let mut mv = via_view.tile_mut(t2, &c.region);
+            match mv.as_slice_mut() {
+                Some(s) => s.copy_from_slice(&tile),
+                None => mv.scatter_from(&tile),
+            }
+        }
+        if via_view.counters() != StoreCounters::default() {
+            return Err("mutable view moved the counters".into());
+        }
+        if via_view.get(t2) != via_tile.get(t1) {
+            return Err(format!("mutable-view write differs for region {}", c.region));
+        }
+        // a contiguous region must also round-trip via view_region_mut.
+        {
+            let mut probe = via_view.tile_mut(t2, &c.region);
+            if probe.as_slice_mut().is_some() {
+                drop(probe);
+                let zeros = vec![0.0; c.region.numel()];
+                via_view.view_region_mut(t2, &c.region).copy_from_slice(&zeros);
+                if via_view.read_tile(t2, &c.region) != zeros {
+                    return Err("view_region_mut write did not land".into());
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn concurrent_disjoint_mut_views_do_not_corrupt() {
+    // The write half of the aliasing contract: one thread per row band
+    // holds a mutable view of its own band (as a pool output
+    // destination would) and writes through it repeatedly, while reader
+    // threads view disjoint read-only bands. No locks anywhere — only
+    // region disjointness, exactly like concurrently executing tasks
+    // whose output tiles the compiler made disjoint.
+    let rows = 8usize;
+    let cols = 64usize;
+    let mut g = CompGraph::new();
+    let t = g.input("x", vec![rows * 2, cols], DType::F32);
+    let store = TensorStore::new(&g);
+    for r in rows..rows * 2 {
+        let band = vec![r as f32; cols];
+        store.write_tile(t, &Region::new(vec![(r, r + 1), (0, cols)]), &band);
+    }
+    std::thread::scope(|sc| {
+        for w in 0..rows {
+            let store = &store;
+            sc.spawn(move || {
+                let reg = Region::new(vec![(w, w + 1), (0, cols)]);
+                for round in 0..200u32 {
+                    let val = (w * 1000 + round as usize) as f32;
+                    let dst = store.view_region_mut(t, &reg);
+                    dst.iter_mut().for_each(|x| *x = val);
+                }
+            });
+        }
+        for rdr in 0..4 {
+            let store = &store;
+            sc.spawn(move || {
+                for i in 0..200usize {
+                    let r = rows + (rdr + i) % rows;
+                    let v = store.view_region(t, &Region::new(vec![(r, r + 1), (0, cols)]));
+                    assert!(v.iter().all(|&x| x == r as f32), "read-only band corrupted");
+                }
+            });
+        }
+    });
+    for w in 0..rows {
+        let band = store.read_tile(t, &Region::new(vec![(w, w + 1), (0, cols)]));
+        assert_eq!(band, vec![(w * 1000 + 199) as f32; cols], "writer band {w} lost its last write");
+    }
+}
+
+#[cfg(debug_assertions)]
+#[test]
+#[should_panic(expected = "aliasing violation")]
+fn overlapping_mut_views_panic_in_debug() {
+    // writer/writer overlap: two in-flight mutable views of
+    // intersecting regions are exactly the bug the event graph is
+    // supposed to make impossible — the debug tracker must catch it.
+    let mut g = CompGraph::new();
+    let t = g.input("x", vec![4, 8], DType::F32);
+    let store = TensorStore::new(&g);
+    let held = store.tile_mut(t, &Region::new(vec![(0, 3), (0, 8)]));
+    let _clash = store.tile_mut(t, &Region::new(vec![(2, 4), (0, 8)]));
+    drop(held);
+}
+
+#[cfg(debug_assertions)]
+#[test]
+#[should_panic(expected = "aliasing violation")]
+fn reader_overlapping_mut_view_panics_in_debug() {
+    // writer/reader overlap: reading a region while a mutable view
+    // (e.g. a pool output destination mid-flight) covers it.
+    let mut g = CompGraph::new();
+    let t = g.input("x", vec![4, 8], DType::F32);
+    let store = TensorStore::new(&g);
+    let held = store.tile_mut(t, &Region::new(vec![(1, 3), (0, 8)]));
+    let _ = store.view_region(t, &Region::new(vec![(2, 3), (0, 8)]));
+    drop(held);
+}
+
+#[test]
 fn concurrent_disjoint_writers_and_readers_stress() {
     // The arena aliasing contract under load: writer threads own
     // disjoint row bands of one tensor; reader threads repeatedly take

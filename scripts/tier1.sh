@@ -1,12 +1,14 @@
 #!/usr/bin/env bash
 # Tier-1 gate for the rust_pallas crate: release build, test suite, and
-# clippy with warnings denied; an optional miri pass over the tensor
-# arena (the one module holding unsafe — skipped with a warning when
-# miri is absent); then (best-effort) the perf-trajectory benches so
-# BENCH_launch_overhead.json, BENCH_store_hotpath.json, and
-# BENCH_weight_arena.json track the hot paths across PRs
-# (spawn-per-iteration vs persistent runtime; locked-clone vs
-# borrowed-view tile reads; per-session vs shared-arena weight init).
+# clippy with warnings denied; an optional miri pass over the unsafe
+# surface (the tensor arena plus the pool's lifetime-erased channel
+# crossing — skipped with a warning when miri is absent); then
+# (best-effort) the perf-trajectory benches so
+# BENCH_launch_overhead.json, BENCH_store_hotpath.json,
+# BENCH_weight_arena.json, and BENCH_exec_into.json track the hot paths
+# across PRs (spawn-per-iteration vs persistent runtime; locked-clone
+# vs borrowed-view tile reads; per-session vs shared-arena weight init;
+# alloc-per-call vs write-into pool outputs).
 #
 # Usage: scripts/tier1.sh [--no-bench]
 set -euo pipefail
@@ -41,15 +43,18 @@ cargo test -q
 echo "== tier1: cargo clippy -- -D warnings =="
 cargo clippy --all-targets -- -D warnings
 
-# The tensor arena (rust/src/exec/store.rs) is the one module holding
-# unsafe; when miri is installed, run it under the interpreter to check
-# the aliasing contract (UB detection). Like the missing-cargo path
-# above, absence is a loud skip, not a silent green.
+# The unsafe surface is the tensor arena (rust/src/exec/store.rs) plus
+# the pool's lifetime-erased channel crossing (RawValue/RawOutView in
+# rust/src/runtime/pool.rs — the OutView scatter tests exercise the
+# erase → cross-thread write → reply shape without a PJRT backend);
+# when miri is installed, run both under the interpreter to check the
+# aliasing contracts (UB detection). Like the missing-cargo path above,
+# absence is a loud skip, not a silent green.
 if cargo miri --version >/dev/null 2>&1; then
-    echo "== tier1: cargo miri test (arena aliasing contract) =="
-    cargo miri test --lib exec::store
+    echo "== tier1: cargo miri test (arena aliasing + pool channel-crossing contracts) =="
+    cargo miri test --lib -- exec::store runtime::pool
 else
-    echo "tier1: miri not installed — skipping arena aliasing gate (rustup component add miri)" >&2
+    echo "tier1: miri not installed — skipping aliasing gates (rustup component add miri)" >&2
 fi
 
 if [[ "${1:-}" != "--no-bench" ]]; then
@@ -63,13 +68,15 @@ if [[ "${1:-}" != "--no-bench" ]]; then
     # `if` (not `&&`) so a missing bench file cannot trip errexit.
     if [[ -f "$ROOT/BENCH_launch_overhead.json" ]]; then cat "$ROOT/BENCH_launch_overhead.json"; fi
 
-    echo "== tier1: hotpath_micro bench (store hot path + weight arena) =="
+    echo "== tier1: hotpath_micro bench (store hot path + weight arena + pool output boundary) =="
     MPK_BENCH_STORE_JSON="$ROOT/BENCH_store_hotpath.json" \
     MPK_BENCH_WEIGHT_JSON="$ROOT/BENCH_weight_arena.json" \
+    MPK_BENCH_EXEC_INTO_JSON="$ROOT/BENCH_exec_into.json" \
         cargo bench --bench hotpath_micro ||
         echo "tier1: bench skipped (non-fatal)" >&2
     if [[ -f "$ROOT/BENCH_store_hotpath.json" ]]; then cat "$ROOT/BENCH_store_hotpath.json"; fi
     if [[ -f "$ROOT/BENCH_weight_arena.json" ]]; then cat "$ROOT/BENCH_weight_arena.json"; fi
+    if [[ -f "$ROOT/BENCH_exec_into.json" ]]; then cat "$ROOT/BENCH_exec_into.json"; fi
 fi
 
 echo "tier1: OK"

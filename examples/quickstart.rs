@@ -34,7 +34,8 @@ fn main() {
 
     // 3. execute on the threaded in-kernel runtime (workers + schedulers,
     //    hybrid JIT/AOT launch — §5). Tasks are no-ops here; see
-    //    serve_e2e for real numerics through PJRT.
+    //    serve_e2e for real numerics through PJRT, driven through the
+    //    streaming serving API (ServeEngine::builder() + step()).
     let kernel = MegaKernel::new(&compiled, MegaConfig { workers: 8, schedulers: 2, ..Default::default() });
     let report = kernel.run(&|_: &TaskDesc| {}).expect("mega-kernel run");
     println!(

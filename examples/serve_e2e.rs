@@ -23,7 +23,7 @@
 use mpk::exec::real::{self, RealSession};
 use mpk::exec::TileExecutor;
 use mpk::megakernel::MegaConfig;
-use mpk::serving::{Request, ServeEngine};
+use mpk::serving::{FinishReason, Request, ServeEngine, TokenEvent};
 
 fn main() {
     let mega = MegaConfig { workers: 6, schedulers: 2, ..Default::default() };
@@ -52,9 +52,16 @@ fn main() {
     drop(kernel);
     drop(s);
 
-    // --- the serving run ---
+    // --- the serving run (batch mode: serve() is a thin loop over
+    //     step(), so this also exercises the step-driven core) ---
     println!("\n== serving: 12 requests, max batch 8, continuous batching ==");
-    let mut engine = ServeEngine::create(8, 3, 42, mega).expect("engine");
+    let mut engine = ServeEngine::builder()
+        .max_batch(8)
+        .pool_threads(3)
+        .seed(42)
+        .mega(mega)
+        .build()
+        .expect("engine");
     for i in 0..12u64 {
         // uniform lengths: the wave admits together and retires
         // together, so the whole run is steady-state — the shared
@@ -99,5 +106,62 @@ fn main() {
     for (id, toks) in sample.iter().take(3) {
         println!("  req {id}: {toks:?}");
     }
+
+    // --- the streaming run: step(), mid-flight admission, cancel ---
+    println!("\n== streaming: step-driven, online admission + cancellation ==");
+    let mut s = ServeEngine::builder()
+        .max_batch(4)
+        .pool_threads(3)
+        .seed(42)
+        .mega(mega)
+        .build()
+        .expect("engine");
+    s.submit(Request::new(100, vec![3, 11], 8)).expect("submit");
+    s.submit(Request::new(101, vec![42], 8)).expect("submit");
+    let mut streamed: Vec<TokenEvent> = Vec::new();
+    let mut steps = 0;
+    while s.has_work() {
+        let outcome = s.step().expect("step");
+        streamed.extend(outcome.events);
+        steps += 1;
+        if steps == 2 {
+            // a request joins while the kernel is resident and serving.
+            s.submit(Request::new(102, vec![7, 9, 4], 8)).expect("mid-flight submit");
+        }
+        if steps == 4 {
+            // and one leaves: slot + KV blocks free immediately.
+            s.cancel(101).expect("cancel");
+        }
+    }
+    let stats = s.take_stats();
+    let stream_of = |id: u64| -> Vec<i32> {
+        streamed.iter().filter(|ev| ev.request == id).filter_map(|ev| ev.token).collect()
+    };
+    println!("req 100 streamed    : {:?}", stream_of(100));
+    println!("req 101 (cancelled) : {:?} then {:?}", stream_of(101), FinishReason::Cancelled);
+    println!("req 102 (mid-flight): {:?}", stream_of(102));
+    println!(
+        "busy {:?} of {:?} wall | {:.1} tok/s (busy-time) | ttft p50 {:?} | completion p99 {:?}",
+        stats.busy,
+        stats.total,
+        stats.throughput_tok_s(),
+        stats.ttft_p50(),
+        stats.completion_p99()
+    );
+    assert_eq!(stream_of(100).len(), 8, "request 100 must stream its full budget");
+    assert!(stream_of(101).len() < 8, "cancelled request must stop early");
+    assert_eq!(stream_of(102).len(), 8, "mid-flight request must stream its full budget");
+    assert!(
+        streamed.contains(&TokenEvent { request: 101, token: None, finish: Some(FinishReason::Cancelled) }),
+        "cancellation must emit a terminal event"
+    );
+    // the streamed path keeps every zero-copy invariant of batch mode.
+    assert_eq!(s.store_counters(), (0, 0), "streaming copied tensor data");
+    assert_eq!(s.output_allocs(), 0, "streaming allocated output buffers");
+    assert_eq!(stats.kv_rows_migrated, 0, "streaming moved KV rows");
+    // long-lived streaming loops drain retired requests periodically.
+    let retired = s.take_finished();
+    assert_eq!(retired.len(), 3, "all three requests retired on this engine");
+
     println!("\nall layers composed: Pallas kernels -> HLO artifacts -> PJRT pool -> megakernel");
 }

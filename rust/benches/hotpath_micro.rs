@@ -10,6 +10,7 @@ use mpk::megakernel::{EventTable, MpmcQueue};
 use mpk::models::{build_decode_graph, GraphOptions, ModelConfig};
 use mpk::ops::{CompGraph, DType, Region};
 use mpk::runtime::{ExecPool, Manifest, OutView, Value};
+use mpk::serving::{Batcher, KvAllocator, Request, ServeEngine};
 use mpk::sim::{simulate_megakernel, GpuSpec, SimOptions};
 use mpk::tgraph::{analyze_deps, compile, decompose, CompileOptions, DecomposeConfig};
 use mpk::util::{bench_median_ns, Table};
@@ -228,6 +229,94 @@ fn bench_exec_into(t: &mut Table) -> (u64, u64, &'static str, u64) {
     (alloc_ns, into_ns, "synthetic", 0)
 }
 
+/// The step-API overhead: what one `ServeEngine::step()` call costs
+/// beyond the kernel iteration it wraps (retire/admit, staging by slot,
+/// harvest, event construction). With artifacts and a PJRT backend this
+/// drives a real engine and compares median per-`step()` wall time to
+/// the median kernel iteration latency inside it — the difference is
+/// the API's bookkeeping, which replaced the old inlined `serve()` loop
+/// body. Offline it times the same bookkeeping on the scheduler
+/// substrate alone (no kernel — `kernel_ns` reported as 0), flagged
+/// `"mode": "synthetic"`. Returns `(step_ns, kernel_ns, mode)`.
+fn bench_step_overhead(t: &mut Table) -> (u64, u64, &'static str) {
+    let median = |mut v: Vec<u64>| -> u64 {
+        if v.is_empty() {
+            return 0;
+        }
+        let mid = v.len() / 2;
+        let (_, m, _) = v.select_nth_unstable(mid);
+        *m
+    };
+    let engine = ServeEngine::builder()
+        .max_batch(4)
+        .pool_threads(2)
+        .seed(42)
+        .mega(mpk::megakernel::MegaConfig { workers: 4, schedulers: 1, ..Default::default() })
+        .build();
+    if let Ok(mut e) = engine {
+        // warm-up wave (lazy artifact compiles, scratch growth).
+        for i in 0..4u64 {
+            e.submit(Request::new(i, vec![(i as i32) + 1, 3], 4)).unwrap();
+        }
+        while e.has_work() {
+            e.step().unwrap();
+        }
+        let _ = e.take_stats();
+        // measured wave: steady batch-4 decode, one step at a time.
+        for i in 10..14u64 {
+            e.submit(Request::new(i, vec![(i as i32) + 1, 5], 8)).unwrap();
+        }
+        let mut per_step = Vec::new();
+        while e.has_work() {
+            let t0 = std::time::Instant::now();
+            e.step().unwrap();
+            per_step.push(t0.elapsed().as_nanos() as u64);
+        }
+        let stats = e.take_stats();
+        let step_ns = median(per_step);
+        let kernel_ns = median(stats.iter_latencies.iter().map(|d| d.as_nanos() as u64).collect());
+        t.row(vec![
+            "step_overhead: step() call".into(),
+            format!("{step_ns} ns"),
+            "retire/admit + stage + kernel + harvest".into(),
+        ]);
+        t.row(vec![
+            "step_overhead: kernel iteration".into(),
+            format!("{kernel_ns} ns"),
+            "resident megakernel re-arm inside step()".into(),
+        ]);
+        return (step_ns, kernel_ns, "engine");
+    }
+
+    // offline: the scheduler-side loop body alone — retire scan, graph
+    // pick, slot staging into reused scratch — on a churning batcher.
+    let mut b = Batcher::new(8, 62, KvAllocator::new(1024, 8));
+    for i in 0..4u64 {
+        b.submit(Request::new(i, vec![1, 2], 60)).unwrap();
+    }
+    b.step_admission();
+    let mut ids = vec![0i32; 8];
+    let mut lens = vec![0usize; 8];
+    let ns = bench_median_ns(500, 5000, || {
+        b.step_admission();
+        let gb = b.graph_batch();
+        ids[..gb].fill(0);
+        lens[..gb].fill(0);
+        for r in &b.active {
+            let slot = r.slot.unwrap();
+            ids[slot] = r.next_input();
+            lens[slot] = r.cache_len;
+        }
+        std::hint::black_box((&ids, &lens));
+    });
+    t.row(vec![
+        "step_overhead: scheduler body (synthetic)".into(),
+        format!("{ns} ns"),
+        "retire/admit + graph pick + slot staging, no kernel".into(),
+    ]);
+    (ns, 0, "synthetic")
+}
+
 fn main() {
     println!("== hot-path microbenchmarks (median ns unless noted) ==\n");
     let mut t = Table::new(&["benchmark", "median", "note"]);
@@ -235,6 +324,7 @@ fn main() {
     let (clone_ns, read_ns, view_ns, view_allocs) = bench_store_hotpath(&mut t);
     let (per_session_ns, shared_ns, dup_bytes, shared_bytes) = bench_weight_arena(&mut t);
     let (exec_alloc_ns, exec_into_ns, exec_mode, exec_into_allocs) = bench_exec_into(&mut t);
+    let (step_ns, kernel_ns, step_mode) = bench_step_overhead(&mut t);
 
     // queue push+pop round trip
     let q: MpmcQueue<usize> = MpmcQueue::new(1024);
@@ -361,5 +451,22 @@ fn main() {
     match std::fs::write(&exec_json_path, exec_json) {
         Ok(()) => println!("wrote {exec_json_path}"),
         Err(e) => eprintln!("could not write {exec_json_path}: {e}"),
+    }
+
+    // step-API record: per-`step()` cost vs the kernel iteration inside
+    // it (the difference is the serving API's bookkeeping, which
+    // replaced the inlined serve() loop body). `mode` says whether a
+    // real engine ran or the offline scheduler-only boundary.
+    let step_json_path = std::env::var("MPK_BENCH_STEP_JSON")
+        .unwrap_or_else(|_| "BENCH_step_overhead.json".to_string());
+    let step_json = format!(
+        "{{\n  \"bench\": \"step_overhead\",\n  \"mode\": \"{step_mode}\",\n  \
+         \"step_ns\": {step_ns},\n  \"kernel_iter_ns\": {kernel_ns},\n  \
+         \"api_overhead_ns\": {}\n}}\n",
+        step_ns.saturating_sub(kernel_ns)
+    );
+    match std::fs::write(&step_json_path, step_json) {
+        Ok(()) => println!("wrote {step_json_path}"),
+        Err(e) => eprintln!("could not write {step_json_path}: {e}"),
     }
 }

@@ -39,6 +39,17 @@ use crate::tgraph::{CompiledGraph, TaskDesc, TaskKind};
 use std::cell::RefCell;
 use std::sync::{Arc, Mutex};
 
+crate::util::boundary_error! {
+    /// Typed failure harvested from task bodies after an epoch — the
+    /// `exec` boundary error of [`ExecCore::take_error`]. The threaded
+    /// runtime has no error channel, so the first failing task body
+    /// records its diagnostic here and callers collect it once the
+    /// epoch drains. Legacy `String` contexts convert through the
+    /// `From<TaskError> for String` shim; the serving layer converts it
+    /// into its own typed error.
+    TaskError
+}
+
 /// Per-worker reusable staging buffers. Keyed by OS thread — megakernel
 /// workers are long-lived, so after warm-up every gather reuses
 /// capacity and the task hot path performs no heap allocation.
@@ -150,8 +161,8 @@ impl ExecCore {
     }
 
     /// First task error of the epoch, if any (cleared on read).
-    pub fn take_error(&self) -> Option<String> {
-        self.error.lock().unwrap().take()
+    pub fn take_error(&self) -> Option<TaskError> {
+        self.error.lock().unwrap().take().map(TaskError)
     }
 
     fn fail(&self, e: String) {

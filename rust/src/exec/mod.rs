@@ -5,7 +5,7 @@ pub mod binder;
 pub mod real;
 pub mod store;
 
-pub use binder::{ExecCore, OwningTileExecutor, TileExecutor};
+pub use binder::{ExecCore, OwningTileExecutor, TaskError, TileExecutor};
 pub use real::{
     build_real_graph, compile_real, init_weights, run_iteration, run_reference, RealSession,
     WeightArena,

@@ -252,7 +252,7 @@ pub fn run_iteration(
     exec.set_cur_len(cur_len);
     let report = kernel.run(exec)?;
     if let Some(e) = exec.take_error() {
-        return Err(e);
+        return Err(e.into());
     }
     Ok(report)
 }

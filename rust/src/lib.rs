@@ -13,9 +13,15 @@
 //!   compiled tGraphs (HLO text artifacts built by `make artifacts`).
 //! * [`sim`] — discrete-event GPU timing simulator regenerating the
 //!   paper's figures on A100/H100/B200 roofline models.
-//! * [`serving`] — continuous batching + paged KV cache substrate (§6.1).
+//! * [`serving`] — the step-driven streaming serving API (§6.1): build
+//!   an engine with `serving::ServeEngine::builder()`, `submit()`
+//!   requests at any time, drive one decode iteration per `step()` and
+//!   stream its `TokenEvent`s, `cancel()` mid-flight; continuous
+//!   batching + paged KV + stable slots underneath, typed
+//!   `serving::EngineError` throughout.
 //! * [`moe`] — expert routing + hybrid workload balancer (§6.4).
 //! * [`multigpu`] — tensor parallelism + collective decomposition (§6.5).
+#![deny(rustdoc::broken_intra_doc_links)]
 pub mod exec;
 pub mod megakernel;
 pub mod metrics;

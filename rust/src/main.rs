@@ -66,23 +66,44 @@ fn main() {
             let n: usize = flag(&args, "--requests").and_then(|v| v.parse().ok()).unwrap_or(8);
             let batch: usize = flag(&args, "--batch").and_then(|v| v.parse().ok()).unwrap_or(4);
             let mega = MegaConfig { workers: 6, schedulers: 2, ..Default::default() };
-            let mut e = ServeEngine::create(batch, 3, 42, mega).expect(
+            let mut e = ServeEngine::builder().max_batch(batch).pool_threads(3).seed(42).mega(mega).build().expect(
                 "serving needs `make artifacts` and a real PJRT backend \
                  (offline builds ship the xla stub)",
             );
-            for i in 0..n as u64 {
-                let prompt: Vec<i32> = (0..3).map(|t| 1 + (i as i32 * 13 + t) % 500).collect();
-                e.submit(Request::new(i, prompt, 6)).expect("request within max_seq");
+            // stream: half the wave up front, the rest submitted
+            // mid-flight while earlier requests are still decoding.
+            let prompt_for = |i: u64| -> Vec<i32> { (0..3).map(|t| 1 + (i as i32 * 13 + t) % 500).collect() };
+            let mut next = 0u64;
+            while next < (n as u64).div_ceil(2) {
+                e.submit(Request::new(next, prompt_for(next), 6)).expect("request within max_seq");
+                next += 1;
             }
-            let (out, stats) = e.serve().expect("serve");
+            let mut done = 0usize;
+            while e.has_work() {
+                let outcome = e.step().expect("step");
+                for ev in &outcome.events {
+                    if let Some(reason) = ev.finish {
+                        done += 1;
+                        println!("req {:>3} finished ({reason:?})", ev.request);
+                    }
+                }
+                // online admission: trickle the remaining requests in.
+                if next < n as u64 {
+                    e.submit(Request::new(next, prompt_for(next), 6)).expect("request within max_seq");
+                    next += 1;
+                }
+            }
+            let stats = e.take_stats();
             println!(
-                "{} requests | {} tokens | {} iters | {:?} total | {:.1} tok/s | p50 iter {:?}",
-                out.len(),
+                "{done} requests | {} tokens | {} iters | {:?} busy / {:?} wall | {:.1} tok/s | \
+                 p50 iter {:?} | ttft p50 {:?}",
                 stats.tokens_generated,
                 stats.iterations,
+                stats.busy,
                 stats.total,
                 stats.throughput_tok_s(),
-                stats.p50_latency()
+                stats.p50_latency(),
+                stats.ttft_p50()
             );
         }
         _ => {

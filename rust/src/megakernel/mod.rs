@@ -7,5 +7,5 @@ pub mod smem;
 
 pub use event::EventTable;
 pub use queue::{AotQueue, MpmcQueue};
-pub use runtime::{MegaConfig, MegaKernel, PersistentMegaKernel, RunReport, TaskExecutor};
+pub use runtime::{KernelError, MegaConfig, MegaKernel, PersistentMegaKernel, RunReport, TaskExecutor};
 pub use smem::{task_smem_bytes, PagedSmem, SmemError, PAGE_BYTES};

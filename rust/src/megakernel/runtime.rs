@@ -49,6 +49,16 @@ use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
+crate::util::boundary_error! {
+    /// Typed failure from a mega-kernel epoch — the `megakernel`
+    /// boundary error for [`MegaKernel::run`] /
+    /// [`PersistentMegaKernel::run`] (watchdog timeout, executor panic,
+    /// a queue wedged at arming). Legacy `String` contexts convert
+    /// through the `From<KernelError> for String` shim; the serving
+    /// layer converts it into its own typed error.
+    KernelError
+}
+
 /// Runtime shape: how many SM threads play worker vs scheduler (Table 1).
 #[derive(Clone, Copy, Debug)]
 pub struct MegaConfig {
@@ -385,10 +395,11 @@ impl<'g> MegaKernel<'g> {
         MegaKernel { graph, state: KernelState::new(graph, cfg) }
     }
 
-    /// Execute the whole tGraph once. Returns a report, or an error
-    /// string on timeout (stuck dependency — indicates a compiler bug).
-    pub fn run<E: TaskExecutor>(&self, exec: &E) -> Result<RunReport, String> {
-        let epoch = self.state.arm(self.graph)?;
+    /// Execute the whole tGraph once. Returns a report, or a
+    /// [`KernelError`] on timeout (stuck dependency — indicates a
+    /// compiler bug).
+    pub fn run<E: TaskExecutor>(&self, exec: &E) -> Result<RunReport, KernelError> {
+        let epoch = self.state.arm(self.graph).map_err(KernelError)?;
         let t0 = Instant::now();
         let deadline = t0 + self.state.cfg.timeout;
         std::thread::scope(|s| {
@@ -399,7 +410,7 @@ impl<'g> MegaKernel<'g> {
                 s.spawn(move || self.state.scheduler_epoch(self.graph, sc, deadline));
             }
         });
-        self.state.report(self.graph, t0.elapsed(), epoch)
+        self.state.report(self.graph, t0.elapsed(), epoch).map_err(KernelError)
     }
 }
 
@@ -515,11 +526,11 @@ impl PersistentMegaKernel {
     /// Takes `&mut self` deliberately: exclusive access is what makes
     /// the lifetime erasure below sound (no second `run` can re-arm
     /// while this epoch's executor borrow is published).
-    pub fn run<E: TaskExecutor>(&mut self, exec: &E) -> Result<RunReport, String> {
+    pub fn run<E: TaskExecutor>(&mut self, exec: &E) -> Result<RunReport, KernelError> {
         let inner = &self.inner;
         // Threads are parked here: either never armed, or quiesced at
         // the end of the previous run (we do not return mid-epoch).
-        let epoch = inner.state.arm(&inner.graph)?;
+        let epoch = inner.state.arm(&inner.graph).map_err(KernelError)?;
         let t0 = Instant::now();
         let deadline = t0 + inner.state.cfg.timeout;
         // SAFETY: the erased borrow is published for the duration of
@@ -562,9 +573,9 @@ impl PersistentMegaKernel {
         let panicked = ph.panicked;
         drop(ph);
         if panicked {
-            return Err(format!("task executor panicked during epoch {epoch}"));
+            return Err(KernelError(format!("task executor panicked during epoch {epoch}")));
         }
-        inner.state.report(&inner.graph, t0.elapsed(), epoch)
+        inner.state.report(&inner.graph, t0.elapsed(), epoch).map_err(KernelError)
     }
 
     pub fn graph(&self) -> &CompiledGraph {
@@ -850,7 +861,7 @@ mod tests {
             }
         });
         assert!(res.is_err(), "watchdog should have fired");
-        assert!(res.unwrap_err().contains("timed out"));
+        assert!(res.unwrap_err().0.contains("timed out"));
         // epoch 2: same kernel re-arms cleanly and completes.
         let r = mk.run(&|_: &TaskDesc| {}).unwrap();
         assert_eq!(r.metrics.tasks_executed as usize, c.tgraph.tasks.len());
@@ -872,7 +883,7 @@ mod tests {
             }
         });
         assert!(res.is_err(), "panic should surface as an error");
-        assert!(res.unwrap_err().contains("panicked"));
+        assert!(res.unwrap_err().0.contains("panicked"));
         // epoch 2: same kernel re-arms cleanly and completes.
         let r = mk.run(&|_: &TaskDesc| {}).unwrap();
         assert_eq!(r.metrics.tasks_executed as usize, c.tgraph.tasks.len());

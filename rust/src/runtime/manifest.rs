@@ -6,6 +6,15 @@
 use crate::util::{json_parse, Json};
 use std::path::{Path, PathBuf};
 
+crate::util::boundary_error! {
+    /// Typed failure from manifest loading / artifact discovery — the
+    /// `runtime` boundary error for [`Manifest::load`]. Callers that
+    /// still speak `String` (validation helpers, examples) convert
+    /// through the `From<ManifestError> for String` shim; the serving
+    /// layer converts it into its own typed error instead.
+    ManifestError
+}
+
 /// Element type tag of an artifact input.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum ArgType {
@@ -69,7 +78,11 @@ pub struct Manifest {
 }
 
 impl Manifest {
-    pub fn load(dir: &Path) -> Result<Manifest, String> {
+    pub fn load(dir: &Path) -> Result<Manifest, ManifestError> {
+        Self::load_impl(dir).map_err(ManifestError)
+    }
+
+    fn load_impl(dir: &Path) -> Result<Manifest, String> {
         let text = std::fs::read_to_string(dir.join("manifest.json"))
             .map_err(|e| format!("reading manifest.json in {dir:?}: {e} — run `make artifacts`"))?;
         let j = json_parse::parse(&text)?;

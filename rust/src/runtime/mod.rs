@@ -7,5 +7,5 @@ pub mod manifest;
 pub mod pool;
 pub mod xla;
 
-pub use manifest::{ArgSpec, ArgType, ArtifactSpec, Manifest, TinyModelMeta};
-pub use pool::{ExecPool, OutView, Value};
+pub use manifest::{ArgSpec, ArgType, ArtifactSpec, Manifest, ManifestError, TinyModelMeta};
+pub use pool::{ExecPool, OutView, PoolError, Value};

@@ -44,6 +44,17 @@ use std::marker::PhantomData;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Condvar, Mutex};
 
+crate::util::boundary_error! {
+    /// Typed failure from pool construction — the `runtime` boundary
+    /// error for [`ExecPool::new`] (no PJRT backend, thread spawn
+    /// failure, an executor dying during warm-up). Per-request
+    /// execution errors stay `String`: they are harvested task-by-task
+    /// through the binder and surface through its own boundary error.
+    /// Legacy `String` contexts convert through the
+    /// `From<PoolError> for String` shim.
+    PoolError
+}
+
 /// A host tensor crossing the pool boundary. Borrowed variants carry a
 /// slice borrowed from the caller (typically a tensor-arena view) for
 /// the duration of the `execute` call.
@@ -227,7 +238,11 @@ pub struct ExecPool {
 impl ExecPool {
     /// Build a pool with `threads` executor threads; each compiles all
     /// artifacts in `manifest` on its own CPU client.
-    pub fn new(manifest: Manifest, threads: usize) -> Result<ExecPool, String> {
+    pub fn new(manifest: Manifest, threads: usize) -> Result<ExecPool, PoolError> {
+        Self::new_impl(manifest, threads).map_err(PoolError)
+    }
+
+    fn new_impl(manifest: Manifest, threads: usize) -> Result<ExecPool, String> {
         let manifest = Arc::new(manifest);
         let queue = Arc::new(SharedQueue {
             q: Mutex::new(VecDeque::new()),

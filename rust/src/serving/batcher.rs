@@ -8,21 +8,31 @@
 //! the start event's task; here it is the host-side `IterPrep`
 //! counterpart driving the same state.
 //!
-//! # Slot policy: lowest-free-slot, no compaction
+//! # Slot policy: lowest-free-slot, no implicit compaction
 //!
 //! An active request keeps the slot it was admitted into until it
 //! retires — retirements free the slot but never move a survivor.
 //! Because every batch-size specialization aliases one shared max-batch
 //! KV arena keyed by slot, stable slots make `kv_rows_migrated`
 //! *structurally* zero: there is no code path that relocates a live
-//! request's cache rows. The cost is fragmentation: after retirements
-//! the highest occupied slot (not the active count) bounds which
-//! specialized graph must run, so the engine occasionally executes the
-//! next-larger graph than the active count strictly needs. New
-//! admissions take the **lowest** free slot, so fragmentation heals
-//! through churn instead of through copies.
+//! request's cache rows behind the engine's back. The cost is
+//! fragmentation: after retirements the highest occupied slot (not the
+//! active count) bounds which specialized graph must run, so the engine
+//! occasionally executes the next-larger graph than the active count
+//! strictly needs. New admissions take the **lowest** free slot, so
+//! fragmentation heals through churn instead of through copies.
+//!
+//! The one sanctioned exception is *deliberate* anti-fragmentation
+//! compaction: when the engine's opt-in flag is set, it asks
+//! [`Batcher::compaction_candidate`] whether relocating exactly one
+//! request (highest occupied slot → lowest free slot) would let the
+//! specialized-graph batch drop a whole power of two, applies the slot
+//! move via [`Batcher::relocate`], and pays the KV row copy itself —
+//! counted honestly in `kv_rows_migrated`, never silent.
 
+use crate::serving::error::EngineError;
 use crate::serving::kvcache::KvAllocator;
+use crate::serving::step::FinishReason;
 use std::collections::{HashSet, VecDeque};
 
 /// A generation request.
@@ -38,14 +48,27 @@ pub struct Request {
     /// Cache length (tokens already appended).
     pub cache_len: usize,
     /// Batch slot while active. Stable: assigned at admission, held
-    /// until retirement.
+    /// until retirement (or moved once by a deliberate compaction pass).
     pub slot: Option<usize>,
+    /// Terminal state, once reached: set by the engine at harvest
+    /// (max-tokens / EOS) or by cancellation. A request with a finish
+    /// reason retires at the next scheduling step.
+    pub finish: Option<FinishReason>,
 }
 
 impl Request {
     pub fn new(id: u64, prompt: Vec<i32>, max_new_tokens: usize) -> Self {
         assert!(!prompt.is_empty(), "empty prompt");
-        Request { id, prompt, max_new_tokens, generated: Vec::new(), prompt_pos: 0, cache_len: 0, slot: None }
+        Request {
+            id,
+            prompt,
+            max_new_tokens,
+            generated: Vec::new(),
+            prompt_pos: 0,
+            cache_len: 0,
+            slot: None,
+            finish: None,
+        }
     }
 
     /// Next token to feed the model: prompt token during prefill, last
@@ -64,7 +87,7 @@ impl Request {
     }
 
     pub fn finished(&self) -> bool {
-        self.generated.len() >= self.max_new_tokens
+        self.finish.is_some() || self.generated.len() >= self.max_new_tokens
     }
 
     /// Total tokens this request will hold in cache after this step.
@@ -82,6 +105,10 @@ pub struct Batcher {
     /// each request carries its own stable `slot`; never index this by
     /// slot.
     pub active: Vec<Request>,
+    /// Retired requests (natural finish or cancellation), accumulated
+    /// until the caller drains them (`ServeEngine::take_finished`) —
+    /// long-lived streaming callers must drain periodically or this
+    /// grows with every request ever served.
     pub finished: Vec<Request>,
     pub kv: KvAllocator,
     /// slot → occupying request id. The allocator state: admission
@@ -116,27 +143,69 @@ impl Batcher {
     /// stall everything queued behind it) — or a duplicate id, which
     /// would alias another request's KV residency and slot — is an
     /// `Err`, not a panic or a silent drop.
-    pub fn submit(&mut self, r: Request) -> Result<(), String> {
+    pub fn submit(&mut self, r: Request) -> Result<(), EngineError> {
+        if r.max_new_tokens == 0 {
+            // zero budget can never emit a terminal event: the request
+            // would retire silently (or, with a 1-token prompt, decode
+            // a token nobody asked for) — refuse it up front.
+            return Err(EngineError::ZeroBudget { id: r.id });
+        }
         let worst = r.prompt.len() + r.max_new_tokens;
         if worst > self.max_seq {
-            return Err(format!(
-                "request {} rejected: worst-case {} tokens exceeds max_seq {}",
-                r.id, worst, self.max_seq
-            ));
+            return Err(EngineError::RequestTooLong { id: r.id, worst, max_seq: self.max_seq });
         }
         let need = self.kv.blocks_for(worst);
         if need > self.kv.total_blocks() {
-            return Err(format!(
-                "request {} rejected: worst-case {worst} tokens needs {need} KV blocks, pool has {}",
-                r.id,
-                self.kv.total_blocks()
-            ));
+            return Err(EngineError::KvPoolExceeded {
+                id: r.id,
+                worst,
+                need_blocks: need,
+                pool_blocks: self.kv.total_blocks(),
+            });
         }
         if !self.known_ids.insert(r.id) {
-            return Err(format!("request id {} rejected: already known to this batcher", r.id));
+            return Err(EngineError::DuplicateId { id: r.id });
         }
         self.waiting.push_back(r);
         Ok(())
+    }
+
+    /// Cancel a request *now*: a waiting request leaves the queue, an
+    /// active one is retired on the spot — its slot cleared and its KV
+    /// blocks released immediately, so the very next scheduling step can
+    /// re-issue both. The request lands in `finished` with
+    /// `finish: Some(Cancelled)` and whatever it generated so far.
+    ///
+    /// Typed refusals: an id this batcher never accepted is
+    /// [`EngineError::UnknownRequest`]; one already terminal (retired,
+    /// or its natural finish already recorded and awaiting retirement)
+    /// is [`EngineError::AlreadyFinished`] — its terminal event has
+    /// already been (or will be) emitted, and a second one must not be.
+    pub fn cancel(&mut self, id: u64) -> Result<(), EngineError> {
+        if let Some(pos) = self.waiting.iter().position(|r| r.id == id) {
+            let mut r = self.waiting.remove(pos).expect("position came from the queue");
+            r.finish = Some(FinishReason::Cancelled);
+            self.finished.push(r);
+            return Ok(());
+        }
+        if let Some(pos) = self.active.iter().position(|r| r.id == id) {
+            if self.active[pos].finished() {
+                return Err(EngineError::AlreadyFinished { id });
+            }
+            let mut r = self.active.swap_remove(pos);
+            self.kv.release(id);
+            let slot = r.slot.take().expect("active request without slot");
+            debug_assert_eq!(self.slots[slot], Some(id), "slot table out of sync");
+            self.slots[slot] = None;
+            r.finish = Some(FinishReason::Cancelled);
+            self.finished.push(r);
+            return Ok(());
+        }
+        if self.known_ids.contains(&id) {
+            Err(EngineError::AlreadyFinished { id })
+        } else {
+            Err(EngineError::UnknownRequest { id })
+        }
     }
 
     pub fn pending(&self) -> usize {
@@ -209,6 +278,57 @@ impl Batcher {
             // has exactly max_batch entries), so no clamp is needed.
             b => b.next_power_of_two(),
         }
+    }
+
+    /// The single relocation the anti-fragmentation policy would apply,
+    /// if it pays for itself: move the request at the **highest**
+    /// occupied slot into the **lowest** free slot, but only when that
+    /// drops [`Batcher::graph_batch`] to a smaller power of two —
+    /// otherwise the copy buys nothing the lazy policy wouldn't get for
+    /// free through churn. Returns `(id, src_slot, dst_slot)`; purely a
+    /// probe, nothing is moved. The caller (the engine, behind its
+    /// opt-in flag) applies it with [`Batcher::relocate`] *and* moves
+    /// the KV rows, in that lockstep order.
+    pub fn compaction_candidate(&self) -> Option<(u64, usize, usize)> {
+        let bound = self.slot_bound();
+        if bound <= 1 {
+            return None; // empty, or already as low as slots go
+        }
+        let src = bound - 1; // highest occupied slot, by definition of bound
+        let dst = self.lowest_free_slot()?;
+        if dst >= src {
+            return None; // no hole below the top occupant
+        }
+        // bound after the move: the highest slot that would still be
+        // occupied below src (dst itself qualifies — it gains the
+        // occupant), plus one. dst < src, so the rposition always hits.
+        let new_bound =
+            (0..src).rposition(|s| self.slots[s].is_some() || s == dst).expect("dst < src") + 1;
+        if new_bound.next_power_of_two() >= bound.next_power_of_two() {
+            return None; // would not drop a whole power of two
+        }
+        Some((self.slots[src].expect("bound slot occupied"), src, dst))
+    }
+
+    /// Apply a deliberate slot relocation decided by a compaction
+    /// policy: move active request `id` to the free slot `dst`,
+    /// updating the slot table and the request's own slot. This is the
+    /// *only* way a live request changes slot; the caller owns moving
+    /// the KV rows to match (and updating residency) before the next
+    /// iteration stages by slot. Returns the vacated source slot.
+    pub fn relocate(&mut self, id: u64, dst: usize) -> usize {
+        assert!(dst < self.max_batch, "relocation target {dst} out of bounds");
+        assert!(self.slots[dst].is_none(), "relocation target slot {dst} occupied");
+        let r = self
+            .active
+            .iter_mut()
+            .find(|r| r.id == id)
+            .unwrap_or_else(|| panic!("relocating inactive request {id}"));
+        let src = r.slot.expect("active request without slot");
+        r.slot = Some(dst);
+        self.slots[src] = None;
+        self.slots[dst] = Some(id);
+        src
     }
 }
 
@@ -360,7 +480,10 @@ mod tests {
         // would stall the queue forever and silently drop the request.
         let mut b = batcher(4, 2);
         let err = b.submit(req(1, 9, 8)).unwrap_err();
-        assert!(err.contains("KV blocks"), "got: {err}");
+        assert!(
+            matches!(err, EngineError::KvPoolExceeded { id: 1, worst: 17, need_blocks: 3, pool_blocks: 2 }),
+            "got: {err}"
+        );
         assert!(!b.has_work());
         // exactly pool-sized is fine.
         b.submit(req(2, 8, 8)).unwrap();
@@ -371,16 +494,17 @@ mod tests {
     fn duplicate_request_id_rejected() {
         let mut b = batcher(4, 100);
         b.submit(req(7, 2, 2)).unwrap();
+        let is_dup = |e: EngineError| matches!(e, EngineError::DuplicateId { id: 7 });
         // duplicate while waiting.
-        assert!(b.submit(req(7, 2, 2)).unwrap_err().contains("already known"));
+        assert!(is_dup(b.submit(req(7, 2, 2)).unwrap_err()));
         b.step_admission();
         // duplicate while active: would alias request 7's slot and KV
         // residency (keyed by id) — must be rejected, not admitted.
-        assert!(b.submit(req(7, 2, 2)).unwrap_err().contains("already known"));
+        assert!(is_dup(b.submit(req(7, 2, 2)).unwrap_err()));
         finish(&mut b, 7);
         b.step_admission();
         // duplicate after retirement: outputs are keyed by id too.
-        assert!(b.submit(req(7, 2, 2)).unwrap_err().contains("already known"));
+        assert!(is_dup(b.submit(req(7, 2, 2)).unwrap_err()));
         // a fresh id is unaffected.
         b.submit(req(8, 2, 2)).unwrap();
     }
@@ -389,11 +513,136 @@ mod tests {
     fn oversized_request_rejected_not_panicked() {
         let mut b = batcher(1, 100);
         let err = b.submit(req(1, 60, 10)).unwrap_err();
-        assert!(err.contains("exceeds max_seq"), "got: {err}");
+        assert!(
+            matches!(err, EngineError::RequestTooLong { id: 1, worst: 70, max_seq: 64 }),
+            "got: {err}"
+        );
         assert_eq!(b.pending(), 0, "rejected request must not be queued");
         assert!(!b.has_work());
         // a legal request right after is unaffected.
         b.submit(req(2, 30, 30)).unwrap();
         assert_eq!(b.pending(), 1);
+    }
+
+    #[test]
+    fn zero_budget_request_rejected_without_burning_its_id() {
+        let mut b = batcher(2, 100);
+        assert!(matches!(b.submit(req(1, 2, 0)).unwrap_err(), EngineError::ZeroBudget { id: 1 }));
+        assert!(!b.has_work());
+        // the rejection happens before the id is recorded, so the
+        // client can resubmit with a real budget.
+        b.submit(req(1, 2, 1)).unwrap();
+        assert_eq!(b.pending(), 1);
+    }
+
+    #[test]
+    fn cancel_waiting_request_never_admits() {
+        let mut b = batcher(1, 100);
+        b.submit(req(1, 2, 4)).unwrap();
+        b.submit(req(2, 2, 4)).unwrap();
+        b.step_admission(); // 1 active, 2 waiting
+        b.cancel(2).unwrap();
+        assert_eq!(b.pending(), 0);
+        let cancelled = b.finished.iter().find(|r| r.id == 2).unwrap();
+        assert_eq!(cancelled.finish, Some(FinishReason::Cancelled));
+        assert!(cancelled.generated.is_empty());
+        // the slot table never saw request 2.
+        assert_eq!(b.active.len(), 1);
+        assert_eq!(b.active[0].id, 1);
+    }
+
+    #[test]
+    fn cancel_active_frees_slot_and_kv_immediately() {
+        // 4 blocks of 8 = 32 tokens; each request reserves 16 worst-case
+        // → two admit, the third waits on KV pressure.
+        let mut b = batcher(4, 4);
+        for i in 1..=3 {
+            b.submit(req(i, 8, 8)).unwrap();
+        }
+        b.step_admission();
+        assert_eq!(b.active.len(), 2);
+        assert_eq!(b.pending(), 1);
+        let free_before = b.kv.free_blocks();
+        b.cancel(1).unwrap();
+        // blocks back *now*, not at the next scheduling step...
+        assert_eq!(b.kv.free_blocks(), free_before + 2);
+        assert_eq!(b.kv.held_by(1), 0);
+        // ...and the freed slot 0 is the next admission target.
+        b.step_admission();
+        let r3 = b.active.iter().find(|r| r.id == 3).unwrap();
+        assert_eq!(r3.slot, Some(0));
+        // the survivor never moved.
+        assert_eq!(b.active.iter().find(|r| r.id == 2).unwrap().slot, Some(1));
+    }
+
+    #[test]
+    fn cancel_rejects_unknown_and_terminal_ids() {
+        let mut b = batcher(2, 100);
+        assert!(matches!(b.cancel(5).unwrap_err(), EngineError::UnknownRequest { id: 5 }));
+        b.submit(req(5, 2, 1)).unwrap();
+        b.step_admission();
+        // naturally finished but not yet retired: terminal already.
+        finish(&mut b, 5);
+        assert!(matches!(b.cancel(5).unwrap_err(), EngineError::AlreadyFinished { id: 5 }));
+        b.step_admission(); // retires 5
+        assert!(matches!(b.cancel(5).unwrap_err(), EngineError::AlreadyFinished { id: 5 }));
+        // double-cancel is AlreadyFinished too.
+        b.submit(req(6, 2, 9)).unwrap();
+        b.step_admission();
+        b.cancel(6).unwrap();
+        assert!(matches!(b.cancel(6).unwrap_err(), EngineError::AlreadyFinished { id: 6 }));
+    }
+
+    #[test]
+    fn compaction_candidate_fires_only_on_power_of_two_drop() {
+        let mut b = batcher(8, 1000);
+        for i in 0..5 {
+            b.submit(req(i, 2, 4)).unwrap();
+        }
+        b.step_admission();
+        assert_eq!(b.graph_batch(), 8);
+        // no hole below the top occupant → nothing to move.
+        assert_eq!(b.compaction_candidate(), None);
+        // retire slot 2: bound stays 5, moving slot 4 → 2 gives bound 4,
+        // and next_pow2 goes 8 → 4: worth one move.
+        finish(&mut b, 2);
+        b.step_admission();
+        assert_eq!(b.compaction_candidate(), Some((4, 4, 2)));
+        // retire slot 0 too: candidate moves the highest occupant into
+        // the *lowest* hole.
+        finish(&mut b, 0);
+        b.step_admission();
+        assert_eq!(b.compaction_candidate(), Some((4, 4, 0)));
+        // a hole that doesn't change the power of two is left alone:
+        // occupants at 1, 3 (bound 4, gb 4); moving 3 → 0 gives bound 2,
+        // gb 2 < 4 → fires. But occupants at 0, 1, 3 (bound 4): moving
+        // 3 → 2 keeps bound 3, gb 4 → must not fire.
+        let mut b = batcher(8, 1000);
+        for i in 0..4 {
+            b.submit(req(i, 2, 4)).unwrap();
+        }
+        b.step_admission();
+        finish(&mut b, 2);
+        b.step_admission();
+        assert_eq!(b.compaction_candidate(), None, "gb would stay 4 — copy buys nothing");
+    }
+
+    #[test]
+    fn relocate_applies_the_probe_result() {
+        let mut b = batcher(8, 1000);
+        for i in 0..5 {
+            b.submit(req(i, 2, 4)).unwrap();
+        }
+        b.step_admission();
+        finish(&mut b, 1);
+        b.step_admission();
+        let (id, src, dst) = b.compaction_candidate().unwrap();
+        assert_eq!((id, src, dst), (4, 4, 1));
+        assert_eq!(b.relocate(id, dst), src);
+        assert_eq!(b.active.iter().find(|r| r.id == 4).unwrap().slot, Some(1));
+        assert_eq!(b.slot_bound(), 4);
+        assert_eq!(b.graph_batch(), 4, "one move halved the specialized graph");
+        // idempotence of the policy: no further candidate.
+        assert_eq!(b.compaction_candidate(), None);
     }
 }

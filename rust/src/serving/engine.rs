@@ -1,35 +1,49 @@
-//! The serving engine: continuous batching over the real-numerics
-//! megakernel (§6.1), with a persistent runtime, resident KV, stable
-//! batch slots, and a zero-copy decode hot path.
+//! The serving engine: a **step-driven streaming API** over the real-
+//! numerics megakernel (§6.1), with a persistent runtime, resident KV,
+//! stable batch slots, and a zero-copy decode hot path.
+//!
+//! # Lifecycle: build → submit → step → stream
+//!
+//! An engine is configured through [`EngineBuilder`] (named, validated
+//! settings — batch ceiling, pool threads, seed, kernel shape, optional
+//! EOS token, opt-in compaction) and then *driven* one decode iteration
+//! at a time with [`ServeEngine::step`]: retire/admit → pick
+//! specialization → stage by slot → re-arm the resident kernel →
+//! harvest. Each step returns a [`StepOutcome`] carrying a
+//! [`TokenEvent`] per request that produced a token (with a
+//! [`FinishReason`] on its terminal event), so callers stream tokens as
+//! they are decoded. Between steps the live set may change:
+//! [`ServeEngine::submit`] queues new requests that admit into stable
+//! slots at the next step (online admission), and
+//! [`ServeEngine::cancel`] retires a request immediately — its slot and
+//! KV blocks are free for the very next admission, and its terminal
+//! `Cancelled` event rides the next outcome. [`ServeEngine::serve`]
+//! survives as the batch-mode compat loop: drive `step()` until idle,
+//! return per-request outputs plus the stats window.
+//!
+//! # The hot path underneath
 //!
 //! Each batch-size specialization is a long-lived [`Session`]: a tensor
 //! arena holding activations, a [`PersistentMegaKernel`] whose
 //! worker/scheduler threads park between iterations, a resident
 //! `OwningTileExecutor`, and tensor ids resolved once at creation. All
 //! sessions alias **one shared max-batch [`KvArena`]** for their KV
-//! cache tensors (a batch-`b` graph's `l{l}.kcache` is the first `b`
-//! slots of the arena's layer segment) and **one shared
-//! [`WeightArena`]** for their parameter tensors (initialized once at
-//! `create`, read-only thereafter) — switching specializations
-//! re-interprets the same memory, and weight memory does not scale with
-//! the number of specializations.
+//! cache tensors and **one shared [`WeightArena`]** for their parameter
+//! tensors — switching specializations re-interprets the same memory.
+//! A request keeps its slot from admission to retirement, so no code
+//! path moves KV rows implicitly: `kv_rows_migrated` stays structurally
+//! zero unless the **opt-in** anti-fragmentation pass deliberately
+//! relocates one request to drop the specialized graph a whole power of
+//! two (every moved row is counted). The newly appended KV row is
+//! written in-kernel by `KvAppend`; the engine never copies a tensor on
+//! the decode path (asserted via the store's read-side counters), and
+//! task results land directly in their destination arena tensors
+//! through the pool's write-into boundary (`execute_into`) — the pool's
+//! `output_allocs` counter stays at zero.
 //!
-//! Per decode iteration: retire/admit (the paper's start-event task),
-//! pick the batch-size-specialized session covering the highest
-//! occupied **slot** (powers of two — slots are stable, so after
-//! retirements the occupied set may be fragmented and the engine
-//! accepts occasionally running the next-larger graph), stage each
-//! request's token at its slot index, re-arm the resident kernel, then
-//! harvest each request's logits row through a borrowed arena view
-//! (greedy decoding). A request keeps its slot from admission to
-//! retirement, so no code path moves KV rows: `kv_rows_migrated` is
-//! structurally zero, not merely zero in steady state. The newly
-//! appended KV row is written in-kernel by `KvAppend`; the engine never
-//! copies a tensor on the decode path (asserted via the store's
-//! read-side counters), and task results land *directly* in their
-//! destination arena tensors through the pool's write-into boundary
-//! (`execute_into`) — the pool's `output_allocs` counter stays at zero,
-//! closing the last per-task allocation on the decode hot path.
+//! Every fallible operation returns a typed [`EngineError`]; the
+//! `exec`/`runtime`/`megakernel` boundary errors convert through `From`
+//! shims (see `serving::error`).
 
 use crate::exec::binder::OwningTileExecutor;
 use crate::exec::real::{self, compile_real, WeightArena};
@@ -39,7 +53,9 @@ use crate::ops::TensorId;
 use crate::runtime::pool::ExecPool;
 use crate::runtime::Manifest;
 use crate::serving::batcher::{Batcher, Request};
+use crate::serving::error::EngineError;
 use crate::serving::kvcache::{KvAllocator, KvArena, KvResidency};
+use crate::serving::step::{FinishReason, StepOutcome, TokenEvent};
 use std::collections::HashMap;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
@@ -56,47 +72,82 @@ struct Session {
     logits: TensorId,
 }
 
-/// Serving statistics.
+/// Per-request latency record: admission → first token, admission →
+/// terminal event. `ttft` is `None` for a request that never produced
+/// a token; `completion` is `None` while the request is still in
+/// flight — and both stay `None` for a request cancelled out of the
+/// waiting queue (it was never admitted, so there is no admission to
+/// measure from; the record still exists, so every terminated request
+/// is accounted for).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct RequestLatency {
+    pub ttft: Option<Duration>,
+    pub completion: Option<Duration>,
+}
+
+/// In-flight clock for an admitted request (engine-internal).
+struct RequestClock {
+    admitted: Instant,
+    ttft: Option<Duration>,
+}
+
+/// Serving statistics for one stats window (reset by
+/// [`ServeEngine::take_stats`]; [`ServeEngine::serve`] reports one
+/// window per call).
 #[derive(Clone, Debug, Default)]
 pub struct ServeStats {
     pub iterations: usize,
     pub tokens_generated: usize,
+    /// Wall-clock span of the window: first `step()` to the end of the
+    /// latest one — includes any caller-side gaps between steps.
     pub total: Duration,
+    /// Time actually spent inside `step()`. Throughput is computed
+    /// against this, so a streaming caller that sleeps between steps
+    /// does not see its throughput collapse toward zero.
+    pub busy: Duration,
     pub iter_latencies: Vec<Duration>,
     /// Tokens in flight per iteration (batch-utilization curve).
     pub batch_sizes: Vec<usize>,
     /// K/V rows moved within the shared max-batch arena, summed over
     /// layers. With stable slots this is structurally zero — requests
-    /// keep their slot from admission to retirement and every
-    /// specialization aliases the same arena, so neither retirements
-    /// nor batch-size transitions move rows. Kept as a counter so the
-    /// tests can assert the invariant instead of trusting it.
+    /// keep their slot from admission to retirement — except for the
+    /// opt-in anti-fragmentation pass, whose single deliberate
+    /// relocation per step is counted here honestly. With compaction
+    /// off the tests assert it stays 0.
     pub kv_rows_migrated: usize,
+    /// Per-request latency keyed by request id: admission → first
+    /// token (TTFT) and admission → terminal event (completion).
+    pub request_latency: HashMap<u64, RequestLatency>,
 }
 
 impl ServeStats {
+    /// Decode throughput over **busy** time (time inside `step()`), not
+    /// wall clock — see [`ServeStats::busy`].
     pub fn throughput_tok_s(&self) -> f64 {
-        self.tokens_generated as f64 / self.total.as_secs_f64().max(1e-9)
+        self.tokens_generated as f64 / self.busy.as_secs_f64().max(1e-9)
     }
 
-    /// `q`-quantile of per-iteration latency via `select_nth_unstable`
-    /// — O(n), no full sort. One clone of the latency vector is still
-    /// needed because selection reorders in place.
+    /// Nearest-rank quantile via `select_nth_unstable` — O(n), no full
+    /// sort. Takes the sample vector by value because selection
+    /// reorders in place.
     ///
     /// Nearest-rank definition: the smallest sample ≥ the requested
     /// fraction of the distribution, i.e. rank `⌈q·n⌉` (1-based). The
     /// earlier `floor((n-1)·q)` indexing under-reported tail quantiles
     /// — e.g. p99 of 10 samples picked the 9th, not the 10th.
-    fn latency_quantile(&self, q: f64) -> Duration {
-        let n = self.iter_latencies.len();
+    fn nearest_rank(mut v: Vec<Duration>, q: f64) -> Duration {
+        let n = v.len();
         if n == 0 {
             return Duration::ZERO;
         }
         let rank = (q * n as f64).ceil() as usize;
         let idx = rank.clamp(1, n) - 1;
-        let mut v = self.iter_latencies.clone();
         let (_, nth, _) = v.select_nth_unstable(idx);
         *nth
+    }
+
+    fn latency_quantile(&self, q: f64) -> Duration {
+        Self::nearest_rank(self.iter_latencies.clone(), q)
     }
 
     pub fn p50_latency(&self) -> Duration {
@@ -106,51 +157,194 @@ impl ServeStats {
     pub fn p99_latency(&self) -> Duration {
         self.latency_quantile(0.99)
     }
+
+    fn ttft_samples(&self) -> Vec<Duration> {
+        self.request_latency.values().filter_map(|l| l.ttft).collect()
+    }
+
+    fn completion_samples(&self) -> Vec<Duration> {
+        self.request_latency.values().filter_map(|l| l.completion).collect()
+    }
+
+    /// Time-to-first-token quantile across this window's requests
+    /// (admission → first [`TokenEvent`]), nearest-rank.
+    pub fn ttft_quantile(&self, q: f64) -> Duration {
+        Self::nearest_rank(self.ttft_samples(), q)
+    }
+
+    pub fn ttft_p50(&self) -> Duration {
+        self.ttft_quantile(0.50)
+    }
+
+    pub fn ttft_p99(&self) -> Duration {
+        self.ttft_quantile(0.99)
+    }
+
+    /// Completion-latency quantile across this window's requests
+    /// (admission → terminal event), nearest-rank.
+    pub fn completion_quantile(&self, q: f64) -> Duration {
+        Self::nearest_rank(self.completion_samples(), q)
+    }
+
+    pub fn completion_p50(&self) -> Duration {
+        self.completion_quantile(0.50)
+    }
+
+    pub fn completion_p99(&self) -> Duration {
+        self.completion_quantile(0.99)
+    }
 }
 
-/// The engine.
-pub struct ServeEngine {
-    pub manifest: Manifest,
-    pool: Arc<ExecPool>,
-    sessions: HashMap<usize, Session>,
-    pub batcher: Batcher,
-    residency: KvResidency,
-    kv_arena: KvArena,
-    weights: WeightArena,
+/// Named, validated engine configuration — the only way to build a
+/// [`ServeEngine`]. Config errors surface as
+/// [`EngineError::InvalidConfig`] *before* any resource (manifest,
+/// pool, threads, arenas) is touched.
+///
+/// ```no_run
+/// use mpk::megakernel::MegaConfig;
+/// use mpk::serving::ServeEngine;
+///
+/// let engine = ServeEngine::builder()
+///     .max_batch(8)
+///     .pool_threads(3)
+///     .seed(42)
+///     .mega(MegaConfig { workers: 6, schedulers: 2, ..Default::default() })
+///     .eos_token(2)
+///     .build()
+///     .expect("needs `make artifacts` and a PJRT backend");
+/// # let _ = engine;
+/// ```
+#[derive(Clone, Copy, Debug)]
+pub struct EngineBuilder {
+    max_batch: usize,
+    pool_threads: usize,
+    seed: u64,
+    mega: MegaConfig,
+    eos_token: Option<i32>,
+    compaction: bool,
 }
 
-impl ServeEngine {
-    /// Build an engine with specialized sessions (graph + arena +
-    /// persistent kernel + resident executor) for each manifest batch
-    /// size up to `max_batch`, all aliasing one max-batch KV arena and
-    /// one weight arena (weights synthesized exactly once, here).
-    /// `max_batch` must be one of the manifest's sizes.
-    pub fn create(max_batch: usize, pool_threads: usize, seed: u64, mega: MegaConfig) -> Result<Self, String> {
+impl Default for EngineBuilder {
+    fn default() -> Self {
+        EngineBuilder {
+            max_batch: 4,
+            pool_threads: 2,
+            seed: 42,
+            mega: MegaConfig::default(),
+            eos_token: None,
+            compaction: false,
+        }
+    }
+}
+
+impl EngineBuilder {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Batch ceiling; must be one of the manifest's specialized sizes.
+    pub fn max_batch(mut self, b: usize) -> Self {
+        self.max_batch = b;
+        self
+    }
+
+    /// PJRT executor threads shared by every session.
+    pub fn pool_threads(mut self, n: usize) -> Self {
+        self.pool_threads = n;
+        self
+    }
+
+    /// Weight-synthesis seed (greedy decoding is deterministic per seed).
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    /// Mega-kernel shape (workers / schedulers / watchdog timeout).
+    pub fn mega(mut self, mega: MegaConfig) -> Self {
+        self.mega = mega;
+        self
+    }
+
+    /// Optional end-of-sequence token: a request that decodes it stops
+    /// with [`FinishReason::Eos`] (the EOS token is included in its
+    /// output). Off by default.
+    pub fn eos_token(mut self, tok: i32) -> Self {
+        self.eos_token = Some(tok);
+        self
+    }
+
+    /// Opt-in anti-fragmentation compaction (off by default): when
+    /// retirements leave the occupied slot bound a whole power of two
+    /// above what one relocation would achieve, move exactly one
+    /// request (highest slot → lowest free slot) per step, paying a
+    /// bounded `KvArena::move_slot` that is counted in
+    /// `kv_rows_migrated`. Off, the engine never moves a KV row.
+    pub fn compaction(mut self, on: bool) -> Self {
+        self.compaction = on;
+        self
+    }
+
+    /// Validate the configuration, then build the engine: specialized
+    /// sessions (graph + arena + persistent kernel + resident executor)
+    /// for each manifest batch size up to `max_batch`, all aliasing one
+    /// max-batch KV arena and one weight arena (weights synthesized
+    /// exactly once, here).
+    pub fn build(self) -> Result<ServeEngine, EngineError> {
+        // config validation first: these fail without touching any
+        // resource (no manifest read, no threads, no arenas).
+        if self.max_batch == 0 {
+            return Err(EngineError::InvalidConfig("max_batch must be >= 1".into()));
+        }
+        if self.pool_threads == 0 {
+            return Err(EngineError::InvalidConfig("pool_threads must be >= 1".into()));
+        }
+        if self.mega.workers == 0 || self.mega.schedulers == 0 {
+            return Err(EngineError::InvalidConfig(format!(
+                "mega-kernel needs >= 1 worker and >= 1 scheduler (got {} / {})",
+                self.mega.workers, self.mega.schedulers
+            )));
+        }
         let manifest = Manifest::load(&Manifest::default_dir())?;
-        if !manifest.batch_sizes.contains(&max_batch) {
-            return Err(format!("max_batch {max_batch} not among specialized sizes {:?}", manifest.batch_sizes));
+        if !manifest.batch_sizes.contains(&self.max_batch) {
+            return Err(EngineError::InvalidConfig(format!(
+                "max_batch {} not among specialized sizes {:?}",
+                self.max_batch, manifest.batch_sizes
+            )));
+        }
+        if let Some(eos) = self.eos_token {
+            if eos < 0 || eos as usize >= manifest.model.vocab {
+                return Err(EngineError::InvalidConfig(format!(
+                    "eos_token {eos} outside vocab 0..{}",
+                    manifest.model.vocab
+                )));
+            }
         }
         let m = manifest.model;
-        let pool = Arc::new(ExecPool::new(manifest.clone(), pool_threads)?);
-        let kv_arena = KvArena::new(m.layers, max_batch, manifest.s_max, m.kv_dim());
+        let pool = Arc::new(ExecPool::new(manifest.clone(), self.pool_threads)?);
+        let kv_arena = KvArena::new(m.layers, self.max_batch, manifest.s_max, m.kv_dim());
         let specs: Vec<(usize, Arc<crate::tgraph::CompiledGraph>)> = manifest
             .batch_sizes
             .iter()
-            .filter(|&&b| b <= max_batch)
+            .filter(|&&b| b <= self.max_batch)
             .map(|&b| (b, Arc::new(compile_real(&manifest, b))))
             .collect();
         // one shared weight arena, initialized once: params are
         // batch-independent and name-seeded, so every specialization
         // aliases the same values instead of re-synthesizing them.
         let (_, max_compiled) =
-            specs.iter().find(|(b, _)| *b == max_batch).expect("max_batch spec compiled");
+            specs.iter().find(|(b, _)| *b == self.max_batch).expect("max_batch spec compiled");
         let weights = WeightArena::build(&max_compiled.graph);
-        weights.init(&max_compiled.graph, seed);
+        weights.init(&max_compiled.graph, self.seed);
         let mut sessions = HashMap::new();
         for (b, compiled) in specs {
             // hoist every per-iteration name lookup to creation time.
-            let id = |name: &str| -> Result<TensorId, String> {
-                Ok(compiled.graph.tensor_by_name(name).ok_or_else(|| format!("missing tensor {name}"))?.id)
+            let id = |name: &str| -> Result<TensorId, EngineError> {
+                Ok(compiled
+                    .graph
+                    .tensor_by_name(name)
+                    .ok_or_else(|| EngineError::Manifest(format!("missing tensor {name} in compiled graph")))?
+                    .id)
             };
             // alias this session's KV tensors into the shared KV arena
             // (a batch-b cache tensor [b, s_max, kv_dim] is the first b
@@ -164,13 +358,13 @@ impl ServeEngine {
             let store = Arc::new(TensorStore::new_with_aliases(&compiled.graph, aliases));
             let token_ids = id("token_ids")?;
             let logits = id("lm_head")?;
-            let kernel = PersistentMegaKernel::new(compiled.clone(), mega);
+            let kernel = PersistentMegaKernel::new(compiled.clone(), self.mega);
             let exec = OwningTileExecutor::new(compiled, store.clone(), pool.clone(), b);
             sessions.insert(b, Session { store, kernel, exec, token_ids, logits });
         }
         // one KV block = 8 tokens; pool sized for max_batch full seqs.
-        let blocks = max_batch * manifest.s_max / 8;
-        let batcher = Batcher::new(max_batch, manifest.s_max, KvAllocator::new(blocks, 8));
+        let blocks = self.max_batch * manifest.s_max / 8;
+        let batcher = Batcher::new(self.max_batch, manifest.s_max, KvAllocator::new(blocks, 8));
         Ok(ServeEngine {
             manifest,
             pool,
@@ -179,15 +373,122 @@ impl ServeEngine {
             residency: KvResidency::default(),
             kv_arena,
             weights,
+            eos_token: self.eos_token,
+            compaction: self.compaction,
+            stats: ServeStats::default(),
+            started: None,
+            timing: HashMap::new(),
+            pending_events: Vec::new(),
+            ids_scratch: Vec::new(),
+            lens_scratch: Vec::new(),
         })
     }
+}
 
-    /// Queue a request; a request whose worst-case length exceeds the
-    /// engine's `max_seq`, or whose id duplicates one this engine has
-    /// seen, is rejected (client input must not abort a serving
-    /// process — and residency/outputs are keyed by id).
-    pub fn submit(&mut self, r: Request) -> Result<(), String> {
+/// The engine.
+pub struct ServeEngine {
+    pub manifest: Manifest,
+    pool: Arc<ExecPool>,
+    sessions: HashMap<usize, Session>,
+    pub batcher: Batcher,
+    residency: KvResidency,
+    kv_arena: KvArena,
+    weights: WeightArena,
+    eos_token: Option<i32>,
+    compaction: bool,
+    /// Accumulating stats window (see [`ServeEngine::take_stats`]).
+    stats: ServeStats,
+    /// Start of the current stats window (first `step()` after a reset).
+    started: Option<Instant>,
+    /// In-flight clocks, admission → terminal event.
+    timing: HashMap<u64, RequestClock>,
+    /// Terminal notices queued between steps (cancellations); drained
+    /// into the next [`StepOutcome`].
+    pending_events: Vec<TokenEvent>,
+    /// Per-iteration staging scratch, reused across steps.
+    ids_scratch: Vec<i32>,
+    lens_scratch: Vec<usize>,
+}
+
+impl ServeEngine {
+    /// Start configuring an engine. See [`EngineBuilder`].
+    pub fn builder() -> EngineBuilder {
+        EngineBuilder::new()
+    }
+
+    /// Queue a request. Legal at any point in the engine's life — a
+    /// request submitted between steps admits into a stable slot at the
+    /// next [`ServeEngine::step`] (online admission). Typed rejections
+    /// ([`EngineError::RequestTooLong`] / [`EngineError::KvPoolExceeded`]
+    /// / [`EngineError::DuplicateId`]) leave the engine serving: client
+    /// input must never abort a serving process.
+    pub fn submit(&mut self, r: Request) -> Result<(), EngineError> {
         self.batcher.submit(r)
+    }
+
+    /// Cancel a request *now*: waiting requests leave the queue, active
+    /// ones retire on the spot — slot and KV blocks are free for the
+    /// very next admission. The terminal
+    /// [`FinishReason::Cancelled`] event (no token) is delivered by the
+    /// next [`ServeEngine::step`]. Whatever the request generated
+    /// before cancellation stays available in its output.
+    pub fn cancel(&mut self, id: u64) -> Result<(), EngineError> {
+        self.batcher.cancel(id)?;
+        self.residency.evict(id);
+        Self::close_clock(&mut self.timing, &mut self.stats.request_latency, id, Instant::now());
+        self.pending_events.push(TokenEvent {
+            request: id,
+            token: None,
+            finish: Some(FinishReason::Cancelled),
+        });
+        Ok(())
+    }
+
+    /// Close a request's latency clock into the stats window — the one
+    /// place a [`RequestLatency`] record is written. With a running
+    /// clock (the request was admitted), record admission → `now`. With
+    /// none, either the record was already closed at the terminal event
+    /// (keep it) or the request terminated straight out of the waiting
+    /// queue (record an empty entry, so every terminated request is
+    /// accounted for). Takes the two maps rather than `&mut self` so
+    /// the harvest loop can call it while iterating the batcher.
+    fn close_clock(
+        timing: &mut HashMap<u64, RequestClock>,
+        latency: &mut HashMap<u64, RequestLatency>,
+        id: u64,
+        now: Instant,
+    ) {
+        match timing.remove(&id) {
+            Some(clock) => {
+                latency.insert(
+                    id,
+                    RequestLatency {
+                        ttft: clock.ttft,
+                        completion: Some(now.duration_since(clock.admitted)),
+                    },
+                );
+            }
+            None => {
+                latency.entry(id).or_default();
+            }
+        }
+    }
+
+    /// True while the engine holds work or undelivered terminal events
+    /// — the natural `step()` loop condition.
+    pub fn has_work(&self) -> bool {
+        self.batcher.has_work() || !self.pending_events.is_empty()
+    }
+
+    /// Drain the retired-request list. Finished requests (prompt,
+    /// generated tokens, finish reason) accumulate until drained so the
+    /// batch-mode [`ServeEngine::serve`] can report cumulative outputs
+    /// — a **long-lived streaming caller must drain periodically** or
+    /// retired requests pile up for the life of the engine. (Request
+    /// *ids* stay reserved either way: they key slots, residency, and
+    /// outputs, so reuse is rejected even after a drain.)
+    pub fn take_finished(&mut self) -> Vec<Request> {
+        std::mem::take(&mut self.batcher.finished)
     }
 
     /// The engine's PJRT pool (shared by every session's executor).
@@ -234,28 +535,41 @@ impl ServeEngine {
         })
     }
 
+    /// The accumulating stats window (read-only; see
+    /// [`ServeEngine::take_stats`] to close a window).
+    pub fn stats(&self) -> &ServeStats {
+        &self.stats
+    }
+
+    /// Close the current stats window: return everything accumulated
+    /// since the last reset and start a fresh window. Streaming callers
+    /// snapshot between bursts; [`ServeEngine::serve`] reports exactly
+    /// one window per call. In-flight request clocks survive the reset
+    /// (a request admitted in one window completes its latency record
+    /// in the window that retires it).
+    pub fn take_stats(&mut self) -> ServeStats {
+        self.started = None;
+        std::mem::take(&mut self.stats)
+    }
+
     /// Record where each active request's KV rows live. With stable
     /// slots a request's arena home *is* its batcher slot for its whole
-    /// lifetime, so this only ever inserts on admission. A mismatch
-    /// means a batcher change reintroduced slot remaps — an internal
-    /// invariant violation, not something to "repair": a set of
-    /// conflicting moves applied in arbitrary order could overwrite
-    /// live rows (the old compaction path needed an ascending-walk
-    /// ordering argument for exactly this), so the engine refuses and
-    /// errors out instead. Always `Ok(0)` today; returns the row count
-    /// so `kv_rows_migrated` keeps its unit if a deliberate relocation
-    /// policy (e.g. anti-fragmentation compaction) is ever added.
-    fn reconcile_residency(&mut self) -> Result<usize, String> {
+    /// lifetime — plus at most one deliberate compaction move, which
+    /// updates residency in lockstep before this check runs. A mismatch
+    /// therefore means a batcher change reintroduced slot remaps — an
+    /// internal invariant violation, not something to "repair": a set
+    /// of conflicting moves applied in arbitrary order could overwrite
+    /// live rows, so the engine refuses with a typed
+    /// [`EngineError::SlotRemap`]. Returns the row count so
+    /// `kv_rows_migrated` keeps its unit (always `Ok(0)` — deliberate
+    /// relocations are counted where they happen).
+    fn reconcile_residency(&mut self) -> Result<usize, EngineError> {
         for r in &self.batcher.active {
             let slot = r.slot.expect("active request without slot");
             match self.residency.home(r.id) {
                 Some(cur) if cur == slot => {}
                 Some(cur) => {
-                    return Err(format!(
-                        "request {} moved slot {cur} -> {slot} despite stable-slot batching \
-                         (batcher invariant violation; refusing to relocate live KV rows)",
-                        r.id
-                    ));
+                    return Err(EngineError::SlotRemap { id: r.id, from: cur, to: slot });
                 }
                 None => self.residency.set(r.id, slot),
             }
@@ -263,87 +577,210 @@ impl ServeEngine {
         Ok(0)
     }
 
-    /// Drive everything to completion; returns per-request outputs and
-    /// stats. Deterministic: greedy decoding, seeded weights.
-    pub fn serve(&mut self) -> Result<(HashMap<u64, Vec<i32>>, ServeStats), String> {
-        let mut stats = ServeStats::default();
-        let t0 = Instant::now();
+    /// The opt-in anti-fragmentation pass: at most one relocation per
+    /// step, and only when it drops the specialized graph a whole power
+    /// of two. Applies the batcher's probe result, moves the KV rows
+    /// through the dormant relocation primitive, and updates residency
+    /// deliberately — returning the moved-row count so the caller adds
+    /// it to `kv_rows_migrated` (honest accounting, never silent).
+    fn maybe_compact(&mut self) -> usize {
+        let Some((id, src, dst)) = self.batcher.compaction_candidate() else {
+            return 0;
+        };
+        let rows = self
+            .batcher
+            .active
+            .iter()
+            .find(|r| r.id == id)
+            .expect("compaction candidate is active")
+            .cache_len;
+        let vacated = self.batcher.relocate(id, dst);
+        debug_assert_eq!(vacated, src, "probe and apply disagree");
+        let moved = self.kv_arena.move_slot(src, dst, rows);
+        self.residency.set(id, dst);
+        moved
+    }
+
+    /// One decode iteration — the re-entrant core the whole serving
+    /// surface is built on: retire finished requests and admit waiting
+    /// ones into stable slots, optionally compact, pick the
+    /// specialization covering the highest occupied slot, stage each
+    /// request's token at its slot, re-arm the resident kernel, and
+    /// harvest one token per past-prefill request.
+    ///
+    /// Returns the iteration's [`StepOutcome`]: per-request
+    /// [`TokenEvent`]s (terminal ones carry a [`FinishReason`]), plus
+    /// any `Cancelled` notices queued since the previous step. An idle
+    /// step (nothing admitted) returns `ran == 0` and runs no kernel.
+    ///
+    /// A request whose terminal event was emitted this step still
+    /// occupies its slot until the next step's retire phase frees it —
+    /// call `step()` again (or `serve()` to completion) to reclaim it.
+    pub fn step(&mut self) -> Result<StepOutcome, EngineError> {
+        let t_step = Instant::now();
+        if self.started.is_none() {
+            self.started = Some(t_step);
+        }
+        let mut events: Vec<TokenEvent> = Vec::new();
         let vocab = self.manifest.model.vocab;
 
-        while self.batcher.has_work() {
-            for id in self.batcher.step_admission() {
-                self.residency.evict(id);
-            }
-            // graph_batch is 0 exactly when no slot is occupied — and
-            // then only when nothing is waiting either: submit rejects
-            // any request whose worst case exceeds the whole KV pool,
-            // so a lone waiting request always admits into an empty
-            // batcher. The break is a clean idle exit, not a drop.
-            let gb = self.batcher.graph_batch();
-            if gb == 0 {
-                debug_assert_eq!(self.batcher.pending(), 0, "accepted request stuck unadmittable");
-                break;
-            }
-            if !self.sessions.contains_key(&gb) {
-                return Err(format!("no session for batch {gb}"));
-            }
-            let active = self.batcher.active.len();
+        // 1. retire finished, admit waiting (the paper's start-event
+        // task). A retired request's latency record was written when
+        // its terminal event was emitted (harvest or cancel); the
+        // removal here is defensive, so the record stays right even if
+        // a request ever retired without one.
+        for id in self.batcher.step_admission() {
+            self.residency.evict(id);
+            Self::close_clock(&mut self.timing, &mut self.stats.request_latency, id, t_step);
+        }
+        // 2. opt-in anti-fragmentation: one deliberate, counted move.
+        if self.compaction {
+            let moved = self.maybe_compact();
+            self.stats.kv_rows_migrated += moved;
+        }
+        // 3. admission clocks for newly active requests.
+        for r in &self.batcher.active {
+            self.timing
+                .entry(r.id)
+                .or_insert(RequestClock { admitted: t_step, ttft: None });
+        }
+        // graph_batch is 0 exactly when no slot is occupied — and then
+        // only when nothing is waiting either: submit rejects any
+        // request whose worst case exceeds the whole KV pool, so a lone
+        // waiting request always admits into an empty batcher. The
+        // idle return is a clean no-op, not a drop.
+        let gb = self.batcher.graph_batch();
+        if gb == 0 {
+            debug_assert_eq!(self.batcher.pending(), 0, "accepted request stuck unadmittable");
+            self.stats.busy += t_step.elapsed();
+            self.stats.total = self.started.expect("window started above").elapsed();
+            let events = self.drain_pending(events);
+            return Ok(StepOutcome { events, ran: 0 });
+        }
+        if !self.sessions.contains_key(&gb) {
+            return Err(EngineError::NoSession { batch: gb });
+        }
+        let active = self.batcher.active.len();
 
-            // KV stays resident at each request's stable slot of the
-            // shared arena — structurally zero rows moved.
-            stats.kv_rows_migrated += self.reconcile_residency()?;
+        // KV stays resident at each request's stable slot of the shared
+        // arena — zero rows moved outside the deliberate pass above.
+        let migrated = self.reconcile_residency()?;
+        self.stats.kv_rows_migrated += migrated;
 
-            // stage inputs by slot index: this iteration's token per
-            // occupied row, row cache lengths. Vacant slots (stable
-            // slots fragment after retirements) decode token 0 into
-            // dead arena rows that the slot's next occupant overwrites
-            // from position 0 — their logits are never read.
-            let mut ids = vec![0i32; gb];
-            let mut lens = vec![0usize; gb];
-            for r in &self.batcher.active {
-                let slot = r.slot.expect("active request without slot");
-                ids[slot] = r.next_input();
-                lens[slot] = r.cache_len;
-            }
-            let session = self.sessions.get_mut(&gb).unwrap();
-            real::set_ids_at(&session.store, session.token_ids, &ids);
+        // 4. stage inputs by slot index into reused scratch: this
+        // iteration's token per occupied row, row cache lengths. Vacant
+        // slots (stable slots fragment after retirements) decode token
+        // 0 into dead arena rows that the slot's next occupant
+        // overwrites from position 0 — their logits are never read.
+        self.ids_scratch.clear();
+        self.ids_scratch.resize(gb, 0);
+        self.lens_scratch.clear();
+        self.lens_scratch.resize(gb, 0);
+        for r in &self.batcher.active {
+            let slot = r.slot.expect("active request without slot");
+            self.ids_scratch[slot] = r.next_input();
+            self.lens_scratch[slot] = r.cache_len;
+        }
+        let session = self.sessions.get_mut(&gb).expect("session presence checked above");
+        real::set_ids_at(&session.store, session.token_ids, &self.ids_scratch);
 
-            // re-arm the resident mega-kernel through the session's
-            // long-lived executor: no thread spawn/join, no kernel or
-            // executor construction, no name lookups on this path.
-            session.exec.set_row_lens(&lens);
-            let it0 = Instant::now();
-            session.kernel.run(&session.exec)?;
-            if let Some(e) = session.exec.take_error() {
-                return Err(e);
-            }
-            let lat = it0.elapsed();
-            stats.iterations += 1;
-            stats.iter_latencies.push(lat);
-            stats.batch_sizes.push(active);
+        // 5. re-arm the resident mega-kernel through the session's
+        // long-lived executor: no thread spawn/join, no kernel or
+        // executor construction, no name lookups on this path.
+        session.exec.set_row_lens(&self.lens_scratch);
+        let it0 = Instant::now();
+        session.kernel.run(&session.exec)?;
+        if let Some(e) = session.exec.take_error() {
+            return Err(e.into());
+        }
+        let lat = it0.elapsed();
+        self.stats.iterations += 1;
+        self.stats.iter_latencies.push(lat);
+        self.stats.batch_sizes.push(active);
 
-            // harvest: each request's logits row (at its slot) → next
-            // token, through a borrowed arena view (no copy). KV needs
-            // no read-back — KvAppend already wrote this step's row in
-            // the resident arena.
-            let logits = session.store.view(session.logits);
-            for r in self.batcher.active.iter_mut() {
-                let slot = r.slot.expect("active request without slot");
-                r.cache_len += 1;
-                let tok = real::argmax(&logits[slot * vocab..(slot + 1) * vocab]) as i32;
+        // 6. harvest: each request's logits row (at its slot) → next
+        // token, through a borrowed arena view (no copy). KV needs no
+        // read-back — KvAppend already wrote this step's row in the
+        // resident arena. Every emitted token becomes an event; EOS and
+        // exhausted budgets become terminal events (EOS wins a tie).
+        let now = Instant::now();
+        let logits = session.store.view(session.logits);
+        for r in self.batcher.active.iter_mut() {
+            let slot = r.slot.expect("active request without slot");
+            r.cache_len += 1;
+            let tok = real::argmax(&logits[slot * vocab..(slot + 1) * vocab]) as i32;
+            let emitted = if r.in_prefill() {
+                r.prompt_pos += 1;
                 if r.in_prefill() {
-                    r.prompt_pos += 1;
-                    if !r.in_prefill() {
-                        r.generated.push(tok);
-                        stats.tokens_generated += 1;
-                    }
+                    false
                 } else {
                     r.generated.push(tok);
-                    stats.tokens_generated += 1;
+                    true
                 }
+            } else {
+                r.generated.push(tok);
+                true
+            };
+            if !emitted {
+                continue;
+            }
+            self.stats.tokens_generated += 1;
+            let clock = self.timing.get_mut(&r.id).expect("active request has a clock");
+            if clock.ttft.is_none() {
+                clock.ttft = Some(now.duration_since(clock.admitted));
+            }
+            let finish = if self.eos_token == Some(tok) {
+                Some(FinishReason::Eos)
+            } else if r.generated.len() >= r.max_new_tokens {
+                Some(FinishReason::MaxTokens)
+            } else {
+                None
+            };
+            if let Some(reason) = finish {
+                r.finish = Some(reason);
+                Self::close_clock(&mut self.timing, &mut self.stats.request_latency, r.id, now);
+            }
+            events.push(TokenEvent { request: r.id, token: Some(tok), finish });
+        }
+        self.stats.busy += t_step.elapsed();
+        self.stats.total = self.started.expect("window started above").elapsed();
+        let events = self.drain_pending(events);
+        Ok(StepOutcome { events, ran: active })
+    }
+
+    /// Prepend the terminal notices queued since the previous step
+    /// (cancellations) to this step's fresh events. Called only on the
+    /// success paths of [`ServeEngine::step`]: if a step fails, queued
+    /// notices stay queued and are delivered by the next successful
+    /// step instead of being dropped with the error.
+    fn drain_pending(&mut self, fresh: Vec<TokenEvent>) -> Vec<TokenEvent> {
+        if self.pending_events.is_empty() {
+            return fresh;
+        }
+        let mut all = std::mem::take(&mut self.pending_events);
+        all.extend(fresh);
+        all
+    }
+
+    /// Batch-mode compat: drive [`ServeEngine::step`] until idle and
+    /// return per-request outputs plus this call's stats window.
+    /// Deterministic — greedy decoding, seeded weights — and (with EOS
+    /// and compaction off) output-identical to the pre-step-API
+    /// batch-to-completion loop. Outputs cover every request finished
+    /// since the last [`ServeEngine::take_finished`] drain (the
+    /// finished list is cumulative until drained).
+    pub fn serve(&mut self) -> Result<(HashMap<u64, Vec<i32>>, ServeStats), EngineError> {
+        let _ = self.take_stats(); // fresh window: serve() reports this call only
+        while self.has_work() {
+            let outcome = self.step()?;
+            if outcome.is_idle() && self.batcher.has_work() {
+                // unadmittable waiting work — unreachable via the
+                // submit invariant (debug-asserted in step); exit
+                // cleanly rather than livelock.
+                break;
             }
         }
-        stats.total = t0.elapsed();
+        let stats = self.take_stats();
         let outputs = self
             .batcher
             .finished
@@ -379,13 +816,68 @@ mod tests {
         MegaConfig { workers: 4, schedulers: 1, ..Default::default() }
     }
 
+    fn engine(max_batch: usize, seed: u64) -> ServeEngine {
+        ServeEngine::builder()
+            .max_batch(max_batch)
+            .pool_threads(2)
+            .seed(seed)
+            .mega(mega())
+            .build()
+            .unwrap()
+    }
+
+    /// Drive `step()` to idle, collecting every event.
+    fn drain(e: &mut ServeEngine) -> Vec<TokenEvent> {
+        let mut events = Vec::new();
+        let mut guard = 0;
+        while e.has_work() {
+            guard += 1;
+            assert!(guard < 10_000, "step loop livelock");
+            events.extend(e.step().unwrap().events);
+        }
+        events
+    }
+
+    #[test]
+    fn builder_validation_is_typed_and_resource_free() {
+        // config errors surface before any manifest/pool work — these
+        // run (and must pass) without artifacts or a backend.
+        let err = ServeEngine::builder().pool_threads(0).build().unwrap_err();
+        assert!(matches!(err, EngineError::InvalidConfig(_)), "got: {err}");
+        let err = ServeEngine::builder().max_batch(0).build().unwrap_err();
+        assert!(matches!(err, EngineError::InvalidConfig(_)), "got: {err}");
+        let err = ServeEngine::builder()
+            .mega(MegaConfig { workers: 0, ..Default::default() })
+            .build()
+            .unwrap_err();
+        assert!(matches!(err, EngineError::InvalidConfig(_)), "got: {err}");
+    }
+
+    #[test]
+    fn builder_rejects_unspecialized_batch_and_bad_eos() {
+        if !have_runtime() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let err = ServeEngine::builder().max_batch(3).mega(mega()).build().unwrap_err();
+        assert!(
+            matches!(&err, EngineError::InvalidConfig(m) if m.contains("specialized sizes")),
+            "got: {err}"
+        );
+        let err = ServeEngine::builder().max_batch(2).mega(mega()).eos_token(-1).build().unwrap_err();
+        assert!(
+            matches!(&err, EngineError::InvalidConfig(m) if m.contains("vocab")),
+            "got: {err}"
+        );
+    }
+
     #[test]
     fn serves_batch_to_completion() {
         if !have_runtime() {
             eprintln!("skipping: artifacts not built");
             return;
         }
-        let mut e = ServeEngine::create(4, 2, 42, mega()).unwrap();
+        let mut e = engine(4, 42);
         for i in 0..3u64 {
             e.submit(Request::new(i, vec![(i as i32) + 1, 7], 4)).unwrap();
         }
@@ -401,6 +893,216 @@ mod tests {
         assert!(stats.iterations >= 5, "prompt 2 + gen 4 - 1 overlap");
         // slots are stable: no KV rows ever move in the arena.
         assert_eq!(stats.kv_rows_migrated, 0, "steady batch migrated KV rows");
+        // the busy/total split: busy time is real and bounded by wall.
+        assert!(stats.busy > Duration::ZERO && stats.busy <= stats.total);
+        // per-request latency recorded for the whole wave.
+        assert_eq!(stats.request_latency.len(), 3);
+        for (id, lat) in &stats.request_latency {
+            let ttft = lat.ttft.unwrap_or_else(|| panic!("req {id} missing ttft"));
+            let done = lat.completion.unwrap_or_else(|| panic!("req {id} missing completion"));
+            assert!(ttft <= done, "req {id}: ttft {ttft:?} > completion {done:?}");
+        }
+        assert!(stats.ttft_p50() <= stats.completion_p99());
+    }
+
+    #[test]
+    fn step_streaming_matches_serve_and_supports_midflight_submit() {
+        if !have_runtime() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        // streaming engine: request 1 arrives mid-flight, after request
+        // 0 has already decoded a couple of steps.
+        let mut a = engine(2, 42);
+        a.submit(Request::new(0, vec![3, 11], 4)).unwrap();
+        let mut events = Vec::new();
+        for _ in 0..3 {
+            events.extend(a.step().unwrap().events);
+        }
+        a.submit(Request::new(1, vec![9], 3)).unwrap();
+        events.extend(drain(&mut a));
+
+        // batch engine: everything submitted up front.
+        let mut b = engine(2, 42);
+        b.submit(Request::new(0, vec![3, 11], 4)).unwrap();
+        b.submit(Request::new(1, vec![9], 3)).unwrap();
+        let (out, _) = b.serve().unwrap();
+
+        // per-request event streams equal the batch outputs (row
+        // independence: a request's tokens do not depend on when its
+        // neighbours were admitted).
+        for id in [0u64, 1] {
+            let stream: Vec<i32> =
+                events.iter().filter(|ev| ev.request == id).map(|ev| ev.token.unwrap()).collect();
+            assert_eq!(stream, out[&id], "req {id} stream != batch output");
+            let terminal: Vec<_> =
+                events.iter().filter(|ev| ev.request == id && ev.finish.is_some()).collect();
+            assert_eq!(terminal.len(), 1, "req {id} needs exactly one terminal event");
+            assert_eq!(terminal[0].finish, Some(FinishReason::MaxTokens));
+            assert_eq!(terminal[0].token, Some(*out[&id].last().unwrap()));
+        }
+        // the streamed path is as zero-copy as the batch path.
+        assert_eq!(a.store_counters(), (0, 0));
+        assert_eq!(a.output_allocs(), 0);
+        assert_eq!(a.stats().kv_rows_migrated, 0);
+        // idle steps on a drained engine are clean no-ops.
+        let idle = a.step().unwrap();
+        assert!(idle.is_idle() && idle.events.is_empty());
+    }
+
+    #[test]
+    fn eos_token_stops_generation_early() {
+        if !have_runtime() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        // discover what this prompt decodes first under this seed, then
+        // build an engine that treats that token as EOS.
+        let mut probe = engine(1, 42);
+        probe.submit(Request::new(0, vec![7], 3)).unwrap();
+        let (out, _) = probe.serve().unwrap();
+        let first = out[&0][0];
+
+        let mut e = ServeEngine::builder()
+            .max_batch(1)
+            .pool_threads(2)
+            .seed(42)
+            .mega(mega())
+            .eos_token(first)
+            .build()
+            .unwrap();
+        e.submit(Request::new(0, vec![7], 5)).unwrap();
+        let events = drain(&mut e);
+        assert_eq!(
+            events,
+            vec![TokenEvent { request: 0, token: Some(first), finish: Some(FinishReason::Eos) }],
+            "EOS must stop the stream at one token"
+        );
+        let done = &e.batcher.finished[0];
+        assert_eq!(done.generated, vec![first], "EOS token is included in the output");
+        assert_eq!(done.finish, Some(FinishReason::Eos));
+    }
+
+    #[test]
+    fn cancel_frees_kv_and_slot_and_emits_terminal_event() {
+        if !have_runtime() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let mut e = engine(2, 42);
+        e.submit(Request::new(0, vec![5, 6], 6)).unwrap();
+        e.submit(Request::new(1, vec![9], 6)).unwrap();
+        let mut events = Vec::new();
+        for _ in 0..3 {
+            events.extend(e.step().unwrap().events);
+        }
+        assert!(e.batcher.kv.held_by(0) > 0, "active request holds KV blocks");
+        let free_before = e.batcher.kv.free_blocks();
+        e.cancel(0).unwrap();
+        // KV blocks and residency are released immediately, not at the
+        // next step.
+        assert_eq!(e.batcher.kv.held_by(0), 0);
+        assert!(e.batcher.kv.free_blocks() > free_before);
+        // the terminal event rides the next outcome, tokenless.
+        let out = e.step().unwrap();
+        assert!(
+            out.events.contains(&TokenEvent {
+                request: 0,
+                token: None,
+                finish: Some(FinishReason::Cancelled)
+            }),
+            "missing cancellation notice in {:?}",
+            out.events
+        );
+        events.extend(out.events);
+        // partial output survives; the survivor decodes to completion.
+        events.extend(drain(&mut e));
+        let survivor: Vec<i32> =
+            events.iter().filter(|ev| ev.request == 1).filter_map(|ev| ev.token).collect();
+        assert_eq!(survivor.len(), 6);
+        let cancelled = e.batcher.finished.iter().find(|r| r.id == 0).unwrap();
+        assert_eq!(cancelled.finish, Some(FinishReason::Cancelled));
+        assert!(cancelled.generated.len() < 6, "cancelled request must stop early");
+        // typed refusals for re-cancel and unknown ids.
+        assert!(matches!(e.cancel(0).unwrap_err(), EngineError::AlreadyFinished { id: 0 }));
+        assert!(matches!(e.cancel(77).unwrap_err(), EngineError::UnknownRequest { id: 77 }));
+        // a freed slot admits new work mid-flight.
+        e.submit(Request::new(2, vec![4], 2)).unwrap();
+        let events = drain(&mut e);
+        assert_eq!(events.iter().filter(|ev| ev.request == 2).filter_map(|ev| ev.token).count(), 2);
+        // cancellation + churn still never copies or migrates.
+        assert_eq!(e.store_counters(), (0, 0));
+        assert_eq!(e.output_allocs(), 0);
+        assert_eq!(e.stats().kv_rows_migrated, 0);
+        // the cancelled request's latency record closed at cancel time.
+        let lat = e.stats().request_latency[&0];
+        assert!(lat.completion.is_some());
+
+        // cancel a request still in the waiting queue: it terminates
+        // with an event and an (empty) latency record — never admitted,
+        // so there is no admission-based time to measure, but the
+        // request is still accounted for.
+        e.submit(Request::new(10, vec![5], 3)).unwrap();
+        e.submit(Request::new(11, vec![6], 3)).unwrap();
+        e.submit(Request::new(12, vec![7], 3)).unwrap(); // waits: 2 slots
+        e.cancel(12).unwrap();
+        let events = drain(&mut e);
+        assert!(events.contains(&TokenEvent {
+            request: 12,
+            token: None,
+            finish: Some(FinishReason::Cancelled)
+        }));
+        assert!(events.iter().all(|ev| ev.request != 12 || ev.token.is_none()));
+        assert_eq!(e.stats().request_latency[&12], RequestLatency::default());
+
+        // streaming callers reclaim retired requests via the drain API;
+        // ids stay burned.
+        let done = e.take_finished();
+        assert_eq!(done.len(), 6, "0..2 plus 10..12 retired on this engine");
+        assert!(e.batcher.finished.is_empty());
+        assert!(matches!(e.submit(Request::new(0, vec![1], 1)).unwrap_err(), EngineError::DuplicateId { id: 0 }));
+    }
+
+    #[test]
+    fn compaction_relocates_once_counted_and_output_identical() {
+        if !have_runtime() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let build = |compaction: bool| {
+            ServeEngine::builder()
+                .max_batch(8)
+                .pool_threads(2)
+                .seed(42)
+                .mega(mega())
+                .compaction(compaction)
+                .build()
+                .unwrap()
+        };
+        let submit_wave = |e: &mut ServeEngine| {
+            // slots 0..4; the four short requests retire together and
+            // strand the long one at slot 4 — bound 5 forces the
+            // batch-8 graph until compaction moves it down.
+            for i in 0..5u64 {
+                e.submit(Request::new(i, vec![2 + i as i32], if i == 4 { 6 } else { 1 })).unwrap();
+            }
+        };
+        let mut on = build(true);
+        submit_wave(&mut on);
+        let (out_on, stats_on) = on.serve().unwrap();
+        assert!(stats_on.kv_rows_migrated > 0, "compaction never fired");
+        assert!(
+            stats_on.batch_sizes.iter().any(|&b| b == 1),
+            "post-compaction iterations should run small"
+        );
+
+        let mut off = build(false);
+        submit_wave(&mut off);
+        let (out_off, stats_off) = off.serve().unwrap();
+        assert_eq!(stats_off.kv_rows_migrated, 0, "flag off must never move a row");
+        // relocation must not change what anyone decodes.
+        assert_eq!(out_on, out_off, "compaction changed outputs");
+        assert_eq!(out_on[&4].len(), 6);
     }
 
     #[test]
@@ -412,7 +1114,7 @@ mod tests {
         // a uniform wave (same prompt + generation lengths) is admitted
         // together and retired together: the whole run is the steady
         // state the zero-copy invariant promises.
-        let mut e = ServeEngine::create(4, 2, 42, mega()).unwrap();
+        let mut e = engine(4, 42);
         for i in 0..4u64 {
             e.submit(Request::new(i, vec![(i as i32) + 1, 9], 5)).unwrap();
         }
@@ -438,7 +1140,7 @@ mod tests {
         // warm-up (per-worker scratch growth, lazy artifact compiles);
         // from then on every counter that could betray a hidden
         // allocation, copy, or row move must stay frozen.
-        let mut e = ServeEngine::create(4, 2, 42, mega()).unwrap();
+        let mut e = engine(4, 42);
         for i in 0..3u64 {
             e.submit(Request::new(i, vec![(i as i32) + 1; 1 + i as usize], 2 + i as usize)).unwrap();
         }
@@ -478,7 +1180,7 @@ mod tests {
         // retirement remapped the survivors' slots and moved their KV
         // rows; with stable slots the counter must stay at zero across
         // retirements — not just across batch-size transitions.
-        let mut e = ServeEngine::create(4, 2, 42, mega()).unwrap();
+        let mut e = engine(4, 42);
         for i in 0..4u64 {
             e.submit(Request::new(i, vec![(i as i32) + 1, 3], 2 + i as usize)).unwrap();
         }
@@ -502,7 +1204,7 @@ mod tests {
         }
         // four specializations (1, 2, 4, 8) — still one weight init and
         // one weight allocation.
-        let e = ServeEngine::create(8, 2, 42, mega()).unwrap();
+        let e = engine(8, 42);
         assert_eq!(e.sessions.len(), 4);
         assert_eq!(e.weight_init_runs(), 1, "weights synthesized more than once");
         // every session's embed table is the *same memory*.
@@ -531,10 +1233,10 @@ mod tests {
             eprintln!("skipping: artifacts not built");
             return;
         }
-        let mut e = ServeEngine::create(2, 2, 5, mega()).unwrap();
+        let mut e = engine(2, 5);
         let s_max = e.manifest.s_max;
         let err = e.submit(Request::new(0, vec![1; s_max], 1)).unwrap_err();
-        assert!(err.contains("exceeds max_seq"), "got: {err}");
+        assert!(matches!(err, EngineError::RequestTooLong { id: 0, .. }), "got: {err}");
         // the engine keeps serving legal requests afterwards.
         e.submit(Request::new(1, vec![5], 2)).unwrap();
         let (out, _) = e.serve().unwrap();
@@ -551,7 +1253,7 @@ mod tests {
         // second wave admitted after the first fully retires: the batch
         // size transitions 2 → 0 → 1 but no surviving request ever
         // changes slot, so the shared arena moves nothing.
-        let mut e = ServeEngine::create(2, 2, 13, mega()).unwrap();
+        let mut e = engine(2, 13);
         e.submit(Request::new(0, vec![3, 4], 3)).unwrap();
         e.submit(Request::new(1, vec![5, 6], 3)).unwrap();
         e.submit(Request::new(2, vec![7], 2)).unwrap();
@@ -568,7 +1270,7 @@ mod tests {
             return;
         }
         let run = || {
-            let mut e = ServeEngine::create(2, 2, 9, mega()).unwrap();
+            let mut e = engine(2, 9);
             e.submit(Request::new(0, vec![5, 6, 7], 5)).unwrap();
             e.serve().unwrap().0
         };
@@ -582,7 +1284,7 @@ mod tests {
             return;
         }
         // more requests than slots: later ones admitted as earlier retire.
-        let mut e = ServeEngine::create(2, 2, 11, mega()).unwrap();
+        let mut e = engine(2, 11);
         for i in 0..5u64 {
             e.submit(Request::new(i, vec![1 + i as i32], 2 + (i as usize % 2))).unwrap();
         }
@@ -604,7 +1306,7 @@ mod tests {
             return;
         }
         // engine output for one request == direct RealSession loop.
-        let mut e = ServeEngine::create(1, 2, 42, mega()).unwrap();
+        let mut e = engine(1, 42);
         e.submit(Request::new(0, vec![7], 3)).unwrap();
         let (out, _) = e.serve().unwrap();
 
@@ -646,5 +1348,43 @@ mod tests {
         s.iter_latencies = vec![Duration::from_millis(3)];
         assert_eq!(s.p50_latency(), Duration::from_millis(3));
         assert_eq!(s.p99_latency(), Duration::from_millis(3));
+    }
+
+    #[test]
+    fn stats_request_latency_quantiles() {
+        let mut s = ServeStats::default();
+        assert_eq!(s.ttft_p99(), Duration::ZERO);
+        assert_eq!(s.completion_p50(), Duration::ZERO);
+        for i in 1..=10u64 {
+            s.request_latency.insert(
+                i,
+                RequestLatency {
+                    ttft: Some(Duration::from_millis(i)),
+                    completion: Some(Duration::from_millis(10 * i)),
+                },
+            );
+        }
+        // a cancelled-before-first-token request contributes a
+        // completion sample but no ttft sample.
+        s.request_latency
+            .insert(99, RequestLatency { ttft: None, completion: Some(Duration::from_millis(1)) });
+        assert_eq!(s.ttft_p50(), Duration::from_millis(5));
+        assert_eq!(s.ttft_p99(), Duration::from_millis(10));
+        assert_eq!(s.completion_p99(), Duration::from_millis(100));
+        // 11 completion samples: 1, 10, 20, ..., 100 → p50 is the 6th.
+        assert_eq!(s.completion_p50(), Duration::from_millis(50));
+    }
+
+    #[test]
+    fn throughput_uses_busy_time_not_wall_clock() {
+        // a streaming caller that sleeps between steps accumulates wall
+        // time but not busy time; throughput must not collapse.
+        let s = ServeStats {
+            tokens_generated: 100,
+            busy: Duration::from_secs(1),
+            total: Duration::from_secs(100),
+            ..Default::default()
+        };
+        assert!((s.throughput_tok_s() - 100.0).abs() < 1e-6, "got {}", s.throughput_tok_s());
     }
 }

@@ -1,0 +1,162 @@
+//! Typed serving errors.
+//!
+//! Every fallible operation on the serving surface — building an engine,
+//! submitting, cancelling, stepping — returns [`EngineError`] instead of
+//! a bare `String`, so callers can *dispatch* on what went wrong (retry
+//! a [`EngineError::KvPoolExceeded`] later, report a
+//! [`EngineError::RequestTooLong`] to the client, crash on a
+//! [`EngineError::SlotRemap`]) instead of grepping messages.
+//!
+//! The layers underneath keep their own boundary error types —
+//! [`ManifestError`] and [`PoolError`] from `runtime`, [`KernelError`]
+//! from `megakernel`, [`TaskError`] from `exec` — and convert into
+//! `EngineError` through the `From` shims below, so `?` stays fluent in
+//! the engine without the serving layer re-stringifying anything.
+
+use crate::exec::binder::TaskError;
+use crate::megakernel::runtime::KernelError;
+use crate::runtime::manifest::ManifestError;
+use crate::runtime::pool::PoolError;
+
+/// What can go wrong on the serving surface.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum EngineError {
+    /// [`EngineBuilder`](crate::serving::EngineBuilder) configuration
+    /// rejected before any resource was constructed.
+    InvalidConfig(String),
+    /// Manifest loading / artifact discovery failed (`runtime` boundary).
+    Manifest(String),
+    /// PJRT pool construction failed (`runtime` boundary).
+    Pool(String),
+    /// A mega-kernel epoch failed — timeout or executor panic
+    /// (`megakernel` boundary).
+    Kernel(String),
+    /// A task body failed during an otherwise-completed epoch, harvested
+    /// from the executor (`exec` boundary).
+    Task(String),
+    /// Submitted request asks for zero new tokens: it could never emit
+    /// a terminal [`TokenEvent`](crate::serving::TokenEvent), so it is
+    /// rejected up front instead of silently retiring event-less.
+    ZeroBudget { id: u64 },
+    /// Submitted request's worst case exceeds the engine's `max_seq`.
+    RequestTooLong { id: u64, worst: usize, max_seq: usize },
+    /// Submitted request's worst-case KV demand exceeds the whole block
+    /// pool — it could never be admitted and would stall the queue.
+    KvPoolExceeded { id: u64, worst: usize, need_blocks: usize, pool_blocks: usize },
+    /// Request id already known to this engine (waiting, active, or
+    /// finished) — ids key slots, KV residency, and outputs.
+    DuplicateId { id: u64 },
+    /// `cancel` of an id this engine has never seen.
+    UnknownRequest { id: u64 },
+    /// `cancel` of a request that already reached a terminal state
+    /// (retired, or its terminal event is already emitted).
+    AlreadyFinished { id: u64 },
+    /// Batcher invariant violation: a live request's slot changed
+    /// outside a deliberate compaction move. The engine refuses to
+    /// relocate KV rows it did not plan to move.
+    SlotRemap { id: u64, from: usize, to: usize },
+    /// No compiled batch-size specialization covers this batch.
+    NoSession { batch: usize },
+}
+
+impl std::fmt::Display for EngineError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            EngineError::InvalidConfig(m) => write!(f, "invalid engine config: {m}"),
+            EngineError::Manifest(m) => write!(f, "manifest: {m}"),
+            EngineError::Pool(m) => write!(f, "exec pool: {m}"),
+            EngineError::Kernel(m) => write!(f, "mega-kernel: {m}"),
+            EngineError::Task(m) => write!(f, "task execution: {m}"),
+            EngineError::ZeroBudget { id } => {
+                write!(f, "request {id} rejected: max_new_tokens must be >= 1")
+            }
+            EngineError::RequestTooLong { id, worst, max_seq } => write!(
+                f,
+                "request {id} rejected: worst-case {worst} tokens exceeds max_seq {max_seq}"
+            ),
+            EngineError::KvPoolExceeded { id, worst, need_blocks, pool_blocks } => write!(
+                f,
+                "request {id} rejected: worst-case {worst} tokens needs {need_blocks} KV blocks, \
+                 pool has {pool_blocks}"
+            ),
+            EngineError::DuplicateId { id } => {
+                write!(f, "request id {id} rejected: already known to this engine")
+            }
+            EngineError::UnknownRequest { id } => write!(f, "request {id} is unknown to this engine"),
+            EngineError::AlreadyFinished { id } => write!(f, "request {id} already finished"),
+            EngineError::SlotRemap { id, from, to } => write!(
+                f,
+                "request {id} moved slot {from} -> {to} despite stable-slot batching \
+                 (batcher invariant violation; refusing to relocate live KV rows)"
+            ),
+            EngineError::NoSession { batch } => {
+                write!(f, "no compiled session covers batch {batch}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for EngineError {}
+
+impl From<ManifestError> for EngineError {
+    fn from(e: ManifestError) -> Self {
+        EngineError::Manifest(e.0)
+    }
+}
+
+impl From<PoolError> for EngineError {
+    fn from(e: PoolError) -> Self {
+        EngineError::Pool(e.0)
+    }
+}
+
+impl From<KernelError> for EngineError {
+    fn from(e: KernelError) -> Self {
+        EngineError::Kernel(e.0)
+    }
+}
+
+impl From<TaskError> for EngineError {
+    fn from(e: TaskError) -> Self {
+        EngineError::Task(e.0)
+    }
+}
+
+/// Legacy shim: contexts still speaking `Result<_, String>` (property
+/// harness closures, examples) can `?` an `EngineError` straight
+/// through.
+impl From<EngineError> for String {
+    fn from(e: EngineError) -> String {
+        e.to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn boundary_shims_tag_their_layer() {
+        assert_eq!(
+            EngineError::from(ManifestError("missing".into())),
+            EngineError::Manifest("missing".into())
+        );
+        assert_eq!(EngineError::from(PoolError("no backend".into())), EngineError::Pool("no backend".into()));
+        assert_eq!(EngineError::from(KernelError("timed out".into())), EngineError::Kernel("timed out".into()));
+        assert_eq!(EngineError::from(TaskError("task 3".into())), EngineError::Task("task 3".into()));
+    }
+
+    #[test]
+    fn display_is_actionable_and_string_shim_matches() {
+        let e = EngineError::RequestTooLong { id: 7, worst: 80, max_seq: 64 };
+        let s = e.to_string();
+        assert!(s.contains("request 7") && s.contains("80") && s.contains("max_seq 64"), "got: {s}");
+        assert_eq!(String::from(e), s);
+
+        let e = EngineError::SlotRemap { id: 3, from: 1, to: 0 };
+        assert!(e.to_string().contains("slot 1 -> 0"), "got: {e}");
+
+        let e = EngineError::KvPoolExceeded { id: 1, worst: 90, need_blocks: 12, pool_blocks: 8 };
+        assert!(e.to_string().contains("12 KV blocks"), "got: {e}");
+    }
+}

@@ -14,13 +14,15 @@
 //! `l{l}.kcache` tensor is exactly the first `b` slots of the layer's
 //! segment, so switching specializations re-interprets the same memory
 //! — pointer arithmetic, not row migration. Since the batcher moved to
-//! stable slots (lowest-free-slot admission, no compaction), a
+//! stable slots (lowest-free-slot admission, no implicit compaction), a
 //! request's rows stay put for its whole lifetime and decode moves zero
 //! rows structurally; [`KvArena::move_slot`] (one memcpy per layer
-//! segment) remains the relocation primitive for tooling and any
-//! future deliberate relocation policy (the engine itself refuses to
-//! relocate — a detected remap is an invariant violation it surfaces
-//! as an error).
+//! segment) is the relocation primitive behind the engine's **opt-in**
+//! anti-fragmentation pass (relocate one request when it drops the
+//! specialized graph a whole power of two, counted in
+//! `kv_rows_migrated`) — any *undeliberate* remap is still an invariant
+//! violation the engine surfaces as a typed error, never a silent
+//! repair.
 
 use crate::exec::store::SharedSlab;
 
@@ -156,11 +158,11 @@ impl KvArena {
     /// returning 0**: the rows are already home, nothing is copied and
     /// nothing is counted (a compaction policy that resolves a slot to
     /// itself must not trip `SharedSlab::copy_within`'s disjointness
-    /// contract with a self-overlapping copy). The stable-slot serving
-    /// path never calls this; it survives as the relocation primitive
-    /// for tooling and for any future deliberate compaction policy.
-    /// Callers doing multiple moves own the ordering problem (a
-    /// destination may be another pending move's source).
+    /// contract with a self-overlapping copy). The default serving path
+    /// never calls this; the engine's opt-in anti-fragmentation pass is
+    /// its one deliberate caller (exactly one request per step, into a
+    /// known-free slot). Callers doing multiple moves own the ordering
+    /// problem (a destination may be another pending move's source).
     pub fn move_slot(&self, src: usize, dst: usize, rows: usize) -> usize {
         assert!(src < self.slots && dst < self.slots, "bad slot move {src}->{dst}");
         assert!(rows <= self.s_max, "slot move rows {rows} > s_max {}", self.s_max);

@@ -1,9 +1,64 @@
-//! LLM serving substrate (§6.1): requests, paged KV allocation,
-//! continuous batching, and the decode loop over the real megakernel.
+//! LLM serving substrate (§6.1): a **step-driven streaming API** over
+//! the persistent megakernel — continuous batching, paged KV, stable
+//! slots, typed errors.
+//!
+//! # Lifecycle
+//!
+//! 1. **Build** an engine through the validated [`EngineBuilder`]
+//!    (`ServeEngine::builder()`): batch ceiling, pool threads, seed,
+//!    kernel shape, optional EOS token, opt-in compaction. Config
+//!    mistakes are [`EngineError::InvalidConfig`] before any resource
+//!    is touched.
+//! 2. **Submit** requests with [`ServeEngine::submit`] — at any time,
+//!    including between steps on a live engine. Admission into stable
+//!    batch slots happens at the next step (online admission).
+//! 3. **Step**: every [`ServeEngine::step`] call runs one decode
+//!    iteration on the resident kernel and returns a [`StepOutcome`] of
+//!    per-request [`TokenEvent`]s — stream them to clients as they
+//!    arrive. Terminal events carry a [`FinishReason`]
+//!    (`MaxTokens` | `Eos` | `Cancelled`).
+//! 4. **Cancel** with [`ServeEngine::cancel`]: the request retires
+//!    immediately (slot + KV blocks free for the next admission) and
+//!    its `Cancelled` notice rides the next outcome.
+//! 5. **Observe and drain**: [`ServeStats`] tracks iterations,
+//!    busy-vs-wall time (throughput is computed over busy time),
+//!    per-iteration latency quantiles, and per-request TTFT/completion
+//!    latency keyed by id. [`ServeEngine::take_stats`] closes a stats
+//!    window, and long-lived streaming loops reclaim retired requests
+//!    periodically with [`ServeEngine::take_finished`].
+//!
+//! Batch-mode callers keep the old one-call surface:
+//! [`ServeEngine::serve`] is a thin loop over `step()` with identical
+//! outputs.
+//!
+//! ```no_run
+//! use mpk::serving::{FinishReason, Request, ServeEngine};
+//!
+//! let mut engine = ServeEngine::builder()
+//!     .max_batch(4)
+//!     .seed(42)
+//!     .build()
+//!     .expect("needs `make artifacts` and a PJRT backend");
+//! engine.submit(Request::new(0, vec![3, 7], 16))?;
+//! while engine.has_work() {
+//!     for ev in engine.step()?.events {
+//!         print!("req {} -> {:?}", ev.request, ev.token);
+//!         if ev.finish == Some(FinishReason::Eos) {
+//!             println!(" (eos)");
+//!         }
+//!     }
+//!     // mid-flight: submit() / cancel() freely between steps.
+//! }
+//! # Ok::<(), mpk::serving::EngineError>(())
+//! ```
 pub mod batcher;
 pub mod engine;
+pub mod error;
 pub mod kvcache;
+pub mod step;
 
 pub use batcher::{Batcher, Request};
-pub use engine::{ServeEngine, ServeStats};
+pub use engine::{EngineBuilder, RequestLatency, ServeEngine, ServeStats};
+pub use error::EngineError;
 pub use kvcache::{KvAllocator, KvArena, KvResidency};
+pub use step::{FinishReason, StepOutcome, TokenEvent};

@@ -1,0 +1,82 @@
+//! The step-driven streaming surface: what one decode iteration reports.
+//!
+//! [`ServeEngine::step`](crate::serving::ServeEngine::step) returns a
+//! [`StepOutcome`] — the batch that ran plus a [`TokenEvent`] for every
+//! request that produced (or terminally failed to produce) a token this
+//! iteration. Streaming front-ends forward events as they arrive;
+//! batch callers let [`ServeEngine::serve`](crate::serving::ServeEngine::serve)
+//! drain the loop and collect outputs at the end.
+
+/// Why a request stopped producing tokens.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FinishReason {
+    /// Generated its full `max_new_tokens` budget.
+    MaxTokens,
+    /// Emitted the engine's end-of-sequence token (the EOS token itself
+    /// is included in the output, carried by the terminal event).
+    Eos,
+    /// Cancelled between steps via
+    /// [`ServeEngine::cancel`](crate::serving::ServeEngine::cancel).
+    Cancelled,
+}
+
+/// One streamed notification for one request.
+///
+/// A request emits one `TokenEvent` per iteration once it is past
+/// prefill (prompt-consuming iterations emit nothing — their logits
+/// belong to prompt positions). The last event carries
+/// `finish: Some(_)`; exactly one terminal event is emitted per
+/// request. A cancellation emits a terminal event with `token: None` —
+/// cancelling produces no token.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct TokenEvent {
+    /// Request id (as passed to `submit`).
+    pub request: u64,
+    /// The token decoded this iteration; `None` only on a cancellation
+    /// event.
+    pub token: Option<i32>,
+    /// Set on the request's terminal event, absent while it streams.
+    pub finish: Option<FinishReason>,
+}
+
+/// What one [`ServeEngine::step`](crate::serving::ServeEngine::step)
+/// call did.
+#[derive(Clone, Debug, Default)]
+pub struct StepOutcome {
+    /// Per-request events this iteration: one per active request past
+    /// prefill, plus terminal notices for requests cancelled since the
+    /// previous step.
+    pub events: Vec<TokenEvent>,
+    /// Active requests that decoded this iteration; `0` means the step
+    /// was idle (no slot occupied after retire/admit — nothing ran).
+    pub ran: usize,
+}
+
+impl StepOutcome {
+    /// True when the step ran no decode iteration (the engine was
+    /// empty). Pending cancellation events may still be delivered on an
+    /// idle step, so check [`StepOutcome::events`] regardless.
+    pub fn is_idle(&self) -> bool {
+        self.ran == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn outcome_idle_iff_nothing_ran() {
+        let idle = StepOutcome::default();
+        assert!(idle.is_idle());
+        let busy = StepOutcome { events: Vec::new(), ran: 2 };
+        assert!(!busy.is_idle());
+        // cancellation notices can ride an otherwise idle step.
+        let notice = StepOutcome {
+            events: vec![TokenEvent { request: 9, token: None, finish: Some(FinishReason::Cancelled) }],
+            ran: 0,
+        };
+        assert!(notice.is_idle());
+        assert_eq!(notice.events[0].finish, Some(FinishReason::Cancelled));
+    }
+}

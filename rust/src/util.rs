@@ -1,6 +1,37 @@
 //! Small utilities: deterministic RNG, JSON writer, table formatting,
-//! timing helpers. (serde/criterion are unavailable offline — these are
-//! the minimal in-repo replacements.)
+//! timing helpers, and the boundary-error newtype macro.
+//! (serde/criterion are unavailable offline — these are the minimal
+//! in-repo replacements.)
+
+/// Defines a `String`-newtype boundary error: `Display` forwards the
+/// message, `std::error::Error` is implemented, and `From<Self> for
+/// String` keeps legacy `Result<_, String>` call sites compiling
+/// through `?`. One definition per layer boundary (`runtime`'s
+/// manifest and pool, `megakernel`'s kernel, `exec`'s task harvest);
+/// the serving layer adds its own `From<Self> for EngineError` shims
+/// next to `EngineError` itself.
+macro_rules! boundary_error {
+    ($(#[$meta:meta])* $name:ident) => {
+        $(#[$meta])*
+        #[derive(Clone, Debug, PartialEq, Eq)]
+        pub struct $name(pub String);
+
+        impl std::fmt::Display for $name {
+            fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+                write!(f, "{}", self.0)
+            }
+        }
+
+        impl std::error::Error for $name {}
+
+        impl From<$name> for String {
+            fn from(e: $name) -> String {
+                e.0
+            }
+        }
+    };
+}
+pub(crate) use boundary_error;
 
 //// xorshift64* — deterministic, seedable, fast. Used by the simulator,
 /// workload generators and the property-test runner.

@@ -75,7 +75,7 @@ fn timeout_surfaces_as_error_not_hang() {
         }
     });
     assert!(res.is_err(), "watchdog should have fired");
-    assert!(res.unwrap_err().contains("timed out"));
+    assert!(res.unwrap_err().0.contains("timed out"));
 }
 
 #[test]

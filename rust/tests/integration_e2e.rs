@@ -72,7 +72,13 @@ fn serving_is_deterministic_across_engines() {
     use mpk::serving::{Request, ServeEngine};
     let mega = MegaConfig { workers: 4, schedulers: 1, ..Default::default() };
     let run = || {
-        let mut e = ServeEngine::create(2, 2, 77, mega).unwrap();
+        let mut e = ServeEngine::builder()
+            .max_batch(2)
+            .pool_threads(2)
+            .seed(77)
+            .mega(mega)
+            .build()
+            .unwrap();
         e.submit(Request::new(0, vec![9, 17], 4)).unwrap();
         e.submit(Request::new(1, vec![250], 4)).unwrap();
         e.serve().unwrap().0

@@ -1,14 +1,17 @@
 #!/usr/bin/env bash
-# Tier-1 gate for the rust_pallas crate: release build, test suite, and
-# clippy with warnings denied; an optional miri pass over the unsafe
-# surface (the tensor arena plus the pool's lifetime-erased channel
-# crossing — skipped with a warning when miri is absent); then
-# (best-effort) the perf-trajectory benches so
-# BENCH_launch_overhead.json, BENCH_store_hotpath.json,
-# BENCH_weight_arena.json, and BENCH_exec_into.json track the hot paths
-# across PRs (spawn-per-iteration vs persistent runtime; locked-clone
-# vs borrowed-view tile reads; per-session vs shared-arena weight init;
-# alloc-per-call vs write-into pool outputs).
+# Tier-1 gate for the rust_pallas crate: release build, test suite,
+# clippy with warnings denied, and a rustdoc gate (broken intra-doc
+# links are denied at the crate root, so the public API must document
+# cleanly); an optional miri pass over the unsafe surface (the tensor
+# arena plus the pool's lifetime-erased channel crossing — skipped with
+# a warning when miri is absent); then (best-effort) the perf-trajectory
+# benches so BENCH_launch_overhead.json, BENCH_store_hotpath.json,
+# BENCH_weight_arena.json, BENCH_exec_into.json, and
+# BENCH_step_overhead.json track the hot paths across PRs
+# (spawn-per-iteration vs persistent runtime; locked-clone vs
+# borrowed-view tile reads; per-session vs shared-arena weight init;
+# alloc-per-call vs write-into pool outputs; step() bookkeeping vs the
+# kernel iteration inside it).
 #
 # Usage: scripts/tier1.sh [--no-bench]
 set -euo pipefail
@@ -43,6 +46,12 @@ cargo test -q
 echo "== tier1: cargo clippy -- -D warnings =="
 cargo clippy --all-targets -- -D warnings
 
+# The public API must document cleanly: the crate root carries
+# #![deny(rustdoc::broken_intra_doc_links)], so a stale [`link`] in any
+# doc comment fails this gate rather than silently degrading the docs.
+echo "== tier1: cargo doc --no-deps =="
+cargo doc --no-deps --quiet
+
 # The unsafe surface is the tensor arena (rust/src/exec/store.rs) plus
 # the pool's lifetime-erased channel crossing (RawValue/RawOutView in
 # rust/src/runtime/pool.rs — the OutView scatter tests exercise the
@@ -68,15 +77,17 @@ if [[ "${1:-}" != "--no-bench" ]]; then
     # `if` (not `&&`) so a missing bench file cannot trip errexit.
     if [[ -f "$ROOT/BENCH_launch_overhead.json" ]]; then cat "$ROOT/BENCH_launch_overhead.json"; fi
 
-    echo "== tier1: hotpath_micro bench (store hot path + weight arena + pool output boundary) =="
+    echo "== tier1: hotpath_micro bench (store hot path + weight arena + pool output boundary + step API) =="
     MPK_BENCH_STORE_JSON="$ROOT/BENCH_store_hotpath.json" \
     MPK_BENCH_WEIGHT_JSON="$ROOT/BENCH_weight_arena.json" \
     MPK_BENCH_EXEC_INTO_JSON="$ROOT/BENCH_exec_into.json" \
+    MPK_BENCH_STEP_JSON="$ROOT/BENCH_step_overhead.json" \
         cargo bench --bench hotpath_micro ||
         echo "tier1: bench skipped (non-fatal)" >&2
     if [[ -f "$ROOT/BENCH_store_hotpath.json" ]]; then cat "$ROOT/BENCH_store_hotpath.json"; fi
     if [[ -f "$ROOT/BENCH_weight_arena.json" ]]; then cat "$ROOT/BENCH_weight_arena.json"; fi
     if [[ -f "$ROOT/BENCH_exec_into.json" ]]; then cat "$ROOT/BENCH_exec_into.json"; fi
+    if [[ -f "$ROOT/BENCH_step_overhead.json" ]]; then cat "$ROOT/BENCH_step_overhead.json"; fi
 fi
 
 echo "tier1: OK"

@@ -1,8 +1,8 @@
 //! Hot-path microbenchmarks for the perf pass (§Perf in
 //! EXPERIMENTS.md): queue ops, event notification, compiler stages, DES
-//! throughput, and tile marshalling into the PJRT pool. Custom harness
-//! (criterion unavailable offline): warmup + median-of-N on the
-//! monotonic clock.
+//! throughput, tile marshalling into the PJRT pool, and the serving
+//! front-end under saturation. Custom harness (criterion unavailable
+//! offline): warmup + median-of-N on the monotonic clock.
 
 use mpk::exec::real::{init_weights, WeightArena};
 use mpk::exec::store::TensorStore;
@@ -10,7 +10,11 @@ use mpk::megakernel::{EventTable, MpmcQueue};
 use mpk::models::{build_decode_graph, GraphOptions, ModelConfig};
 use mpk::ops::{CompGraph, DType, Region};
 use mpk::runtime::{ExecPool, Manifest, OutView, Value};
-use mpk::serving::{Batcher, KvAllocator, Request, ServeEngine};
+use mpk::serving::mock::MockEngine;
+use mpk::serving::{
+    Batcher, EngineError, FinishReason, KvAllocator, Priority, Request, ServeEngine, ServeServer,
+    ServeStats, ServerConfig, StepEngine, StepOutcome, SubmitOptions,
+};
 use mpk::sim::{simulate_megakernel, GpuSpec, SimOptions};
 use mpk::tgraph::{analyze_deps, compile, decompose, CompileOptions, DecomposeConfig};
 use mpk::util::{bench_median_ns, Table};
@@ -317,6 +321,107 @@ fn bench_step_overhead(t: &mut Table) -> (u64, u64, &'static str) {
     (ns, 0, "synthetic")
 }
 
+/// A [`MockEngine`] with wall-clock step time, so the server front-end
+/// actually saturates: the instant mock drains any burst before the
+/// wait queue can fill, which would make the overload path unmeasurable.
+struct SlowStep {
+    inner: MockEngine,
+    delay: std::time::Duration,
+}
+
+impl StepEngine for SlowStep {
+    fn submit(&mut self, r: Request) -> Result<(), EngineError> {
+        self.inner.submit(r)
+    }
+    fn validate(&self, r: &Request) -> Result<(), EngineError> {
+        self.inner.validate(r)
+    }
+    fn terminate(&mut self, id: u64, reason: FinishReason) -> Result<(), EngineError> {
+        self.inner.terminate(id, reason)
+    }
+    fn step(&mut self) -> Result<StepOutcome, EngineError> {
+        std::thread::sleep(self.delay);
+        self.inner.step()
+    }
+    fn has_work(&self) -> bool {
+        self.inner.has_work()
+    }
+    fn capacity(&self) -> usize {
+        self.inner.capacity()
+    }
+    fn in_flight(&self) -> usize {
+        self.inner.in_flight()
+    }
+    fn take_finished(&mut self) -> Vec<Request> {
+        self.inner.take_finished()
+    }
+    fn take_stats(&mut self) -> ServeStats {
+        self.inner.take_stats()
+    }
+}
+
+/// Serving front-end under saturation: a burst of 2× system capacity
+/// (slots + wait queue) against a deliberately slow engine, measuring
+/// what overload control costs the *client* — the latency of the
+/// admission decision RPC (accept / displace / refuse, all synchronous)
+/// — and how the excess load resolves (displacement `Shed` terminals
+/// plus typed `Overloaded` refusals). Backend-free by construction, so
+/// the numbers track the front-end, not the kernel. Returns
+/// `(admission_p50_ns, admission_max_ns, accepted, shed, rejected)`.
+fn bench_saturation(t: &mut Table) -> (u64, u64, u64, u64, u64) {
+    use std::time::{Duration, Instant};
+    let capacity = 8usize;
+    let queue_depth = 8usize;
+    let offered = 2 * (capacity + queue_depth);
+    let server = ServeServer::spawn_with(
+        SlowStep { inner: MockEngine::new(capacity), delay: Duration::from_micros(500) },
+        ServerConfig { queue_depth, idle_poll: Duration::from_micros(200) },
+    );
+    let client = server.client();
+    let mut lat = Vec::with_capacity(offered);
+    let mut streams = Vec::new();
+    let mut rejected = 0u64;
+    for i in 0..offered {
+        let opts = SubmitOptions {
+            priority: if i % 2 == 0 { Priority::Interactive } else { Priority::Batch },
+            deadline: None,
+        };
+        let t0 = Instant::now();
+        let res = client.submit_with(Request::new(i as u64, vec![1, 2], 8), opts);
+        lat.push(t0.elapsed().as_nanos() as u64);
+        match res {
+            Ok(s) => streams.push(s),
+            Err(EngineError::Overloaded { .. }) => rejected += 1,
+            Err(e) => panic!("saturation burst hit a non-overload refusal: {e}"),
+        }
+    }
+    let accepted = streams.len() as u64;
+    let mut shed = 0u64;
+    for s in streams {
+        let (_, finish) = s.collect_output();
+        assert!(finish.is_some(), "accepted request lost its terminal event");
+        if finish == Some(FinishReason::Shed) {
+            shed += 1;
+        }
+    }
+    let report = server.shutdown();
+    assert_eq!(report.finished as u64, accepted, "terminal deliveries must match acceptances");
+    lat.sort_unstable();
+    let p50 = lat[lat.len() / 2];
+    let max = *lat.last().unwrap();
+    t.row(vec![
+        "saturation: admission decision".into(),
+        format!("{p50} ns"),
+        format!("accept/displace/refuse RPC at 2x capacity (max {max} ns)"),
+    ]);
+    t.row(vec![
+        "saturation: load resolution".into(),
+        format!("{:.2} shed+reject rate", (shed + rejected) as f64 / offered as f64),
+        format!("{accepted} accepted / {shed} shed / {rejected} refused of {offered}"),
+    ]);
+    (p50, max, accepted, shed, rejected)
+}
+
 fn main() {
     println!("== hot-path microbenchmarks (median ns unless noted) ==\n");
     let mut t = Table::new(&["benchmark", "median", "note"]);
@@ -325,6 +430,7 @@ fn main() {
     let (per_session_ns, shared_ns, dup_bytes, shared_bytes) = bench_weight_arena(&mut t);
     let (exec_alloc_ns, exec_into_ns, exec_mode, exec_into_allocs) = bench_exec_into(&mut t);
     let (step_ns, kernel_ns, step_mode) = bench_step_overhead(&mut t);
+    let (sat_p50, sat_max, sat_accepted, sat_shed, sat_rejected) = bench_saturation(&mut t);
 
     // queue push+pop round trip
     let q: MpmcQueue<usize> = MpmcQueue::new(1024);
@@ -468,5 +574,25 @@ fn main() {
     match std::fs::write(&step_json_path, step_json) {
         Ok(()) => println!("wrote {step_json_path}"),
         Err(e) => eprintln!("could not write {step_json_path}: {e}"),
+    }
+
+    // saturation record: admission-decision latency and shed rate when
+    // the serving front-end is offered 2x system capacity (slots +
+    // bounded wait queue). Backend-free: tracks the overload-control
+    // front-end across PRs, not the kernel.
+    let sat_json_path = std::env::var("MPK_BENCH_SATURATION_JSON")
+        .unwrap_or_else(|_| "BENCH_saturation.json".to_string());
+    let sat_offered = sat_accepted + sat_rejected;
+    let sat_json = format!(
+        "{{\n  \"bench\": \"saturation\",\n  \"offered\": {sat_offered},\n  \
+         \"capacity\": 8,\n  \"queue_depth\": 8,\n  \
+         \"admission_p50_ns\": {sat_p50},\n  \"admission_max_ns\": {sat_max},\n  \
+         \"accepted\": {sat_accepted},\n  \"shed\": {sat_shed},\n  \
+         \"rejected\": {sat_rejected},\n  \"shed_rate\": {:.4}\n}}\n",
+        (sat_shed + sat_rejected) as f64 / sat_offered.max(1) as f64
+    );
+    match std::fs::write(&sat_json_path, sat_json) {
+        Ok(()) => println!("wrote {sat_json_path}"),
+        Err(e) => eprintln!("could not write {sat_json_path}: {e}"),
     }
 }

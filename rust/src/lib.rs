@@ -13,12 +13,17 @@
 //!   compiled tGraphs (HLO text artifacts built by `make artifacts`).
 //! * [`sim`] — discrete-event GPU timing simulator regenerating the
 //!   paper's figures on A100/H100/B200 roofline models.
-//! * [`serving`] — the step-driven streaming serving API (§6.1): build
-//!   an engine with `serving::ServeEngine::builder()`, `submit()`
-//!   requests at any time, drive one decode iteration per `step()` and
-//!   stream its `TokenEvent`s, `cancel()` mid-flight; continuous
-//!   batching + paged KV + stable slots underneath, typed
-//!   `serving::EngineError` throughout.
+//! * [`serving`] — the overload-hardened serving stack (§6.1): spawn a
+//!   `serving::ServeServer` (one thread owns the engine's `step()`
+//!   loop), submit from any thread via `serving::ServerClient` with a
+//!   `serving::Priority` class and a deadline, and read each request's
+//!   `TokenEvent`s off its `serving::TokenStream` — bounded wait queue
+//!   with typed shedding, deadlines as scheduled terminations, and
+//!   fault-tolerant steps (retry, then quarantine the attributed
+//!   request) underneath. The embeddable `serving::ServeEngine`
+//!   (continuous batching + paged KV + stable slots, typed
+//!   `serving::EngineError` throughout) remains for callers that want
+//!   to own the loop.
 //! * [`moe`] — expert routing + hybrid workload balancer (§6.4).
 //! * [`multigpu`] — tensor parallelism + collective decomposition (§6.5).
 #![deny(rustdoc::broken_intra_doc_links)]

@@ -77,6 +77,27 @@ impl Default for MegaConfig {
     }
 }
 
+impl MegaConfig {
+    /// Reject shapes the runtime cannot run: at least one worker and
+    /// one scheduler, and a nonzero watchdog timeout (a zero timeout
+    /// would abort every epoch before the end event can fire). The
+    /// watchdog bounds a *single epoch*; per-request deadlines are a
+    /// serving-layer concern, enforced between epochs by the server
+    /// front-end as scheduled terminations.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.workers == 0 || self.schedulers == 0 {
+            return Err(format!(
+                "mega-kernel needs >= 1 worker and >= 1 scheduler (got {} / {})",
+                self.workers, self.schedulers
+            ));
+        }
+        if self.timeout.is_zero() {
+            return Err("mega-kernel watchdog timeout must be > 0".into());
+        }
+        Ok(())
+    }
+}
+
 /// Anything that can execute task bodies. The scheduling runtime is
 /// generic over this: a no-op executor measures pure runtime overhead,
 /// `exec::TileExecutor` runs real numerics through PJRT.

@@ -80,11 +80,35 @@ impl Value<'_> {
         self.len() == 0
     }
 
-    pub fn as_f32(&self) -> &[f32] {
+    /// Which payload this value carries (for error messages).
+    fn kind(&self) -> &'static str {
         match self {
-            Value::F32(v) => v,
-            Value::Borrowed(s) => *s,
-            _ => panic!("expected f32 value"),
+            Value::F32(_) | Value::Borrowed(_) => "f32",
+            Value::I32(_) | Value::BorrowedI32(_) => "i32",
+        }
+    }
+
+    /// Borrow the f32 payload. A dtype mismatch is a typed
+    /// [`PoolError`], **not** a panic: these accessors run inside task
+    /// bodies on executor threads, where a panic would kill the thread
+    /// and wedge the pool — callers record the error via
+    /// `ExecCore::fail` instead, so it is harvested after the epoch and
+    /// surfaces to the serving layer as `EngineError::Task`.
+    pub fn as_f32(&self) -> Result<&[f32], PoolError> {
+        match self {
+            Value::F32(v) => Ok(v),
+            Value::Borrowed(s) => Ok(s),
+            other => Err(PoolError(format!("expected f32 value, got {}", other.kind()))),
+        }
+    }
+
+    /// Borrow the i32 payload — the sibling typed accessor, fallible
+    /// for the same reason as [`Value::as_f32`].
+    pub fn as_i32(&self) -> Result<&[i32], PoolError> {
+        match self {
+            Value::I32(v) => Ok(v),
+            Value::BorrowedI32(s) => Ok(s),
+            other => Err(PoolError(format!("expected i32 value, got {}", other.kind()))),
         }
     }
 }
@@ -556,6 +580,27 @@ mod tests {
     // -- protocol-level tests: no artifacts or backend needed (these
     //    are the ones the miri gate runs over the channel-crossing
     //    unsafe in RawOutView). --
+
+    #[test]
+    fn typed_value_accessors_error_instead_of_panicking() {
+        // a dtype mismatch inside a task body must surface as a typed
+        // error the binder can record (ExecCore::fail → EngineError::
+        // Task), never a panic that kills an executor thread.
+        let f = Value::F32(vec![1.0, 2.0]);
+        let i = Value::I32(vec![3, 4]);
+        assert_eq!(f.as_f32().unwrap(), &[1.0, 2.0]);
+        assert_eq!(i.as_i32().unwrap(), &[3, 4]);
+        let err = i.as_f32().unwrap_err();
+        assert!(err.0.contains("expected f32") && err.0.contains("i32"), "got: {}", err.0);
+        let err = f.as_i32().unwrap_err();
+        assert!(err.0.contains("expected i32") && err.0.contains("f32"), "got: {}", err.0);
+        // borrowed variants behave like their owned twins.
+        let buf = [9.0f32];
+        assert_eq!(Value::Borrowed(&buf).as_f32().unwrap(), &[9.0]);
+        let ids = [7i32];
+        assert_eq!(Value::BorrowedI32(&ids).as_i32().unwrap(), &[7]);
+        assert!(Value::Borrowed(&buf).as_i32().is_err());
+    }
 
     #[test]
     fn out_view_scatter_writes_strided_runs_only() {

@@ -115,10 +115,14 @@ pub struct Batcher {
     /// claims the lowest `None`, retirement clears its entry, nothing
     /// else ever writes it.
     slots: Vec<Option<u64>>,
-    /// Every id this batcher has ever accepted (waiting, active, or
-    /// finished). Ids key KV residency, slots, and the output map, so a
-    /// duplicate is rejected at submit — O(1), never pruned (finished
-    /// requests keep their ids reserved).
+    /// Every id currently known to this batcher: waiting, active, or
+    /// finished-but-undrained. Ids key KV residency, slots, and the
+    /// output map, so a duplicate is rejected at submit — O(1). Pruned
+    /// when retired requests are drained via [`Batcher::take_finished`]
+    /// (the caller has taken ownership of the outputs, so the id no
+    /// longer keys anything here), which bounds this set by
+    /// `waiting + active + undrained-finished` instead of letting it
+    /// grow with every request ever served.
     known_ids: HashSet<u64>,
 }
 
@@ -144,6 +148,19 @@ impl Batcher {
     /// would alias another request's KV residency and slot — is an
     /// `Err`, not a panic or a silent drop.
     pub fn submit(&mut self, r: Request) -> Result<(), EngineError> {
+        self.validate(&r)?;
+        self.known_ids.insert(r.id);
+        self.waiting.push_back(r);
+        Ok(())
+    }
+
+    /// The submit-time checks without the submit: would this request be
+    /// accepted right now? Non-mutating, so an admission-control layer
+    /// (the server front-end) can reject unservable requests
+    /// synchronously *before* queueing them in its own wait queue.
+    /// Check order matches [`Batcher::submit`] exactly, so the two
+    /// always agree on which typed error a request gets.
+    pub fn validate(&self, r: &Request) -> Result<(), EngineError> {
         if r.max_new_tokens == 0 {
             // zero budget can never emit a terminal event: the request
             // would retire silently (or, with a 1-token prompt, decode
@@ -163,10 +180,9 @@ impl Batcher {
                 pool_blocks: self.kv.total_blocks(),
             });
         }
-        if !self.known_ids.insert(r.id) {
+        if self.known_ids.contains(&r.id) {
             return Err(EngineError::DuplicateId { id: r.id });
         }
-        self.waiting.push_back(r);
         Ok(())
     }
 
@@ -182,9 +198,19 @@ impl Batcher {
     /// is [`EngineError::AlreadyFinished`] — its terminal event has
     /// already been (or will be) emitted, and a second one must not be.
     pub fn cancel(&mut self, id: u64) -> Result<(), EngineError> {
+        self.terminate(id, FinishReason::Cancelled)
+    }
+
+    /// The general form of [`Batcher::cancel`]: retire a request *now*
+    /// with an arbitrary terminal reason. Cancellation, deadline expiry
+    /// (`DeadlineExceeded`) and fault quarantine (`Failed`) are the
+    /// same state transition — leave the queue or free the slot + KV
+    /// blocks immediately, land in `finished` with partial output —
+    /// differing only in the reason stamped on the terminal event.
+    pub fn terminate(&mut self, id: u64, reason: FinishReason) -> Result<(), EngineError> {
         if let Some(pos) = self.waiting.iter().position(|r| r.id == id) {
             let mut r = self.waiting.remove(pos).expect("position came from the queue");
-            r.finish = Some(FinishReason::Cancelled);
+            r.finish = Some(reason);
             self.finished.push(r);
             return Ok(());
         }
@@ -197,7 +223,7 @@ impl Batcher {
             let slot = r.slot.take().expect("active request without slot");
             debug_assert_eq!(self.slots[slot], Some(id), "slot table out of sync");
             self.slots[slot] = None;
-            r.finish = Some(FinishReason::Cancelled);
+            r.finish = Some(reason);
             self.finished.push(r);
             return Ok(());
         }
@@ -206,6 +232,27 @@ impl Batcher {
         } else {
             Err(EngineError::UnknownRequest { id })
         }
+    }
+
+    /// Drain the retired-request list, releasing the drained ids for
+    /// reuse.
+    ///
+    /// # Id-reuse semantics
+    ///
+    /// An id is reserved from `submit` until the drain that hands its
+    /// retired request to the caller: while reserved, resubmission is a
+    /// typed [`EngineError::DuplicateId`] (the id still keys a slot, KV
+    /// residency, or an undrained output). After the drain the caller
+    /// owns the output and the id keys nothing here, so a *new* request
+    /// may legally reuse it — from the batcher's perspective it is a
+    /// fresh request. Callers that key long-lived state by id across
+    /// drains (dashboards, logs) must disambiguate reuse themselves.
+    pub fn take_finished(&mut self) -> Vec<Request> {
+        let drained = std::mem::take(&mut self.finished);
+        for r in &drained {
+            self.known_ids.remove(&r.id);
+        }
+        drained
     }
 
     pub fn pending(&self) -> usize {
@@ -644,5 +691,78 @@ mod tests {
         assert_eq!(b.graph_batch(), 4, "one move halved the specialized graph");
         // idempotence of the policy: no further candidate.
         assert_eq!(b.compaction_candidate(), None);
+    }
+
+    #[test]
+    fn take_finished_prunes_ids_for_reuse() {
+        // regression: known_ids was never pruned — a slow leak under
+        // continuous traffic, and drained ids stayed burned forever.
+        let mut b = batcher(2, 100);
+        b.submit(req(1, 2, 1)).unwrap();
+        b.step_admission();
+        finish(&mut b, 1);
+        b.step_admission();
+        // finished but undrained: the id still keys the output.
+        assert!(matches!(b.submit(req(1, 2, 1)).unwrap_err(), EngineError::DuplicateId { id: 1 }));
+        let drained = b.take_finished();
+        assert_eq!(drained.len(), 1);
+        assert!(b.finished.is_empty());
+        // drained: the id keys nothing here any more — reusable.
+        b.submit(req(1, 3, 2)).unwrap();
+        assert_eq!(b.pending(), 1);
+        // the reused id is a fresh request with fresh bookkeeping.
+        b.step_admission();
+        assert_eq!(b.active[0].slot, Some(0));
+        assert_eq!(b.active[0].generated.len(), 0);
+        // cancelled ids free up through the same drain.
+        b.submit(req(2, 2, 4)).unwrap();
+        b.cancel(2).unwrap();
+        assert!(matches!(b.submit(req(2, 2, 4)).unwrap_err(), EngineError::DuplicateId { id: 2 }));
+        b.take_finished();
+        b.submit(req(2, 2, 4)).unwrap();
+    }
+
+    #[test]
+    fn terminate_stamps_the_given_reason() {
+        let mut b = batcher(2, 100);
+        b.submit(req(1, 8, 8)).unwrap();
+        b.submit(req(2, 8, 8)).unwrap();
+        b.submit(req(3, 8, 8)).unwrap(); // waits: 2 slots
+        b.step_admission();
+        let free_before = b.kv.free_blocks();
+        // active → slot + KV released now, reason preserved.
+        b.terminate(1, FinishReason::Failed).unwrap();
+        assert!(b.kv.free_blocks() > free_before);
+        assert_eq!(b.finished.iter().find(|r| r.id == 1).unwrap().finish, Some(FinishReason::Failed));
+        // waiting → leaves the queue with the given reason.
+        b.terminate(3, FinishReason::DeadlineExceeded).unwrap();
+        assert_eq!(b.pending(), 0);
+        assert_eq!(
+            b.finished.iter().find(|r| r.id == 3).unwrap().finish,
+            Some(FinishReason::DeadlineExceeded)
+        );
+        // typed refusals match cancel's.
+        assert!(matches!(
+            b.terminate(1, FinishReason::Failed).unwrap_err(),
+            EngineError::AlreadyFinished { id: 1 }
+        ));
+        assert!(matches!(
+            b.terminate(9, FinishReason::Shed).unwrap_err(),
+            EngineError::UnknownRequest { id: 9 }
+        ));
+    }
+
+    #[test]
+    fn validate_is_nonmutating_and_matches_submit() {
+        let mut b = batcher(2, 2);
+        let ok = req(1, 2, 2);
+        b.validate(&ok).unwrap();
+        assert!(!b.has_work(), "validate must not queue");
+        b.submit(ok).unwrap();
+        // every rejection class agrees with submit, in the same order.
+        assert!(matches!(b.validate(&req(2, 2, 0)).unwrap_err(), EngineError::ZeroBudget { id: 2 }));
+        assert!(matches!(b.validate(&req(2, 60, 10)).unwrap_err(), EngineError::RequestTooLong { .. }));
+        assert!(matches!(b.validate(&req(2, 9, 8)).unwrap_err(), EngineError::KvPoolExceeded { .. }));
+        assert!(matches!(b.validate(&req(1, 2, 2)).unwrap_err(), EngineError::DuplicateId { id: 1 }));
     }
 }

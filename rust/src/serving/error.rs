@@ -51,6 +51,18 @@ pub enum EngineError {
     /// `cancel` of a request that already reached a terminal state
     /// (retired, or its terminal event is already emitted).
     AlreadyFinished { id: u64 },
+    /// Load shed at admission: the server's bounded wait queue is full
+    /// and the submission does not outrank anything already queued.
+    /// This is the *synchronous* rejection of a brand-new request —
+    /// a request that was accepted and later displaced by a
+    /// higher-priority arrival is shed with a terminal
+    /// [`FinishReason::Shed`](crate::serving::FinishReason::Shed) event
+    /// instead. Retryable by the client after backoff.
+    Overloaded { id: u64, queue_depth: usize },
+    /// The serving thread has shut down (or died): the
+    /// [`ServerClient`](crate::serving::ServerClient) handle outlived
+    /// the server it talks to.
+    ServerClosed,
     /// Batcher invariant violation: a live request's slot changed
     /// outside a deliberate compaction move. The engine refuses to
     /// relocate KV rows it did not plan to move.
@@ -82,6 +94,12 @@ impl std::fmt::Display for EngineError {
             EngineError::DuplicateId { id } => {
                 write!(f, "request id {id} rejected: already known to this engine")
             }
+            EngineError::Overloaded { id, queue_depth } => write!(
+                f,
+                "request {id} shed at admission: wait queue full ({queue_depth} deep) and \
+                 nothing queued outranks it — retry after backoff"
+            ),
+            EngineError::ServerClosed => write!(f, "serving thread has shut down"),
             EngineError::UnknownRequest { id } => write!(f, "request {id} is unknown to this engine"),
             EngineError::AlreadyFinished { id } => write!(f, "request {id} already finished"),
             EngineError::SlotRemap { id, from, to } => write!(
@@ -158,5 +176,12 @@ mod tests {
 
         let e = EngineError::KvPoolExceeded { id: 1, worst: 90, need_blocks: 12, pool_blocks: 8 };
         assert!(e.to_string().contains("12 KV blocks"), "got: {e}");
+
+        // overload shedding is a typed, retryable rejection — the
+        // message must say so and carry the queue bound.
+        let e = EngineError::Overloaded { id: 9, queue_depth: 64 };
+        let s = e.to_string();
+        assert!(s.contains("request 9") && s.contains("64") && s.contains("retry"), "got: {s}");
+        assert!(EngineError::ServerClosed.to_string().contains("shut down"));
     }
 }

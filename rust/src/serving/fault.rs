@@ -1,0 +1,315 @@
+//! Deterministic fault injection and the step-recovery state machine.
+//!
+//! Production hardening needs failures on demand: [`FaultPlan`] is a
+//! seed-driven chaos schedule the [`EngineBuilder`] wires into the
+//! engine (`.faults(plan)`), making kernel epochs and task bodies fail
+//! at configured rates — deterministically per seed, with an optional
+//! *poison* request whose presence fails every epoch it is staged in
+//! (the reproducible worst case for quarantine testing).
+//!
+//! The [`Recovery`] state machine decides what a failed epoch attempt
+//! becomes, for both the real engine and the mock engine (so the server
+//! front-end's failure behavior is testable without artifacts):
+//!
+//! 1. **Retry** with bounded exponential backoff while the per-step
+//!    retry budget lasts — a retried epoch is idempotent because the
+//!    staging inputs (token ids, row lengths) are rewritten from
+//!    request state that only advances at harvest, and the KV row for
+//!    this step is written at a position derived from that same state,
+//!    so a partial epoch's writes are simply overwritten.
+//! 2. **Quarantine** the most-blamed request once the budget is spent
+//!    and the failures were attributable (injected task faults carry a
+//!    victim): the request retires with a terminal
+//!    [`FinishReason::Failed`](crate::serving::FinishReason::Failed)
+//!    event, every other request keeps its slot and KV residency, and
+//!    the epoch restages without the offender — the engine is never
+//!    rebuilt.
+//! 3. **Give up** only when the budget is spent and no request can be
+//!    blamed (a persistent, unattributable kernel failure): the step
+//!    returns the underlying error and the caller decides.
+//!
+//! [`EngineBuilder`]: crate::serving::EngineBuilder
+
+use crate::serving::batcher::Request;
+use crate::util::XorShift64;
+use std::time::Duration;
+
+/// Retry backoff is bounded: exponential growth from the configured
+/// base is capped here, so a misconfigured backoff cannot stall the
+/// serving thread for seconds per failure.
+pub(crate) const MAX_BACKOFF: Duration = Duration::from_millis(100);
+
+/// A deterministic, seed-driven fault schedule (chaos testing knob; see
+/// the module docs). All-zero rates with no poison — the default —
+/// injects nothing.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct FaultPlan {
+    /// RNG seed: two engines with the same plan draw the same fault
+    /// sequence for the same epoch sequence.
+    pub seed: u64,
+    /// Probability (0..=1) that an epoch fails wholesale — models a
+    /// watchdog timeout / scheduler wedge. Unattributable: no victim.
+    pub kernel_rate: f64,
+    /// Probability (0..=1) that a task body fails mid-epoch, attributed
+    /// to a uniformly drawn victim among the active requests — models a
+    /// poisoned row (bad input, NaN blowup) surfacing through
+    /// `ExecCore::fail`.
+    pub task_rate: f64,
+    /// A request id whose presence fails *every* epoch it is staged in,
+    /// attributed to it — the deterministic repeat offender that drives
+    /// the quarantine path end to end.
+    pub poison: Option<u64>,
+}
+
+impl Default for FaultPlan {
+    fn default() -> Self {
+        FaultPlan { seed: 0x5eed, kernel_rate: 0.0, task_rate: 0.0, poison: None }
+    }
+}
+
+impl FaultPlan {
+    /// Rates must be finite probabilities; rejected at engine build
+    /// time as `InvalidConfig` before any resource is touched.
+    pub fn validate(&self) -> Result<(), String> {
+        for (name, rate) in [("kernel_rate", self.kernel_rate), ("task_rate", self.task_rate)] {
+            if !rate.is_finite() || !(0.0..=1.0).contains(&rate) {
+                return Err(format!("fault {name} must be in 0..=1, got {rate}"));
+            }
+        }
+        Ok(())
+    }
+
+    /// True when this plan can ever inject anything.
+    pub fn is_armed(&self) -> bool {
+        self.kernel_rate > 0.0 || self.task_rate > 0.0 || self.poison.is_some()
+    }
+}
+
+/// One injected failure for the epoch about to run (or just run).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub(crate) enum Fault {
+    /// The whole epoch fails; nobody to blame.
+    Epoch,
+    /// A task body fails, attributed to `victim`'s row.
+    Task { victim: u64 },
+}
+
+/// Draws faults from a [`FaultPlan`] — owned by the engine, one draw
+/// per epoch attempt over the currently staged requests.
+#[derive(Debug)]
+pub(crate) struct FaultInjector {
+    plan: FaultPlan,
+    rng: XorShift64,
+}
+
+impl FaultInjector {
+    pub(crate) fn new(plan: FaultPlan) -> Self {
+        FaultInjector { rng: XorShift64::new(plan.seed), plan }
+    }
+
+    /// Decide whether the epoch staging `active` fails, and how. Poison
+    /// wins (deterministic repeat offender), then the kernel-level
+    /// draw, then the task-level draw with a uniform victim.
+    pub(crate) fn draw(&mut self, active: &[Request]) -> Option<Fault> {
+        if active.is_empty() {
+            return None;
+        }
+        if let Some(p) = self.plan.poison {
+            if active.iter().any(|r| r.id == p) {
+                return Some(Fault::Task { victim: p });
+            }
+        }
+        if self.plan.kernel_rate > 0.0 && self.rng.f64() < self.plan.kernel_rate {
+            return Some(Fault::Epoch);
+        }
+        if self.plan.task_rate > 0.0 && self.rng.f64() < self.plan.task_rate {
+            let victim = active[self.rng.below(active.len())].id;
+            return Some(Fault::Task { victim });
+        }
+        None
+    }
+}
+
+/// What the recovery state machine tells the step loop to do next.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub(crate) enum RecoveryAction {
+    /// Re-arm the resident kernel and re-run the epoch after sleeping
+    /// the given (bounded, exponentially grown) backoff.
+    Retry(Duration),
+    /// Retire this request with a terminal `Failed` event, then restage
+    /// and continue with the survivors under a fresh retry budget.
+    Quarantine(u64),
+    /// Unattributable persistent failure: surface the error.
+    GiveUp,
+}
+
+/// Per-engine recovery bookkeeping: a retry budget per step and blame
+/// counts accumulated across this step's failed attempts. Kept in a
+/// `Vec` (not a map) so the most-blamed pick is deterministic.
+#[derive(Debug)]
+pub(crate) struct Recovery {
+    retry_limit: usize,
+    backoff: Duration,
+    attempts: usize,
+    blamed: Vec<(u64, u32)>,
+}
+
+impl Recovery {
+    pub(crate) fn new(retry_limit: usize, backoff: Duration) -> Self {
+        Recovery { retry_limit, backoff, attempts: 0, blamed: Vec::new() }
+    }
+
+    /// A whole epoch (with whatever was staged) completed: consecutive-
+    /// failure tracking resets.
+    pub(crate) fn on_success(&mut self) {
+        self.attempts = 0;
+        self.blamed.clear();
+    }
+
+    /// A failed epoch attempt, with an optional blamed request.
+    /// `still_active` filters quarantine candidates to requests that
+    /// can actually be retired (a blamed request may have finished or
+    /// been cancelled between attempts).
+    pub(crate) fn on_failure(
+        &mut self,
+        victim: Option<u64>,
+        still_active: impl Fn(u64) -> bool,
+    ) -> RecoveryAction {
+        if let Some(v) = victim {
+            match self.blamed.iter_mut().find(|(id, _)| *id == v) {
+                Some(entry) => entry.1 += 1,
+                None => self.blamed.push((v, 1)),
+            }
+        }
+        self.attempts += 1;
+        if self.attempts <= self.retry_limit {
+            let shift = (self.attempts - 1).min(6) as u32;
+            return RecoveryAction::Retry(self.backoff.saturating_mul(1 << shift).min(MAX_BACKOFF));
+        }
+        let worst = self
+            .blamed
+            .iter()
+            .filter(|(id, _)| still_active(*id))
+            .max_by_key(|(_, n)| *n)
+            .map(|(id, _)| *id);
+        match worst {
+            Some(id) => {
+                // fresh budget for the survivors; the offender's blame
+                // record goes with it.
+                self.blamed.retain(|(b, _)| *b != id);
+                self.attempts = 0;
+                RecoveryAction::Quarantine(id)
+            }
+            None => {
+                self.attempts = 0;
+                self.blamed.clear();
+                RecoveryAction::GiveUp
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn reqs(ids: &[u64]) -> Vec<Request> {
+        ids.iter().map(|&id| Request::new(id, vec![1], 4)).collect()
+    }
+
+    #[test]
+    fn plan_validation_rejects_bad_rates() {
+        assert!(FaultPlan::default().validate().is_ok());
+        assert!(!FaultPlan::default().is_armed());
+        let bad = FaultPlan { kernel_rate: 1.5, ..Default::default() };
+        assert!(bad.validate().unwrap_err().contains("kernel_rate"));
+        let bad = FaultPlan { task_rate: f64::NAN, ..Default::default() };
+        assert!(bad.validate().unwrap_err().contains("task_rate"));
+        assert!(FaultPlan { kernel_rate: 1.0, ..Default::default() }.is_armed());
+        assert!(FaultPlan { poison: Some(3), ..Default::default() }.is_armed());
+    }
+
+    #[test]
+    fn injector_is_deterministic_per_seed() {
+        let active = reqs(&[1, 2, 3]);
+        let plan = FaultPlan { seed: 7, kernel_rate: 0.3, task_rate: 0.3, ..Default::default() };
+        let draw_seq = |plan: FaultPlan| {
+            let mut inj = FaultInjector::new(plan);
+            (0..64).map(|_| inj.draw(&active)).collect::<Vec<_>>()
+        };
+        let a = draw_seq(plan);
+        assert_eq!(a, draw_seq(plan), "same seed must draw the same faults");
+        assert!(a.iter().any(|f| f.is_some()), "30% rates over 64 epochs never fired");
+        assert!(a.iter().any(|f| f.is_none()), "30% rates over 64 epochs always fired");
+        assert_ne!(
+            a,
+            draw_seq(FaultPlan { seed: 8, ..plan }),
+            "different seeds should diverge"
+        );
+        // task faults always blame a staged request.
+        for f in a.iter().flatten() {
+            if let Fault::Task { victim } = f {
+                assert!([1, 2, 3].contains(victim));
+            }
+        }
+    }
+
+    #[test]
+    fn poison_fails_every_epoch_it_is_staged_in() {
+        let plan = FaultPlan { poison: Some(2), ..Default::default() };
+        let mut inj = FaultInjector::new(plan);
+        for _ in 0..8 {
+            assert_eq!(inj.draw(&reqs(&[1, 2])), Some(Fault::Task { victim: 2 }));
+        }
+        assert_eq!(inj.draw(&reqs(&[1, 3])), None, "poison gone → epoch clean");
+        assert_eq!(inj.draw(&[]), None, "idle epochs never fault");
+    }
+
+    #[test]
+    fn recovery_retries_then_quarantines_the_repeat_offender() {
+        let mut rec = Recovery::new(2, Duration::from_millis(1));
+        let active = |_: u64| true;
+        // two failed attempts blaming request 5 → retry with growing,
+        // bounded backoff.
+        assert_eq!(rec.on_failure(Some(5), active), RecoveryAction::Retry(Duration::from_millis(1)));
+        assert_eq!(rec.on_failure(Some(5), active), RecoveryAction::Retry(Duration::from_millis(2)));
+        // budget spent → the blamed request is quarantined and the
+        // budget resets for the survivors.
+        assert_eq!(rec.on_failure(Some(5), active), RecoveryAction::Quarantine(5));
+        assert_eq!(rec.on_failure(None, active), RecoveryAction::Retry(Duration::from_millis(1)));
+        rec.on_success();
+        // most-blamed wins when several requests were blamed.
+        let mut rec = Recovery::new(2, Duration::ZERO);
+        assert_eq!(rec.on_failure(Some(1), active), RecoveryAction::Retry(Duration::ZERO));
+        assert_eq!(rec.on_failure(Some(2), active), RecoveryAction::Retry(Duration::ZERO));
+        assert_eq!(rec.on_failure(Some(2), active), RecoveryAction::Quarantine(2));
+    }
+
+    #[test]
+    fn recovery_gives_up_only_when_unattributable() {
+        let mut rec = Recovery::new(1, Duration::ZERO);
+        assert_eq!(rec.on_failure(None, |_| true), RecoveryAction::Retry(Duration::ZERO));
+        assert_eq!(rec.on_failure(None, |_| true), RecoveryAction::GiveUp);
+        // after GiveUp the budget resets — the next step retries afresh.
+        assert_eq!(rec.on_failure(None, |_| true), RecoveryAction::Retry(Duration::ZERO));
+        // a blamed request that already retired cannot be quarantined.
+        let mut rec = Recovery::new(0, Duration::ZERO);
+        assert_eq!(rec.on_failure(Some(9), |_| false), RecoveryAction::GiveUp);
+    }
+
+    #[test]
+    fn backoff_is_bounded() {
+        let mut rec = Recovery::new(64, Duration::from_millis(50));
+        let mut last = Duration::ZERO;
+        for _ in 0..64 {
+            match rec.on_failure(None, |_| true) {
+                RecoveryAction::Retry(d) => {
+                    assert!(d <= MAX_BACKOFF, "backoff {d:?} above cap");
+                    last = d;
+                }
+                other => panic!("expected retry, got {other:?}"),
+            }
+        }
+        assert_eq!(last, MAX_BACKOFF);
+    }
+}

@@ -1,0 +1,295 @@
+//! A backend-free [`StepEngine`] for testing the server front-end.
+//!
+//! [`MockEngine`] runs the *real* admission machinery — the same
+//! [`Batcher`] (stable slots, KV block accounting, typed rejections)
+//! and the same fault-injection/recovery state machine
+//! ([`crate::serving::fault`]) as [`ServeEngine`] — but replaces the
+//! mega-kernel epoch with a deterministic fake decode. That makes every
+//! overload/deadline/shed/fault behavior of [`ServeServer`] testable
+//! without AOT artifacts, a PJRT backend, or kernel threads.
+//!
+//! Fake decode semantics: each step emits one token per past-prefill
+//! request, and the token *value* is the engine's global step counter.
+//! Two useful consequences for assertions: (a) outputs are
+//! deterministic, and (b) token values totally order the steps — a
+//! request admitted earlier carries numerically smaller tokens, so
+//! priority-ordering tests can compare streams directly. Prefill is
+//! modeled faithfully (prompt-consuming steps emit nothing), finishes
+//! are [`FinishReason::MaxTokens`] only (no EOS).
+//!
+//! [`ServeEngine`]: crate::serving::ServeEngine
+//! [`ServeServer`]: crate::serving::ServeServer
+
+use crate::serving::batcher::{Batcher, Request};
+use crate::serving::engine::ServeStats;
+use crate::serving::error::EngineError;
+use crate::serving::fault::{Fault, FaultInjector, FaultPlan, Recovery, RecoveryAction};
+use crate::serving::kvcache::KvAllocator;
+use crate::serving::server::StepEngine;
+use crate::serving::step::{FinishReason, StepOutcome, TokenEvent};
+use std::time::Duration;
+
+/// Backend-free step engine over the real batcher and recovery
+/// machinery; see the module docs.
+pub struct MockEngine {
+    batcher: Batcher,
+    faults: Option<FaultInjector>,
+    recovery: Recovery,
+    /// Terminal notices queued between steps (terminate), like the real
+    /// engine's pending-events list.
+    pending: Vec<TokenEvent>,
+    /// Global step counter — doubles as the next token value.
+    step_count: i32,
+    stats: ServeStats,
+}
+
+impl MockEngine {
+    /// A mock with `capacity` slots, `max_seq` 512, and a KV pool sized
+    /// so admission is slot-bound, not block-bound (the interesting
+    /// pressure for server tests is the slot/queue interplay).
+    pub fn new(capacity: usize) -> MockEngine {
+        assert!(capacity >= 1, "capacity must be >= 1");
+        let max_seq = 512;
+        let kv = KvAllocator::new(capacity * max_seq / 8, 8);
+        MockEngine {
+            batcher: Batcher::new(capacity, max_seq, kv),
+            faults: None,
+            recovery: Recovery::new(2, Duration::ZERO),
+            pending: Vec::new(),
+            step_count: 0,
+            stats: ServeStats::default(),
+        }
+    }
+
+    /// Arm deterministic fault injection with a retry budget — same
+    /// semantics as the real engine's builder knobs (`faults` +
+    /// `step_retries`), with zero backoff (mock steps are instant).
+    pub fn with_faults(mut self, plan: FaultPlan, step_retries: usize) -> MockEngine {
+        plan.validate().expect("invalid fault plan");
+        self.faults = plan.is_armed().then(|| FaultInjector::new(plan));
+        self.recovery = Recovery::new(step_retries, Duration::ZERO);
+        self
+    }
+
+    /// Total KV blocks in the pool (for conservation assertions).
+    pub fn kv_total_blocks(&self) -> usize {
+        self.batcher.kv.total_blocks()
+    }
+
+    /// Currently free KV blocks (equals
+    /// [`MockEngine::kv_total_blocks`] whenever no request is active).
+    pub fn kv_free_blocks(&self) -> usize {
+        self.batcher.kv.free_blocks()
+    }
+
+    /// Slots of the currently active requests (for uniqueness and
+    /// stability assertions).
+    pub fn active_slots(&self) -> Vec<(u64, usize)> {
+        self.batcher
+            .active
+            .iter()
+            .map(|r| (r.id, r.slot.expect("active request without slot")))
+            .collect()
+    }
+}
+
+impl StepEngine for MockEngine {
+    fn submit(&mut self, r: Request) -> Result<(), EngineError> {
+        self.batcher.submit(r)
+    }
+
+    fn validate(&self, r: &Request) -> Result<(), EngineError> {
+        self.batcher.validate(r)
+    }
+
+    fn terminate(&mut self, id: u64, reason: FinishReason) -> Result<(), EngineError> {
+        self.batcher.terminate(id, reason)?;
+        self.pending.push(TokenEvent { request: id, token: None, finish: Some(reason) });
+        Ok(())
+    }
+
+    fn step(&mut self) -> Result<StepOutcome, EngineError> {
+        let mut events: Vec<TokenEvent> = std::mem::take(&mut self.pending);
+        self.batcher.step_admission();
+
+        // the same recovery protocol as the real engine, minus the
+        // backoff sleeps: draw a fault per attempt over what is staged,
+        // retry, quarantine the blamed request, or give up.
+        loop {
+            if self.batcher.active.is_empty() {
+                return Ok(StepOutcome { events, ran: 0 });
+            }
+            let fault = match self.faults.as_mut() {
+                Some(inj) => inj.draw(&self.batcher.active),
+                None => None,
+            };
+            let Some(fault) = fault else {
+                self.recovery.on_success();
+                break;
+            };
+            self.stats.faulted_epochs += 1;
+            let victim = match fault {
+                Fault::Task { victim } => Some(victim),
+                Fault::Epoch => None,
+            };
+            let action = self
+                .recovery
+                .on_failure(victim, |id| self.batcher.active.iter().any(|r| r.id == id));
+            match action {
+                RecoveryAction::Retry(_) => {}
+                RecoveryAction::Quarantine(id) => {
+                    let _ = self.batcher.terminate(id, FinishReason::Failed);
+                    self.stats.requests_quarantined += 1;
+                    events.push(TokenEvent {
+                        request: id,
+                        token: None,
+                        finish: Some(FinishReason::Failed),
+                    });
+                }
+                RecoveryAction::GiveUp => {
+                    // undelivered notices stay queued, like the real
+                    // engine's failed step.
+                    self.pending = events;
+                    return Err(EngineError::Kernel("mock epoch failed beyond recovery".into()));
+                }
+            }
+        }
+
+        // fake decode: one step advances every active request exactly
+        // like the real harvest (prefill consumes the prompt silently),
+        // with the step counter as the token value.
+        self.step_count += 1;
+        let tok = self.step_count;
+        let ran = self.batcher.active.len();
+        for r in self.batcher.active.iter_mut() {
+            r.cache_len += 1;
+            let emitted = if r.in_prefill() {
+                r.prompt_pos += 1;
+                if r.in_prefill() {
+                    false
+                } else {
+                    r.generated.push(tok);
+                    true
+                }
+            } else {
+                r.generated.push(tok);
+                true
+            };
+            if !emitted {
+                continue;
+            }
+            self.stats.tokens_generated += 1;
+            let finish = if r.generated.len() >= r.max_new_tokens {
+                r.finish = Some(FinishReason::MaxTokens);
+                Some(FinishReason::MaxTokens)
+            } else {
+                None
+            };
+            events.push(TokenEvent { request: r.id, token: Some(tok), finish });
+        }
+        self.stats.iterations += 1;
+        Ok(StepOutcome { events, ran })
+    }
+
+    fn has_work(&self) -> bool {
+        self.batcher.has_work() || !self.pending.is_empty()
+    }
+
+    fn capacity(&self) -> usize {
+        self.batcher.max_batch
+    }
+
+    fn in_flight(&self) -> usize {
+        self.batcher.active.len() + self.batcher.pending()
+    }
+
+    fn take_finished(&mut self) -> Vec<Request> {
+        self.batcher.take_finished()
+    }
+
+    fn take_stats(&mut self) -> ServeStats {
+        std::mem::take(&mut self.stats)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Drive the mock to idle, collecting events.
+    fn drain(e: &mut MockEngine) -> Vec<TokenEvent> {
+        let mut events = Vec::new();
+        let mut guard = 0;
+        while e.has_work() {
+            guard += 1;
+            assert!(guard < 10_000, "mock step livelock");
+            events.extend(e.step().unwrap().events);
+        }
+        events
+    }
+
+    #[test]
+    fn mock_decodes_deterministically_with_step_tokens() {
+        let mut e = MockEngine::new(2);
+        e.submit(Request::new(1, vec![7], 3)).unwrap();
+        e.submit(Request::new(2, vec![7, 8], 2)).unwrap();
+        let events = drain(&mut e);
+        let toks = |id: u64| -> Vec<i32> {
+            events.iter().filter(|ev| ev.request == id).filter_map(|ev| ev.token).collect()
+        };
+        // prompt 1: emits from step 1. prompt 2: first emission step 2.
+        assert_eq!(toks(1), vec![1, 2, 3]);
+        assert_eq!(toks(2), vec![2, 3]);
+        for id in [1, 2] {
+            let terminals =
+                events.iter().filter(|ev| ev.request == id && ev.finish.is_some()).count();
+            assert_eq!(terminals, 1, "req {id}");
+        }
+        // all KV released once everything retired.
+        assert_eq!(e.kv_free_blocks(), e.kv_total_blocks());
+    }
+
+    #[test]
+    fn mock_terminate_queues_a_tokenless_notice() {
+        let mut e = MockEngine::new(2);
+        e.submit(Request::new(1, vec![3], 8)).unwrap();
+        e.step().unwrap();
+        StepEngine::terminate(&mut e, 1, FinishReason::DeadlineExceeded).unwrap();
+        let out = e.step().unwrap();
+        assert!(out.events.contains(&TokenEvent {
+            request: 1,
+            token: None,
+            finish: Some(FinishReason::DeadlineExceeded)
+        }));
+        assert_eq!(e.kv_free_blocks(), e.kv_total_blocks());
+    }
+
+    #[test]
+    fn mock_poison_quarantines_and_survivors_continue() {
+        let mut e = MockEngine::new(2)
+            .with_faults(FaultPlan { poison: Some(1), ..Default::default() }, 1);
+        e.submit(Request::new(1, vec![3, 4], 4)).unwrap();
+        e.submit(Request::new(2, vec![5], 2)).unwrap();
+        let events = drain(&mut e);
+        let poisoned: Vec<_> = events.iter().filter(|ev| ev.request == 1).collect();
+        assert_eq!(poisoned.len(), 1);
+        assert_eq!(poisoned[0].finish, Some(FinishReason::Failed));
+        // the survivor decodes its full budget.
+        assert_eq!(
+            events.iter().filter(|ev| ev.request == 2).filter_map(|ev| ev.token).count(),
+            2
+        );
+        assert_eq!(e.stats.requests_quarantined, 1);
+        assert!(e.stats.faulted_epochs >= 2, "retry budget 1 → at least two failures");
+        assert_eq!(e.kv_free_blocks(), e.kv_total_blocks());
+    }
+
+    #[test]
+    fn mock_gives_up_on_unattributable_persistent_failure() {
+        let mut e = MockEngine::new(1)
+            .with_faults(FaultPlan { kernel_rate: 1.0, ..Default::default() }, 2);
+        e.submit(Request::new(1, vec![3], 2)).unwrap();
+        let err = e.step().unwrap_err();
+        assert!(matches!(err, EngineError::Kernel(_)), "got: {err}");
+    }
+}

@@ -1,64 +1,88 @@
-//! LLM serving substrate (§6.1): a **step-driven streaming API** over
-//! the persistent megakernel — continuous batching, paged KV, stable
-//! slots, typed errors.
+//! LLM serving substrate (§6.1): a threaded, overload-hardened
+//! **server** over a step-driven streaming engine — continuous
+//! batching, paged KV, stable slots, deadlines, load shedding,
+//! fault-tolerant steps, typed errors.
 //!
-//! # Lifecycle
+//! # The server lifecycle
 //!
-//! 1. **Build** an engine through the validated [`EngineBuilder`]
-//!    (`ServeEngine::builder()`): batch ceiling, pool threads, seed,
-//!    kernel shape, optional EOS token, opt-in compaction. Config
-//!    mistakes are [`EngineError::InvalidConfig`] before any resource
-//!    is touched.
-//! 2. **Submit** requests with [`ServeEngine::submit`] — at any time,
-//!    including between steps on a live engine. Admission into stable
-//!    batch slots happens at the next step (online admission).
-//! 3. **Step**: every [`ServeEngine::step`] call runs one decode
-//!    iteration on the resident kernel and returns a [`StepOutcome`] of
-//!    per-request [`TokenEvent`]s — stream them to clients as they
-//!    arrive. Terminal events carry a [`FinishReason`]
-//!    (`MaxTokens` | `Eos` | `Cancelled`).
-//! 4. **Cancel** with [`ServeEngine::cancel`]: the request retires
-//!    immediately (slot + KV blocks free for the next admission) and
-//!    its `Cancelled` notice rides the next outcome.
-//! 5. **Observe and drain**: [`ServeStats`] tracks iterations,
-//!    busy-vs-wall time (throughput is computed over busy time),
-//!    per-iteration latency quantiles, and per-request TTFT/completion
-//!    latency keyed by id. [`ServeEngine::take_stats`] closes a stats
-//!    window, and long-lived streaming loops reclaim retired requests
-//!    periodically with [`ServeEngine::take_finished`].
+//! Most callers should hold a [`ServeServer`] and talk to it through
+//! [`ServerClient`] handles; the engine's single-threaded step loop
+//! becomes an implementation detail owned by one serving thread:
 //!
-//! Batch-mode callers keep the old one-call surface:
-//! [`ServeEngine::serve`] is a thin loop over `step()` with identical
-//! outputs.
+//! 1. **Spawn** with [`ServeServer::spawn`], passing a configured
+//!    [`EngineBuilder`] and a [`ServerConfig`] (wait-queue bound, idle
+//!    poll). The engine is built on the caller's thread, so
+//!    configuration mistakes surface synchronously as
+//!    [`EngineError::InvalidConfig`] — then it moves onto a dedicated
+//!    thread that loops [`ServeEngine::step`].
+//! 2. **Submit** from any thread via [`ServerClient::submit_with`]:
+//!    pick a [`Priority`] class and an optional deadline
+//!    ([`SubmitOptions`]). Acceptance returns a [`TokenStream`] that
+//!    yields the request's [`TokenEvent`]s as the engine decodes them,
+//!    ending with exactly one terminal event ([`FinishReason`]).
+//! 3. **Overload degrades loudly, not silently**: the wait queue is
+//!    bounded; a submission past the bound displaces a strictly
+//!    lower-priority waiter (terminal [`FinishReason::Shed`] on its
+//!    stream) or is refused with the typed, retryable
+//!    [`EngineError::Overloaded`]. Deadlines are enforced by the server
+//!    as scheduled terminations — a terminal
+//!    [`FinishReason::DeadlineExceeded`] event, never an engine error.
+//! 4. **Failures are contained**: the engine retries failed epochs
+//!    against its resident kernel and quarantines a request only when
+//!    repeated failures are attributed to it (terminal
+//!    [`FinishReason::Failed`], everyone else keeps slots and KV) —
+//!    see [`fault`]. Only a persistent unattributable failure kills
+//!    the serving thread, and then every live stream is failed
+//!    terminally and the error lands in `ServerReport::fatal`.
+//! 5. **Shut down** with [`ServeServer::shutdown`]: in-flight work
+//!    drains to terminal events, and the [`ServerReport`] returns the
+//!    counters (finished / shed / rejected / expired / quarantined)
+//!    plus the engine's final [`ServeStats`] window.
 //!
 //! ```no_run
-//! use mpk::serving::{FinishReason, Request, ServeEngine};
+//! use mpk::serving::{Request, ServeEngine, ServeServer, ServerConfig};
 //!
-//! let mut engine = ServeEngine::builder()
-//!     .max_batch(4)
-//!     .seed(42)
-//!     .build()
-//!     .expect("needs `make artifacts` and a PJRT backend");
-//! engine.submit(Request::new(0, vec![3, 7], 16))?;
-//! while engine.has_work() {
-//!     for ev in engine.step()?.events {
-//!         print!("req {} -> {:?}", ev.request, ev.token);
-//!         if ev.finish == Some(FinishReason::Eos) {
-//!             println!(" (eos)");
-//!         }
-//!     }
-//!     // mid-flight: submit() / cancel() freely between steps.
-//! }
+//! let server = ServeServer::spawn(
+//!     ServeEngine::builder().max_batch(4).seed(42),
+//!     ServerConfig::default(),
+//! ).expect("needs `make artifacts` and a PJRT backend");
+//! let client = server.client();
+//! let (tokens, finish) = client.submit(Request::new(0, vec![3, 7], 16))?.collect_output();
+//! println!("req 0 -> {tokens:?} ({finish:?})");
+//! let report = server.shutdown();
+//! assert_eq!(report.finished, 1);
 //! # Ok::<(), mpk::serving::EngineError>(())
 //! ```
+//!
+//! # The engine underneath
+//!
+//! [`ServeEngine`] is the embeddable single-threaded core for callers
+//! that want to own the loop: build through the validated
+//! [`EngineBuilder`], [`ServeEngine::submit`] at any time (online
+//! admission into stable slots), drive [`ServeEngine::step`] and fan
+//! out each [`StepOutcome`], terminate early with
+//! [`ServeEngine::cancel`] / [`ServeEngine::terminate`], observe
+//! [`ServeStats`], reclaim retired requests with
+//! [`ServeEngine::take_finished`]. Batch-mode callers keep the one-call
+//! [`ServeEngine::serve`]. The server front-end is a thin, testable
+//! layer over exactly this surface (the [`StepEngine`] trait —
+//! [`mock::MockEngine`] runs the front-end without artifacts).
 pub mod batcher;
 pub mod engine;
 pub mod error;
+pub mod fault;
 pub mod kvcache;
+pub mod mock;
+pub mod server;
 pub mod step;
 
 pub use batcher::{Batcher, Request};
 pub use engine::{EngineBuilder, RequestLatency, ServeEngine, ServeStats};
 pub use error::EngineError;
+pub use fault::FaultPlan;
 pub use kvcache::{KvAllocator, KvArena, KvResidency};
+pub use server::{
+    Priority, ServeServer, ServerClient, ServerConfig, ServerReport, ServerStatus, StepEngine,
+    SubmitOptions, TokenStream,
+};
 pub use step::{FinishReason, StepOutcome, TokenEvent};

@@ -1,0 +1,636 @@
+//! The serving front-end: one thread owns the engine; clients talk to
+//! it over channels.
+//!
+//! [`ServeEngine`] is single-threaded by design — its hot path mutates
+//! arenas, slots, and the resident kernel with no interior locking.
+//! [`ServeServer`] puts that engine on **one dedicated thread** that
+//! loops [`StepEngine::step`]; any number of [`ServerClient`] handles
+//! (cheap clones, any thread) submit, cancel, and query over an mpsc
+//! command channel. Per-request tokens are fanned out from each step's
+//! [`StepOutcome`] events to the submitting client's [`TokenStream`].
+//! No async runtime, no locks around the engine — the thread *is* the
+//! serialization point, exactly like the single CUDA stream the paper's
+//! megakernel owns.
+//!
+//! # Overload control
+//!
+//! Admission is governed end to end, so saturation degrades loudly and
+//! fairly instead of queueing without bound:
+//!
+//! * **Bounded wait queue** — accepted requests wait in a server-side
+//!   queue of at most [`ServerConfig::queue_depth`]; engine admission
+//!   refills slots from its front each tick.
+//! * **Typed shedding** — a submission that finds the queue full either
+//!   displaces a strictly lower-[`Priority`] queued request (which gets
+//!   a terminal [`FinishReason::Shed`] event on its stream) or is
+//!   refused synchronously with [`EngineError::Overloaded`]. Both are
+//!   typed outcomes, never engine errors.
+//! * **Priority classes** — [`Priority::Interactive`] enqueues ahead of
+//!   [`Priority::Batch`] and displaces it under overload; within a
+//!   class, FIFO.
+//! * **Deadlines** — [`SubmitOptions::deadline`] is enforced *by the
+//!   server* as a scheduled termination: a queued request whose
+//!   deadline passes never reaches the engine; an admitted one is
+//!   terminated between steps via [`StepEngine::terminate`]. Either way
+//!   the stream ends with a terminal
+//!   [`FinishReason::DeadlineExceeded`] event carrying whatever was
+//!   generated — a deadline is an outcome, not an error.
+//!
+//! # Failure containment
+//!
+//! The engine's own recovery (retry + quarantine, see
+//! [`crate::serving::fault`]) absorbs epoch failures without the server
+//! noticing beyond terminal `Failed` events on the affected streams.
+//! Only if a step fails *persistently and unattributably* does the
+//! serving thread die — and then it fails every live stream with a
+//! terminal event, records the error in [`ServerReport::fatal`], and
+//! exits; clients never hang on a silently dead server.
+//!
+//! ```no_run
+//! use mpk::serving::{Priority, Request, ServeEngine, ServeServer, ServerConfig, SubmitOptions};
+//! use std::time::Duration;
+//!
+//! let server = ServeServer::spawn(
+//!     ServeEngine::builder().max_batch(4),
+//!     ServerConfig::default(),
+//! ).expect("needs `make artifacts` and a PJRT backend");
+//! let client = server.client();
+//! let stream = client.submit_with(
+//!     Request::new(1, vec![5, 9], 16),
+//!     SubmitOptions { priority: Priority::Interactive, deadline: Some(Duration::from_secs(2)) },
+//! ).unwrap();
+//! for event in stream {
+//!     println!("req {} -> {:?} {:?}", event.request, event.token, event.finish);
+//! }
+//! let report = server.shutdown();
+//! assert!(report.fatal.is_none());
+//! ```
+
+use crate::serving::batcher::Request;
+use crate::serving::engine::{EngineBuilder, ServeEngine, ServeStats};
+use crate::serving::error::EngineError;
+use crate::serving::step::{FinishReason, StepOutcome, TokenEvent};
+use std::collections::{HashMap, VecDeque};
+use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender, TryRecvError};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// What the serving thread needs from an engine: the step-driven
+/// surface of [`ServeEngine`], abstracted so the server loop (and its
+/// tests) can run against a lightweight mock
+/// ([`MockEngine`](crate::serving::mock::MockEngine)) without artifacts
+/// or a backend. `Send` is a supertrait because the engine moves onto
+/// the serving thread.
+pub trait StepEngine: Send {
+    /// Queue a request for admission at the next step.
+    fn submit(&mut self, r: Request) -> Result<(), EngineError>;
+    /// Would `submit` accept this request right now? Non-mutating.
+    fn validate(&self, r: &Request) -> Result<(), EngineError>;
+    /// Retire a request now with the given terminal reason; its
+    /// terminal event rides the next step's outcome.
+    fn terminate(&mut self, id: u64, reason: FinishReason) -> Result<(), EngineError>;
+    /// One decode iteration.
+    fn step(&mut self) -> Result<StepOutcome, EngineError>;
+    /// True while the engine holds work or undelivered terminal events.
+    fn has_work(&self) -> bool;
+    /// Concurrent-request ceiling (batch slots).
+    fn capacity(&self) -> usize;
+    /// Requests currently inside the engine (active + waiting).
+    fn in_flight(&self) -> usize;
+    /// Drain retired requests, releasing their ids for reuse.
+    fn take_finished(&mut self) -> Vec<Request>;
+    /// Close and return the current stats window.
+    fn take_stats(&mut self) -> ServeStats;
+}
+
+impl StepEngine for ServeEngine {
+    fn submit(&mut self, r: Request) -> Result<(), EngineError> {
+        ServeEngine::submit(self, r)
+    }
+    fn validate(&self, r: &Request) -> Result<(), EngineError> {
+        ServeEngine::validate(self, r)
+    }
+    fn terminate(&mut self, id: u64, reason: FinishReason) -> Result<(), EngineError> {
+        ServeEngine::terminate(self, id, reason)
+    }
+    fn step(&mut self) -> Result<StepOutcome, EngineError> {
+        ServeEngine::step(self)
+    }
+    fn has_work(&self) -> bool {
+        ServeEngine::has_work(self)
+    }
+    fn capacity(&self) -> usize {
+        ServeEngine::capacity(self)
+    }
+    fn in_flight(&self) -> usize {
+        ServeEngine::in_flight(self)
+    }
+    fn take_finished(&mut self) -> Vec<Request> {
+        ServeEngine::take_finished(self)
+    }
+    fn take_stats(&mut self) -> ServeStats {
+        ServeEngine::take_stats(self)
+    }
+}
+
+/// Admission priority class. [`Priority::Interactive`] enqueues ahead
+/// of [`Priority::Batch`] and displaces it when the wait queue is full;
+/// within a class, admission is FIFO. The derived order makes the
+/// *smaller* variant outrank the larger one.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Priority {
+    /// Latency-sensitive traffic (the default).
+    #[default]
+    Interactive,
+    /// Throughput traffic: first to wait, first to be shed.
+    Batch,
+}
+
+/// Per-submission options for [`ServerClient::submit_with`].
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SubmitOptions {
+    /// Admission class under load; see [`Priority`].
+    pub priority: Priority,
+    /// Relative deadline, measured from acceptance. When it passes
+    /// before the request finishes, the server terminates it with
+    /// [`FinishReason::DeadlineExceeded`] (keeping partial output);
+    /// `None` means no deadline.
+    pub deadline: Option<Duration>,
+}
+
+/// Server shape knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct ServerConfig {
+    /// Bound on the server-side wait queue. A submission beyond it is
+    /// shed (displacement or [`EngineError::Overloaded`]); the engine's
+    /// own slot count bounds what runs concurrently.
+    pub queue_depth: usize,
+    /// How long the serving thread blocks for a command when fully
+    /// idle. Bounds shutdown latency, not correctness — while work or
+    /// commands exist the loop never sleeps.
+    pub idle_poll: Duration,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig { queue_depth: 64, idle_poll: Duration::from_millis(1) }
+    }
+}
+
+/// Counters the serving thread hands back at
+/// [`ServeServer::shutdown`].
+#[derive(Clone, Debug, Default)]
+pub struct ServerReport {
+    /// Terminal events delivered, any reason — every accepted request
+    /// ends in exactly one of these.
+    pub finished: usize,
+    /// Accepted-then-displaced requests (terminal
+    /// [`FinishReason::Shed`]).
+    pub shed: usize,
+    /// Synchronous [`EngineError::Overloaded`] refusals (never
+    /// accepted, so not part of [`ServerReport::finished`]).
+    pub rejected: usize,
+    /// Terminal [`FinishReason::DeadlineExceeded`] deliveries.
+    pub deadline_expired: usize,
+    /// Terminal [`FinishReason::Failed`] deliveries (fault quarantine,
+    /// or the fatal-path broadcast).
+    pub quarantined: usize,
+    /// Set when the serving thread died on a persistent unattributable
+    /// step failure (after failing every live stream); `None` on a
+    /// graceful shutdown.
+    pub fatal: Option<EngineError>,
+    /// The engine's final stats window.
+    pub stats: ServeStats,
+}
+
+/// Live queue/slot occupancy, via [`ServerClient::status`].
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ServerStatus {
+    pub queued: usize,
+    pub in_flight: usize,
+    pub capacity: usize,
+    pub finished: usize,
+    pub shed: usize,
+    pub rejected: usize,
+}
+
+/// A per-request event stream: everything the engine emits for one
+/// request, ending with exactly one terminal event (`finish: Some(_)`)
+/// — unless the serving thread panicked, in which case the stream just
+/// disconnects. Iterate it, or use [`TokenStream::collect_output`].
+pub struct TokenStream {
+    id: u64,
+    rx: Receiver<TokenEvent>,
+}
+
+impl TokenStream {
+    /// The request id this stream belongs to.
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    /// Block for the next event; `None` once the terminal event has
+    /// been consumed (or the server is gone).
+    pub fn recv(&self) -> Option<TokenEvent> {
+        self.rx.recv().ok()
+    }
+
+    /// Drain the stream to its terminal event: the tokens generated and
+    /// the finish reason (`None` only if the server died without
+    /// delivering one).
+    pub fn collect_output(self) -> (Vec<i32>, Option<FinishReason>) {
+        let mut tokens = Vec::new();
+        let mut finish = None;
+        for ev in self.rx.iter() {
+            if let Some(t) = ev.token {
+                tokens.push(t);
+            }
+            if ev.finish.is_some() {
+                finish = ev.finish;
+                break;
+            }
+        }
+        (tokens, finish)
+    }
+}
+
+impl Iterator for TokenStream {
+    type Item = TokenEvent;
+    /// Yields events up to and including the terminal one, then `None`
+    /// (the server drops its sender after the terminal event).
+    fn next(&mut self) -> Option<TokenEvent> {
+        self.rx.recv().ok()
+    }
+}
+
+/// A cheap, cloneable handle for talking to the serving thread from any
+/// thread. Every call is a synchronous RPC over the command channel;
+/// once the server is gone, calls return [`EngineError::ServerClosed`].
+#[derive(Clone)]
+pub struct ServerClient {
+    tx: Sender<Command>,
+}
+
+impl ServerClient {
+    /// Submit with default options (interactive, no deadline). See
+    /// [`ServerClient::submit_with`].
+    pub fn submit(&self, r: Request) -> Result<TokenStream, EngineError> {
+        self.submit_with(r, SubmitOptions::default())
+    }
+
+    /// Submit a request; on acceptance the returned [`TokenStream`]
+    /// carries its events. Typed synchronous refusals: the engine's
+    /// validation errors ([`EngineError::RequestTooLong`] etc.),
+    /// [`EngineError::DuplicateId`] for an id with a live stream,
+    /// [`EngineError::Overloaded`] when the wait queue is full and
+    /// nothing queued outranks this submission, and
+    /// [`EngineError::ServerClosed`] after shutdown.
+    pub fn submit_with(&self, r: Request, opts: SubmitOptions) -> Result<TokenStream, EngineError> {
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .send(Command::Submit { req: r, opts, reply })
+            .map_err(|_| EngineError::ServerClosed)?;
+        rx.recv().map_err(|_| EngineError::ServerClosed)?
+    }
+
+    /// Cancel a request wherever it is — server queue, engine queue, or
+    /// active. Its stream ends with a terminal
+    /// [`FinishReason::Cancelled`] event. Same typed refusals as
+    /// [`ServeEngine::cancel`].
+    pub fn cancel(&self, id: u64) -> Result<(), EngineError> {
+        let (reply, rx) = mpsc::channel();
+        self.tx.send(Command::Cancel { id, reply }).map_err(|_| EngineError::ServerClosed)?;
+        rx.recv().map_err(|_| EngineError::ServerClosed)?
+    }
+
+    /// Snapshot of queue/slot occupancy and shed counters.
+    pub fn status(&self) -> Result<ServerStatus, EngineError> {
+        let (reply, rx) = mpsc::channel();
+        self.tx.send(Command::Status { reply }).map_err(|_| EngineError::ServerClosed)?;
+        rx.recv().map_err(|_| EngineError::ServerClosed)
+    }
+}
+
+enum Command {
+    Submit { req: Request, opts: SubmitOptions, reply: Sender<Result<TokenStream, EngineError>> },
+    Cancel { id: u64, reply: Sender<Result<(), EngineError>> },
+    Status { reply: Sender<ServerStatus> },
+    Shutdown,
+}
+
+/// The serving thread handle. Dropping it shuts the server down
+/// (best-effort, discarding the report); call [`ServeServer::shutdown`]
+/// to drain gracefully and get the [`ServerReport`].
+pub struct ServeServer {
+    tx: Sender<Command>,
+    thread: Option<JoinHandle<ServerReport>>,
+}
+
+impl ServeServer {
+    /// Build the engine from `builder` **on the caller's thread** — so
+    /// configuration and resource errors surface synchronously as
+    /// typed errors, not as a dead serving thread — then start the
+    /// serving loop with it.
+    pub fn spawn(builder: EngineBuilder, cfg: ServerConfig) -> Result<ServeServer, EngineError> {
+        let engine = builder.build()?;
+        Ok(Self::spawn_with(engine, cfg))
+    }
+
+    /// Start the serving loop over any [`StepEngine`] — the real
+    /// engine, or a mock for testing the front-end without artifacts.
+    pub fn spawn_with<E: StepEngine + 'static>(engine: E, cfg: ServerConfig) -> ServeServer {
+        let (tx, rx) = mpsc::channel();
+        let thread = std::thread::Builder::new()
+            .name("mpk-serve".into())
+            .spawn(move || ServerState::new(engine, cfg).run(rx))
+            .expect("failed to spawn serving thread");
+        ServeServer { tx, thread: Some(thread) }
+    }
+
+    /// A new client handle (clone freely, hand to any thread).
+    pub fn client(&self) -> ServerClient {
+        ServerClient { tx: self.tx.clone() }
+    }
+
+    /// Graceful shutdown: stop accepting submissions, drain everything
+    /// queued and in flight to its terminal event, then join the thread
+    /// and return its [`ServerReport`].
+    pub fn shutdown(mut self) -> ServerReport {
+        let _ = self.tx.send(Command::Shutdown);
+        match self.thread.take().expect("thread present until shutdown").join() {
+            Ok(report) => report,
+            // the serving thread panicked: synthesize the failure
+            // instead of propagating the panic into the caller.
+            Err(_) => ServerReport { fatal: Some(EngineError::ServerClosed), ..Default::default() },
+        }
+    }
+}
+
+impl Drop for ServeServer {
+    fn drop(&mut self) {
+        if let Some(thread) = self.thread.take() {
+            let _ = self.tx.send(Command::Shutdown);
+            let _ = thread.join();
+        }
+    }
+}
+
+/// An accepted-but-not-yet-admitted request in the server's wait queue.
+struct Queued {
+    req: Request,
+    priority: Priority,
+    /// Absolute deadline (acceptance time + relative deadline).
+    deadline: Option<Instant>,
+}
+
+/// Everything the serving thread owns.
+struct ServerState<E: StepEngine> {
+    engine: E,
+    cfg: ServerConfig,
+    /// Bounded wait queue, kept sorted by priority class (stable FIFO
+    /// within a class).
+    queue: VecDeque<Queued>,
+    /// Live per-request event senders — every accepted request has one
+    /// from acceptance until its terminal event.
+    streams: HashMap<u64, Sender<TokenEvent>>,
+    /// Absolute deadlines of requests already handed to the engine.
+    deadlines: HashMap<u64, Instant>,
+    report: ServerReport,
+    closing: bool,
+}
+
+impl<E: StepEngine> ServerState<E> {
+    fn new(engine: E, cfg: ServerConfig) -> Self {
+        ServerState {
+            engine,
+            cfg,
+            queue: VecDeque::new(),
+            streams: HashMap::new(),
+            deadlines: HashMap::new(),
+            report: ServerReport::default(),
+            closing: false,
+        }
+    }
+
+    /// The serving loop: drain commands → expire deadlines → admit →
+    /// step and fan out → (idle) block briefly for the next command.
+    fn run(mut self, rx: Receiver<Command>) -> ServerReport {
+        loop {
+            loop {
+                match rx.try_recv() {
+                    Ok(cmd) => self.handle(cmd),
+                    Err(TryRecvError::Empty) => break,
+                    Err(TryRecvError::Disconnected) => {
+                        self.closing = true;
+                        break;
+                    }
+                }
+            }
+            self.expire_deadlines(Instant::now());
+            self.admit();
+            if self.engine.has_work() {
+                match self.engine.step() {
+                    Ok(outcome) => {
+                        for ev in outcome.events {
+                            self.deliver(ev);
+                        }
+                        // release retired ids promptly so clients can
+                        // reuse them (and the engine's finished list
+                        // stays bounded).
+                        self.engine.take_finished();
+                    }
+                    Err(err) => return self.fail_fatally(err),
+                }
+            } else if self.closing {
+                break;
+            } else {
+                match rx.recv_timeout(self.cfg.idle_poll) {
+                    Ok(cmd) => self.handle(cmd),
+                    Err(RecvTimeoutError::Timeout) => {}
+                    Err(RecvTimeoutError::Disconnected) => self.closing = true,
+                }
+            }
+        }
+        // graceful exit: nothing queued, engine drained. Any stream
+        // still open here is a bookkeeping leak — fail it with a
+        // terminal event rather than leaving its client blocked on a
+        // vanished sender.
+        let leaked: Vec<u64> = self.streams.keys().copied().collect();
+        for id in leaked {
+            self.finish_local(id, FinishReason::Failed);
+        }
+        self.report.stats = self.engine.take_stats();
+        self.report
+    }
+
+    fn handle(&mut self, cmd: Command) {
+        match cmd {
+            Command::Submit { req, opts, reply } => {
+                let res = self.accept(req, opts);
+                let _ = reply.send(res);
+            }
+            Command::Cancel { id, reply } => {
+                let res = self.cancel(id);
+                let _ = reply.send(res);
+            }
+            Command::Status { reply } => {
+                let _ = reply.send(ServerStatus {
+                    queued: self.queue.len(),
+                    in_flight: self.engine.in_flight(),
+                    capacity: self.engine.capacity(),
+                    finished: self.report.finished,
+                    shed: self.report.shed,
+                    rejected: self.report.rejected,
+                });
+            }
+            Command::Shutdown => self.closing = true,
+        }
+    }
+
+    /// Admission control for one submission: duplicate and engine
+    /// validation first (both non-mutating), then the bounded-queue
+    /// policy — displace a strictly lower-priority queued request or
+    /// refuse with [`EngineError::Overloaded`] — then enqueue by
+    /// priority class and hand back the stream.
+    fn accept(&mut self, req: Request, opts: SubmitOptions) -> Result<TokenStream, EngineError> {
+        if self.closing {
+            return Err(EngineError::ServerClosed);
+        }
+        let id = req.id;
+        if self.streams.contains_key(&id) {
+            return Err(EngineError::DuplicateId { id });
+        }
+        self.engine.validate(&req)?;
+        if self.queue.len() >= self.cfg.queue_depth {
+            // shed order: the most recently enqueued request of a
+            // strictly lower class — Batch pays before Interactive,
+            // and older waiters outlive newer ones.
+            match self.queue.iter().rposition(|q| q.priority > opts.priority) {
+                Some(pos) => {
+                    let victim = self.queue.remove(pos).expect("position from iterator");
+                    self.finish_local(victim.req.id, FinishReason::Shed);
+                }
+                None => {
+                    self.report.rejected += 1;
+                    return Err(EngineError::Overloaded { id, queue_depth: self.cfg.queue_depth });
+                }
+            }
+        }
+        let (tx, rx) = mpsc::channel();
+        self.streams.insert(id, tx);
+        let deadline = opts.deadline.map(|d| Instant::now() + d);
+        // insert after the last entry of the same or a higher class:
+        // FIFO within a class, Interactive ahead of Batch.
+        let pos = self
+            .queue
+            .iter()
+            .rposition(|q| q.priority <= opts.priority)
+            .map_or(0, |p| p + 1);
+        self.queue.insert(pos, Queued { req, priority: opts.priority, deadline });
+        Ok(TokenStream { id, rx })
+    }
+
+    fn cancel(&mut self, id: u64) -> Result<(), EngineError> {
+        // still in the server's wait queue: never reached the engine.
+        if let Some(pos) = self.queue.iter().position(|q| q.req.id == id) {
+            self.queue.remove(pos);
+            self.finish_local(id, FinishReason::Cancelled);
+            return Ok(());
+        }
+        // inside the engine (waiting or active): its terminal event
+        // arrives through the next step's outcome.
+        self.engine.terminate(id, FinishReason::Cancelled)
+    }
+
+    /// Enforce deadlines as scheduled terminations. Queued requests
+    /// finish locally (they never reach the engine); admitted ones are
+    /// terminated in the engine and their terminal event arrives
+    /// through the next step.
+    fn expire_deadlines(&mut self, now: Instant) {
+        let mut i = 0;
+        while i < self.queue.len() {
+            if self.queue[i].deadline.is_some_and(|d| d <= now) {
+                let q = self.queue.remove(i).expect("index in bounds");
+                self.finish_local(q.req.id, FinishReason::DeadlineExceeded);
+            } else {
+                i += 1;
+            }
+        }
+        let expired: Vec<u64> = self
+            .deadlines
+            .iter()
+            .filter(|(_, &d)| d <= now)
+            .map(|(&id, _)| id)
+            .collect();
+        for id in expired {
+            self.deadlines.remove(&id);
+            // AlreadyFinished means the request beat its deadline to a
+            // terminal state this very tick — nothing to do.
+            let _ = self.engine.terminate(id, FinishReason::DeadlineExceeded);
+        }
+    }
+
+    /// Refill engine slots from the front of the wait queue.
+    fn admit(&mut self) {
+        while self.engine.in_flight() < self.engine.capacity() {
+            let Some(q) = self.queue.pop_front() else { break };
+            let id = q.req.id;
+            match self.engine.submit(q.req) {
+                Ok(()) => {
+                    if let Some(d) = q.deadline {
+                        self.deadlines.insert(id, d);
+                    }
+                }
+                // validated at acceptance, so this is unreachable in
+                // practice — but a request must never vanish without a
+                // terminal event, so fail its stream rather than drop.
+                Err(_) => self.finish_local(id, FinishReason::Failed),
+            }
+        }
+    }
+
+    /// Deliver one engine event to its stream; a terminal event closes
+    /// the stream (dropping the sender ends the client's iterator) and
+    /// updates the report counters.
+    fn deliver(&mut self, ev: TokenEvent) {
+        let id = ev.request;
+        let finish = ev.finish;
+        if let Some(tx) = self.streams.get(&id) {
+            // a client that dropped its stream stops receiving; the
+            // request still runs to its terminal state (cancel is the
+            // explicit way to stop paying for it).
+            let _ = tx.send(ev);
+        }
+        if let Some(reason) = finish {
+            self.streams.remove(&id);
+            self.deadlines.remove(&id);
+            self.report.finished += 1;
+            match reason {
+                FinishReason::Shed => self.report.shed += 1,
+                FinishReason::DeadlineExceeded => self.report.deadline_expired += 1,
+                FinishReason::Failed => self.report.quarantined += 1,
+                _ => {}
+            }
+        }
+    }
+
+    /// Terminate a request that never reached (or never re-reaches) the
+    /// engine: synthesize its terminal event server-side.
+    fn finish_local(&mut self, id: u64, reason: FinishReason) {
+        self.deliver(TokenEvent { request: id, token: None, finish: Some(reason) });
+    }
+
+    /// A step failed beyond recovery: fail every live stream with a
+    /// terminal event (no client may hang), record the error, and hand
+    /// back the report.
+    fn fail_fatally(mut self, err: EngineError) -> ServerReport {
+        self.queue.clear();
+        let live: Vec<u64> = self.streams.keys().copied().collect();
+        for id in live {
+            self.finish_local(id, FinishReason::Failed);
+        }
+        self.report.fatal = Some(err);
+        self.report.stats = self.engine.take_stats();
+        self.report
+    }
+}

@@ -18,6 +18,23 @@ pub enum FinishReason {
     /// Cancelled between steps via
     /// [`ServeEngine::cancel`](crate::serving::ServeEngine::cancel).
     Cancelled,
+    /// The request's deadline passed before it finished. The server
+    /// front-end enforces deadlines as scheduled terminations
+    /// ([`ServeEngine::terminate`](crate::serving::ServeEngine::terminate)
+    /// with this reason): the request retires exactly like a
+    /// cancellation, keeping whatever it generated so far.
+    DeadlineExceeded,
+    /// Shed from the server's bounded wait queue to admit a
+    /// higher-priority request under overload. Only requests that were
+    /// *accepted* (queued, stream handed out) are shed with a terminal
+    /// event; a submission refused outright gets the synchronous
+    /// [`EngineError::Overloaded`](crate::serving::EngineError::Overloaded)
+    /// rejection instead.
+    Shed,
+    /// Quarantined by the fault-recovery path: repeated epoch failures
+    /// were attributed to this request, so the engine retired it to
+    /// protect the rest of the batch instead of tearing itself down.
+    Failed,
 }
 
 /// One streamed notification for one request.
@@ -26,14 +43,15 @@ pub enum FinishReason {
 /// prefill (prompt-consuming iterations emit nothing — their logits
 /// belong to prompt positions). The last event carries
 /// `finish: Some(_)`; exactly one terminal event is emitted per
-/// request. A cancellation emits a terminal event with `token: None` —
-/// cancelling produces no token.
+/// request. Terminations that produce no token — cancellation,
+/// deadline expiry, shedding, quarantine — emit a terminal event with
+/// `token: None`.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct TokenEvent {
     /// Request id (as passed to `submit`).
     pub request: u64,
-    /// The token decoded this iteration; `None` only on a cancellation
-    /// event.
+    /// The token decoded this iteration; `None` on tokenless terminal
+    /// events (`Cancelled` / `DeadlineExceeded` / `Shed` / `Failed`).
     pub token: Option<i32>,
     /// Set on the request's terminal event, absent while it streams.
     pub finish: Option<FinishReason>,

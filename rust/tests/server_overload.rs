@@ -1,0 +1,602 @@
+//! Overload and fault suite for the serving front-end
+//! ([`mpk::serving::ServeServer`]), run entirely against the
+//! backend-free `MockEngine` — the same batcher, slot, KV, and
+//! fault-recovery machinery as the real engine, minus the kernel.
+//!
+//! Three layers:
+//!
+//! 1. Deterministic unit tests of each overload policy in isolation:
+//!    streaming + id reuse, queued and admitted deadline expiry,
+//!    priority-ordered admission, displacement shedding vs typed
+//!    `Overloaded` refusal, poison quarantine, and the
+//!    fatal-unattributable-failure path.
+//! 2. Seeded property tests (`mpk::proputil::forall`) over random
+//!    interleavings of submit / cancel / deadline-style termination /
+//!    faulted steps, asserting exactly-one-terminal per accepted
+//!    request, unique **stable** slots, and KV block conservation; plus
+//!    a server-level variant where shedding and real deadlines join the
+//!    mix and the report counters must reconcile exactly.
+//! 3. A threaded saturation stress: 1024 concurrent clients (32 threads
+//!    × 32 requests, jittered arrivals, mixed priorities and deadlines)
+//!    against a slow, fault-injected engine at several times slot
+//!    capacity. Every submission must resolve — a terminal event or a
+//!    typed rejection — with no lost or duplicated terminals and no
+//!    engine rebuild (`ServerReport::fatal` stays `None`).
+
+use mpk::proputil::forall;
+use mpk::serving::mock::MockEngine;
+use mpk::serving::{
+    EngineError, FaultPlan, FinishReason, Priority, Request, ServeServer, ServeStats,
+    ServerConfig, StepEngine, StepOutcome, SubmitOptions,
+};
+use mpk::util::XorShift64;
+use std::collections::HashMap;
+use std::time::Duration;
+
+/// A [`MockEngine`] whose steps take wall-clock time, so tests can hold
+/// requests in flight long enough to exercise queue backpressure,
+/// displacement shedding, and admitted-request deadline expiry — the
+/// mock alone decodes too fast for any of those windows to open.
+struct SlowEngine {
+    inner: MockEngine,
+    delay: Duration,
+}
+
+impl SlowEngine {
+    fn new(inner: MockEngine, delay: Duration) -> SlowEngine {
+        SlowEngine { inner, delay }
+    }
+}
+
+impl StepEngine for SlowEngine {
+    fn submit(&mut self, r: Request) -> Result<(), EngineError> {
+        self.inner.submit(r)
+    }
+    fn validate(&self, r: &Request) -> Result<(), EngineError> {
+        self.inner.validate(r)
+    }
+    fn terminate(&mut self, id: u64, reason: FinishReason) -> Result<(), EngineError> {
+        self.inner.terminate(id, reason)
+    }
+    fn step(&mut self) -> Result<StepOutcome, EngineError> {
+        std::thread::sleep(self.delay);
+        self.inner.step()
+    }
+    fn has_work(&self) -> bool {
+        self.inner.has_work()
+    }
+    fn capacity(&self) -> usize {
+        self.inner.capacity()
+    }
+    fn in_flight(&self) -> usize {
+        self.inner.in_flight()
+    }
+    fn take_finished(&mut self) -> Vec<Request> {
+        self.inner.take_finished()
+    }
+    fn take_stats(&mut self) -> ServeStats {
+        self.inner.take_stats()
+    }
+}
+
+// ---------------------------------------------------------------------
+// deterministic unit tests
+// ---------------------------------------------------------------------
+
+#[test]
+fn server_streams_and_releases_ids_for_reuse() {
+    let server = ServeServer::spawn_with(MockEngine::new(2), ServerConfig::default());
+    let client = server.client();
+    let (tokens, finish) = client.submit(Request::new(7, vec![1], 3)).unwrap().collect_output();
+    assert_eq!(tokens.len(), 3);
+    assert_eq!(finish, Some(FinishReason::MaxTokens));
+    // the terminal event released the id: a fresh request may reuse it.
+    let (tokens, finish) = client.submit(Request::new(7, vec![1, 2], 2)).unwrap().collect_output();
+    assert_eq!(tokens.len(), 2);
+    assert_eq!(finish, Some(FinishReason::MaxTokens));
+    let report = server.shutdown();
+    assert_eq!(report.finished, 2);
+    assert!(report.fatal.is_none());
+    assert_eq!(report.stats.tokens_generated, 5);
+}
+
+#[test]
+fn zero_deadline_expires_in_the_queue_before_admission() {
+    let server = ServeServer::spawn_with(MockEngine::new(1), ServerConfig::default());
+    let client = server.client();
+    let stream = client
+        .submit_with(
+            Request::new(1, vec![4], 8),
+            SubmitOptions { deadline: Some(Duration::ZERO), ..Default::default() },
+        )
+        .unwrap();
+    // deadline checks run before admission each tick, so an
+    // already-expired deadline deterministically beats the engine.
+    let (tokens, finish) = stream.collect_output();
+    assert!(tokens.is_empty(), "expired before admission, yet decoded {tokens:?}");
+    assert_eq!(finish, Some(FinishReason::DeadlineExceeded));
+    let report = server.shutdown();
+    assert_eq!(report.deadline_expired, 1);
+    assert_eq!(report.finished, 1);
+    assert!(report.fatal.is_none());
+}
+
+#[test]
+fn admitted_request_is_terminated_at_its_deadline() {
+    // 5ms steps x 400-token budget = ~2s without a deadline; the 40ms
+    // deadline must cut in long before, keeping partial output.
+    let server = ServeServer::spawn_with(
+        SlowEngine::new(MockEngine::new(1), Duration::from_millis(5)),
+        ServerConfig::default(),
+    );
+    let client = server.client();
+    let stream = client
+        .submit_with(
+            Request::new(1, vec![2], 400),
+            SubmitOptions { deadline: Some(Duration::from_millis(40)), ..Default::default() },
+        )
+        .unwrap();
+    let (tokens, finish) = stream.collect_output();
+    assert_eq!(finish, Some(FinishReason::DeadlineExceeded));
+    assert!(tokens.len() < 400, "deadline did not cut the budget short");
+    let report = server.shutdown();
+    assert_eq!(report.deadline_expired, 1);
+    assert!(report.fatal.is_none());
+}
+
+#[test]
+fn full_queue_sheds_lower_priority_or_refuses_typed() {
+    let server = ServeServer::spawn_with(
+        SlowEngine::new(MockEngine::new(1), Duration::from_millis(10)),
+        ServerConfig { queue_depth: 1, idle_poll: Duration::from_millis(1) },
+    );
+    let client = server.client();
+    // A occupies the only slot for ~2s of steps (cancelled below).
+    let a = client.submit(Request::new(1, vec![3], 200)).unwrap();
+    assert!(a.recv().expect("first token").token.is_some());
+    // B fills the depth-1 wait queue.
+    let b = client
+        .submit_with(
+            Request::new(2, vec![3], 2),
+            SubmitOptions { priority: Priority::Batch, ..Default::default() },
+        )
+        .unwrap();
+    // C finds the queue full with nothing strictly below Batch to
+    // displace: a typed, synchronous refusal — not an engine error.
+    let err = client
+        .submit_with(
+            Request::new(3, vec![3], 2),
+            SubmitOptions { priority: Priority::Batch, ..Default::default() },
+        )
+        .unwrap_err();
+    assert!(matches!(err, EngineError::Overloaded { id: 3, queue_depth: 1 }), "got: {err}");
+    // D outranks the queued Batch request and displaces it.
+    let d = client.submit_with(Request::new(4, vec![3], 2), SubmitOptions::default()).unwrap();
+    let (b_tokens, b_finish) = b.collect_output();
+    assert!(b_tokens.is_empty());
+    assert_eq!(b_finish, Some(FinishReason::Shed));
+    let status = client.status().unwrap();
+    assert_eq!(status.capacity, 1);
+    assert_eq!(status.in_flight, 1, "A still holds the slot");
+    assert_eq!(status.queued, 1, "D waits behind A");
+    assert_eq!(status.shed, 1);
+    assert_eq!(status.rejected, 1);
+    // free the slot; D runs to completion.
+    client.cancel(1).unwrap();
+    let (_, a_finish) = a.collect_output();
+    assert_eq!(a_finish, Some(FinishReason::Cancelled));
+    let (d_tokens, d_finish) = d.collect_output();
+    assert_eq!(d_tokens.len(), 2);
+    assert_eq!(d_finish, Some(FinishReason::MaxTokens));
+    let report = server.shutdown();
+    assert_eq!(report.shed, 1);
+    assert_eq!(report.rejected, 1);
+    assert_eq!(report.finished, 3, "A cancelled + B shed + D completed");
+    assert!(report.fatal.is_none());
+}
+
+#[test]
+fn interactive_is_admitted_before_earlier_batch_submissions() {
+    let server = ServeServer::spawn_with(
+        SlowEngine::new(MockEngine::new(1), Duration::from_millis(3)),
+        ServerConfig::default(),
+    );
+    let client = server.client();
+    // blocker holds the single slot while B and C queue up.
+    let a = client.submit(Request::new(1, vec![5], 60)).unwrap();
+    assert!(a.recv().expect("first token").token.is_some());
+    let b = client
+        .submit_with(
+            Request::new(2, vec![5], 2),
+            SubmitOptions { priority: Priority::Batch, ..Default::default() },
+        )
+        .unwrap();
+    let c = client.submit_with(Request::new(3, vec![5], 2), SubmitOptions::default()).unwrap();
+    client.cancel(1).unwrap();
+    let (c_tokens, c_finish) = c.collect_output();
+    let (b_tokens, b_finish) = b.collect_output();
+    assert_eq!(c_finish, Some(FinishReason::MaxTokens));
+    assert_eq!(b_finish, Some(FinishReason::MaxTokens));
+    // mock token values are global step numbers: with one slot, the
+    // later-submitted Interactive request decoding strictly first means
+    // all its tokens numerically precede the Batch request's.
+    assert!(
+        c_tokens.iter().max() < b_tokens.iter().min(),
+        "interactive {c_tokens:?} must fully precede batch {b_tokens:?}"
+    );
+    let report = server.shutdown();
+    assert_eq!(report.finished, 3);
+    assert!(report.fatal.is_none());
+}
+
+#[test]
+fn poisoned_request_is_quarantined_while_survivors_complete() {
+    let engine =
+        MockEngine::new(2).with_faults(FaultPlan { poison: Some(1), ..Default::default() }, 1);
+    let server = ServeServer::spawn_with(engine, ServerConfig::default());
+    let client = server.client();
+    let poisoned = client.submit(Request::new(1, vec![3, 4], 4)).unwrap();
+    let survivor = client.submit(Request::new(2, vec![5], 2)).unwrap();
+    let (p_tokens, p_finish) = poisoned.collect_output();
+    assert!(p_tokens.is_empty(), "poison fires before any decode: {p_tokens:?}");
+    assert_eq!(p_finish, Some(FinishReason::Failed));
+    let (s_tokens, s_finish) = survivor.collect_output();
+    assert_eq!(s_tokens.len(), 2, "the survivor must decode its full budget");
+    assert_eq!(s_finish, Some(FinishReason::MaxTokens));
+    let report = server.shutdown();
+    assert_eq!(report.quarantined, 1);
+    assert_eq!(report.stats.requests_quarantined, 1);
+    assert!(report.stats.faulted_epochs >= 2, "retry budget 1 needs two failures to quarantine");
+    assert!(report.fatal.is_none());
+}
+
+#[test]
+fn unattributable_persistent_failure_fails_streams_and_reports_fatal() {
+    // every epoch fails with no per-request attribution: retries exhaust
+    // and the serving thread dies loudly — streams get a terminal
+    // `Failed`, clients get `ServerClosed`, the report carries the error.
+    let engine =
+        MockEngine::new(2).with_faults(FaultPlan { kernel_rate: 1.0, ..Default::default() }, 2);
+    let server = ServeServer::spawn_with(engine, ServerConfig::default());
+    let client = server.client();
+    let stream = client.submit(Request::new(1, vec![2], 4)).unwrap();
+    let (tokens, finish) = stream.collect_output();
+    assert!(tokens.is_empty());
+    assert_eq!(finish, Some(FinishReason::Failed), "no client may hang on a dead server");
+    let report = server.shutdown();
+    assert!(matches!(report.fatal, Some(EngineError::Kernel(_))), "got: {:?}", report.fatal);
+    assert_eq!(report.quarantined, 1, "the fatal broadcast fails the live stream");
+    assert!(matches!(
+        client.submit(Request::new(9, vec![1], 1)),
+        Err(EngineError::ServerClosed)
+    ));
+}
+
+// ---------------------------------------------------------------------
+// property tests: random interleavings
+// ---------------------------------------------------------------------
+
+#[derive(Debug, Clone, Copy)]
+enum Op {
+    Submit { prompt: usize, gen: usize },
+    /// Models the server's scheduled terminations (cancel / deadline)
+    /// landing between steps.
+    Terminate { victim: usize, deadline: bool },
+    Step,
+}
+
+#[derive(Debug)]
+struct FaultedScript {
+    capacity: usize,
+    plan: FaultPlan,
+    ops: Vec<Op>,
+}
+
+fn random_script(rng: &mut XorShift64) -> FaultedScript {
+    let plan = FaultPlan {
+        seed: rng.next_u64(),
+        // modest rates + a 12-retry budget keep an unattributable
+        // failure streak (which would legitimately error the step)
+        // astronomically unlikely, so the property can demand Ok.
+        kernel_rate: rng.f64() * 0.1,
+        task_rate: rng.f64() * 0.1,
+        poison: (rng.below(4) == 0).then(|| rng.below(8) as u64),
+    };
+    FaultedScript {
+        capacity: rng.range(1, 4),
+        plan,
+        ops: (0..rng.range(8, 48))
+            .map(|_| match rng.below(10) {
+                0..=4 => Op::Submit { prompt: rng.range(1, 5), gen: rng.range(1, 5) },
+                5 | 6 => Op::Terminate { victim: rng.below(64), deadline: rng.below(2) == 0 },
+                _ => Op::Step,
+            })
+            .collect(),
+    }
+}
+
+/// Slots must be unique, in bounds, and — per request — unchanged from
+/// admission to retirement (ids are never reused within a case).
+fn check_slots(e: &MockEngine, ledger: &mut HashMap<u64, usize>) -> Result<(), String> {
+    let mut seen = vec![false; e.capacity()];
+    for (id, slot) in e.active_slots() {
+        if slot >= e.capacity() {
+            return Err(format!("req {id} slot {slot} out of bounds"));
+        }
+        if seen[slot] {
+            return Err(format!("slot {slot} occupied twice"));
+        }
+        seen[slot] = true;
+        match ledger.get(&id) {
+            None => {
+                ledger.insert(id, slot);
+            }
+            Some(&home) if home == slot => {}
+            Some(&home) => return Err(format!("req {id} moved slot {home} -> {slot}")),
+        }
+    }
+    Ok(())
+}
+
+fn drive_faulted(s: &FaultedScript) -> Result<(), String> {
+    let mut e = MockEngine::new(s.capacity).with_faults(s.plan, 12);
+    let total = e.kv_total_blocks();
+    let mut events = Vec::new();
+    let mut accepted: Vec<u64> = Vec::new();
+    let mut next_id = 0u64;
+    let mut ledger = HashMap::new();
+    for op in &s.ops {
+        match *op {
+            Op::Submit { prompt, gen } => {
+                let id = next_id;
+                next_id += 1;
+                if e.submit(Request::new(id, vec![1; prompt], gen)).is_ok() {
+                    accepted.push(id);
+                }
+            }
+            Op::Terminate { victim, deadline } => {
+                if next_id > 0 {
+                    let id = victim as u64 % next_id;
+                    let reason = if deadline {
+                        FinishReason::DeadlineExceeded
+                    } else {
+                        FinishReason::Cancelled
+                    };
+                    // unknown / already-finished targets are fine — the
+                    // server ignores those races the same way.
+                    let _ = e.terminate(id, reason);
+                }
+            }
+            Op::Step => {
+                let out = e.step().map_err(|err| format!("step gave up: {err}"))?;
+                events.extend(out.events);
+                check_slots(&e, &mut ledger)?;
+            }
+        }
+    }
+    let mut guard = 0;
+    while e.has_work() {
+        guard += 1;
+        if guard > 10_000 {
+            return Err("drain livelock".into());
+        }
+        let out = e.step().map_err(|err| format!("step gave up: {err}"))?;
+        events.extend(out.events);
+        check_slots(&e, &mut ledger)?;
+        e.take_finished();
+    }
+    if e.kv_free_blocks() != total {
+        return Err(format!("KV leak: {} of {} blocks free after drain", e.kv_free_blocks(), total));
+    }
+    for &id in &accepted {
+        let terminals = events.iter().filter(|ev| ev.request == id && ev.finish.is_some()).count();
+        if terminals != 1 {
+            return Err(format!("req {id} got {terminals} terminal events, want exactly 1"));
+        }
+    }
+    for ev in &events {
+        if !accepted.contains(&ev.request) {
+            return Err(format!("event for never-accepted req {}", ev.request));
+        }
+    }
+    Ok(())
+}
+
+#[test]
+fn prop_faulted_interleavings_conserve_slots_kv_and_terminals() {
+    forall("faulted-interleavings", 0xfa57, 64, random_script, drive_faulted);
+}
+
+#[derive(Debug)]
+struct ClientPlan {
+    batch: bool,
+    deadline_ms: Option<usize>,
+    prompt: usize,
+    gen: usize,
+    cancel: bool,
+}
+
+#[derive(Debug)]
+struct ServerScript {
+    capacity: usize,
+    queue_depth: usize,
+    delay_us: usize,
+    plan: FaultPlan,
+    clients: Vec<ClientPlan>,
+}
+
+fn random_server_script(rng: &mut XorShift64) -> ServerScript {
+    ServerScript {
+        capacity: rng.range(1, 3),
+        queue_depth: rng.range(1, 4),
+        delay_us: rng.range(100, 1200),
+        plan: FaultPlan {
+            seed: rng.next_u64(),
+            kernel_rate: rng.f64() * 0.05,
+            task_rate: rng.f64() * 0.05,
+            poison: None,
+        },
+        clients: (0..rng.range(4, 20))
+            .map(|_| ClientPlan {
+                batch: rng.below(2) == 0,
+                deadline_ms: (rng.below(4) == 0).then(|| rng.below(4)),
+                prompt: rng.range(1, 3),
+                gen: rng.range(1, 5),
+                cancel: rng.below(8) == 0,
+            })
+            .collect(),
+    }
+}
+
+/// Whatever mix of completion, cancellation, deadline expiry, shedding,
+/// and fault quarantine each request hits, the books must balance:
+/// every submission resolves into exactly one terminal event or one
+/// typed rejection, and the server's counters agree with the client's.
+fn drive_server(s: &ServerScript) -> Result<(), String> {
+    let engine = SlowEngine::new(
+        MockEngine::new(s.capacity).with_faults(s.plan, 16),
+        Duration::from_micros(s.delay_us as u64),
+    );
+    let server = ServeServer::spawn_with(
+        engine,
+        ServerConfig { queue_depth: s.queue_depth, idle_poll: Duration::from_micros(200) },
+    );
+    let client = server.client();
+    let mut streams = Vec::new();
+    let mut rejected = 0usize;
+    for (i, c) in s.clients.iter().enumerate() {
+        let opts = SubmitOptions {
+            priority: if c.batch { Priority::Batch } else { Priority::Interactive },
+            deadline: c.deadline_ms.map(|ms| Duration::from_millis(ms as u64)),
+        };
+        match client.submit_with(Request::new(i as u64, vec![1; c.prompt], c.gen), opts) {
+            Ok(stream) => streams.push(stream),
+            Err(EngineError::Overloaded { .. }) => rejected += 1,
+            Err(err) => return Err(format!("unexpected refusal: {err}")),
+        }
+        if c.cancel {
+            // may target a queued, active, finished, shed, or rejected
+            // request depending on timing; all must be handled.
+            let _ = client.cancel(i as u64);
+        }
+    }
+    let accepted = streams.len();
+    for stream in streams {
+        let terminals = stream.filter(|ev| ev.finish.is_some()).count();
+        if terminals != 1 {
+            return Err(format!("a stream saw {terminals} terminal events, want exactly 1"));
+        }
+    }
+    let report = server.shutdown();
+    if let Some(err) = report.fatal {
+        return Err(format!("serving thread died: {err}"));
+    }
+    if accepted + rejected != s.clients.len() {
+        return Err(format!(
+            "{} accepted + {rejected} rejected != {} submissions",
+            accepted,
+            s.clients.len()
+        ));
+    }
+    // `finished` counts every terminal delivery, streamed or not — a
+    // duplicate terminal would inflate it past the accepted count.
+    if report.finished != accepted {
+        return Err(format!("{} terminals delivered for {accepted} accepted", report.finished));
+    }
+    if report.rejected != rejected {
+        return Err(format!("server counted {} rejections, client saw {rejected}", report.rejected));
+    }
+    Ok(())
+}
+
+#[test]
+fn prop_server_interleavings_reconcile_every_submission() {
+    forall("server-interleavings", 0x5e4e, 10, random_server_script, drive_server);
+}
+
+// ---------------------------------------------------------------------
+// saturation stress: 1024 concurrent clients
+// ---------------------------------------------------------------------
+
+#[test]
+fn saturation_1024_clients_with_faults_loses_nothing() {
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::sync::Arc;
+
+    const THREADS: usize = 32;
+    const PER_THREAD: usize = 32;
+
+    // 8 slots + a 16-deep queue against 32 concurrent submitters keeps
+    // the system several times oversubscribed, so shedding, priority
+    // displacement, and deadline expiry all fire; kernel faults are
+    // armed with a retry budget deep enough (16) that an unattributable
+    // give-up streak is out of reach (0.05^17).
+    let engine = SlowEngine::new(
+        MockEngine::new(8).with_faults(
+            FaultPlan { seed: 0xbeef, kernel_rate: 0.05, ..Default::default() },
+            16,
+        ),
+        Duration::from_micros(200),
+    );
+    let server = ServeServer::spawn_with(
+        engine,
+        ServerConfig { queue_depth: 16, idle_poll: Duration::from_micros(200) },
+    );
+    let terminals = Arc::new(AtomicUsize::new(0));
+    let rejected = Arc::new(AtomicUsize::new(0));
+    let handles: Vec<_> = (0..THREADS)
+        .map(|t| {
+            let client = server.client();
+            let terminals = Arc::clone(&terminals);
+            let rejected = Arc::clone(&rejected);
+            std::thread::spawn(move || {
+                let mut rng = XorShift64::new(0xc0ffee ^ t as u64);
+                for i in 0..PER_THREAD {
+                    // arrival jitter so submissions interleave rather
+                    // than phase-lock behind the command channel.
+                    std::thread::sleep(Duration::from_micros(rng.below(1500) as u64));
+                    let id = (t * PER_THREAD + i) as u64;
+                    let opts = SubmitOptions {
+                        priority: if rng.below(2) == 0 {
+                            Priority::Interactive
+                        } else {
+                            Priority::Batch
+                        },
+                        deadline: (rng.below(4) == 0)
+                            .then(|| Duration::from_millis(rng.below(8) as u64)),
+                    };
+                    let prompt = rng.range(1, 3);
+                    let gen = rng.range(1, 8);
+                    match client.submit_with(Request::new(id, vec![1; prompt], gen), opts) {
+                        Ok(stream) => {
+                            let (_tokens, finish) = stream.collect_output();
+                            assert!(finish.is_some(), "req {id} lost its terminal event");
+                            terminals.fetch_add(1, Ordering::Relaxed);
+                        }
+                        Err(EngineError::Overloaded { .. }) => {
+                            rejected.fetch_add(1, Ordering::Relaxed);
+                        }
+                        Err(err) => panic!("req {id}: unexpected refusal: {err}"),
+                    }
+                }
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().expect("client thread panicked");
+    }
+    let terminals = terminals.load(Ordering::Relaxed);
+    let rejected = rejected.load(Ordering::Relaxed);
+    assert_eq!(terminals + rejected, THREADS * PER_THREAD, "every submission must resolve");
+    let report = server.shutdown();
+    assert!(report.fatal.is_none(), "engine was rebuilt / thread died: {:?}", report.fatal);
+    // exactly one terminal delivery per accepted request: a lost one
+    // would hang its client above, a duplicate would inflate `finished`.
+    assert_eq!(report.finished, terminals);
+    assert_eq!(report.rejected, rejected);
+    assert!(
+        report.shed + report.deadline_expired + report.quarantined <= report.finished,
+        "terminal-reason counters must partition the terminals"
+    );
+    assert!(report.stats.faulted_epochs > 0, "faults were armed at 5% per epoch over 100s of epochs");
+}

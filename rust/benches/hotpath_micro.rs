@@ -13,7 +13,8 @@ use mpk::runtime::{ExecPool, Manifest, OutView, Value};
 use mpk::serving::mock::MockEngine;
 use mpk::serving::{
     Batcher, EngineError, FinishReason, KvAllocator, Priority, Request, ServeEngine, ServeServer,
-    ServeStats, ServerConfig, StepEngine, StepOutcome, SubmitOptions,
+    ServeStats, ServeTransport, ServerConfig, StepEngine, StepOutcome, SubmitOptions,
+    TransportClient, TransportConfig,
 };
 use mpk::sim::{simulate_megakernel, GpuSpec, SimOptions};
 use mpk::tgraph::{analyze_deps, compile, decompose, CompileOptions, DecomposeConfig};
@@ -422,6 +423,70 @@ fn bench_saturation(t: &mut Table) -> (u64, u64, u64, u64, u64) {
     (p50, max, accepted, shed, rejected)
 }
 
+/// The TCP transport boundary: what the wire layer adds on top of the
+/// in-process server RPC. A loopback [`ServeTransport`] over the
+/// instant mock, measured two ways — the median full request round
+/// trip (submit frame → Accepted → terminal Finish, crossing encode,
+/// two socket hops, the reader/pump/writer threads, and decode) and
+/// sustained streaming frame throughput on one long request. Returns
+/// `(round_trip_ns, stream_frames, frames_per_s)`.
+fn bench_transport(t: &mut Table) -> (u64, u64, u64) {
+    use std::time::{Duration, Instant};
+    let server = ServeServer::spawn_with(
+        MockEngine::new(4),
+        ServerConfig { queue_depth: 64, idle_poll: Duration::from_micros(200) },
+    );
+    let transport = ServeTransport::bind("127.0.0.1:0", server, TransportConfig::default())
+        .expect("bind loopback");
+    let mut client = TransportClient::connect(transport.local_addr()).expect("connect loopback");
+
+    // round trip: one-token requests, each driven to its terminal
+    // frame before the next begins (admission + stream + teardown of a
+    // whole request, not just a socket ping).
+    let mut next_id = 0u64;
+    let round_trip_ns = bench_median_ns(20, 200, || {
+        next_id += 1;
+        let (_, finish) = client
+            .run(next_id, vec![1], 1, SubmitOptions::default())
+            .expect("loopback round trip");
+        assert_eq!(finish, FinishReason::MaxTokens);
+    });
+
+    // streaming throughput: one long request, frames counted from the
+    // submit write to the terminal frame.
+    next_id += 1;
+    let budget = 500u64;
+    let t0 = Instant::now();
+    let (tokens, finish) = client
+        .run(next_id, vec![1], budget as u32, SubmitOptions::default())
+        .expect("loopback stream");
+    let elapsed = t0.elapsed();
+    assert_eq!(finish, FinishReason::MaxTokens);
+    assert_eq!(tokens.len() as u64, budget, "stream must deliver the full budget");
+    let stream_frames = budget + 1; // Accepted + budget-1 Token + Finish
+    let frames_per_s = (stream_frames as f64 / elapsed.as_secs_f64().max(1e-9)) as u64;
+
+    let report = transport.drain(Duration::from_secs(5));
+    assert!(report.server.fatal.is_none(), "transport bench left the server dead");
+    assert_eq!(
+        report.server.finished,
+        report.transport.requests_submitted as usize,
+        "transport bench left unreconciled requests"
+    );
+
+    t.row(vec![
+        "transport: request round trip".into(),
+        format!("{round_trip_ns} ns"),
+        "submit frame -> Accepted -> Finish over loopback TCP".into(),
+    ]);
+    t.row(vec![
+        "transport: streaming throughput".into(),
+        format!("{frames_per_s} frames/s"),
+        format!("{stream_frames} frames on one stream"),
+    ]);
+    (round_trip_ns, stream_frames, frames_per_s)
+}
+
 fn main() {
     println!("== hot-path microbenchmarks (median ns unless noted) ==\n");
     let mut t = Table::new(&["benchmark", "median", "note"]);
@@ -431,6 +496,7 @@ fn main() {
     let (exec_alloc_ns, exec_into_ns, exec_mode, exec_into_allocs) = bench_exec_into(&mut t);
     let (step_ns, kernel_ns, step_mode) = bench_step_overhead(&mut t);
     let (sat_p50, sat_max, sat_accepted, sat_shed, sat_rejected) = bench_saturation(&mut t);
+    let (wire_rt_ns, wire_frames, wire_fps) = bench_transport(&mut t);
 
     // queue push+pop round trip
     let q: MpmcQueue<usize> = MpmcQueue::new(1024);
@@ -594,5 +660,19 @@ fn main() {
     match std::fs::write(&sat_json_path, sat_json) {
         Ok(()) => println!("wrote {sat_json_path}"),
         Err(e) => eprintln!("could not write {sat_json_path}: {e}"),
+    }
+
+    // transport record: what the wire layer costs over the in-process
+    // RPC — loopback round-trip latency and streaming frame throughput.
+    // Backend-free (mock engine): tracks the transport across PRs.
+    let wire_json_path = std::env::var("MPK_BENCH_TRANSPORT_JSON")
+        .unwrap_or_else(|_| "BENCH_transport.json".to_string());
+    let wire_json = format!(
+        "{{\n  \"bench\": \"transport\",\n  \"round_trip_p50_ns\": {wire_rt_ns},\n  \
+         \"stream_frames\": {wire_frames},\n  \"stream_frames_per_s\": {wire_fps}\n}}\n"
+    );
+    match std::fs::write(&wire_json_path, wire_json) {
+        Ok(()) => println!("wrote {wire_json_path}"),
+        Err(e) => eprintln!("could not write {wire_json_path}: {e}"),
     }
 }

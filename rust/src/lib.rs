@@ -23,7 +23,11 @@
 //!   request) underneath. The embeddable `serving::ServeEngine`
 //!   (continuous batching + paged KV + stable slots, typed
 //!   `serving::EngineError` throughout) remains for callers that want
-//!   to own the loop.
+//!   to own the loop. `serving::ServeTransport` puts the server behind
+//!   a TCP socket: a versioned length-prefixed frame protocol
+//!   (`serving::wire`) with read/write deadlines, frame-size caps,
+//!   per-connection backpressure, disconnect-cancels-requests, and a
+//!   bounded graceful drain.
 //! * [`moe`] — expert routing + hybrid workload balancer (§6.4).
 //! * [`multigpu`] — tensor parallelism + collective decomposition (§6.5).
 #![deny(rustdoc::broken_intra_doc_links)]

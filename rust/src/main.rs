@@ -4,13 +4,19 @@
 //!   compile  <model> [--batch N] [--gpu NAME]   compiler-stage stats
 //!   simulate <model> [--batch N] [--gpu NAME]   MPK vs baselines on a roofline
 //!   serve    [--requests N] [--batch N]         real-numerics serving (needs artifacts)
+//!   serve    --listen ADDR [--requests N]       TCP serving (wire protocol + graceful drain)
 //!   models                                      list known model configs
 
 use mpk::megakernel::MegaConfig;
 use mpk::models::{build_decode_graph, GraphOptions, ModelConfig};
-use mpk::serving::{Request, ServeEngine};
+use mpk::serving::mock::MockEngine;
+use mpk::serving::{
+    Request, ServeEngine, ServeServer, ServeTransport, ServerConfig, SubmitOptions,
+    TransportClient, TransportConfig,
+};
 use mpk::sim::{simulate_baseline, simulate_megakernel, BaselineSystem, GpuSpec, SimOptions};
 use mpk::tgraph::{compile, CompileOptions, DecomposeConfig};
+use std::time::Duration;
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -65,6 +71,10 @@ fn main() {
         "serve" => {
             let n: usize = flag(&args, "--requests").and_then(|v| v.parse().ok()).unwrap_or(8);
             let batch: usize = flag(&args, "--batch").and_then(|v| v.parse().ok()).unwrap_or(4);
+            if let Some(addr) = flag(&args, "--listen") {
+                serve_listen(&addr, n, batch);
+                return;
+            }
             let mega = MegaConfig { workers: 6, schedulers: 2, ..Default::default() };
             let mut e = ServeEngine::builder().max_batch(batch).pool_threads(3).seed(42).mega(mega).build().expect(
                 "serving needs `make artifacts` and a real PJRT backend \
@@ -112,8 +122,63 @@ fn main() {
             println!("  mpk compile Qwen3-8B --batch 1 --gpu B200");
             println!("  mpk simulate Qwen3-1.7B --batch 4 --gpu A100");
             println!("  mpk serve --requests 8 --batch 4   (after `make artifacts`)");
+            println!("  mpk serve --listen 127.0.0.1:7171 --requests 8");
         }
     }
+}
+
+/// `serve --listen ADDR`: put the server behind the TCP transport,
+/// drive a demo wave through a loopback wire client (the same frames a
+/// remote client would send), then drain gracefully. Uses the
+/// real-numerics engine when artifacts are available and falls back to
+/// the backend-free mock otherwise, so the wire path is demonstrable
+/// on any machine.
+fn serve_listen(addr: &str, n: usize, batch: usize) {
+    let mega = MegaConfig { workers: 6, schedulers: 2, ..Default::default() };
+    let server = match ServeServer::spawn(
+        ServeEngine::builder().max_batch(batch).pool_threads(3).seed(42).mega(mega),
+        ServerConfig::default(),
+    ) {
+        Ok(s) => {
+            println!("engine: real numerics (artifacts + PJRT backend)");
+            s
+        }
+        Err(e) => {
+            println!("engine: backend-free mock ({e})");
+            ServeServer::spawn_with(MockEngine::new(batch.max(1)), ServerConfig::default())
+        }
+    };
+    let transport = ServeTransport::bind(addr, server, TransportConfig::default())
+        .expect("bind listen address");
+    println!("listening on {} (wire protocol v1)", transport.local_addr());
+
+    // demo wave over loopback: every request crosses the full wire
+    // path — encode, socket, reader, server RPC, pump, writer, decode.
+    let mut client = TransportClient::connect(transport.local_addr()).expect("loopback connect");
+    for i in 0..n as u64 {
+        let prompt: Vec<i32> = (0..3).map(|t| 1 + (i as i32 * 13 + t) % 500).collect();
+        match client.run(i + 1, prompt, 6, SubmitOptions::default()) {
+            Ok((tokens, finish)) => {
+                println!("req {:>3} -> {} tokens over the wire ({finish:?})", i + 1, tokens.len());
+            }
+            Err(e) => println!("req {:>3} -> {e}", i + 1),
+        }
+    }
+
+    let report = transport.drain(Duration::from_secs(5));
+    let m = &report.transport;
+    println!(
+        "drained in {:?} ({} forced) | {} conns | {} submitted / {} finished / {} rejected | \
+         {} frames out / {} in",
+        report.elapsed,
+        report.forced,
+        m.conns_accepted,
+        m.requests_submitted,
+        report.server.finished,
+        m.requests_rejected,
+        m.frames_sent,
+        m.frames_received,
+    );
 }
 
 fn flag(args: &[String], name: &str) -> Option<String> {

@@ -78,9 +78,96 @@ impl MetricsSnapshot {
     }
 }
 
+/// Connection-level counters for the serving wire transport
+/// (`serving::transport`), shared across the accept loop and every
+/// per-connection thread. Same atomic-counter idiom as
+/// [`RuntimeMetrics`]; snapshot with [`TransportMetrics::snapshot`].
+#[derive(Debug, Default)]
+pub struct TransportMetrics {
+    /// Connections accepted into a serving thread.
+    pub conns_accepted: AtomicU64,
+    /// Connections refused at accept (listener cap, draining) or that
+    /// failed setup.
+    pub conns_rejected: AtomicU64,
+    /// Connections fully closed (graceful or torn down).
+    pub conns_closed: AtomicU64,
+    /// Submissions accepted by the server over the wire.
+    pub requests_submitted: AtomicU64,
+    /// Submissions refused over the wire (shed, validation errors,
+    /// per-connection in-flight cap, draining).
+    pub requests_rejected: AtomicU64,
+    /// Frames written to sockets.
+    pub frames_sent: AtomicU64,
+    /// Frames parsed off sockets.
+    pub frames_received: AtomicU64,
+    /// Outbound frames discarded: dead connections, injected wire
+    /// faults, slow-consumer overflow, failed writes.
+    pub frames_dropped: AtomicU64,
+    /// Malformed/oversized/stalled inbound frames (each one tears its
+    /// connection down).
+    pub protocol_errors: AtomicU64,
+    /// Connections shed under the `Shed` slow-reader policy.
+    pub slow_consumer_closes: AtomicU64,
+    /// Live requests force-cancelled because a drain deadline expired.
+    pub drain_forced: AtomicU64,
+}
+
+impl TransportMetrics {
+    pub fn inc(&self, c: &AtomicU64) {
+        c.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn snapshot(&self) -> TransportSnapshot {
+        TransportSnapshot {
+            conns_accepted: self.conns_accepted.load(Ordering::Relaxed),
+            conns_rejected: self.conns_rejected.load(Ordering::Relaxed),
+            conns_closed: self.conns_closed.load(Ordering::Relaxed),
+            requests_submitted: self.requests_submitted.load(Ordering::Relaxed),
+            requests_rejected: self.requests_rejected.load(Ordering::Relaxed),
+            frames_sent: self.frames_sent.load(Ordering::Relaxed),
+            frames_received: self.frames_received.load(Ordering::Relaxed),
+            frames_dropped: self.frames_dropped.load(Ordering::Relaxed),
+            protocol_errors: self.protocol_errors.load(Ordering::Relaxed),
+            slow_consumer_closes: self.slow_consumer_closes.load(Ordering::Relaxed),
+            drain_forced: self.drain_forced.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Plain-data copy of the transport counters.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct TransportSnapshot {
+    pub conns_accepted: u64,
+    pub conns_rejected: u64,
+    pub conns_closed: u64,
+    pub requests_submitted: u64,
+    pub requests_rejected: u64,
+    pub frames_sent: u64,
+    pub frames_received: u64,
+    pub frames_dropped: u64,
+    pub protocol_errors: u64,
+    pub slow_consumer_closes: u64,
+    pub drain_forced: u64,
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn transport_counters_accumulate_and_snapshot() {
+        let m = TransportMetrics::default();
+        m.inc(&m.conns_accepted);
+        m.inc(&m.frames_sent);
+        m.inc(&m.frames_sent);
+        m.drain_forced.fetch_add(3, Ordering::Relaxed);
+        let s = m.snapshot();
+        assert_eq!(s.conns_accepted, 1);
+        assert_eq!(s.frames_sent, 2);
+        assert_eq!(s.drain_forced, 3);
+        assert_eq!(s.conns_rejected, 0);
+        assert_eq!(s, m.snapshot(), "snapshot is a pure copy");
+    }
 
     #[test]
     fn counters_accumulate() {

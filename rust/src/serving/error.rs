@@ -69,6 +69,11 @@ pub enum EngineError {
     SlotRemap { id: u64, from: usize, to: usize },
     /// No compiled batch-size specialization covers this batch.
     NoSession { batch: usize },
+    /// Wire-transport failure surfaced into the serving layer
+    /// (`serving::wire` boundary): framing, protocol, or socket I/O.
+    /// Produced by the `From<TransportError>` shim so transport code
+    /// can `?` into engine-error contexts without re-stringifying.
+    Transport(String),
 }
 
 impl std::fmt::Display for EngineError {
@@ -110,6 +115,7 @@ impl std::fmt::Display for EngineError {
             EngineError::NoSession { batch } => {
                 write!(f, "no compiled session covers batch {batch}")
             }
+            EngineError::Transport(m) => write!(f, "transport: {m}"),
         }
     }
 }
@@ -140,6 +146,12 @@ impl From<TaskError> for EngineError {
     }
 }
 
+impl From<crate::serving::wire::TransportError> for EngineError {
+    fn from(e: crate::serving::wire::TransportError) -> Self {
+        EngineError::Transport(e.to_string())
+    }
+}
+
 /// Legacy shim: contexts still speaking `Result<_, String>` (property
 /// harness closures, examples) can `?` an `EngineError` straight
 /// through.
@@ -162,6 +174,10 @@ mod tests {
         assert_eq!(EngineError::from(PoolError("no backend".into())), EngineError::Pool("no backend".into()));
         assert_eq!(EngineError::from(KernelError("timed out".into())), EngineError::Kernel("timed out".into()));
         assert_eq!(EngineError::from(TaskError("task 3".into())), EngineError::Task("task 3".into()));
+        let wire = crate::serving::wire::TransportError::FrameTooLarge { len: 99, cap: 8 };
+        let e = EngineError::from(wire.clone());
+        assert_eq!(e, EngineError::Transport(wire.to_string()));
+        assert!(e.to_string().starts_with("transport: "), "got: {e}");
     }
 
     #[test]

@@ -67,6 +67,62 @@
 //! [`ServeEngine::serve`]. The server front-end is a thin, testable
 //! layer over exactly this surface (the [`StepEngine`] trait —
 //! [`mock::MockEngine`] runs the front-end without artifacts).
+//!
+//! # The network transport
+//!
+//! [`ServeTransport`] puts the server behind a TCP socket: a
+//! stdlib-only listener that speaks a versioned, length-prefixed
+//! binary frame protocol ([`wire`]) and translates each connection
+//! into [`ServerClient`] calls. One frame is
+//!
+//! | bytes | field | meaning |
+//! |------:|-------|---------|
+//! | 4 | `len` (u32 LE) | body length, checked against the max-frame cap **before** the body is read |
+//! | 1 | `version` | [`wire::WIRE_VERSION`] — mismatch is a typed [`TransportError::BadVersion`] |
+//! | 1 | `tag` | frame kind: client `0x01..=0x03`, server `0x81..=0x87` |
+//! | `len - 2` | payload | tag-specific fields, little-endian |
+//!
+//! Clients send [`ClientFrame`] (`Submit` / `Cancel` / `Status`); the
+//! server streams back [`ServerFrame`] (`Accepted`, `Token`, `Finish`,
+//! typed `Error` / `Shed`, `Status`, `Close`). Serving-layer errors
+//! cross the wire *typed*: every [`EngineError`] variant round-trips
+//! through the `Error` frame, and transport-layer failures map into
+//! [`EngineError::Transport`] via the `From<TransportError>` shim.
+//!
+//! The transport is hardened the same way the server is: read/write
+//! deadlines and a frame-size cap bound slow or hostile peers, a
+//! per-connection in-flight cap sheds excess load with the existing
+//! typed backpressure, a client disconnect mid-stream cancels its
+//! requests immediately (slots and KV free at once), per-stream
+//! outbound buffering is bounded with a pick-one
+//! [`SlowReaderPolicy`], and [`ServeTransport::drain`] stops
+//! accepting, flushes live streams until a deadline, force-terminates
+//! the rest, and returns a [`DrainReport`]. A seeded
+//! [`WireFaultPlan`] injects truncated/corrupted/delayed frames and
+//! dropped connections for chaos tests.
+//!
+//! ```no_run
+//! use std::time::Duration;
+//! use mpk::serving::mock::MockEngine;
+//! use mpk::serving::{
+//!     ServeServer, ServeTransport, ServerConfig, SubmitOptions, TransportClient, TransportConfig,
+//! };
+//!
+//! // Listener: any StepEngine behind a socket.
+//! let server = ServeServer::spawn_with(MockEngine::new(4), ServerConfig::default());
+//! let transport =
+//!     ServeTransport::bind("127.0.0.1:0", server, TransportConfig::default()).unwrap();
+//! let addr = transport.local_addr();
+//!
+//! // Client: connect, run one request to its terminal event.
+//! let mut client = TransportClient::connect(addr).unwrap();
+//! let (tokens, finish) = client.run(1, vec![3, 7], 8, SubmitOptions::default()).unwrap();
+//! println!("req 1 -> {tokens:?} ({finish:?})");
+//!
+//! // Graceful drain: bounded, reconciled.
+//! let report = transport.drain(Duration::from_secs(2));
+//! assert!(report.server.fatal.is_none());
+//! ```
 pub mod batcher;
 pub mod engine;
 pub mod error;
@@ -75,6 +131,8 @@ pub mod kvcache;
 pub mod mock;
 pub mod server;
 pub mod step;
+pub mod transport;
+pub mod wire;
 
 pub use batcher::{Batcher, Request};
 pub use engine::{EngineBuilder, RequestLatency, ServeEngine, ServeStats};
@@ -86,3 +144,7 @@ pub use server::{
     SubmitOptions, TokenStream,
 };
 pub use step::{FinishReason, StepOutcome, TokenEvent};
+pub use transport::{
+    DrainReport, ServeTransport, SlowReaderPolicy, TransportClient, TransportConfig,
+};
+pub use wire::{ClientFrame, CloseReason, ServerFrame, TransportError, WireFaultPlan};

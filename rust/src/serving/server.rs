@@ -179,6 +179,21 @@ impl Default for ServerConfig {
 
 /// Counters the serving thread hands back at
 /// [`ServeServer::shutdown`].
+///
+/// # Drain semantics
+///
+/// `shutdown()` *drains*: the server stops accepting new submissions
+/// (each is refused with [`EngineError::ServerClosed`]) but keeps
+/// stepping until every already-accepted request reaches its terminal
+/// event, so `finished` accounts for **every** request ever accepted —
+/// none are silently abandoned. The network layer builds its bounded
+/// variant on top of this: `serving::transport::ServeTransport::drain`
+/// first force-cancels whatever its deadline cuts off (each cancel
+/// still produces a terminal event, counted in `finished`), then
+/// calls `shutdown()` and embeds this report in its `DrainReport`.
+/// Consequently `finished == submitted` holds after *any* drain path,
+/// bounded or not — the reconciliation invariant the chaos tests
+/// check.
 #[derive(Clone, Debug, Default)]
 pub struct ServerReport {
     /// Terminal events delivered, any reason — every accepted request
@@ -215,12 +230,25 @@ pub struct ServerStatus {
 }
 
 /// A per-request event stream: everything the engine emits for one
-/// request, ending with exactly one terminal event (`finish: Some(_)`)
-/// — unless the serving thread panicked, in which case the stream just
-/// disconnects. Iterate it, or use [`TokenStream::collect_output`].
+/// request, ending with exactly one terminal event (`finish: Some(_)`).
+/// Iterate it, or use [`TokenStream::collect_output`].
+///
+/// The stream is **fused on the terminal event**: once an event with
+/// `finish: Some(_)` has been consumed, every further [`TokenStream::recv`]
+/// returns [`EngineError::ServerClosed`] immediately and iteration
+/// yields `None` — deterministically, from the stream's own state. (It
+/// previously blocked on the channel until the serving thread dropped
+/// its sender, so iterating after [`ServeServer::shutdown`] raced the
+/// fan-out thread.) A disconnect *without* a terminal event — the
+/// serving thread panicked — surfaces as the same
+/// [`EngineError::ServerClosed`].
 pub struct TokenStream {
     id: u64,
     rx: Receiver<TokenEvent>,
+    /// Set once the terminal event has been consumed (or the channel
+    /// disconnected): the fuse that makes post-terminal reads
+    /// deterministic.
+    done: bool,
 }
 
 impl TokenStream {
@@ -229,19 +257,34 @@ impl TokenStream {
         self.id
     }
 
-    /// Block for the next event; `None` once the terminal event has
-    /// been consumed (or the server is gone).
-    pub fn recv(&self) -> Option<TokenEvent> {
-        self.rx.recv().ok()
+    /// Block for the next event. Returns [`EngineError::ServerClosed`]
+    /// once the terminal event has been consumed, or if the server
+    /// died without delivering one.
+    pub fn recv(&mut self) -> Result<TokenEvent, EngineError> {
+        if self.done {
+            return Err(EngineError::ServerClosed);
+        }
+        match self.rx.recv() {
+            Ok(ev) => {
+                if ev.finish.is_some() {
+                    self.done = true;
+                }
+                Ok(ev)
+            }
+            Err(_) => {
+                self.done = true;
+                Err(EngineError::ServerClosed)
+            }
+        }
     }
 
     /// Drain the stream to its terminal event: the tokens generated and
     /// the finish reason (`None` only if the server died without
     /// delivering one).
-    pub fn collect_output(self) -> (Vec<i32>, Option<FinishReason>) {
+    pub fn collect_output(mut self) -> (Vec<i32>, Option<FinishReason>) {
         let mut tokens = Vec::new();
         let mut finish = None;
-        for ev in self.rx.iter() {
+        while let Ok(ev) = self.recv() {
             if let Some(t) = ev.token {
                 tokens.push(t);
             }
@@ -257,9 +300,11 @@ impl TokenStream {
 impl Iterator for TokenStream {
     type Item = TokenEvent;
     /// Yields events up to and including the terminal one, then `None`
-    /// (the server drops its sender after the terminal event).
+    /// — fused, so iterating a finished stream after
+    /// [`ServeServer::shutdown`] terminates immediately instead of
+    /// racing the serving thread's sender drop.
     fn next(&mut self) -> Option<TokenEvent> {
-        self.rx.recv().ok()
+        self.recv().ok()
     }
 }
 
@@ -527,7 +572,7 @@ impl<E: StepEngine> ServerState<E> {
             .rposition(|q| q.priority <= opts.priority)
             .map_or(0, |p| p + 1);
         self.queue.insert(pos, Queued { req, priority: opts.priority, deadline });
-        Ok(TokenStream { id, rx })
+        Ok(TokenStream { id, rx, done: false })
     }
 
     fn cancel(&mut self, id: u64) -> Result<(), EngineError> {

@@ -1,0 +1,981 @@
+//! The TCP transport: sockets in, [`ServerClient`] calls out.
+//!
+//! [`ServeTransport`] binds a stdlib [`TcpListener`] over a running
+//! [`ServeServer`] and translates each connection into the same typed
+//! calls an in-process caller makes — `submit_with`, `cancel`,
+//! `status` — speaking the versioned frame protocol defined in
+//! [`crate::serving::wire`]. No async runtime: one accept thread, and
+//! per connection a reader thread (frames in), a writer thread (frames
+//! out through a **bounded** queue), and one pump thread per live
+//! request forwarding its [`TokenStream`] as `Token`/`Finish` frames.
+//!
+//! # Robustness model
+//!
+//! The failure modes this layer is built around, and what each maps
+//! to:
+//!
+//! * **Slowloris / stalled peers** — sockets carry read and write
+//!   deadlines; a frame that *starts* arriving must complete within
+//!   [`TransportConfig::read_timeout`] or the connection is torn down
+//!   with [`TransportError::Stalled`]. Oversized length prefixes are
+//!   refused before the body is read ([`TransportConfig::max_frame`]).
+//! * **Abusive or broken clients** — bytes that do not parse become a
+//!   typed [`TransportError`], a best-effort
+//!   [`CloseReason::Protocol`] close frame, and a teardown.
+//! * **Backpressure, twice** — per-connection in-flight submissions
+//!   are capped ([`TransportConfig::max_in_flight`]); past the cap a
+//!   `Submit` is answered with a typed `Shed` frame (the wire form of
+//!   [`EngineError::Overloaded`]) and never reaches the server. The
+//!   outbound direction is a bounded queue of
+//!   [`TransportConfig::outbound_depth`] frames with a configurable
+//!   slow-reader policy ([`SlowReaderPolicy`]).
+//! * **Disconnect mid-stream** — a dropped connection (EOF, reset,
+//!   stall) cancels every request it still has live, so slots and KV
+//!   blocks free immediately instead of decoding for a ghost.
+//! * **Graceful drain** — [`ServeTransport::drain`] stops accepting,
+//!   refuses new submissions, flushes live streams until a bounded
+//!   deadline, force-cancels the rest, closes every connection with a
+//!   [`CloseReason::Drain`] frame, and returns the final
+//!   [`ServerReport`] plus transport counters in a [`DrainReport`].
+//! * **Deterministic chaos** — [`TransportConfig::faults`] arms a
+//!   seeded [`WireFaultPlan`] on the server's outbound path (truncate
+//!   / corrupt / delay / drop); [`TransportClient::with_faults`] arms
+//!   the same plan on a client. Both replay per seed.
+//!
+//! Every connection-level event lands in
+//! [`TransportMetrics`](crate::metrics::TransportMetrics) —
+//! accepted/rejected connections, submitted/rejected requests, frames
+//! sent/received/dropped, slow-consumer closes, forced drains.
+
+use crate::metrics::{TransportMetrics, TransportSnapshot};
+use crate::serving::batcher::Request;
+use crate::serving::error::EngineError;
+use crate::serving::server::{
+    ServeServer, ServerClient, ServerReport, SubmitOptions, TokenStream,
+};
+use crate::serving::step::FinishReason;
+use crate::serving::wire::{
+    self, ClientFrame, CloseReason, ServerFrame, TransportError, WireFault, WireFaultInjector,
+    WireFaultPlan, DEFAULT_MAX_FRAME,
+};
+use std::collections::HashSet;
+use std::io::{ErrorKind, Read, Write};
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{Receiver, SyncSender, TrySendError};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// What a pump does when the connection's bounded outbound queue is
+/// full — i.e. the client reads slower than the engine decodes.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum SlowReaderPolicy {
+    /// Block the pump until the writer drains a slot. The engine keeps
+    /// decoding (the serving thread never blocks on a socket); only
+    /// this request's *delivery* stalls, and memory stays bounded at
+    /// `outbound_depth` frames. The default.
+    #[default]
+    Block,
+    /// Shed the connection: tear it down with a typed
+    /// [`CloseReason::SlowConsumer`] close frame (best-effort — the
+    /// queue is full by definition) and cancel its live requests. For
+    /// deployments that prefer freeing slots over waiting out a slow
+    /// peer.
+    Shed,
+}
+
+/// Transport shape knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct TransportConfig {
+    /// Max frame *body* bytes accepted from a peer; an oversized
+    /// length prefix is refused before the body is read.
+    pub max_frame: u32,
+    /// Socket poll tick: how often blocked reads/writes wake to check
+    /// teardown/drain flags. Bounds drain latency, not correctness.
+    pub poll: Duration,
+    /// Mid-frame stall budget (the slowloris guard): once a frame has
+    /// started arriving, each silent gap beyond this tears the
+    /// connection down with [`TransportError::Stalled`].
+    pub read_timeout: Duration,
+    /// Per-write deadline; a peer that stops draining its socket past
+    /// this gets torn down (its live requests are cancelled).
+    pub write_timeout: Duration,
+    /// Per-connection cap on live (submitted, not yet terminal)
+    /// requests; a `Submit` past it is answered with a `Shed` frame.
+    pub max_in_flight: usize,
+    /// Bound on the per-connection outbound frame queue.
+    pub outbound_depth: usize,
+    /// What to do when that queue fills; see [`SlowReaderPolicy`].
+    pub slow_reader: SlowReaderPolicy,
+    /// Listener-level connection cap; beyond it new connections get a
+    /// [`CloseReason::Overloaded`] close frame.
+    pub max_connections: usize,
+    /// Seeded chaos on the server's outbound path (off by default).
+    pub faults: WireFaultPlan,
+}
+
+impl Default for TransportConfig {
+    fn default() -> Self {
+        TransportConfig {
+            max_frame: DEFAULT_MAX_FRAME,
+            poll: Duration::from_millis(25),
+            read_timeout: Duration::from_secs(2),
+            write_timeout: Duration::from_secs(2),
+            max_in_flight: 16,
+            outbound_depth: 256,
+            slow_reader: SlowReaderPolicy::default(),
+            max_connections: 256,
+            faults: WireFaultPlan::default(),
+        }
+    }
+}
+
+impl TransportConfig {
+    fn validate(&self) -> Result<(), TransportError> {
+        if self.max_frame < 32 {
+            return Err(TransportError::Config { what: format!("max_frame {} below the 32-byte floor", self.max_frame) });
+        }
+        if self.max_in_flight == 0 || self.outbound_depth == 0 || self.max_connections == 0 {
+            return Err(TransportError::Config {
+                what: "max_in_flight, outbound_depth, and max_connections must be >= 1".into(),
+            });
+        }
+        if self.poll.is_zero() || self.read_timeout.is_zero() || self.write_timeout.is_zero() {
+            return Err(TransportError::Config { what: "poll and timeouts must be non-zero".into() });
+        }
+        self.faults.validate().map_err(|what| TransportError::Config { what })
+    }
+}
+
+/// What [`ServeTransport::drain`] hands back: the server's final
+/// report plus the transport's counters.
+#[derive(Debug)]
+pub struct DrainReport {
+    /// The underlying server's shutdown report (terminal-event
+    /// accounting, shed/rejected counters, final stats window).
+    pub server: ServerReport,
+    /// Transport counters at drain completion.
+    pub transport: TransportSnapshot,
+    /// Live requests force-cancelled because the drain deadline
+    /// expired before their streams flushed; `0` on a fully graceful
+    /// drain.
+    pub forced: usize,
+    /// Wall time the drain took (bounded by its deadline plus
+    /// connection-join overhead).
+    pub elapsed: Duration,
+}
+
+/// State shared by one connection's reader, writer, and pump threads
+/// (and the drain path).
+struct ConnShared {
+    /// Hard teardown: stop reading, drop (don't write) queued frames,
+    /// socket already shut down.
+    dead: AtomicBool,
+    /// Graceful close: reader exits at the next tick, writer flushes
+    /// the queue and exits when all senders are gone.
+    closing: AtomicBool,
+    /// Request ids submitted on this connection that have not reached
+    /// their terminal frame yet.
+    live: Mutex<HashSet<u64>>,
+    /// A handle to the socket for out-of-thread shutdown (teardown and
+    /// forced drain); reader/writer own their own clones.
+    sock: TcpStream,
+    /// Outbound enqueue handle for the drain path (`Close` frames);
+    /// taken and dropped by the reader's epilogue so the writer's
+    /// recv loop can end.
+    out_tx: Mutex<Option<SyncSender<Vec<u8>>>>,
+}
+
+/// Tear a connection down: exactly once, cancel everything it still
+/// has live (freeing slots and KV immediately), and shut the socket so
+/// blocked reads/writes unblock.
+fn teardown(shared: &ConnShared, client: &ServerClient) {
+    if shared.dead.swap(true, Ordering::SeqCst) {
+        return;
+    }
+    let ids: Vec<u64> = {
+        let mut live = shared.live.lock().expect("live set lock");
+        live.drain().collect()
+    };
+    for id in ids {
+        // AlreadyFinished / UnknownRequest just mean the request beat
+        // the teardown to a terminal state — nothing to free.
+        let _ = client.cancel(id);
+    }
+    let _ = shared.sock.shutdown(Shutdown::Both);
+}
+
+/// Policy-aware outbound enqueue handle, cloned into every pump.
+#[derive(Clone)]
+struct Outbound {
+    tx: SyncSender<Vec<u8>>,
+    policy: SlowReaderPolicy,
+    shared: Arc<ConnShared>,
+    client: ServerClient,
+    metrics: Arc<TransportMetrics>,
+}
+
+impl Outbound {
+    /// Queue a frame for the writer. Returns `false` when it could not
+    /// be queued (connection dead, writer gone, or shed as a slow
+    /// consumer — in which case the teardown already happened).
+    fn send(&self, frame: &ServerFrame) -> bool {
+        if self.shared.dead.load(Ordering::SeqCst) {
+            self.metrics.inc(&self.metrics.frames_dropped);
+            return false;
+        }
+        let bytes = wire::encode_server(frame);
+        match self.policy {
+            SlowReaderPolicy::Block => {
+                if self.tx.send(bytes).is_err() {
+                    self.metrics.inc(&self.metrics.frames_dropped);
+                    return false;
+                }
+                true
+            }
+            SlowReaderPolicy::Shed => match self.tx.try_send(bytes) {
+                Ok(()) => true,
+                Err(TrySendError::Full(_)) => {
+                    self.metrics.inc(&self.metrics.frames_dropped);
+                    self.metrics.inc(&self.metrics.slow_consumer_closes);
+                    // best-effort typed close; the queue is full, so
+                    // this usually drops too — counted either way.
+                    if self.tx.try_send(wire::encode_server(&ServerFrame::Close { reason: CloseReason::SlowConsumer })).is_err() {
+                        self.metrics.inc(&self.metrics.frames_dropped);
+                    }
+                    teardown(&self.shared, &self.client);
+                    false
+                }
+                Err(TrySendError::Disconnected(_)) => {
+                    self.metrics.inc(&self.metrics.frames_dropped);
+                    false
+                }
+            },
+        }
+    }
+}
+
+/// Transport-wide state shared with the accept loop and drain path.
+struct TransportShared {
+    cfg: TransportConfig,
+    client: ServerClient,
+    metrics: Arc<TransportMetrics>,
+    /// Refuse new connections and new submissions.
+    draining: AtomicBool,
+    /// Accept loop exit flag.
+    stopped: AtomicBool,
+    conns: Mutex<Vec<ConnHandle>>,
+}
+
+struct ConnHandle {
+    shared: Arc<ConnShared>,
+    thread: JoinHandle<()>,
+}
+
+/// The TCP front door over a [`ServeServer`]; see the module docs.
+pub struct ServeTransport {
+    server: Option<ServeServer>,
+    shared: Arc<TransportShared>,
+    local_addr: SocketAddr,
+    accept: Option<JoinHandle<()>>,
+}
+
+impl ServeTransport {
+    /// Bind `addr` (e.g. `"127.0.0.1:0"` for an ephemeral port) over a
+    /// running server and start accepting. The transport owns the
+    /// server from here on; [`ServeTransport::drain`] shuts both down
+    /// and returns the combined report.
+    pub fn bind(
+        addr: impl ToSocketAddrs,
+        server: ServeServer,
+        cfg: TransportConfig,
+    ) -> Result<ServeTransport, TransportError> {
+        cfg.validate()?;
+        let listener = TcpListener::bind(addr)?;
+        listener.set_nonblocking(true)?;
+        let local_addr = listener.local_addr()?;
+        let shared = Arc::new(TransportShared {
+            cfg,
+            client: server.client(),
+            metrics: Arc::new(TransportMetrics::default()),
+            draining: AtomicBool::new(false),
+            stopped: AtomicBool::new(false),
+            conns: Mutex::new(Vec::new()),
+        });
+        let accept = {
+            let shared = Arc::clone(&shared);
+            std::thread::Builder::new()
+                .name("mpk-wire-accept".into())
+                .spawn(move || accept_loop(listener, shared))
+                .map_err(|e| TransportError::Io { what: e.to_string() })?
+        };
+        Ok(ServeTransport { server: Some(server), shared, local_addr, accept: Some(accept) })
+    }
+
+    /// The bound address (resolves the ephemeral port of `":0"` binds).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.local_addr
+    }
+
+    /// An in-process [`ServerClient`] to the same server the wire
+    /// clients talk to.
+    pub fn client(&self) -> ServerClient {
+        self.shared.client.clone()
+    }
+
+    /// Snapshot of the transport counters.
+    pub fn metrics(&self) -> TransportSnapshot {
+        self.shared.metrics.snapshot()
+    }
+
+    /// Live requests across all connections (drain progress gauge).
+    fn live_requests(&self) -> usize {
+        let conns = self.shared.conns.lock().expect("conns lock");
+        conns.iter().map(|c| c.shared.live.lock().expect("live set lock").len()).sum()
+    }
+
+    /// Graceful shutdown with a bounded deadline:
+    ///
+    /// 1. Stop accepting connections and refuse new submissions (a
+    ///    `Submit` during drain is answered with a typed
+    ///    [`EngineError::ServerClosed`] error frame).
+    /// 2. Let live streams flush to their terminal frames until
+    ///    `deadline` elapses; then force-cancel whatever remains
+    ///    (counted in [`DrainReport::forced`]).
+    /// 3. Close every connection — a [`CloseReason::Drain`] frame
+    ///    where the writer is still healthy — and join all transport
+    ///    threads.
+    /// 4. Shut the server down and return the combined report.
+    pub fn drain(mut self, deadline: Duration) -> DrainReport {
+        let t0 = Instant::now();
+        self.shared.draining.store(true, Ordering::SeqCst);
+        let mut forced = 0usize;
+        loop {
+            if self.live_requests() == 0 {
+                break;
+            }
+            if t0.elapsed() >= deadline {
+                let conns = self.shared.conns.lock().expect("conns lock");
+                for c in conns.iter() {
+                    let n = c.shared.live.lock().expect("live set lock").len();
+                    if n > 0 {
+                        forced += n;
+                        teardown(&c.shared, &self.shared.client);
+                    }
+                }
+                self.shared.metrics.drain_forced.fetch_add(forced as u64, Ordering::Relaxed);
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        // stop the accept loop, then close every connection.
+        self.shared.stopped.store(true, Ordering::SeqCst);
+        if let Some(a) = self.accept.take() {
+            let _ = a.join();
+        }
+        let conns: Vec<ConnHandle> = {
+            let mut guard = self.shared.conns.lock().expect("conns lock");
+            std::mem::take(&mut *guard)
+        };
+        for c in &conns {
+            if !c.shared.dead.load(Ordering::SeqCst) {
+                // queue the goodbye while the writer still flushes,
+                // then flip the graceful-close flag.
+                if let Some(tx) = c.shared.out_tx.lock().expect("out_tx lock").as_ref() {
+                    let _ = tx.try_send(wire::encode_server(&ServerFrame::Close {
+                        reason: CloseReason::Drain,
+                    }));
+                }
+            }
+            c.shared.closing.store(true, Ordering::SeqCst);
+        }
+        for c in conns {
+            let _ = c.thread.join();
+        }
+        let transport = self.shared.metrics.snapshot();
+        let server = self.server.take().expect("server present until drain").shutdown();
+        DrainReport { server, transport, forced, elapsed: t0.elapsed() }
+    }
+}
+
+impl Drop for ServeTransport {
+    /// Dropping without [`ServeTransport::drain`] is an abrupt stop:
+    /// no flush deadline, every connection torn down. (After `drain`
+    /// this is a no-op — the fields are already empty.)
+    fn drop(&mut self) {
+        self.shared.draining.store(true, Ordering::SeqCst);
+        self.shared.stopped.store(true, Ordering::SeqCst);
+        if let Some(a) = self.accept.take() {
+            let _ = a.join();
+        }
+        let conns: Vec<ConnHandle> = {
+            let mut guard = self.shared.conns.lock().expect("conns lock");
+            std::mem::take(&mut *guard)
+        };
+        for c in &conns {
+            teardown(&c.shared, &self.shared.client);
+        }
+        for c in conns {
+            let _ = c.thread.join();
+        }
+        // `server` (if still present) drops after this body, shutting
+        // the serving thread down once no connection can reach it.
+    }
+}
+
+// ---------------------------------------------------------------------------
+// accept loop
+
+fn accept_loop(listener: TcpListener, shared: Arc<TransportShared>) {
+    while !shared.stopped.load(Ordering::SeqCst) {
+        match listener.accept() {
+            Ok((stream, _)) => {
+                let mut conns = shared.conns.lock().expect("conns lock");
+                conns.retain(|c| !c.thread.is_finished());
+                if shared.draining.load(Ordering::SeqCst) {
+                    shared.metrics.inc(&shared.metrics.conns_rejected);
+                    refuse(stream, CloseReason::Drain);
+                } else if conns.len() >= shared.cfg.max_connections {
+                    shared.metrics.inc(&shared.metrics.conns_rejected);
+                    refuse(stream, CloseReason::Overloaded);
+                } else {
+                    match spawn_conn(stream, &shared) {
+                        Ok(h) => {
+                            shared.metrics.inc(&shared.metrics.conns_accepted);
+                            conns.push(h);
+                        }
+                        Err(_) => shared.metrics.inc(&shared.metrics.conns_rejected),
+                    }
+                }
+            }
+            Err(e) if e.kind() == ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(5));
+            }
+            Err(_) => std::thread::sleep(Duration::from_millis(5)),
+        }
+    }
+}
+
+/// Refuse a connection with a typed close frame, best-effort.
+fn refuse(mut stream: TcpStream, reason: CloseReason) {
+    let _ = stream.set_write_timeout(Some(Duration::from_millis(200)));
+    let _ = stream.write_all(&wire::encode_server(&ServerFrame::Close { reason }));
+    let _ = stream.shutdown(Shutdown::Both);
+}
+
+fn spawn_conn(stream: TcpStream, t: &Arc<TransportShared>) -> std::io::Result<ConnHandle> {
+    stream.set_read_timeout(Some(t.cfg.poll))?;
+    stream.set_write_timeout(Some(t.cfg.write_timeout))?;
+    let _ = stream.set_nodelay(true);
+    let (tx, rx) = mpsc::sync_channel::<Vec<u8>>(t.cfg.outbound_depth);
+    let shared = Arc::new(ConnShared {
+        dead: AtomicBool::new(false),
+        closing: AtomicBool::new(false),
+        live: Mutex::new(HashSet::new()),
+        sock: stream.try_clone()?,
+        out_tx: Mutex::new(Some(tx.clone())),
+    });
+    let writer_stream = stream.try_clone()?;
+    let handle = {
+        let shared2 = Arc::clone(&shared);
+        let t2 = Arc::clone(t);
+        std::thread::Builder::new().name("mpk-wire-conn".into()).spawn(move || {
+            run_conn(stream, writer_stream, tx, rx, shared2, t2);
+        })?
+    };
+    Ok(ConnHandle { shared, thread: handle })
+}
+
+// ---------------------------------------------------------------------------
+// per-connection reader (the connection's owning thread)
+
+fn run_conn(
+    mut stream: TcpStream,
+    writer_stream: TcpStream,
+    tx: SyncSender<Vec<u8>>,
+    rx: Receiver<Vec<u8>>,
+    shared: Arc<ConnShared>,
+    t: Arc<TransportShared>,
+) {
+    let out = Outbound {
+        tx,
+        policy: t.cfg.slow_reader,
+        shared: Arc::clone(&shared),
+        client: t.client.clone(),
+        metrics: Arc::clone(&t.metrics),
+    };
+    let writer = {
+        let shared = Arc::clone(&shared);
+        let client = t.client.clone();
+        let metrics = Arc::clone(&t.metrics);
+        let inj = t.cfg.faults.is_armed().then(|| WireFaultInjector::new(t.cfg.faults));
+        std::thread::Builder::new()
+            .name("mpk-wire-writer".into())
+            .spawn(move || writer_loop(writer_stream, rx, shared, client, metrics, inj))
+            .expect("failed to spawn writer thread")
+    };
+    let mut pumps: Vec<JoinHandle<()>> = Vec::new();
+
+    loop {
+        if shared.dead.load(Ordering::SeqCst) || shared.closing.load(Ordering::SeqCst) {
+            break;
+        }
+        match read_frame_server(&mut stream, &shared, &t.cfg) {
+            ReadOutcome::Idle => continue,
+            ReadOutcome::Stopped => break,
+            ReadOutcome::Eof => break,
+            ReadOutcome::Frame(body) => {
+                t.metrics.inc(&t.metrics.frames_received);
+                match wire::decode_client(&body) {
+                    Ok(frame) => handle_frame(frame, &out, &shared, &t, &mut pumps),
+                    Err(_) => {
+                        t.metrics.inc(&t.metrics.protocol_errors);
+                        out.send(&ServerFrame::Close { reason: CloseReason::Protocol });
+                        teardown(&shared, &t.client);
+                        break;
+                    }
+                }
+            }
+            ReadOutcome::Failed(err) => {
+                t.metrics.inc(&t.metrics.protocol_errors);
+                // framing violations get a typed goodbye; raw socket
+                // errors usually mean nobody is listening anymore.
+                if !matches!(err, TransportError::Io { .. }) {
+                    out.send(&ServerFrame::Close { reason: CloseReason::Protocol });
+                }
+                teardown(&shared, &t.client);
+                break;
+            }
+        }
+    }
+
+    // Epilogue. A connection that still has live requests here went
+    // away mid-stream (EOF, reset, stall, teardown): cancel them so
+    // their slots and KV free now.
+    if !shared.live.lock().expect("live set lock").is_empty() {
+        teardown(&shared, &t.client);
+    }
+    // Pumps end once their terminal event arrives (the cancels above
+    // guarantee one) or the server goes away.
+    for p in pumps {
+        let _ = p.join();
+    }
+    // Drop every outbound sender we control; the writer's recv loop
+    // ends after flushing whatever is queued.
+    shared.out_tx.lock().expect("out_tx lock").take();
+    drop(out);
+    let _ = writer.join();
+    let _ = stream.shutdown(Shutdown::Both);
+    t.metrics.inc(&t.metrics.conns_closed);
+}
+
+fn handle_frame(
+    frame: ClientFrame,
+    out: &Outbound,
+    shared: &Arc<ConnShared>,
+    t: &Arc<TransportShared>,
+    pumps: &mut Vec<JoinHandle<()>>,
+) {
+    match frame {
+        ClientFrame::Submit { id, priority, deadline_ms, max_new_tokens, prompt } => {
+            if t.draining.load(Ordering::SeqCst) {
+                t.metrics.inc(&t.metrics.requests_rejected);
+                out.send(&ServerFrame::Error { id, err: EngineError::ServerClosed });
+                return;
+            }
+            let in_flight = shared.live.lock().expect("live set lock").len();
+            if in_flight >= t.cfg.max_in_flight {
+                // connection-level backpressure: same typed shed the
+                // server's wait queue uses, scoped to this connection.
+                t.metrics.inc(&t.metrics.requests_rejected);
+                out.send(&ServerFrame::Shed { id, queue_depth: t.cfg.max_in_flight as u32 });
+                return;
+            }
+            let opts = SubmitOptions { priority, deadline: deadline_ms.map(Duration::from_millis) };
+            match t.client.submit_with(Request::new(id, prompt, max_new_tokens as usize), opts) {
+                Ok(stream) => {
+                    shared.live.lock().expect("live set lock").insert(id);
+                    t.metrics.inc(&t.metrics.requests_submitted);
+                    out.send(&ServerFrame::Accepted { id });
+                    let pump_out = out.clone();
+                    let pump_shared = Arc::clone(shared);
+                    match std::thread::Builder::new()
+                        .name("mpk-wire-pump".into())
+                        .spawn(move || pump(stream, pump_out, pump_shared))
+                    {
+                        Ok(h) => pumps.push(h),
+                        Err(_) => {
+                            // thread spawn failed: free the request
+                            // rather than letting it decode unread.
+                            shared.live.lock().expect("live set lock").remove(&id);
+                            let _ = t.client.cancel(id);
+                            out.send(&ServerFrame::Error { id, err: EngineError::ServerClosed });
+                        }
+                    }
+                }
+                Err(EngineError::Overloaded { id, queue_depth }) => {
+                    t.metrics.inc(&t.metrics.requests_rejected);
+                    out.send(&ServerFrame::Shed { id, queue_depth: queue_depth as u32 });
+                }
+                Err(err) => {
+                    t.metrics.inc(&t.metrics.requests_rejected);
+                    out.send(&ServerFrame::Error { id, err });
+                }
+            }
+        }
+        ClientFrame::Cancel { id } => {
+            if let Err(err) = t.client.cancel(id) {
+                out.send(&ServerFrame::Error { id, err });
+            }
+            // on success the terminal Cancelled finish frame arrives
+            // through the request's pump.
+        }
+        ClientFrame::Status => match t.client.status() {
+            Ok(s) => {
+                out.send(&ServerFrame::Status {
+                    queued: s.queued as u32,
+                    in_flight: s.in_flight as u32,
+                    capacity: s.capacity as u32,
+                    finished: s.finished as u64,
+                    shed: s.shed as u64,
+                    rejected: s.rejected as u64,
+                });
+            }
+            Err(err) => {
+                out.send(&ServerFrame::Error { id: 0, err });
+            }
+        },
+    }
+}
+
+/// Forward one request's [`TokenStream`] to the wire until its single
+/// terminal event; then release the id from the connection's live set.
+fn pump(mut stream: TokenStream, out: Outbound, shared: Arc<ConnShared>) {
+    let id = stream.id();
+    loop {
+        match stream.recv() {
+            Ok(ev) => {
+                let terminal = ev.finish.is_some();
+                if let Some(reason) = ev.finish {
+                    out.send(&ServerFrame::Finish { id, token: ev.token, reason });
+                } else if let Some(token) = ev.token {
+                    out.send(&ServerFrame::Token { id, token });
+                }
+                if terminal {
+                    break;
+                }
+            }
+            Err(_) => {
+                // server gone without a terminal event (fatal path):
+                // typed error so the client never hangs.
+                out.send(&ServerFrame::Error { id, err: EngineError::ServerClosed });
+                break;
+            }
+        }
+    }
+    shared.live.lock().expect("live set lock").remove(&id);
+}
+
+// ---------------------------------------------------------------------------
+// writer
+
+fn writer_loop(
+    mut stream: TcpStream,
+    rx: Receiver<Vec<u8>>,
+    shared: Arc<ConnShared>,
+    client: ServerClient,
+    metrics: Arc<TransportMetrics>,
+    mut inj: Option<WireFaultInjector>,
+) {
+    // runs until every sender (reader, pumps, the drain handle) is
+    // gone — so a graceful close flushes everything queued, while a
+    // teardown (`dead`) drains the queue without writing.
+    while let Ok(mut bytes) = rx.recv() {
+        if shared.dead.load(Ordering::SeqCst) {
+            metrics.inc(&metrics.frames_dropped);
+            continue;
+        }
+        match inj.as_mut().and_then(|i| i.draw(bytes.len())) {
+            Some(WireFault::Drop) => {
+                metrics.inc(&metrics.frames_dropped);
+                teardown(&shared, &client);
+                continue;
+            }
+            Some(WireFault::Truncate { keep }) => {
+                let _ = stream.write_all(&bytes[..keep]);
+                metrics.inc(&metrics.frames_dropped);
+                teardown(&shared, &client);
+                continue;
+            }
+            Some(WireFault::Corrupt { at }) => bytes[at] ^= 0x40,
+            Some(WireFault::Delay(d)) => std::thread::sleep(d),
+            None => {}
+        }
+        match stream.write_all(&bytes) {
+            Ok(()) => metrics.inc(&metrics.frames_sent),
+            Err(_) => {
+                // write deadline or broken pipe: the peer stopped
+                // draining — tear down and stop paying for it.
+                metrics.inc(&metrics.frames_dropped);
+                teardown(&shared, &client);
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// deadline-aware frame reading (server side)
+
+enum ReadOutcome {
+    Frame(Vec<u8>),
+    /// No byte arrived within a poll tick (between frames) — loop and
+    /// re-check flags.
+    Idle,
+    /// Peer closed cleanly at a frame boundary.
+    Eof,
+    /// Teardown/close flag flipped while blocked.
+    Stopped,
+    Failed(TransportError),
+}
+
+enum Fill {
+    Done,
+    Idle,
+    Eof { got: usize },
+    Stopped,
+    Err(TransportError),
+}
+
+/// Fill `buf` from the socket, waking every poll tick to check the
+/// connection flags. `idle_ok` is true only before the first byte of a
+/// frame — past that, silence beyond `read_timeout` is a stall.
+fn fill(stream: &mut TcpStream, buf: &mut [u8], shared: &ConnShared, cfg: &TransportConfig, idle_ok: bool) -> Fill {
+    let mut got = 0usize;
+    let mut stalled_since: Option<Instant> = None;
+    while got < buf.len() {
+        if shared.dead.load(Ordering::SeqCst) || shared.closing.load(Ordering::SeqCst) {
+            return Fill::Stopped;
+        }
+        match stream.read(&mut buf[got..]) {
+            Ok(0) => return Fill::Eof { got },
+            Ok(n) => {
+                got += n;
+                stalled_since = None;
+            }
+            Err(e) if matches!(e.kind(), ErrorKind::WouldBlock | ErrorKind::TimedOut) => {
+                if got == 0 && idle_ok {
+                    return Fill::Idle;
+                }
+                let since = *stalled_since.get_or_insert_with(Instant::now);
+                if since.elapsed() >= cfg.read_timeout {
+                    return Fill::Err(TransportError::Stalled {
+                        ms: cfg.read_timeout.as_millis() as u64,
+                    });
+                }
+            }
+            Err(e) if e.kind() == ErrorKind::Interrupted => {}
+            Err(e) => return Fill::Err(e.into()),
+        }
+    }
+    Fill::Done
+}
+
+fn read_frame_server(stream: &mut TcpStream, shared: &ConnShared, cfg: &TransportConfig) -> ReadOutcome {
+    let mut prefix = [0u8; 4];
+    match fill(stream, &mut prefix, shared, cfg, true) {
+        Fill::Done => {}
+        Fill::Idle => return ReadOutcome::Idle,
+        Fill::Eof { got: 0 } => return ReadOutcome::Eof,
+        Fill::Eof { got } => return ReadOutcome::Failed(TransportError::Truncated { want: 4, got }),
+        Fill::Stopped => return ReadOutcome::Stopped,
+        Fill::Err(e) => return ReadOutcome::Failed(e),
+    }
+    let len = match wire::check_len(prefix, cfg.max_frame) {
+        Ok(len) => len,
+        Err(e) => return ReadOutcome::Failed(e),
+    };
+    let mut body = vec![0u8; len];
+    match fill(stream, &mut body, shared, cfg, false) {
+        Fill::Done => ReadOutcome::Frame(body),
+        Fill::Idle => unreachable!("idle_ok is false mid-frame"),
+        Fill::Eof { got } => ReadOutcome::Failed(TransportError::Truncated { want: len, got }),
+        Fill::Stopped => ReadOutcome::Stopped,
+        Fill::Err(e) => ReadOutcome::Failed(e),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// loopback client
+
+/// A minimal synchronous wire client: connect, submit, read frames.
+/// Used by `mpk serve --listen` for its loopback demo traffic, by the
+/// benches, and (with [`TransportClient::with_faults`]) as the chaos
+/// half of the transport tests. Not a production client — one blocking
+/// socket, no reconnect.
+pub struct TransportClient {
+    stream: TcpStream,
+    max_frame: u32,
+    faults: Option<WireFaultInjector>,
+}
+
+impl TransportClient {
+    /// Connect with a 10s default read/write deadline (see
+    /// [`TransportClient::set_read_timeout`]).
+    pub fn connect(addr: impl ToSocketAddrs) -> Result<TransportClient, TransportError> {
+        let stream = TcpStream::connect(addr)?;
+        let _ = stream.set_nodelay(true);
+        stream.set_read_timeout(Some(Duration::from_secs(10)))?;
+        stream.set_write_timeout(Some(Duration::from_secs(10)))?;
+        Ok(TransportClient { stream, max_frame: DEFAULT_MAX_FRAME, faults: None })
+    }
+
+    /// Arm seeded chaos on this client's outbound frames (truncate /
+    /// corrupt / delay / drop, per [`WireFaultPlan`]).
+    pub fn with_faults(mut self, plan: WireFaultPlan) -> TransportClient {
+        plan.validate().expect("invalid wire fault plan");
+        self.faults = plan.is_armed().then(|| WireFaultInjector::new(plan));
+        self
+    }
+
+    /// Adjust the blocking-read deadline (e.g. for deliberately
+    /// stalled readers in tests).
+    pub fn set_read_timeout(&self, d: Duration) -> Result<(), TransportError> {
+        self.stream.set_read_timeout(Some(d))?;
+        Ok(())
+    }
+
+    /// Send one frame, applying any armed fault first. An injected
+    /// `Drop`/`Truncate` closes the socket and reports a typed error.
+    pub fn send(&mut self, frame: &ClientFrame) -> Result<(), TransportError> {
+        let mut bytes = wire::encode_client(frame);
+        match self.faults.as_mut().and_then(|i| i.draw(bytes.len())) {
+            Some(WireFault::Drop) => {
+                let _ = self.stream.shutdown(Shutdown::Both);
+                return Err(TransportError::Io { what: "injected connection drop".into() });
+            }
+            Some(WireFault::Truncate { keep }) => {
+                let _ = self.stream.write_all(&bytes[..keep]);
+                let _ = self.stream.shutdown(Shutdown::Both);
+                return Err(TransportError::Io { what: "injected truncated frame".into() });
+            }
+            Some(WireFault::Corrupt { at }) => bytes[at] ^= 0x40,
+            Some(WireFault::Delay(d)) => std::thread::sleep(d),
+            None => {}
+        }
+        self.stream.write_all(&bytes)?;
+        Ok(())
+    }
+
+    /// Submit a request (fire-and-forget; the reply arrives as an
+    /// `Accepted`/`Shed`/`Error` frame via [`TransportClient::next_frame`]).
+    pub fn submit(
+        &mut self,
+        id: u64,
+        prompt: Vec<i32>,
+        max_new_tokens: u32,
+        opts: SubmitOptions,
+    ) -> Result<(), TransportError> {
+        self.send(&ClientFrame::Submit {
+            id,
+            priority: opts.priority,
+            deadline_ms: opts.deadline.map(|d| d.as_millis() as u64),
+            max_new_tokens,
+            prompt,
+        })
+    }
+
+    /// Ask the server to cancel a live request.
+    pub fn cancel(&mut self, id: u64) -> Result<(), TransportError> {
+        self.send(&ClientFrame::Cancel { id })
+    }
+
+    /// Request a status snapshot (answered by a `Status` frame).
+    pub fn request_status(&mut self) -> Result<(), TransportError> {
+        self.send(&ClientFrame::Status)
+    }
+
+    /// Read the next server frame; `Ok(None)` on a clean EOF at a
+    /// frame boundary.
+    pub fn next_frame(&mut self) -> Result<Option<ServerFrame>, TransportError> {
+        let mut prefix = [0u8; 4];
+        let mut got = 0usize;
+        while got < 4 {
+            match self.stream.read(&mut prefix[got..]) {
+                Ok(0) => {
+                    if got == 0 {
+                        return Ok(None);
+                    }
+                    return Err(TransportError::Truncated { want: 4, got });
+                }
+                Ok(n) => got += n,
+                Err(e) if e.kind() == ErrorKind::Interrupted => {}
+                Err(e) => return Err(e.into()),
+            }
+        }
+        let len = wire::check_len(prefix, self.max_frame)?;
+        let mut body = vec![0u8; len];
+        let mut got = 0usize;
+        while got < len {
+            match self.stream.read(&mut body[got..]) {
+                Ok(0) => return Err(TransportError::Truncated { want: len, got }),
+                Ok(n) => got += n,
+                Err(e) if e.kind() == ErrorKind::Interrupted => {}
+                Err(e) => return Err(e.into()),
+            }
+        }
+        Ok(Some(wire::decode_server(&body)?))
+    }
+
+    /// Submit one request and block until its terminal frame: the
+    /// tokens generated plus the typed [`FinishReason`]. Typed
+    /// failures come back as the same [`EngineError`] values an
+    /// in-process caller gets (`Shed` frames as
+    /// [`EngineError::Overloaded`], `Close` frames as
+    /// [`EngineError::Transport`]).
+    pub fn run(
+        &mut self,
+        id: u64,
+        prompt: Vec<i32>,
+        max_new_tokens: u32,
+        opts: SubmitOptions,
+    ) -> Result<(Vec<i32>, FinishReason), EngineError> {
+        self.submit(id, prompt, max_new_tokens, opts)?;
+        let mut tokens = Vec::new();
+        loop {
+            match self.next_frame()? {
+                None => {
+                    return Err(TransportError::Io {
+                        what: "connection closed before the terminal frame".into(),
+                    }
+                    .into())
+                }
+                Some(ServerFrame::Token { id: tid, token }) if tid == id => tokens.push(token),
+                Some(ServerFrame::Finish { id: fid, token, reason }) if fid == id => {
+                    if let Some(t) = token {
+                        tokens.push(t);
+                    }
+                    return Ok((tokens, reason));
+                }
+                Some(ServerFrame::Error { id: eid, err }) if eid == id || eid == 0 => {
+                    return Err(err);
+                }
+                Some(ServerFrame::Shed { id: sid, queue_depth }) if sid == id => {
+                    return Err(EngineError::Overloaded { id, queue_depth: queue_depth as usize });
+                }
+                Some(ServerFrame::Close { reason }) => {
+                    return Err(TransportError::Closed { reason }.into());
+                }
+                // frames for other requests multiplexed on this
+                // connection, or the Accepted ack: skip.
+                Some(_) => {}
+            }
+        }
+    }
+
+    /// Drop the connection abruptly — no goodbye, no reads. The
+    /// disconnect-mid-stream path in one call.
+    pub fn abort(self) {
+        let _ = self.stream.shutdown(Shutdown::Both);
+    }
+}

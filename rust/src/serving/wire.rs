@@ -1,0 +1,904 @@
+//! The serving wire protocol: versioned, length-prefixed binary frames.
+//!
+//! This module is the *pure codec* half of the network transport (the
+//! socket half lives in [`crate::serving::transport`]): it defines the
+//! frame types both sides exchange, encodes/decodes them on byte
+//! slices, and owns the typed [`TransportError`] every malformed byte
+//! sequence maps to — no stringly-typed errors on the wire path.
+//!
+//! # Frame layout
+//!
+//! Every frame is a 4-byte little-endian length prefix followed by a
+//! body; the prefix counts the body bytes only and is checked against
+//! the receiver's max-frame cap *before* the body is read (oversized-
+//! frame protection). The body always starts with the protocol version
+//! byte ([`WIRE_VERSION`]) and a tag byte:
+//!
+//! | bytes | field | notes |
+//! |-------|-------|-------|
+//! | 4     | `len` | u32 LE, body length, `<= max_frame` |
+//! | 1     | `version` | [`WIRE_VERSION`], mismatch → [`TransportError::BadVersion`] |
+//! | 1     | `tag` | frame discriminant (client `0x01..`, server `0x81..`) |
+//! | `len-2` | payload | tag-specific, all integers LE |
+//!
+//! Client → server frames ([`ClientFrame`]): `Submit` (0x01), `Cancel`
+//! (0x02), `Status` (0x03). Server → client frames ([`ServerFrame`]):
+//! `Accepted` (0x81), `Token` (0x82), `Finish` (0x83), `Error` (0x84),
+//! `Shed` (0x85), `Status` (0x86), `Close` (0x87).
+//!
+//! Strings travel as `u32` length + UTF-8 bytes; prompts as `u32`
+//! count + `i32` tokens; optional values as a presence byte. The
+//! existing typed vocabulary crosses the wire intact:
+//! [`FinishReason`] and every [`EngineError`] variant have stable
+//! one-byte codes and round-trip losslessly, so a remote client
+//! dispatches on *the same types* an in-process caller does.
+//!
+//! # Deterministic wire chaos
+//!
+//! [`WireFaultPlan`] extends the engine's
+//! [`FaultPlan`](crate::serving::FaultPlan) idiom to the transport: a
+//! seed-driven schedule that truncates, corrupts, or delays frames and
+//! drops whole connections — armable on the server's outbound path and
+//! inside the loopback
+//! [`TransportClient`](crate::serving::transport::TransportClient), so
+//! the chaos tests exercise both directions deterministically.
+
+use crate::serving::error::EngineError;
+use crate::serving::server::Priority;
+use crate::serving::step::FinishReason;
+use crate::util::{boundary_error, XorShift64};
+use std::time::Duration;
+
+/// Protocol version spoken by this build; the first byte of every
+/// frame body. A receiver rejects any other value with
+/// [`TransportError::BadVersion`] before touching the payload.
+pub const WIRE_VERSION: u8 = 1;
+
+/// Default max-frame cap (bytes of body), sized for 16k-token prompts
+/// with ample header room. See
+/// [`TransportConfig::max_frame`](crate::serving::transport::TransportConfig::max_frame).
+pub const DEFAULT_MAX_FRAME: u32 = 64 * 1024;
+
+boundary_error!(
+    /// What can go wrong on the wire path. Field-carrying variants let
+    /// both sides dispatch (and tests assert) on the *kind* of
+    /// protocol violation; the `From` shim into
+    /// [`EngineError::Transport`] keeps `?` fluent where transport code
+    /// meets the serving layer.
+    enum TransportError {
+        /// A length prefix announced a body beyond the receiver's cap
+        /// — rejected before any body byte is read.
+        FrameTooLarge { len: u32, cap: u32 } => "frame body of {len} bytes exceeds the {cap}-byte cap",
+        /// The peer closed (or the read stalled out) mid-frame:
+        /// `got` of `want` bytes arrived.
+        Truncated { want: usize, got: usize } => "frame truncated: got {got} of {want} bytes",
+        /// Version byte mismatch (this build speaks [`WIRE_VERSION`]).
+        BadVersion { got: u8, want: u8 } => "unsupported wire version {got} (this build speaks {want})",
+        /// Tag byte names no frame in this direction.
+        UnknownFrame { tag: u8 } => "unknown frame tag {tag:#04x}",
+        /// Structurally invalid payload (short fields, bad UTF-8, an
+        /// out-of-range enum code) in the named frame.
+        BadPayload { frame: String, detail: String } => "malformed {frame} payload: {detail}",
+        /// Socket I/O failure, stringified (`std::io::Error` carries no
+        /// `Eq`); `what` names the operation that failed.
+        Io { what: String } => "socket i/o: {what}",
+        /// A started frame failed to complete within the read deadline
+        /// — the slowloris guard tearing the connection down.
+        Stalled { ms: u64 } => "peer stalled mid-frame beyond the {ms}ms read deadline",
+        /// The peer's outbound queue overflowed under the `Shed`
+        /// slow-reader policy; the connection was closed with a
+        /// [`CloseReason::SlowConsumer`] frame.
+        SlowConsumer { depth: usize } => "slow consumer: outbound queue ({depth} frames) overflowed",
+        /// The server closed this connection deliberately; `reason` is
+        /// the [`CloseReason`] it sent.
+        Closed { reason: CloseReason } => "connection closed by peer: {reason:?}",
+        /// Transport configuration rejected before any socket was
+        /// opened (bad fault rates, zero queue depths).
+        Config { what: String } => "invalid transport config: {what}",
+    }
+);
+
+impl From<std::io::Error> for TransportError {
+    fn from(e: std::io::Error) -> Self {
+        TransportError::Io { what: e.to_string() }
+    }
+}
+
+/// Why the server closed a connection (the payload of a
+/// [`ServerFrame::Close`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CloseReason {
+    /// Graceful shutdown: the transport is draining; live streams were
+    /// flushed (or force-cancelled at the drain deadline).
+    Drain,
+    /// The client read too slowly under the `Shed` policy and its
+    /// bounded outbound queue overflowed.
+    SlowConsumer,
+    /// The client sent bytes that do not parse as a frame (bad
+    /// version, unknown tag, malformed payload, oversized length).
+    Protocol,
+    /// The listener is at its connection cap; retry after backoff.
+    Overloaded,
+}
+
+impl CloseReason {
+    fn code(self) -> u8 {
+        match self {
+            CloseReason::Drain => 0,
+            CloseReason::SlowConsumer => 1,
+            CloseReason::Protocol => 2,
+            CloseReason::Overloaded => 3,
+        }
+    }
+
+    fn from_code(c: u8) -> Result<CloseReason, TransportError> {
+        Ok(match c {
+            0 => CloseReason::Drain,
+            1 => CloseReason::SlowConsumer,
+            2 => CloseReason::Protocol,
+            3 => CloseReason::Overloaded,
+            _ => return bad("Close", format!("close reason code {c}")),
+        })
+    }
+}
+
+/// A client → server frame.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum ClientFrame {
+    /// Submit a request: answered by exactly one of
+    /// [`ServerFrame::Accepted`], [`ServerFrame::Shed`], or
+    /// [`ServerFrame::Error`]; once accepted, [`ServerFrame::Token`]s
+    /// stream until the single [`ServerFrame::Finish`].
+    Submit {
+        id: u64,
+        priority: Priority,
+        /// Relative deadline in milliseconds; `None` means none.
+        deadline_ms: Option<u64>,
+        max_new_tokens: u32,
+        prompt: Vec<i32>,
+    },
+    /// Cancel a live request; its stream ends with a terminal
+    /// [`FinishReason::Cancelled`] finish frame.
+    Cancel { id: u64 },
+    /// Ask for a [`ServerFrame::Status`] occupancy snapshot.
+    Status,
+}
+
+/// A server → client frame.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum ServerFrame {
+    /// The submission was accepted; token frames will follow.
+    Accepted { id: u64 },
+    /// One decoded token for a streaming request.
+    Token { id: u64, token: i32 },
+    /// The request's single terminal event: why it stopped, plus the
+    /// final token when the terminal step produced one.
+    Finish { id: u64, token: Option<i32>, reason: FinishReason },
+    /// A typed failure for one request (or `id: 0` for a
+    /// connection-scoped failure) — the full [`EngineError`] crosses
+    /// the wire, not its message.
+    Error { id: u64, err: EngineError },
+    /// Typed backpressure: the submission was shed — by the server's
+    /// bounded wait queue ([`EngineError::Overloaded`]) or by the
+    /// connection's own in-flight cap. Retry after backoff.
+    Shed { id: u64, queue_depth: u32 },
+    /// Occupancy snapshot answering [`ClientFrame::Status`].
+    Status { queued: u32, in_flight: u32, capacity: u32, finished: u64, shed: u64, rejected: u64 },
+    /// The server is closing this connection; no frame follows.
+    Close { reason: CloseReason },
+}
+
+// frame tags — client direction low, server direction high bit set.
+const TAG_SUBMIT: u8 = 0x01;
+const TAG_CANCEL: u8 = 0x02;
+const TAG_STATUS_REQ: u8 = 0x03;
+const TAG_ACCEPTED: u8 = 0x81;
+const TAG_TOKEN: u8 = 0x82;
+const TAG_FINISH: u8 = 0x83;
+const TAG_ERROR: u8 = 0x84;
+const TAG_SHED: u8 = 0x85;
+const TAG_STATUS: u8 = 0x86;
+const TAG_CLOSE: u8 = 0x87;
+
+/// Sentinel for "no deadline" in the Submit frame.
+const NO_DEADLINE: u64 = u64::MAX;
+
+fn bad<T>(frame: &str, detail: impl Into<String>) -> Result<T, TransportError> {
+    Err(TransportError::BadPayload { frame: frame.into(), detail: detail.into() })
+}
+
+// ---------------------------------------------------------------------------
+// primitive writers/readers
+
+fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_i32(out: &mut Vec<u8>, v: i32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_str(out: &mut Vec<u8>, s: &str) {
+    put_u32(out, s.len() as u32);
+    out.extend_from_slice(s.as_bytes());
+}
+
+/// Byte-slice reader with typed underrun errors; `frame` names the
+/// frame being decoded for [`TransportError::BadPayload`] context.
+struct Cursor<'a> {
+    b: &'a [u8],
+    i: usize,
+    frame: &'static str,
+}
+
+impl<'a> Cursor<'a> {
+    fn new(b: &'a [u8], frame: &'static str) -> Cursor<'a> {
+        Cursor { b, i: 0, frame }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8], TransportError> {
+        if self.i + n > self.b.len() {
+            return bad(self.frame, format!("need {n} bytes at offset {}, have {}", self.i, self.b.len() - self.i));
+        }
+        let s = &self.b[self.i..self.i + n];
+        self.i += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8, TransportError> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32, TransportError> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().expect("4 bytes")))
+    }
+
+    fn u64(&mut self) -> Result<u64, TransportError> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().expect("8 bytes")))
+    }
+
+    fn i32(&mut self) -> Result<i32, TransportError> {
+        Ok(i32::from_le_bytes(self.take(4)?.try_into().expect("4 bytes")))
+    }
+
+    fn str(&mut self) -> Result<String, TransportError> {
+        let n = self.u32()? as usize;
+        let raw = self.take(n)?;
+        match std::str::from_utf8(raw) {
+            Ok(s) => Ok(s.to_string()),
+            Err(_) => bad(self.frame, "string is not UTF-8"),
+        }
+    }
+
+    /// Every payload must be fully consumed — trailing bytes mean the
+    /// peer speaks a different dialect.
+    fn finish<T>(self, v: T) -> Result<T, TransportError> {
+        if self.i != self.b.len() {
+            return bad(self.frame, format!("{} trailing bytes", self.b.len() - self.i));
+        }
+        Ok(v)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// enum codes
+
+fn priority_code(p: Priority) -> u8 {
+    match p {
+        Priority::Interactive => 0,
+        Priority::Batch => 1,
+    }
+}
+
+fn priority_from(c: u8) -> Result<Priority, TransportError> {
+    match c {
+        0 => Ok(Priority::Interactive),
+        1 => Ok(Priority::Batch),
+        _ => bad("Submit", format!("priority code {c}")),
+    }
+}
+
+fn finish_code(r: FinishReason) -> u8 {
+    match r {
+        FinishReason::MaxTokens => 0,
+        FinishReason::Eos => 1,
+        FinishReason::Cancelled => 2,
+        FinishReason::DeadlineExceeded => 3,
+        FinishReason::Shed => 4,
+        FinishReason::Failed => 5,
+    }
+}
+
+fn finish_from(c: u8) -> Result<FinishReason, TransportError> {
+    Ok(match c {
+        0 => FinishReason::MaxTokens,
+        1 => FinishReason::Eos,
+        2 => FinishReason::Cancelled,
+        3 => FinishReason::DeadlineExceeded,
+        4 => FinishReason::Shed,
+        5 => FinishReason::Failed,
+        _ => return bad("Finish", format!("finish reason code {c}")),
+    })
+}
+
+/// [`EngineError`] wire encoding: a one-byte code plus the variant's
+/// fields. `usize` fields travel as u64 (lossless both ways on the
+/// 64-bit targets this crate supports).
+fn put_engine_error(out: &mut Vec<u8>, e: &EngineError) {
+    match e {
+        EngineError::InvalidConfig(m) => {
+            out.push(0);
+            put_str(out, m);
+        }
+        EngineError::Manifest(m) => {
+            out.push(1);
+            put_str(out, m);
+        }
+        EngineError::Pool(m) => {
+            out.push(2);
+            put_str(out, m);
+        }
+        EngineError::Kernel(m) => {
+            out.push(3);
+            put_str(out, m);
+        }
+        EngineError::Task(m) => {
+            out.push(4);
+            put_str(out, m);
+        }
+        EngineError::ZeroBudget { id } => {
+            out.push(5);
+            put_u64(out, *id);
+        }
+        EngineError::RequestTooLong { id, worst, max_seq } => {
+            out.push(6);
+            put_u64(out, *id);
+            put_u64(out, *worst as u64);
+            put_u64(out, *max_seq as u64);
+        }
+        EngineError::KvPoolExceeded { id, worst, need_blocks, pool_blocks } => {
+            out.push(7);
+            put_u64(out, *id);
+            put_u64(out, *worst as u64);
+            put_u64(out, *need_blocks as u64);
+            put_u64(out, *pool_blocks as u64);
+        }
+        EngineError::DuplicateId { id } => {
+            out.push(8);
+            put_u64(out, *id);
+        }
+        EngineError::UnknownRequest { id } => {
+            out.push(9);
+            put_u64(out, *id);
+        }
+        EngineError::AlreadyFinished { id } => {
+            out.push(10);
+            put_u64(out, *id);
+        }
+        EngineError::Overloaded { id, queue_depth } => {
+            out.push(11);
+            put_u64(out, *id);
+            put_u64(out, *queue_depth as u64);
+        }
+        EngineError::ServerClosed => out.push(12),
+        EngineError::SlotRemap { id, from, to } => {
+            out.push(13);
+            put_u64(out, *id);
+            put_u64(out, *from as u64);
+            put_u64(out, *to as u64);
+        }
+        EngineError::NoSession { batch } => {
+            out.push(14);
+            put_u64(out, *batch as u64);
+        }
+        EngineError::Transport(m) => {
+            out.push(15);
+            put_str(out, m);
+        }
+    }
+}
+
+fn take_engine_error(c: &mut Cursor<'_>) -> Result<EngineError, TransportError> {
+    let code = c.u8()?;
+    Ok(match code {
+        0 => EngineError::InvalidConfig(c.str()?),
+        1 => EngineError::Manifest(c.str()?),
+        2 => EngineError::Pool(c.str()?),
+        3 => EngineError::Kernel(c.str()?),
+        4 => EngineError::Task(c.str()?),
+        5 => EngineError::ZeroBudget { id: c.u64()? },
+        6 => EngineError::RequestTooLong {
+            id: c.u64()?,
+            worst: c.u64()? as usize,
+            max_seq: c.u64()? as usize,
+        },
+        7 => EngineError::KvPoolExceeded {
+            id: c.u64()?,
+            worst: c.u64()? as usize,
+            need_blocks: c.u64()? as usize,
+            pool_blocks: c.u64()? as usize,
+        },
+        8 => EngineError::DuplicateId { id: c.u64()? },
+        9 => EngineError::UnknownRequest { id: c.u64()? },
+        10 => EngineError::AlreadyFinished { id: c.u64()? },
+        11 => EngineError::Overloaded { id: c.u64()?, queue_depth: c.u64()? as usize },
+        12 => EngineError::ServerClosed,
+        13 => EngineError::SlotRemap { id: c.u64()?, from: c.u64()? as usize, to: c.u64()? as usize },
+        14 => EngineError::NoSession { batch: c.u64()? as usize },
+        15 => EngineError::Transport(c.str()?),
+        _ => return bad("Error", format!("engine error code {code}")),
+    })
+}
+
+// ---------------------------------------------------------------------------
+// frame encode/decode
+
+fn frame_with(tag: u8, payload: impl FnOnce(&mut Vec<u8>)) -> Vec<u8> {
+    let mut body = vec![WIRE_VERSION, tag];
+    payload(&mut body);
+    let mut out = Vec::with_capacity(4 + body.len());
+    put_u32(&mut out, body.len() as u32);
+    out.extend_from_slice(&body);
+    out
+}
+
+/// Encode a client frame to full wire bytes (length prefix included).
+pub fn encode_client(f: &ClientFrame) -> Vec<u8> {
+    match f {
+        ClientFrame::Submit { id, priority, deadline_ms, max_new_tokens, prompt } => {
+            frame_with(TAG_SUBMIT, |b| {
+                put_u64(b, *id);
+                b.push(priority_code(*priority));
+                put_u64(b, deadline_ms.unwrap_or(NO_DEADLINE));
+                put_u32(b, *max_new_tokens);
+                put_u32(b, prompt.len() as u32);
+                for t in prompt {
+                    put_i32(b, *t);
+                }
+            })
+        }
+        ClientFrame::Cancel { id } => frame_with(TAG_CANCEL, |b| put_u64(b, *id)),
+        ClientFrame::Status => frame_with(TAG_STATUS_REQ, |_| {}),
+    }
+}
+
+/// Encode a server frame to full wire bytes (length prefix included).
+pub fn encode_server(f: &ServerFrame) -> Vec<u8> {
+    match f {
+        ServerFrame::Accepted { id } => frame_with(TAG_ACCEPTED, |b| put_u64(b, *id)),
+        ServerFrame::Token { id, token } => frame_with(TAG_TOKEN, |b| {
+            put_u64(b, *id);
+            put_i32(b, *token);
+        }),
+        ServerFrame::Finish { id, token, reason } => frame_with(TAG_FINISH, |b| {
+            put_u64(b, *id);
+            b.push(finish_code(*reason));
+            match token {
+                Some(t) => {
+                    b.push(1);
+                    put_i32(b, *t);
+                }
+                None => b.push(0),
+            }
+        }),
+        ServerFrame::Error { id, err } => frame_with(TAG_ERROR, |b| {
+            put_u64(b, *id);
+            put_engine_error(b, err);
+        }),
+        ServerFrame::Shed { id, queue_depth } => frame_with(TAG_SHED, |b| {
+            put_u64(b, *id);
+            put_u32(b, *queue_depth);
+        }),
+        ServerFrame::Status { queued, in_flight, capacity, finished, shed, rejected } => {
+            frame_with(TAG_STATUS, |b| {
+                put_u32(b, *queued);
+                put_u32(b, *in_flight);
+                put_u32(b, *capacity);
+                put_u64(b, *finished);
+                put_u64(b, *shed);
+                put_u64(b, *rejected);
+            })
+        }
+        ServerFrame::Close { reason } => frame_with(TAG_CLOSE, |b| b.push(reason.code())),
+    }
+}
+
+/// Check a frame body's version byte and split off the tag; shared by
+/// both decode directions.
+fn open_body(body: &[u8]) -> Result<(u8, &[u8]), TransportError> {
+    if body.len() < 2 {
+        return Err(TransportError::Truncated { want: 2, got: body.len() });
+    }
+    if body[0] != WIRE_VERSION {
+        return Err(TransportError::BadVersion { got: body[0], want: WIRE_VERSION });
+    }
+    Ok((body[1], &body[2..]))
+}
+
+/// Decode a client-direction frame body (bytes after the length
+/// prefix).
+pub fn decode_client(body: &[u8]) -> Result<ClientFrame, TransportError> {
+    let (tag, payload) = open_body(body)?;
+    match tag {
+        TAG_SUBMIT => {
+            let mut c = Cursor::new(payload, "Submit");
+            let id = c.u64()?;
+            let priority = priority_from(c.u8()?)?;
+            let dl = c.u64()?;
+            let deadline_ms = if dl == NO_DEADLINE { None } else { Some(dl) };
+            let max_new_tokens = c.u32()?;
+            let n = c.u32()? as usize;
+            let mut prompt = Vec::with_capacity(n.min(DEFAULT_MAX_FRAME as usize / 4));
+            for _ in 0..n {
+                prompt.push(c.i32()?);
+            }
+            c.finish(ClientFrame::Submit { id, priority, deadline_ms, max_new_tokens, prompt })
+        }
+        TAG_CANCEL => {
+            let mut c = Cursor::new(payload, "Cancel");
+            let id = c.u64()?;
+            c.finish(ClientFrame::Cancel { id })
+        }
+        TAG_STATUS_REQ => Cursor::new(payload, "Status").finish(ClientFrame::Status),
+        _ => Err(TransportError::UnknownFrame { tag }),
+    }
+}
+
+/// Decode a server-direction frame body (bytes after the length
+/// prefix).
+pub fn decode_server(body: &[u8]) -> Result<ServerFrame, TransportError> {
+    let (tag, payload) = open_body(body)?;
+    match tag {
+        TAG_ACCEPTED => {
+            let mut c = Cursor::new(payload, "Accepted");
+            let id = c.u64()?;
+            c.finish(ServerFrame::Accepted { id })
+        }
+        TAG_TOKEN => {
+            let mut c = Cursor::new(payload, "Token");
+            let id = c.u64()?;
+            let token = c.i32()?;
+            c.finish(ServerFrame::Token { id, token })
+        }
+        TAG_FINISH => {
+            let mut c = Cursor::new(payload, "Finish");
+            let id = c.u64()?;
+            let reason = finish_from(c.u8()?)?;
+            let token = match c.u8()? {
+                0 => None,
+                1 => Some(c.i32()?),
+                p => return bad("Finish", format!("presence byte {p}")),
+            };
+            c.finish(ServerFrame::Finish { id, token, reason })
+        }
+        TAG_ERROR => {
+            let mut c = Cursor::new(payload, "Error");
+            let id = c.u64()?;
+            let err = take_engine_error(&mut c)?;
+            c.finish(ServerFrame::Error { id, err })
+        }
+        TAG_SHED => {
+            let mut c = Cursor::new(payload, "Shed");
+            let id = c.u64()?;
+            let queue_depth = c.u32()?;
+            c.finish(ServerFrame::Shed { id, queue_depth })
+        }
+        TAG_STATUS => {
+            let mut c = Cursor::new(payload, "Status");
+            let queued = c.u32()?;
+            let in_flight = c.u32()?;
+            let capacity = c.u32()?;
+            let finished = c.u64()?;
+            let shed = c.u64()?;
+            let rejected = c.u64()?;
+            c.finish(ServerFrame::Status { queued, in_flight, capacity, finished, shed, rejected })
+        }
+        TAG_CLOSE => {
+            let mut c = Cursor::new(payload, "Close");
+            let reason = CloseReason::from_code(c.u8()?)?;
+            c.finish(ServerFrame::Close { reason })
+        }
+        _ => Err(TransportError::UnknownFrame { tag }),
+    }
+}
+
+/// Parse a length prefix against the receiver's cap. Returns the body
+/// length to read next.
+pub fn check_len(prefix: [u8; 4], cap: u32) -> Result<usize, TransportError> {
+    let len = u32::from_le_bytes(prefix);
+    if len < 2 {
+        return Err(TransportError::Truncated { want: 2, got: len as usize });
+    }
+    if len > cap {
+        return Err(TransportError::FrameTooLarge { len, cap });
+    }
+    Ok(len as usize)
+}
+
+// ---------------------------------------------------------------------------
+// wire fault injection
+
+/// A deterministic, seed-driven schedule of wire-level chaos — the
+/// transport's analogue of the engine's
+/// [`FaultPlan`](crate::serving::FaultPlan). All-zero rates (the
+/// default) inject nothing. Armed on the server's outbound path via
+/// [`TransportConfig::faults`](crate::serving::transport::TransportConfig::faults)
+/// and on the loopback client via
+/// [`TransportClient::with_faults`](crate::serving::transport::TransportClient::with_faults).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct WireFaultPlan {
+    /// RNG seed: same plan + same frame sequence → same fault sequence.
+    pub seed: u64,
+    /// Probability (0..=1) a frame is written truncated, after which
+    /// the connection is dropped (the peer sees a mid-frame EOF).
+    pub truncate_rate: f64,
+    /// Probability (0..=1) one byte of a frame is flipped in flight.
+    pub corrupt_rate: f64,
+    /// Probability (0..=1) a frame write is delayed by [`WireFaultPlan::delay`]
+    /// first (models a congested or slow peer).
+    pub delay_rate: f64,
+    /// The per-frame delay `delay_rate` applies.
+    pub delay: Duration,
+    /// Probability (0..=1) the connection is dropped abruptly instead
+    /// of writing the frame at all.
+    pub drop_rate: f64,
+}
+
+impl Default for WireFaultPlan {
+    fn default() -> Self {
+        WireFaultPlan {
+            seed: 0x5eed,
+            truncate_rate: 0.0,
+            corrupt_rate: 0.0,
+            delay_rate: 0.0,
+            delay: Duration::from_millis(1),
+            drop_rate: 0.0,
+        }
+    }
+}
+
+impl WireFaultPlan {
+    /// Rates must be finite probabilities; rejected before any socket
+    /// is opened.
+    pub fn validate(&self) -> Result<(), String> {
+        for (name, rate) in [
+            ("truncate_rate", self.truncate_rate),
+            ("corrupt_rate", self.corrupt_rate),
+            ("delay_rate", self.delay_rate),
+            ("drop_rate", self.drop_rate),
+        ] {
+            if !rate.is_finite() || !(0.0..=1.0).contains(&rate) {
+                return Err(format!("wire fault {name} must be in 0..=1, got {rate}"));
+            }
+        }
+        Ok(())
+    }
+
+    /// True when this plan can ever inject anything.
+    pub fn is_armed(&self) -> bool {
+        self.truncate_rate > 0.0 || self.corrupt_rate > 0.0 || self.delay_rate > 0.0 || self.drop_rate > 0.0
+    }
+}
+
+/// One injected wire fault for the frame about to be written.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum WireFault {
+    /// Write only the first `keep` bytes, then drop the connection.
+    Truncate { keep: usize },
+    /// Flip one bit of the byte at `at` (index into the full frame,
+    /// length prefix included) before writing.
+    Corrupt { at: usize },
+    /// Sleep this long before the write.
+    Delay(Duration),
+    /// Drop the connection without writing.
+    Drop,
+}
+
+/// Draws [`WireFault`]s from a [`WireFaultPlan`] — one draw per
+/// outbound frame. Draw order is fixed (drop, truncate, corrupt,
+/// delay) so a given seed replays identically.
+#[derive(Debug)]
+pub struct WireFaultInjector {
+    plan: WireFaultPlan,
+    rng: XorShift64,
+}
+
+impl WireFaultInjector {
+    pub fn new(plan: WireFaultPlan) -> WireFaultInjector {
+        WireFaultInjector { rng: XorShift64::new(plan.seed), plan }
+    }
+
+    /// Decide the fate of a `frame_len`-byte frame about to be written.
+    pub fn draw(&mut self, frame_len: usize) -> Option<WireFault> {
+        if self.plan.drop_rate > 0.0 && self.rng.f64() < self.plan.drop_rate {
+            return Some(WireFault::Drop);
+        }
+        if self.plan.truncate_rate > 0.0 && self.rng.f64() < self.plan.truncate_rate {
+            return Some(WireFault::Truncate { keep: self.rng.below(frame_len.max(1)) });
+        }
+        if self.plan.corrupt_rate > 0.0 && self.rng.f64() < self.plan.corrupt_rate {
+            return Some(WireFault::Corrupt { at: self.rng.below(frame_len.max(1)) });
+        }
+        if self.plan.delay_rate > 0.0 && self.rng.f64() < self.plan.delay_rate {
+            return Some(WireFault::Delay(self.plan.delay));
+        }
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip_client(f: ClientFrame) {
+        let bytes = encode_client(&f);
+        let len = check_len(bytes[..4].try_into().unwrap(), DEFAULT_MAX_FRAME).unwrap();
+        assert_eq!(len, bytes.len() - 4);
+        assert_eq!(decode_client(&bytes[4..]).unwrap(), f);
+    }
+
+    fn roundtrip_server(f: ServerFrame) {
+        let bytes = encode_server(&f);
+        let len = check_len(bytes[..4].try_into().unwrap(), DEFAULT_MAX_FRAME).unwrap();
+        assert_eq!(len, bytes.len() - 4);
+        assert_eq!(decode_server(&bytes[4..]).unwrap(), f);
+    }
+
+    #[test]
+    fn client_frames_roundtrip() {
+        roundtrip_client(ClientFrame::Submit {
+            id: u64::MAX - 1,
+            priority: Priority::Batch,
+            deadline_ms: Some(1500),
+            max_new_tokens: 32,
+            prompt: vec![-1, 0, 7, i32::MAX],
+        });
+        roundtrip_client(ClientFrame::Submit {
+            id: 0,
+            priority: Priority::Interactive,
+            deadline_ms: None,
+            max_new_tokens: 1,
+            prompt: vec![],
+        });
+        roundtrip_client(ClientFrame::Cancel { id: 9 });
+        roundtrip_client(ClientFrame::Status);
+    }
+
+    #[test]
+    fn server_frames_roundtrip() {
+        roundtrip_server(ServerFrame::Accepted { id: 3 });
+        roundtrip_server(ServerFrame::Token { id: 3, token: -42 });
+        for reason in [
+            FinishReason::MaxTokens,
+            FinishReason::Eos,
+            FinishReason::Cancelled,
+            FinishReason::DeadlineExceeded,
+            FinishReason::Shed,
+            FinishReason::Failed,
+        ] {
+            roundtrip_server(ServerFrame::Finish { id: 7, token: Some(5), reason });
+            roundtrip_server(ServerFrame::Finish { id: 7, token: None, reason });
+        }
+        roundtrip_server(ServerFrame::Shed { id: 11, queue_depth: 64 });
+        roundtrip_server(ServerFrame::Status {
+            queued: 1,
+            in_flight: 2,
+            capacity: 8,
+            finished: 100,
+            shed: 3,
+            rejected: 4,
+        });
+        for reason in
+            [CloseReason::Drain, CloseReason::SlowConsumer, CloseReason::Protocol, CloseReason::Overloaded]
+        {
+            roundtrip_server(ServerFrame::Close { reason });
+        }
+    }
+
+    #[test]
+    fn every_engine_error_variant_roundtrips() {
+        let variants = vec![
+            EngineError::InvalidConfig("bad".into()),
+            EngineError::Manifest("missing".into()),
+            EngineError::Pool("no backend".into()),
+            EngineError::Kernel("wedged".into()),
+            EngineError::Task("nan".into()),
+            EngineError::ZeroBudget { id: 1 },
+            EngineError::RequestTooLong { id: 2, worst: 80, max_seq: 64 },
+            EngineError::KvPoolExceeded { id: 3, worst: 90, need_blocks: 12, pool_blocks: 8 },
+            EngineError::DuplicateId { id: 4 },
+            EngineError::UnknownRequest { id: 5 },
+            EngineError::AlreadyFinished { id: 6 },
+            EngineError::Overloaded { id: 7, queue_depth: 64 },
+            EngineError::ServerClosed,
+            EngineError::SlotRemap { id: 8, from: 1, to: 0 },
+            EngineError::NoSession { batch: 5 },
+            EngineError::Transport("truncated".into()),
+        ];
+        for err in variants {
+            roundtrip_server(ServerFrame::Error { id: 42, err });
+        }
+    }
+
+    #[test]
+    fn oversized_and_tiny_prefixes_are_typed() {
+        let bytes = encode_client(&ClientFrame::Cancel { id: 1 });
+        let err = check_len(bytes[..4].try_into().unwrap(), 4).unwrap_err();
+        assert_eq!(err, TransportError::FrameTooLarge { len: bytes.len() as u32 - 4, cap: 4 });
+        let err = check_len(1u32.to_le_bytes(), DEFAULT_MAX_FRAME).unwrap_err();
+        assert!(matches!(err, TransportError::Truncated { .. }), "got: {err}");
+    }
+
+    #[test]
+    fn corruption_maps_to_typed_errors() {
+        // bad version byte
+        let mut bytes = encode_client(&ClientFrame::Status);
+        bytes[4] = 9;
+        assert_eq!(decode_client(&bytes[4..]).unwrap_err(), TransportError::BadVersion { got: 9, want: WIRE_VERSION });
+        // unknown tag (server tag in the client direction)
+        let bytes = encode_server(&ServerFrame::Accepted { id: 1 });
+        assert_eq!(decode_client(&bytes[4..]).unwrap_err(), TransportError::UnknownFrame { tag: TAG_ACCEPTED });
+        // truncated payload
+        let bytes = encode_client(&ClientFrame::Cancel { id: 1 });
+        let err = decode_client(&bytes[4..bytes.len() - 2]).unwrap_err();
+        assert!(matches!(err, TransportError::BadPayload { .. }), "got: {err}");
+        // trailing garbage
+        let mut bytes = encode_client(&ClientFrame::Cancel { id: 1 });
+        bytes.push(0xff);
+        let err = decode_client(&bytes[4..]).unwrap_err();
+        assert!(matches!(err, TransportError::BadPayload { .. }), "got: {err}");
+        // out-of-range finish reason code
+        let mut bytes = encode_server(&ServerFrame::Finish { id: 1, token: None, reason: FinishReason::Eos });
+        bytes[4 + 2 + 8] = 99;
+        let err = decode_server(&bytes[4..]).unwrap_err();
+        assert!(matches!(err, TransportError::BadPayload { .. }), "got: {err}");
+    }
+
+    #[test]
+    fn wire_fault_plan_validates_and_replays() {
+        assert!(WireFaultPlan::default().validate().is_ok());
+        assert!(!WireFaultPlan::default().is_armed());
+        let bad = WireFaultPlan { corrupt_rate: 2.0, ..Default::default() };
+        assert!(bad.validate().unwrap_err().contains("corrupt_rate"));
+        let plan = WireFaultPlan {
+            seed: 11,
+            truncate_rate: 0.2,
+            corrupt_rate: 0.2,
+            delay_rate: 0.2,
+            drop_rate: 0.1,
+            ..Default::default()
+        };
+        assert!(plan.is_armed());
+        let seq = |p: WireFaultPlan| {
+            let mut inj = WireFaultInjector::new(p);
+            (0..128).map(|_| inj.draw(32)).collect::<Vec<_>>()
+        };
+        let a = seq(plan);
+        assert_eq!(a, seq(plan), "same seed must replay the same faults");
+        assert!(a.iter().any(|f| f.is_some()) && a.iter().any(|f| f.is_none()));
+        for f in a.iter().flatten() {
+            match f {
+                WireFault::Truncate { keep } => assert!(*keep < 32),
+                WireFault::Corrupt { at } => assert!(*at < 32),
+                _ => {}
+            }
+        }
+        assert_ne!(a, seq(WireFaultPlan { seed: 12, ..plan }));
+    }
+
+    #[test]
+    fn transport_error_display_names_the_failure() {
+        let e = TransportError::FrameTooLarge { len: 70000, cap: 65536 };
+        assert!(e.to_string().contains("70000") && e.to_string().contains("65536"), "got: {e}");
+        let e = TransportError::BadVersion { got: 2, want: WIRE_VERSION };
+        assert!(e.to_string().contains("version 2"), "got: {e}");
+        let e = TransportError::SlowConsumer { depth: 8 };
+        assert!(e.to_string().contains("slow consumer"), "got: {e}");
+        let e = TransportError::Closed { reason: CloseReason::Drain };
+        assert!(e.to_string().contains("Drain"), "got: {e}");
+    }
+}

@@ -3,12 +3,23 @@
 //! (serde/criterion are unavailable offline — these are the minimal
 //! in-repo replacements.)
 
-/// Defines a `String`-newtype boundary error: `Display` forwards the
-/// message, `std::error::Error` is implemented, and `From<Self> for
-/// String` keeps legacy `Result<_, String>` call sites compiling
-/// through `?`. One definition per layer boundary (`runtime`'s
-/// manifest and pool, `megakernel`'s kernel, `exec`'s task harvest);
-/// the serving layer adds its own `From<Self> for EngineError` shims
+/// Defines a typed boundary error. Two shapes:
+///
+/// * **Newtype** (`boundary_error!(Name)`): a `String`-newtype —
+///   `Display` forwards the message, `std::error::Error` is
+///   implemented, and `From<Self> for String` keeps legacy
+///   `Result<_, String>` call sites compiling through `?`. One
+///   definition per layer boundary (`runtime`'s manifest and pool,
+///   `megakernel`'s kernel, `exec`'s task harvest).
+/// * **Enum** (`boundary_error!(enum Name { Variant { field: Ty } =>
+///   "fmt using {field}", ... })`): a field-carrying error enum for
+///   boundaries where callers dispatch on *which* failure occurred
+///   (the wire transport's `TransportError`). Each variant names its
+///   fields and a format string that must reference every field; the
+///   macro derives `Clone/Debug/PartialEq/Eq`, `Display`, `Error`,
+///   and the same `From<Self> for String` legacy shim.
+///
+/// The serving layer adds its own `From<Self> for EngineError` shims
 /// next to `EngineError` itself.
 macro_rules! boundary_error {
     ($(#[$meta:meta])* $name:ident) => {
@@ -27,6 +38,33 @@ macro_rules! boundary_error {
         impl From<$name> for String {
             fn from(e: $name) -> String {
                 e.0
+            }
+        }
+    };
+    ($(#[$meta:meta])* enum $name:ident {
+        $( $(#[$vmeta:meta])* $variant:ident { $($field:ident : $ftype:ty),* $(,)? } => $fmt:literal ),+ $(,)?
+    }) => {
+        $(#[$meta])*
+        #[derive(Clone, Debug, PartialEq, Eq)]
+        pub enum $name {
+            $( $(#[$vmeta])* $variant { $($field: $ftype),* } ),+
+        }
+
+        impl std::fmt::Display for $name {
+            fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+                match self {
+                    $( $name::$variant { $($field),* } => {
+                        write!(f, $fmt $(, $field = $field)*)
+                    } ),+
+                }
+            }
+        }
+
+        impl std::error::Error for $name {}
+
+        impl From<$name> for String {
+            fn from(e: $name) -> String {
+                e.to_string()
             }
         }
     };
@@ -415,6 +453,26 @@ pub fn bench_median_ns<F: FnMut()>(warmup: usize, n: usize, mut f: F) -> u64 {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    boundary_error!(
+        /// Test-only enum-shaped boundary error.
+        enum DemoError {
+            /// Unit-ish variant (no fields).
+            Closed {} => "demo closed",
+            /// Field-carrying variant.
+            TooBig { len: u32, cap: u32 } => "len {len} exceeds cap {cap}",
+        }
+    );
+
+    #[test]
+    fn boundary_error_enum_arm_displays_and_shims() {
+        let e = DemoError::TooBig { len: 9, cap: 4 };
+        assert_eq!(e.to_string(), "len 9 exceeds cap 4");
+        assert_eq!(String::from(e.clone()), "len 9 exceeds cap 4");
+        assert_eq!(e, DemoError::TooBig { len: 9, cap: 4 });
+        assert_ne!(e, DemoError::Closed {});
+        assert_eq!(DemoError::Closed {}.to_string(), "demo closed");
+    }
 
     #[test]
     fn rng_is_deterministic() {

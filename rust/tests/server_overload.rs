@@ -101,6 +101,34 @@ fn server_streams_and_releases_ids_for_reuse() {
 }
 
 #[test]
+fn token_stream_is_fused_after_its_terminal_event() {
+    // Regression: `TokenStream::recv` used to block on the channel even
+    // after the terminal event, so polling a finished stream after
+    // `shutdown()` raced the serving thread's sender drop — sometimes
+    // a quick disconnect, sometimes a hang until the thread exited.
+    // The stream now fuses on its own state: post-terminal reads are
+    // deterministic `ServerClosed`, and iteration yields `None`.
+    let server = ServeServer::spawn_with(MockEngine::new(1), ServerConfig::default());
+    let client = server.client();
+    let mut stream = client.submit(Request::new(1, vec![2], 2)).unwrap();
+    let mut terminals = 0;
+    while let Ok(ev) = stream.recv() {
+        if ev.finish.is_some() {
+            terminals += 1;
+        }
+    }
+    assert_eq!(terminals, 1);
+    let report = server.shutdown();
+    assert_eq!(report.finished, 1);
+    // the server is gone and the terminal event was consumed: every
+    // further read must fail the same way, immediately.
+    for _ in 0..3 {
+        assert!(matches!(stream.recv(), Err(EngineError::ServerClosed)));
+    }
+    assert!(stream.next().is_none(), "fused iteration after the terminal event");
+}
+
+#[test]
 fn zero_deadline_expires_in_the_queue_before_admission() {
     let server = ServeServer::spawn_with(MockEngine::new(1), ServerConfig::default());
     let client = server.client();
@@ -152,7 +180,7 @@ fn full_queue_sheds_lower_priority_or_refuses_typed() {
     );
     let client = server.client();
     // A occupies the only slot for ~2s of steps (cancelled below).
-    let a = client.submit(Request::new(1, vec![3], 200)).unwrap();
+    let mut a = client.submit(Request::new(1, vec![3], 200)).unwrap();
     assert!(a.recv().expect("first token").token.is_some());
     // B fills the depth-1 wait queue.
     let b = client
@@ -203,7 +231,7 @@ fn interactive_is_admitted_before_earlier_batch_submissions() {
     );
     let client = server.client();
     // blocker holds the single slot while B and C queue up.
-    let a = client.submit(Request::new(1, vec![5], 60)).unwrap();
+    let mut a = client.submit(Request::new(1, vec![5], 60)).unwrap();
     assert!(a.recv().expect("first token").token.is_some());
     let b = client
         .submit_with(

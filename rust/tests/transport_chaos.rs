@@ -1,0 +1,535 @@
+//! Chaos and robustness suite for the TCP transport
+//! ([`mpk::serving::ServeTransport`]), run over loopback sockets
+//! against the backend-free `MockEngine`.
+//!
+//! Three layers, mirroring `server_overload.rs` one level down the
+//! stack:
+//!
+//! 1. Deterministic unit tests of each wire policy in isolation:
+//!    end-to-end streaming round trip, oversized-frame refusal,
+//!    slowloris mid-frame stall cutoff, the per-connection in-flight
+//!    cap, both slow-reader policies, and the forced-drain deadline.
+//! 2. A seeded property test (`mpk::proputil::forall`): clients that
+//!    disconnect mid-stream at random points must always leave the
+//!    server reconciled — every submission the transport accepted gets
+//!    exactly one terminal event, and every KV block returns to the
+//!    pool.
+//! 3. A chaos acceptance run: 32 concurrent connections with seeded
+//!    wire faults armed in *both* directions (truncated, corrupted,
+//!    delayed frames; dropped connections). Whatever the wire does,
+//!    the server-side ledger must balance: no lost or duplicated
+//!    terminal events, no leaked slots or KV blocks, a drain that
+//!    completes within its bounded deadline, and no hangs. A larger
+//!    `#[ignore]`d soak (64 connections) rides along for CI.
+
+use mpk::proputil::forall;
+use mpk::serving::mock::MockEngine;
+use mpk::serving::{
+    EngineError, FinishReason, Priority, Request, ServeServer, ServeStats, ServeTransport,
+    ServerConfig, ServerFrame, SlowReaderPolicy, StepEngine, StepOutcome, SubmitOptions,
+    TransportClient, TransportConfig, WireFaultPlan,
+};
+use mpk::util::XorShift64;
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// KV pool gauges exported from inside the serving thread. The engine
+/// moves into the server on spawn, so post-drain conservation checks
+/// cannot probe it directly — the wrapper below mirrors the pool state
+/// into these shared atomics after every mutating engine call.
+#[derive(Clone, Default)]
+struct KvGauges {
+    total: Arc<AtomicUsize>,
+    free: Arc<AtomicUsize>,
+}
+
+impl KvGauges {
+    fn leaked(&self) -> bool {
+        self.free.load(Ordering::SeqCst) != self.total.load(Ordering::SeqCst)
+    }
+}
+
+/// A [`MockEngine`] that (a) mirrors its KV pool occupancy into
+/// [`KvGauges`] and (b) optionally sleeps per step, so requests stay
+/// in flight long enough for disconnects and drain deadlines to catch
+/// them mid-stream.
+struct GaugedEngine {
+    inner: MockEngine,
+    delay: Duration,
+    gauges: KvGauges,
+}
+
+impl GaugedEngine {
+    fn new(inner: MockEngine, delay: Duration) -> (GaugedEngine, KvGauges) {
+        let gauges = KvGauges::default();
+        let e = GaugedEngine { inner, delay, gauges: gauges.clone() };
+        e.sync();
+        (e, gauges)
+    }
+
+    fn sync(&self) {
+        self.gauges.total.store(self.inner.kv_total_blocks(), Ordering::SeqCst);
+        self.gauges.free.store(self.inner.kv_free_blocks(), Ordering::SeqCst);
+    }
+}
+
+impl StepEngine for GaugedEngine {
+    fn submit(&mut self, r: Request) -> Result<(), EngineError> {
+        let res = self.inner.submit(r);
+        self.sync();
+        res
+    }
+    fn validate(&self, r: &Request) -> Result<(), EngineError> {
+        self.inner.validate(r)
+    }
+    fn terminate(&mut self, id: u64, reason: FinishReason) -> Result<(), EngineError> {
+        let res = self.inner.terminate(id, reason);
+        self.sync();
+        res
+    }
+    fn step(&mut self) -> Result<StepOutcome, EngineError> {
+        if !self.delay.is_zero() {
+            std::thread::sleep(self.delay);
+        }
+        let res = self.inner.step();
+        self.sync();
+        res
+    }
+    fn has_work(&self) -> bool {
+        self.inner.has_work()
+    }
+    fn capacity(&self) -> usize {
+        self.inner.capacity()
+    }
+    fn in_flight(&self) -> usize {
+        self.inner.in_flight()
+    }
+    fn take_finished(&mut self) -> Vec<Request> {
+        let r = self.inner.take_finished();
+        self.sync();
+        r
+    }
+    fn take_stats(&mut self) -> ServeStats {
+        let r = self.inner.take_stats();
+        self.sync();
+        r
+    }
+}
+
+/// Bind a transport over a gauged mock on an ephemeral loopback port.
+fn bind(
+    capacity: usize,
+    step_delay: Duration,
+    queue_depth: usize,
+    cfg: TransportConfig,
+) -> (ServeTransport, KvGauges) {
+    let (engine, gauges) = GaugedEngine::new(MockEngine::new(capacity), step_delay);
+    let server = ServeServer::spawn_with(
+        engine,
+        ServerConfig { queue_depth, idle_poll: Duration::from_micros(200) },
+    );
+    let transport = ServeTransport::bind("127.0.0.1:0", server, cfg).expect("bind loopback");
+    (transport, gauges)
+}
+
+// ---------------------------------------------------------------------
+// deterministic unit tests
+// ---------------------------------------------------------------------
+
+#[test]
+fn loopback_round_trip_streams_tokens_and_status() {
+    let (transport, gauges) = bind(4, Duration::ZERO, 64, TransportConfig::default());
+    let mut client = TransportClient::connect(transport.local_addr()).expect("connect");
+
+    let (tokens, finish) = client.run(1, vec![3, 7], 8, SubmitOptions::default()).expect("run");
+    assert_eq!(finish, FinishReason::MaxTokens);
+    assert_eq!(tokens.len(), 8, "full budget over the wire: {tokens:?}");
+
+    client.request_status().expect("status request");
+    loop {
+        match client.next_frame().expect("status frame") {
+            Some(ServerFrame::Status { capacity, finished, .. }) => {
+                assert_eq!(capacity, 4);
+                assert_eq!(finished, 1);
+                break;
+            }
+            Some(other) => panic!("expected Status, got {other:?}"),
+            None => panic!("connection closed before the status frame"),
+        }
+    }
+
+    let report = transport.drain(Duration::from_secs(5));
+    assert!(report.server.fatal.is_none());
+    assert_eq!(report.server.finished, 1);
+    assert_eq!(report.forced, 0, "nothing was live at drain");
+    assert_eq!(report.transport.requests_submitted, 1);
+    assert!(report.transport.frames_sent >= 10, "accepted + 8 tokens + status");
+    assert!(!gauges.leaked(), "KV blocks leaked");
+}
+
+#[test]
+fn oversized_length_prefix_is_refused_before_the_body() {
+    let (transport, _gauges) = bind(1, Duration::ZERO, 64, TransportConfig::default());
+    let mut raw = TcpStream::connect(transport.local_addr()).expect("connect");
+    raw.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+    // a prefix claiming a 4 GiB body: the cap check must fire on the
+    // prefix alone — no buffer of that size is ever allocated.
+    raw.write_all(&u32::MAX.to_le_bytes()).expect("write prefix");
+    let t0 = Instant::now();
+    while transport.metrics().protocol_errors == 0 {
+        assert!(t0.elapsed() < Duration::from_secs(5), "oversized frame was not rejected");
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    // the connection is torn down: reads drain to EOF (a best-effort
+    // Close{Protocol} frame may or may not precede it).
+    let mut buf = Vec::new();
+    let _ = raw.read_to_end(&mut buf);
+    let report = transport.drain(Duration::from_secs(2));
+    assert_eq!(report.transport.protocol_errors, 1);
+    assert_eq!(report.server.finished, 0, "nothing was ever submitted");
+}
+
+#[test]
+fn slowloris_mid_frame_stall_is_cut_off() {
+    let cfg = TransportConfig { read_timeout: Duration::from_millis(150), ..Default::default() };
+    let (transport, _gauges) = bind(1, Duration::ZERO, 64, cfg);
+    let mut raw = TcpStream::connect(transport.local_addr()).expect("connect");
+    raw.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    // announce a 20-byte body, send one byte, then go silent: the
+    // stall budget (150ms) must cut the connection off — not the 10s a
+    // naive blocking read would wait, and not forever.
+    raw.write_all(&20u32.to_le_bytes()).expect("write prefix");
+    raw.write_all(&[mpk::serving::wire::WIRE_VERSION]).expect("write one body byte");
+    let t0 = Instant::now();
+    let mut buf = Vec::new();
+    let _ = raw.read_to_end(&mut buf); // returns once the server hangs up
+    assert!(t0.elapsed() < Duration::from_secs(5), "stalled peer was not cut off");
+    let report = transport.drain(Duration::from_secs(2));
+    assert_eq!(report.transport.protocol_errors, 1);
+}
+
+#[test]
+fn in_flight_cap_sheds_typed_and_drain_deadline_forces_the_rest() {
+    // 2ms steps x 300-token budgets keep ids 1 and 2 live for over a
+    // second — far past the 200ms drain deadline below.
+    let cfg = TransportConfig { max_in_flight: 2, ..Default::default() };
+    let (transport, gauges) = bind(4, Duration::from_millis(2), 64, cfg);
+    let mut client = TransportClient::connect(transport.local_addr()).expect("connect");
+    client.submit(1, vec![1], 300, SubmitOptions::default()).unwrap();
+    client.submit(2, vec![1], 300, SubmitOptions::default()).unwrap();
+    client.submit(3, vec![1], 300, SubmitOptions::default()).unwrap();
+    // ids 1 and 2 fill the per-connection window; 3 must be answered
+    // with the typed Shed frame carrying the cap, without ever
+    // reaching the server.
+    let t0 = Instant::now();
+    let shed = loop {
+        assert!(t0.elapsed() < Duration::from_secs(10), "no shed frame arrived");
+        match client.next_frame().expect("frame") {
+            Some(ServerFrame::Shed { id, queue_depth }) => break (id, queue_depth),
+            Some(_) => {}
+            None => panic!("connection closed before the shed frame"),
+        }
+    };
+    assert_eq!(shed, (3, 2), "the third submit sheds against the cap of 2");
+
+    let deadline = Duration::from_millis(200);
+    let report = transport.drain(deadline);
+    assert_eq!(report.forced, 2, "both live requests outlived the drain deadline");
+    assert_eq!(report.transport.drain_forced, 2);
+    assert!(report.elapsed < Duration::from_secs(5), "drain must stay bounded");
+    assert!(report.server.fatal.is_none());
+    // the forced cancels still produced terminal events: the ledger
+    // balances even on the force path.
+    assert_eq!(report.server.finished, report.transport.requests_submitted as usize);
+    assert_eq!(report.transport.requests_submitted, 2);
+    assert!(report.transport.requests_rejected >= 1, "the shed submit was counted");
+    assert!(!gauges.leaked(), "forced drain leaked KV blocks");
+}
+
+#[test]
+fn slow_reader_shed_policy_closes_the_connection_and_frees_the_request() {
+    // The writer is made artificially slow (every frame delayed 2ms)
+    // while the engine decodes at full speed, so the 4-deep outbound
+    // queue deterministically overflows while the client reads nothing.
+    let cfg = TransportConfig {
+        outbound_depth: 4,
+        slow_reader: SlowReaderPolicy::Shed,
+        faults: WireFaultPlan {
+            delay_rate: 1.0,
+            delay: Duration::from_millis(2),
+            ..Default::default()
+        },
+        ..Default::default()
+    };
+    let (transport, gauges) = bind(2, Duration::ZERO, 64, cfg);
+    let mut client = TransportClient::connect(transport.local_addr()).expect("connect");
+    client.submit(1, vec![1], 200, SubmitOptions::default()).unwrap();
+    // never read: the Shed policy must close the connection rather
+    // than buffer without bound or stall the pump forever.
+    let t0 = Instant::now();
+    while transport.metrics().slow_consumer_closes == 0 {
+        assert!(t0.elapsed() < Duration::from_secs(10), "slow consumer was never shed");
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    let report = transport.drain(Duration::from_secs(5));
+    assert!(report.server.fatal.is_none());
+    assert!(report.transport.slow_consumer_closes >= 1);
+    // the shed connection's request was cancelled (or had already
+    // finished): exactly one terminal either way.
+    assert_eq!(report.server.finished, report.transport.requests_submitted as usize);
+    assert!(!gauges.leaked(), "shed slow consumer leaked KV blocks");
+    drop(client);
+}
+
+#[test]
+fn slow_reader_block_policy_delivers_every_token_to_a_stalled_reader() {
+    // Same slow writer and tiny queue as the Shed test, but the Block
+    // policy: the pump waits for queue slots, so a reader that stalls
+    // 200ms still receives the complete stream, nothing dropped.
+    let cfg = TransportConfig {
+        outbound_depth: 4,
+        slow_reader: SlowReaderPolicy::Block,
+        faults: WireFaultPlan {
+            delay_rate: 1.0,
+            delay: Duration::from_millis(1),
+            ..Default::default()
+        },
+        ..Default::default()
+    };
+    let (transport, gauges) = bind(1, Duration::ZERO, 64, cfg);
+    let mut client = TransportClient::connect(transport.local_addr()).expect("connect");
+    client.submit(1, vec![1], 64, SubmitOptions::default()).unwrap();
+    std::thread::sleep(Duration::from_millis(200)); // stall the reader
+    let mut tokens = 0usize;
+    let finish = loop {
+        match client.next_frame().expect("frame") {
+            Some(ServerFrame::Token { .. }) => tokens += 1,
+            Some(ServerFrame::Finish { token, reason, .. }) => {
+                if token.is_some() {
+                    tokens += 1;
+                }
+                break reason;
+            }
+            Some(_) => {}
+            None => panic!("connection closed before the terminal frame"),
+        }
+    };
+    assert_eq!(finish, FinishReason::MaxTokens);
+    assert_eq!(tokens, 64, "Block policy must deliver the full budget despite the stall");
+    let report = transport.drain(Duration::from_secs(5));
+    assert_eq!(report.transport.slow_consumer_closes, 0);
+    assert_eq!(report.transport.frames_dropped, 0, "nothing may be dropped under Block");
+    assert_eq!(report.server.finished, 1);
+    assert!(!gauges.leaked());
+}
+
+// ---------------------------------------------------------------------
+// property test: disconnect mid-stream always reconciles
+// ---------------------------------------------------------------------
+
+#[derive(Clone, Copy, Debug)]
+struct DropClient {
+    prompt: usize,
+    budget: usize,
+    /// Frames to read before dropping the connection — varies the
+    /// point in the stream where the disconnect lands.
+    read_frames: usize,
+}
+
+#[derive(Debug)]
+struct DropScript {
+    capacity: usize,
+    delay_us: usize,
+    clients: Vec<DropClient>,
+}
+
+fn random_drop_script(rng: &mut XorShift64) -> DropScript {
+    DropScript {
+        capacity: rng.range(1, 4),
+        delay_us: rng.range(200, 1000),
+        clients: (0..rng.range(2, 6))
+            .map(|_| DropClient {
+                prompt: rng.range(1, 4),
+                budget: rng.range(100, 400),
+                read_frames: rng.range(1, 8),
+            })
+            .collect(),
+    }
+}
+
+/// Whatever point in its stream a connection dies at, the server must
+/// cancel that connection's live requests (terminal event, slots and
+/// KV freed) and the books must balance: terminals delivered ==
+/// submissions the transport accepted, and every KV block back in the
+/// pool after drain.
+fn drive_disconnect(s: &DropScript) -> Result<(), String> {
+    let (engine, gauges) =
+        GaugedEngine::new(MockEngine::new(s.capacity), Duration::from_micros(s.delay_us as u64));
+    let server = ServeServer::spawn_with(
+        engine,
+        ServerConfig { queue_depth: 8, idle_poll: Duration::from_micros(200) },
+    );
+    let transport = ServeTransport::bind("127.0.0.1:0", server, TransportConfig::default())?;
+    let addr = transport.local_addr();
+    let handles: Vec<_> = s
+        .clients
+        .iter()
+        .copied()
+        .enumerate()
+        .map(|(i, c)| {
+            std::thread::spawn(move || -> Result<(), String> {
+                let mut client = TransportClient::connect(addr)?;
+                client.submit(
+                    i as u64 + 1,
+                    vec![1; c.prompt],
+                    c.budget as u32,
+                    SubmitOptions::default(),
+                )?;
+                for _ in 0..c.read_frames {
+                    if client.next_frame()?.is_none() {
+                        break;
+                    }
+                }
+                client.abort(); // disconnect mid-stream, no goodbye
+                Ok(())
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().map_err(|_| "client thread panicked".to_string())??;
+    }
+    let deadline = Duration::from_secs(10);
+    let report = transport.drain(deadline);
+    if let Some(err) = &report.server.fatal {
+        return Err(format!("serving thread died: {err}"));
+    }
+    if report.server.finished != report.transport.requests_submitted as usize {
+        return Err(format!(
+            "{} terminals for {} accepted submissions (lost or duplicated)",
+            report.server.finished, report.transport.requests_submitted
+        ));
+    }
+    if gauges.leaked() {
+        return Err(format!(
+            "KV leak: {} of {} blocks free after drain",
+            gauges.free.load(Ordering::SeqCst),
+            gauges.total.load(Ordering::SeqCst)
+        ));
+    }
+    if report.elapsed > deadline + Duration::from_secs(2) {
+        return Err(format!("drain overran its deadline: {:?}", report.elapsed));
+    }
+    Ok(())
+}
+
+#[test]
+fn prop_disconnect_mid_stream_cancels_and_conserves_kv() {
+    forall("transport-disconnects", 0xd15c, 8, random_drop_script, drive_disconnect);
+}
+
+// ---------------------------------------------------------------------
+// chaos acceptance: concurrent connections under seeded wire faults
+// ---------------------------------------------------------------------
+
+/// `conns` concurrent connections, `per_conn` sequential requests
+/// each, seeded wire faults armed on both the server's outbound path
+/// and every client's outbound path. Clients tolerate any typed
+/// outcome; the server-side ledger must reconcile exactly.
+fn run_chaos(conns: usize, per_conn: usize, seed: u64) {
+    let (engine, gauges) = GaugedEngine::new(MockEngine::new(8), Duration::from_micros(300));
+    let server = ServeServer::spawn_with(
+        engine,
+        ServerConfig { queue_depth: 32, idle_poll: Duration::from_micros(200) },
+    );
+    let cfg = TransportConfig {
+        max_in_flight: 4,
+        faults: WireFaultPlan {
+            seed,
+            truncate_rate: 0.01,
+            corrupt_rate: 0.02,
+            delay_rate: 0.05,
+            delay: Duration::from_micros(500),
+            drop_rate: 0.01,
+        },
+        ..Default::default()
+    };
+    let transport = ServeTransport::bind("127.0.0.1:0", server, cfg).expect("bind loopback");
+    let addr = transport.local_addr();
+    let handles: Vec<_> = (0..conns)
+        .map(|t| {
+            std::thread::spawn(move || {
+                let mut rng =
+                    XorShift64::new(seed ^ (t as u64 + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15));
+                let Ok(client) = TransportClient::connect(addr) else { return };
+                let mut client = client.with_faults(WireFaultPlan {
+                    seed: rng.next_u64(),
+                    truncate_rate: 0.01,
+                    corrupt_rate: 0.02,
+                    drop_rate: 0.01,
+                    ..Default::default()
+                });
+                if client.set_read_timeout(Duration::from_secs(2)).is_err() {
+                    return;
+                }
+                for i in 0..per_conn {
+                    let id = (t * per_conn + i) as u64 + 1;
+                    let prompt = vec![1; rng.range(1, 4)];
+                    let budget = rng.range(1, 40) as u32;
+                    let opts = SubmitOptions {
+                        priority: if rng.below(2) == 0 {
+                            Priority::Interactive
+                        } else {
+                            Priority::Batch
+                        },
+                        deadline: (rng.below(8) == 0)
+                            .then(|| Duration::from_millis(rng.below(20) as u64)),
+                    };
+                    // under chaos every outcome is legitimate — tokens,
+                    // a typed shed/error, a corrupted frame, a dead
+                    // socket. The connection is abandoned on the first
+                    // failure; the server must reconcile regardless.
+                    if client.run(id, prompt, budget, opts).is_err() {
+                        break;
+                    }
+                }
+                if rng.below(4) == 0 {
+                    client.abort(); // some clients leave without a goodbye
+                }
+            })
+        })
+        .collect();
+    for h in handles {
+        let _ = h.join();
+    }
+    let deadline = Duration::from_secs(10);
+    let report = transport.drain(deadline);
+    assert!(report.server.fatal.is_none(), "serving thread died: {:?}", report.server.fatal);
+    // zero lost, zero duplicated terminal events: every submission the
+    // transport accepted produced exactly one terminal server-side.
+    assert_eq!(
+        report.server.finished, report.transport.requests_submitted as usize,
+        "terminal events must match accepted submissions exactly"
+    );
+    assert!(!gauges.leaked(), "KV blocks leaked under wire chaos");
+    assert!(
+        report.elapsed <= deadline + Duration::from_secs(5),
+        "drain overran its bounded deadline: {:?}",
+        report.elapsed
+    );
+}
+
+#[test]
+fn chaos_32_connections_with_wire_faults_reconciles() {
+    run_chaos(32, 4, 0xc4a05);
+}
+
+/// The CI soak (see `.github/workflows/tier1.yml`): heavier than the
+/// default suite, run with `cargo test --release -- --ignored soak`.
+#[test]
+#[ignore = "long soak; run explicitly (CI runs it with --ignored)"]
+fn soak_64_connections_with_wire_faults() {
+    run_chaos(64, 6, 0x50a4);
+}

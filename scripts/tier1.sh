@@ -7,12 +7,14 @@
 # a warning when miri is absent); then (best-effort) the perf-trajectory
 # benches so BENCH_launch_overhead.json, BENCH_store_hotpath.json,
 # BENCH_weight_arena.json, BENCH_exec_into.json,
-# BENCH_step_overhead.json, and BENCH_saturation.json track the hot
-# paths across PRs (spawn-per-iteration vs persistent runtime;
-# locked-clone vs borrowed-view tile reads; per-session vs shared-arena
-# weight init; alloc-per-call vs write-into pool outputs; step()
-# bookkeeping vs the kernel iteration inside it; admission latency and
-# shed rate with the serving front-end offered 2x capacity).
+# BENCH_step_overhead.json, BENCH_saturation.json, and
+# BENCH_transport.json track the hot paths across PRs
+# (spawn-per-iteration vs persistent runtime; locked-clone vs
+# borrowed-view tile reads; per-session vs shared-arena weight init;
+# alloc-per-call vs write-into pool outputs; step() bookkeeping vs the
+# kernel iteration inside it; admission latency and shed rate with the
+# serving front-end offered 2x capacity; loopback TCP round-trip
+# latency and streaming frames/s through the wire transport).
 #
 # Usage: scripts/tier1.sh [--no-bench]
 set -euo pipefail
@@ -78,12 +80,13 @@ if [[ "${1:-}" != "--no-bench" ]]; then
     # `if` (not `&&`) so a missing bench file cannot trip errexit.
     if [[ -f "$ROOT/BENCH_launch_overhead.json" ]]; then cat "$ROOT/BENCH_launch_overhead.json"; fi
 
-    echo "== tier1: hotpath_micro bench (store hot path + weight arena + pool output boundary + step API + serving saturation) =="
+    echo "== tier1: hotpath_micro bench (store hot path + weight arena + pool output boundary + step API + serving saturation + wire transport) =="
     MPK_BENCH_STORE_JSON="$ROOT/BENCH_store_hotpath.json" \
     MPK_BENCH_WEIGHT_JSON="$ROOT/BENCH_weight_arena.json" \
     MPK_BENCH_EXEC_INTO_JSON="$ROOT/BENCH_exec_into.json" \
     MPK_BENCH_STEP_JSON="$ROOT/BENCH_step_overhead.json" \
     MPK_BENCH_SATURATION_JSON="$ROOT/BENCH_saturation.json" \
+    MPK_BENCH_TRANSPORT_JSON="$ROOT/BENCH_transport.json" \
         cargo bench --bench hotpath_micro ||
         echo "tier1: bench skipped (non-fatal)" >&2
     if [[ -f "$ROOT/BENCH_store_hotpath.json" ]]; then cat "$ROOT/BENCH_store_hotpath.json"; fi
@@ -91,6 +94,7 @@ if [[ "${1:-}" != "--no-bench" ]]; then
     if [[ -f "$ROOT/BENCH_exec_into.json" ]]; then cat "$ROOT/BENCH_exec_into.json"; fi
     if [[ -f "$ROOT/BENCH_step_overhead.json" ]]; then cat "$ROOT/BENCH_step_overhead.json"; fi
     if [[ -f "$ROOT/BENCH_saturation.json" ]]; then cat "$ROOT/BENCH_saturation.json"; fi
+    if [[ -f "$ROOT/BENCH_transport.json" ]]; then cat "$ROOT/BENCH_transport.json"; fi
 fi
 
 echo "tier1: OK"

@@ -17,7 +17,9 @@ use mpk::serving::{
     TransportClient, TransportConfig,
 };
 use mpk::sim::{simulate_megakernel, GpuSpec, SimOptions};
-use mpk::tgraph::{analyze_deps, compile, decompose, CompileOptions, DecomposeConfig};
+use mpk::tgraph::{
+    analyze_deps, compile, decompose, verify_compiled, CompileOptions, DecomposeConfig,
+};
 use mpk::util::{bench_median_ns, Table};
 use std::sync::Mutex;
 
@@ -535,6 +537,28 @@ fn main() {
     });
     t.row(vec!["full compile (1.7B)".into(), format!("{:.2} ms", ns as f64 / 1e6), "all stages".into()]);
 
+    // static verifier cost vs task count (BENCH_verify.json): the
+    // compile gate re-derives every footprint and closes the
+    // happens-before relation with reachability bitsets, so its wall
+    // time must stay visible as a function of graph scale.
+    let mut verify_rows: Vec<(usize, usize, usize, u64)> = Vec::new();
+    for target in [gpu.workers / 2, gpu.workers, gpu.workers * 2] {
+        let dcv = DecomposeConfig { target_tasks: target, min_tile_cols: 8 };
+        let cv = compile(&g, &CompileOptions { decompose: dcv, verify: false, ..Default::default() });
+        let rep = verify_compiled(&cv);
+        assert!(rep.is_clean(), "verifier flagged the 1.7B graph:\n{}", rep.render(8));
+        let vtasks = cv.tgraph.tasks.len();
+        let ns = bench_median_ns(1, 3, || {
+            std::hint::black_box(verify_compiled(&cv));
+        });
+        t.row(vec![
+            format!("static verify (1.7B, {vtasks} tasks)"),
+            format!("{:.2} ms", ns as f64 / 1e6),
+            format!("{} region pairs, {} hb edges", rep.region_pairs, rep.hb_edges),
+        ]);
+        verify_rows.push((vtasks, rep.region_pairs, rep.hb_edges, ns));
+    }
+
     // DES throughput
     let c = compile(&g, &CompileOptions { decompose: dc, ..Default::default() });
     let ns = bench_median_ns(1, 5, || {
@@ -674,5 +698,28 @@ fn main() {
     match std::fs::write(&wire_json_path, wire_json) {
         Ok(()) => println!("wrote {wire_json_path}"),
         Err(e) => eprintln!("could not write {wire_json_path}: {e}"),
+    }
+
+    // verifier-cost record: static race/deadlock verification wall time
+    // vs task count on the 1.7B decode graph, so the compile gate's
+    // price stays visible across PRs.
+    let verify_json_path = std::env::var("MPK_BENCH_VERIFY_JSON")
+        .unwrap_or_else(|_| "BENCH_verify.json".to_string());
+    let scale_rows: Vec<String> = verify_rows
+        .iter()
+        .map(|(tasks, pairs, hb, ns)| {
+            format!(
+                "    {{ \"tasks\": {tasks}, \"region_pairs\": {pairs}, \
+                 \"hb_edges\": {hb}, \"verify_ns\": {ns} }}"
+            )
+        })
+        .collect();
+    let verify_json = format!(
+        "{{\n  \"bench\": \"verify\",\n  \"model\": \"Qwen3-1.7B\",\n  \"scales\": [\n{}\n  ]\n}}\n",
+        scale_rows.join(",\n")
+    );
+    match std::fs::write(&verify_json_path, verify_json) {
+        Ok(()) => println!("wrote {verify_json_path}"),
+        Err(e) => eprintln!("could not write {verify_json_path}: {e}"),
     }
 }

@@ -6,22 +6,28 @@
 
 use mpk::models::{build_decode_graph, GraphOptions, ModelConfig};
 use mpk::sim::GpuSpec;
-use mpk::tgraph::{compile, CompileOptions, DecomposeConfig};
+use mpk::tgraph::{compile, compile_verified, CompileOptions, DecomposeConfig};
 use mpk::util::Table;
 
 fn main() {
     println!("== Table 2: compiler-stage statistics (B200, batch 1) ==\n");
     let gpu = GpuSpec::b200();
-    let mut t = Table::new(&["model", "Ops", "Tasks/op", "Events", "Fusion", "Lin.", "NormOvhd"]);
+    let mut t = Table::new(&[
+        "model", "Ops", "Tasks/op", "Events", "Fusion", "Lin.", "NormOvhd", "VPairs", "HbEdges",
+        "Verify",
+    ]);
     for cfg in [ModelConfig::qwen3_1_7b(), ModelConfig::qwen3_8b(), ModelConfig::qwen3_30b_a3b()] {
         let g = build_decode_graph(&cfg, &GraphOptions { batch: 1, kv_len: 512, ..Default::default() });
-        let c = compile(
+        // verification forced on (even in release) so the Table-2 row
+        // includes the new stage's coverage and cost columns.
+        let (c, report) = compile_verified(
             &g,
             &CompileOptions {
                 decompose: DecomposeConfig { target_tasks: gpu.workers, min_tile_cols: 8 },
                 ..Default::default()
             },
         );
+        assert!(report.is_clean(), "{}: {}", cfg.name, report.render(8));
         let s = c.stats();
         t.row(vec![
             cfg.name.to_string(),
@@ -31,6 +37,9 @@ fn main() {
             format!("{:.0}x", s.fusion_reduction),
             format!("{:.1}x", s.lin_reduction),
             format!("{:.2}%", s.norm_overhead * 100.0),
+            s.verify_pairs.to_string(),
+            s.verify_hb_edges.to_string(),
+            format!("{:.1} ms", s.verify_us as f64 / 1000.0),
         ]);
     }
     println!("{}", t.render());

@@ -76,6 +76,27 @@
 //! This module is the **only** place allowed to dereference the slab;
 //! keep every `unsafe` here so it stays auditable (the tier-1 script
 //! runs `cargo miri test` over this module when miri is installed).
+//! The crate's full audited unsafe surface is this arena plus three
+//! satellites — the pool's lifetime-erased channel crossing
+//! (`runtime/pool.rs`), the megakernel's MPMC task queue
+//! (`megakernel/queue.rs`), and its scoped executor borrow
+//! (`megakernel/runtime.rs`) — and the tier-1 script's grep lint fails
+//! the build if `unsafe` appears anywhere else; the crate root denies
+//! `unsafe_op_in_unsafe_fn` so every raw operation sits in an explicit
+//! inner `unsafe {}` block next to its SAFETY comment.
+//!
+//! The "event graph orders or keeps disjoint" premise itself is no
+//! longer taken on faith: [`crate::tgraph::verify`] statically
+//! re-derives every task's read/write footprint from the operator
+//! semantics and checks that each overlapping writer/reader and
+//! writer/writer pair is connected by a happens-before path in the
+//! compiled task/event DAG (plus acyclicity/liveness, per-stage
+//! relation preservation, and mutation-tested analyzer soundness).
+//! That verifier is the machine-checked half of this aliasing
+//! contract: the static half proves the orderings exist, the unsafe
+//! code here relies on the runtime delivering them. It runs as a
+//! compile gate (`CompileOptions::verify`, on by default in debug) and
+//! as `mpk verify` in CI.
 //!
 //! # Debug assertions
 //!

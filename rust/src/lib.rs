@@ -6,7 +6,13 @@
 //! * [`ops`] — computation-graph IR (operators, tensors, tile regions).
 //! * [`models`] — decode-iteration graph builders for the paper's models.
 //! * [`tgraph`] — the MPK compiler: operator decomposition, dependency
-//!   analysis, event fusion, normalization, linearization (§4).
+//!   analysis, event fusion, normalization, linearization (§4), and the
+//!   static race/deadlock verifier ([`tgraph::verify`]) that re-derives
+//!   every task's read/write footprint and checks it against the
+//!   happens-before relation of the compiled task/event DAG — the
+//!   machine-checked half of the aliasing contract that
+//!   [`exec::store`]'s zero-copy memory model relies on (run it from
+//!   the CLI with `mpk verify`).
 //! * [`megakernel`] — the in-kernel parallel runtime, threaded: workers,
 //!   schedulers, events, hybrid JIT/AOT launch, paged shared memory (§5).
 //! * [`runtime`] / [`exec`] — PJRT-backed real-numerics execution of
@@ -31,6 +37,7 @@
 //! * [`moe`] — expert routing + hybrid workload balancer (§6.4).
 //! * [`multigpu`] — tensor parallelism + collective decomposition (§6.5).
 #![deny(rustdoc::broken_intra_doc_links)]
+#![deny(unsafe_op_in_unsafe_fn)]
 pub mod exec;
 pub mod megakernel;
 pub mod metrics;

@@ -3,6 +3,8 @@
 //! Subcommands:
 //!   compile  <model> [--batch N] [--gpu NAME]   compiler-stage stats
 //!   simulate <model> [--batch N] [--gpu NAME]   MPK vs baselines on a roofline
+//!   verify   [model] [--batch N] [--gpu NAME] [--granularity G] [--mutations N]
+//!            static race/deadlock verification of the compiled tGraphs
 //!   serve    [--requests N] [--batch N]         real-numerics serving (needs artifacts)
 //!   serve    --listen ADDR [--requests N]       TCP serving (wire protocol + graceful drain)
 //!   models                                      list known model configs
@@ -15,7 +17,9 @@ use mpk::serving::{
     TransportClient, TransportConfig,
 };
 use mpk::sim::{simulate_baseline, simulate_megakernel, BaselineSystem, GpuSpec, SimOptions};
-use mpk::tgraph::{compile, CompileOptions, DecomposeConfig};
+use mpk::tgraph::{
+    compile, compile_verified, mutation_sweep, CompileOptions, DecomposeConfig, DepGranularity,
+};
 use std::time::Duration;
 
 fn main() {
@@ -68,6 +72,74 @@ fn main() {
                 }
             }
         }
+        "verify" => {
+            let batch: usize = flag(&args, "--batch").and_then(|v| v.parse().ok()).unwrap_or(1);
+            let gpu = GpuSpec::by_name(&flag(&args, "--gpu").unwrap_or_else(|| "B200".into()))
+                .expect("unknown GPU (A100/H100/B200)");
+            let mutations: usize =
+                flag(&args, "--mutations").and_then(|v| v.parse().ok()).unwrap_or(16);
+            let grans: Vec<DepGranularity> = match flag(&args, "--granularity").as_deref() {
+                None | Some("all") => vec![
+                    DepGranularity::Fine,
+                    DepGranularity::CoarseCollectives,
+                    DepGranularity::CoarseAll,
+                ],
+                Some("fine") => vec![DepGranularity::Fine],
+                Some("coarse-collectives") => vec![DepGranularity::CoarseCollectives],
+                Some("coarse-all") => vec![DepGranularity::CoarseAll],
+                Some(g) => panic!("unknown granularity {g} (fine/coarse-collectives/coarse-all/all)"),
+            };
+            let models: Vec<ModelConfig> = match flag_pos(&args, 1) {
+                Some(m) => vec![ModelConfig::by_name(&m).expect("unknown model; see `mpk models`")],
+                None => {
+                    let mut v = ModelConfig::paper_models();
+                    v.push(ModelConfig::tiny());
+                    v
+                }
+            };
+            let mut failed = false;
+            for cfg in &models {
+                let g = build_decode_graph(
+                    cfg,
+                    &GraphOptions { batch, kv_len: 512, ..Default::default() },
+                );
+                for &gran in &grans {
+                    let opt = CompileOptions {
+                        decompose: DecomposeConfig { target_tasks: gpu.workers, min_tile_cols: 8 },
+                        granularity: gran,
+                        ..Default::default()
+                    };
+                    let (c, report) = compile_verified(&g, &opt);
+                    // derived Debug ignores width padding; pre-render.
+                    println!("{:<16} {:<18} {}", cfg.name, format!("{gran:?}"), report.summary());
+                    if !report.is_clean() {
+                        failed = true;
+                        println!("{}", report.render(16));
+                    }
+                    if mutations > 0 {
+                        let sweep = mutation_sweep(&c, mutations, 0xC0FFEE);
+                        println!(
+                            "{:<16} {:<18} mutation sweep: {}/{} caught ({:.0}%)",
+                            "", "",
+                            sweep.caught,
+                            sweep.total,
+                            sweep.catch_rate() * 100.0
+                        );
+                        if sweep.catch_rate() < 0.95 {
+                            failed = true;
+                            for m in &sweep.survivors {
+                                println!("  survivor: {m}");
+                            }
+                        }
+                    }
+                }
+            }
+            if failed {
+                eprintln!("mpk verify: FAILED (violations or mutation survivors above)");
+                std::process::exit(1);
+            }
+            println!("mpk verify: OK ({} model(s) × {} granularit(ies))", models.len(), grans.len());
+        }
         "serve" => {
             let n: usize = flag(&args, "--requests").and_then(|v| v.parse().ok()).unwrap_or(8);
             let batch: usize = flag(&args, "--batch").and_then(|v| v.parse().ok()).unwrap_or(4);
@@ -118,9 +190,13 @@ fn main() {
         }
         _ => {
             println!("mpk — mega-kernelizing tensor programs (see README.md)");
-            println!("usage: mpk <models|compile|simulate|serve> [args]");
+            println!("usage: mpk <models|compile|simulate|verify|serve> [args]");
             println!("  mpk compile Qwen3-8B --batch 1 --gpu B200");
             println!("  mpk simulate Qwen3-1.7B --batch 4 --gpu A100");
+            println!("  mpk verify [model] --granularity all --mutations 16");
+            println!("      static race/deadlock check of every compiled tGraph");
+            println!("      (+ a seeded mutation sweep proving the analyzer bites);");
+            println!("      nonzero exit on any violation or mutation survivor");
             println!("  mpk serve --requests 8 --batch 4   (after `make artifacts`)");
             println!("  mpk serve --listen 127.0.0.1:7171 --requests 8");
         }

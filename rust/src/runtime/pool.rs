@@ -215,11 +215,15 @@ impl RawOutView {
     unsafe fn write(&self, src: &[f32]) {
         debug_assert_eq!(src.len(), self.len());
         for i in 0..self.runs {
-            std::ptr::copy_nonoverlapping(
-                src.as_ptr().add(i * self.run),
-                self.ptr.add(i * self.stride),
-                self.run,
-            );
+            // SAFETY: caller holds the destination borrow (contract above)
+            // and distinct runs are disjoint (stride >= run).
+            unsafe {
+                std::ptr::copy_nonoverlapping(
+                    src.as_ptr().add(i * self.run),
+                    self.ptr.add(i * self.stride),
+                    self.run,
+                );
+            }
         }
     }
 }

@@ -10,6 +10,7 @@ use crate::tgraph::fusion::fuse_events;
 use crate::tgraph::linearize::{linearize, naive_footprint_bytes, LinearTGraph};
 use crate::tgraph::normalize::normalize;
 use crate::tgraph::task::{EventDesc, EventId, TGraph, TaskDesc, TaskKind};
+use crate::tgraph::verify::{StageRule, StageSnapshot, VerifyReport};
 
 /// Dependency granularity, for the Figure 13 ablation.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -34,6 +35,12 @@ pub struct CompileOptions {
     /// (mirrors the paper's fused-epilogue operators; §6.7 reports
     /// production graphs normalize with < 1 % overhead).
     pub merge_forks: bool,
+    /// Run the static race/deadlock verifier
+    /// ([`crate::tgraph::verify`]) as a compile-time gate: `compile`
+    /// panics if any analysis finds a violation. On by default in debug
+    /// builds and tests; release callers opt in per call (or use
+    /// [`compile_verified`] to inspect the report instead of panicking).
+    pub verify: bool,
 }
 
 impl Default for CompileOptions {
@@ -43,6 +50,7 @@ impl Default for CompileOptions {
             granularity: DepGranularity::Fine,
             fuse: true,
             merge_forks: true,
+            verify: cfg!(debug_assertions),
         }
     }
 }
@@ -69,6 +77,14 @@ pub struct StageStats {
     pub lin_naive_bytes: usize,
     pub lin_bytes: usize,
     pub lin_reduction: f64,
+    /// Verifier coverage: overlapping same-tensor region pairs checked
+    /// for happens-before ordering (0 when `CompileOptions::verify` is
+    /// off).
+    pub verify_pairs: usize,
+    /// Verifier: direct task→task pairs encoded by the event lists.
+    pub verify_hb_edges: usize,
+    /// Verifier wall time, µs (0 when off).
+    pub verify_us: u64,
 }
 
 /// A fully compiled tGraph ready for the runtime and the simulator.
@@ -86,9 +102,38 @@ impl CompiledGraph {
     }
 }
 
-/// Run the full pipeline.
+/// Run the full pipeline. When `opt.verify` is set (the default in
+/// debug builds and tests), the static race/deadlock verifier runs as a
+/// gate and this function panics with the full report on any violation.
 pub fn compile(graph: &CompGraph, opt: &CompileOptions) -> CompiledGraph {
+    let (c, report) = compile_inner(graph, opt, opt.verify);
+    if let Some(r) = report {
+        assert!(
+            r.is_clean(),
+            "tGraph verification failed ({} ops, {} tasks):\n{}",
+            graph.ops.len(),
+            c.tgraph.tasks.len(),
+            r.render(16)
+        );
+    }
+    c
+}
+
+/// Run the pipeline with verification forced on and return the report
+/// alongside the compiled graph instead of panicking — the entry point
+/// for `mpk verify` and for callers that want the coverage stats.
+pub fn compile_verified(graph: &CompGraph, opt: &CompileOptions) -> (CompiledGraph, VerifyReport) {
+    let (c, report) = compile_inner(graph, opt, true);
+    (c, report.expect("verification was requested"))
+}
+
+fn compile_inner(
+    graph: &CompGraph,
+    opt: &CompileOptions,
+    verify: bool,
+) -> (CompiledGraph, Option<VerifyReport>) {
     let mut stats = StageStats { ops: graph.ops.len(), ..Default::default() };
+    let mut snapshots: Vec<StageSnapshot> = Vec::new();
 
     // (b) operator decomposition
     let decomposition = decompose(graph, &opt.decompose);
@@ -104,6 +149,17 @@ pub fn compile(graph: &CompGraph, opt: &CompileOptions) -> CompiledGraph {
         DepGranularity::Fine => events,
         g => coarsen(graph, &mut tasks, &op_task_span, g),
     };
+    if verify {
+        // baseline relation: the dependency events actually fed to the
+        // rest of the pipeline (coarse when ablating).
+        let stage = if opt.granularity == DepGranularity::Fine { "deps" } else { "coarsen" };
+        snapshots.push(StageSnapshot {
+            stage,
+            rule: StageRule::Superset,
+            tasks: tasks.clone(),
+            events: events.clone(),
+        });
+    }
 
     // (c→d) event fusion
     let mut events = if opt.fuse {
@@ -113,9 +169,25 @@ pub fn compile(graph: &CompGraph, opt: &CompileOptions) -> CompiledGraph {
     };
     let events_after_fusion = events.len();
     stats.fusion_reduction = dep_pairs as f64 / events_after_fusion.max(1) as f64;
+    if verify && opt.fuse {
+        snapshots.push(StageSnapshot {
+            stage: "fuse",
+            rule: StageRule::Superset,
+            tasks: tasks.clone(),
+            events: events.clone(),
+        });
+    }
 
     if opt.merge_forks {
         events = crate::tgraph::fusion::merge_task_forks(&mut tasks, events);
+        if verify {
+            snapshots.push(StageSnapshot {
+                stage: "merge_forks",
+                rule: StageRule::Superset,
+                tasks: tasks.clone(),
+                events: events.clone(),
+            });
+        }
     }
 
     // §5.2 hybrid-launch classification (operator granularity).
@@ -153,7 +225,17 @@ pub fn compile(graph: &CompGraph, opt: &CompileOptions) -> CompiledGraph {
     let tgraph = TGraph { tasks, events, start_event, end_event, stats };
     debug_assert_eq!(tgraph.check_consistent(), Ok(()));
     debug_assert!(tgraph.is_normalized());
-    CompiledGraph { graph: graph.clone(), tgraph, linear, decomposition }
+    let mut c = CompiledGraph { graph: graph.clone(), tgraph, linear, decomposition };
+    let report = if verify {
+        let r = crate::tgraph::verify::verify_pipeline(&c, &snapshots, opt);
+        c.tgraph.stats.verify_pairs = r.region_pairs;
+        c.tgraph.stats.verify_hb_edges = r.hb_edges;
+        c.tgraph.stats.verify_us = r.wall_us;
+        Some(r)
+    } else {
+        None
+    };
+    (c, report)
 }
 
 /// Replace fine-grained events with one event per operator edge for the

@@ -5,8 +5,15 @@ pub mod fusion;
 pub mod linearize;
 pub mod normalize;
 pub mod task;
+pub mod verify;
 
 pub use build::{analyze_deps, decompose, DecomposeConfig, OpTasks};
-pub use compiler::{compile, CompileOptions, CompiledGraph, DepGranularity, StageStats};
+pub use compiler::{
+    compile, compile_verified, CompileOptions, CompiledGraph, DepGranularity, StageStats,
+};
 pub use linearize::{linearize, LinearTGraph};
 pub use task::{EventDesc, EventId, TGraph, TaskDesc, TaskId, TaskKind};
+pub use verify::{
+    mutation_sweep, verify_compiled, verify_graph, Mutation, MutationKind, MutationSweep,
+    VerifyReport, Violation,
+};

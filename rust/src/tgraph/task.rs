@@ -97,11 +97,27 @@ pub struct TGraph {
     pub stats: super::compiler::StageStats,
 }
 
+/// First duplicated id in a list, if any.
+fn first_dup(ids: &[usize]) -> Option<usize> {
+    let mut sorted = ids.to_vec();
+    sorted.sort_unstable();
+    sorted.windows(2).find(|w| w[0] == w[1]).map(|w| w[0])
+}
+
 impl TGraph {
     /// Structural invariant check: edge lists are mutually consistent,
-    /// ids in range, the start event has no in-tasks.
+    /// ids in range, no list holds the same id twice (a duplicate
+    /// in-task inflates an event's `required_triggers` beyond what can
+    /// ever arrive and deadlocks the runtime; a duplicate out-task
+    /// would launch a task twice), the start event has no in-tasks.
     pub fn check_consistent(&self) -> Result<(), String> {
         for t in &self.tasks {
+            if let Some(e) = first_dup(&t.dependent_events) {
+                return Err(format!("task {} lists dependent event {e} twice", t.id));
+            }
+            if let Some(e) = first_dup(&t.trigger_events) {
+                return Err(format!("task {} lists trigger event {e} twice", t.id));
+            }
             for &e in t.dependent_events.iter() {
                 if e >= self.events.len() {
                     return Err(format!("task {} dependent event {e} out of range", t.id));
@@ -120,6 +136,15 @@ impl TGraph {
             }
         }
         for ev in &self.events {
+            if let Some(t) = first_dup(&ev.in_tasks) {
+                return Err(format!(
+                    "event {} lists in-task {t} twice (required_triggers would never be met)",
+                    ev.id
+                ));
+            }
+            if let Some(t) = first_dup(&ev.out_tasks) {
+                return Err(format!("event {} lists out-task {t} twice", ev.id));
+            }
             for &t in ev.out_tasks.iter() {
                 if !self.tasks[t].dependent_events.contains(&ev.id) {
                     return Err(format!("event {} missing from task {t} dependents", ev.id));
@@ -148,5 +173,78 @@ impl TGraph {
     /// Number of non-dummy tasks.
     pub fn real_task_count(&self) -> usize {
         self.tasks.iter().filter(|t| !t.kind.is_dummy()).count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ops::LaunchMode;
+
+    fn mk_task(id: usize, deps: &[usize], trigs: &[usize]) -> TaskDesc {
+        TaskDesc {
+            id,
+            kind: TaskKind::Dummy,
+            out_region: Region::new(vec![]),
+            launch: LaunchMode::Aot,
+            dependent_events: deps.to_vec(),
+            trigger_events: trigs.to_vec(),
+            device: 0,
+        }
+    }
+
+    /// start -> t0 -> e1 -> t1 -> end, fully consistent.
+    fn chain() -> TGraph {
+        TGraph {
+            tasks: vec![mk_task(0, &[0], &[1]), mk_task(1, &[1], &[2])],
+            events: vec![
+                EventDesc { id: 0, in_tasks: vec![], out_tasks: vec![0] },
+                EventDesc { id: 1, in_tasks: vec![0], out_tasks: vec![1] },
+                EventDesc { id: 2, in_tasks: vec![1], out_tasks: vec![] },
+            ],
+            start_event: 0,
+            end_event: 2,
+            stats: Default::default(),
+        }
+    }
+
+    #[test]
+    fn consistent_chain_passes() {
+        chain().check_consistent().unwrap();
+    }
+
+    #[test]
+    fn duplicate_in_task_rejected() {
+        // the duplicate would make required_triggers = 2 with only one
+        // notifier: an unconditional runtime deadlock.
+        let mut g = chain();
+        g.events[2].in_tasks = vec![1, 1];
+        g.tasks[1].trigger_events = vec![2];
+        let err = g.check_consistent().unwrap_err();
+        assert!(err.contains("in-task 1 twice"), "{err}");
+    }
+
+    #[test]
+    fn duplicate_out_task_rejected() {
+        let mut g = chain();
+        g.events[1].out_tasks = vec![1, 1];
+        let err = g.check_consistent().unwrap_err();
+        assert!(err.contains("out-task 1 twice"), "{err}");
+    }
+
+    #[test]
+    fn duplicate_dependent_event_rejected() {
+        let mut g = chain();
+        g.tasks[1].dependent_events = vec![1, 1];
+        let err = g.check_consistent().unwrap_err();
+        assert!(err.contains("dependent event 1 twice"), "{err}");
+    }
+
+    #[test]
+    fn duplicate_trigger_event_rejected() {
+        let mut g = chain();
+        g.tasks[0].trigger_events = vec![1, 1];
+        let err = g.check_consistent().unwrap_err();
+        assert!(err.contains("trigger event 1 twice"), "{err}");
     }
 }

@@ -1,0 +1,1235 @@
+//! Static race & deadlock verifier for compiled SM-level task graphs.
+//!
+//! The whole zero-copy memory model (see the `exec::store` memory-model
+//! note) rests on one compiler invariant: an event edge exists whenever
+//! a producer's output region overlaps a consumer's input region
+//! (§4.1), so the in-kernel runtime's acquire/release event activation
+//! establishes every writer-before-reader ordering. This module checks
+//! that invariant *independently* of the pipeline that is supposed to
+//! enforce it:
+//!
+//! 1. **Race detection** ([`check_races`]) — re-derives every task's
+//!    read/write footprint from the operator vocabulary alone (write =
+//!    the task's `out_region` on its op's output tensor; reads =
+//!    [`crate::ops::OpKind::input_region`] per input; `Transfer` re-publishes its
+//!    operator's output; `Dummy`/`IterPrep` have no arena footprint)
+//!    and requires every overlapping write/write and write/read pair on
+//!    the same tensor to be ordered by the happens-before relation of
+//!    the bipartite task/event DAG (a per-task reachability bitset
+//!    closure, [`hb_closure`]).
+//! 2. **Deadlock / liveness** ([`check_liveness`]) — the graph is
+//!    acyclic, every event's trigger count is satisfiable from the
+//!    start event (forward activation simulation), every task runs,
+//!    every task reaches the end event (quiescence is signaled only
+//!    after *all* work), and the end event launches nothing.
+//! 3. **Transform preservation** ([`check_stage_preservation`]) — each
+//!    pipeline stage's pre/post graphs induce compatible happens-before
+//!    relations: fusion and fork-merging may only *add* orderings,
+//!    normalization must preserve the relation between real tasks
+//!    exactly (dummy insertion is pure re-encoding), and the
+//!    linearized form must agree with the event lists
+//!    ([`check_linearization`]).
+//! 4. **Ablation honesty** ([`check_ablation_superset`]) — a graph
+//!    compiled under `DepGranularity::CoarseAll` / `CoarseCollectives`
+//!    must order a *superset* of what `Fine` orders, so ablation
+//!    numbers can never come from an under-synchronized graph.
+//!
+//! The analyzer itself is validated by **mutation testing**
+//! ([`mutate`], [`mutation_sweep`]): a seeded edge-dropper/redirector
+//! deletes or rewires one event edge of a known-good graph and asserts
+//! the race or liveness analysis fires — a verifier that passes
+//! everything is worthless.
+
+use crate::ops::{CompGraph, Region, TensorId};
+use crate::tgraph::build::OpTasks;
+use crate::tgraph::compiler::task_label;
+use crate::tgraph::linearize::LinearTGraph;
+use crate::tgraph::task::{EventDesc, EventId, TaskDesc, TaskId, TaskKind, TGraph};
+use crate::util::XorShift64;
+use std::collections::HashSet;
+use std::time::Instant;
+
+// ---------------------------------------------------------------------------
+// Violations and the report
+// ---------------------------------------------------------------------------
+
+/// Which aliasing rule an unordered pair breaks.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RaceKind {
+    /// Two writes to overlapping regions with no ordering in either
+    /// direction.
+    WriteWrite,
+    /// A read overlapping a write with no writer-before-reader path.
+    WriteRead,
+}
+
+/// One verifier finding. `Display` renders a diagnosis with task
+/// labels, tensor names and both regions where applicable.
+#[derive(Clone, Debug)]
+pub enum Violation {
+    /// An overlapping region pair the happens-before relation fails to
+    /// order (`first` is the writer for [`RaceKind::WriteRead`]).
+    Race {
+        kind: RaceKind,
+        tensor: String,
+        first: TaskId,
+        first_label: String,
+        first_region: Region,
+        second: TaskId,
+        second_label: String,
+        second_region: Region,
+    },
+    /// The task/event graph cannot drain from the start event:
+    /// a cycle, an unsatisfiable event, or a task that never runs.
+    Deadlock { detail: String },
+    /// A task (or event) that can never be scheduled or whose
+    /// completion is invisible to the end event.
+    Liveness { detail: String },
+    /// A pipeline stage lost or illegally added a task ordering.
+    StagePreservation { stage: String, detail: String },
+    /// A coarse-granularity relation failed to cover the fine one.
+    Ablation { detail: String },
+    /// The linearized encoding disagrees with the event lists.
+    Linearization { detail: String },
+}
+
+impl std::fmt::Display for Violation {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Violation::Race {
+                kind,
+                tensor,
+                first,
+                first_label,
+                first_region,
+                second,
+                second_label,
+                second_region,
+            } => {
+                let k = match kind {
+                    RaceKind::WriteWrite => "write/write",
+                    RaceKind::WriteRead => "write/read",
+                };
+                write!(
+                    f,
+                    "{k} race on tensor `{tensor}`: task {first} ({first_label}) region \
+                     {first_region} vs task {second} ({second_label}) region {second_region} \
+                     — no happens-before path orders them"
+                )
+            }
+            Violation::Deadlock { detail } => write!(f, "deadlock: {detail}"),
+            Violation::Liveness { detail } => write!(f, "liveness: {detail}"),
+            Violation::StagePreservation { stage, detail } => {
+                write!(f, "stage `{stage}` broke the happens-before relation: {detail}")
+            }
+            Violation::Ablation { detail } => write!(f, "ablation honesty: {detail}"),
+            Violation::Linearization { detail } => write!(f, "linearization: {detail}"),
+        }
+    }
+}
+
+/// Outcome of a verification run, plus the coverage stats surfaced in
+/// [`crate::tgraph::StageStats`] and `mpk verify`.
+#[derive(Clone, Debug, Default)]
+pub struct VerifyReport {
+    pub tasks: usize,
+    pub events: usize,
+    /// Direct task→task ordered pairs encoded by the event lists
+    /// (Σ |in_tasks|·|out_tasks|).
+    pub hb_edges: usize,
+    /// Overlapping same-tensor region pairs checked for ordering.
+    pub region_pairs: usize,
+    pub violations: Vec<Violation>,
+    /// Verifier wall time, µs.
+    pub wall_us: u64,
+}
+
+impl VerifyReport {
+    pub fn is_clean(&self) -> bool {
+        self.violations.is_empty()
+    }
+
+    /// One-line outcome summary.
+    pub fn summary(&self) -> String {
+        format!(
+            "{} tasks, {} events, {} hb-edges, {} region pairs checked, {} violation(s), {} µs",
+            self.tasks,
+            self.events,
+            self.hb_edges,
+            self.region_pairs,
+            self.violations.len(),
+            self.wall_us
+        )
+    }
+
+    /// Render up to `max` violations, one per line.
+    pub fn render(&self, max: usize) -> String {
+        let mut s = self.summary();
+        for v in self.violations.iter().take(max) {
+            s.push_str("\n  - ");
+            s.push_str(&v.to_string());
+        }
+        if self.violations.len() > max {
+            s.push_str(&format!("\n  … and {} more", self.violations.len() - max));
+        }
+        s
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Happens-before closure
+// ---------------------------------------------------------------------------
+
+/// Transitive happens-before relation over tasks, as one reachability
+/// bitset row per task (columns restricted to tasks `< n_cols` so a
+/// stage comparison can ignore dummies appended by later stages).
+pub struct HbClosure {
+    n_cols: usize,
+    words_per_row: usize,
+    bits: Vec<u64>,
+}
+
+impl HbClosure {
+    /// True iff `from` strictly happens-before `to` (`to < n_cols`).
+    pub fn ordered(&self, from: TaskId, to: TaskId) -> bool {
+        debug_assert!(to < self.n_cols);
+        self.bits[from * self.words_per_row + (to >> 6)] & (1u64 << (to & 63)) != 0
+    }
+
+    fn row(&self, t: TaskId) -> &[u64] {
+        &self.bits[t * self.words_per_row..(t + 1) * self.words_per_row]
+    }
+}
+
+/// Compute the happens-before closure of a bipartite task/event DAG.
+/// Task `p` happens-before task `c` iff an event path leads from `p`'s
+/// trigger events to `c`. Errors if the graph is cyclic.
+pub fn hb_closure(
+    tasks: &[TaskDesc],
+    events: &[EventDesc],
+    n_cols: usize,
+) -> Result<HbClosure, String> {
+    let n = tasks.len();
+    // Kahn over tasks: in-degree = total notifications feeding the
+    // task's dependent events' in-task lists... direct task in-degree is
+    // the number of (producer, this) edges.
+    let mut indeg = vec![0usize; n];
+    for e in events {
+        for &c in &e.out_tasks {
+            indeg[c] += e.in_tasks.len();
+        }
+    }
+    let mut queue: std::collections::VecDeque<TaskId> =
+        (0..n).filter(|&t| indeg[t] == 0).collect();
+    let mut topo: Vec<TaskId> = Vec::with_capacity(n);
+    while let Some(t) = queue.pop_front() {
+        topo.push(t);
+        for &e in &tasks[t].trigger_events {
+            for &c in &events[e].out_tasks {
+                indeg[c] -= 1;
+                if indeg[c] == 0 {
+                    queue.push_back(c);
+                }
+            }
+        }
+    }
+    if topo.len() != n {
+        return Err(format!("task/event graph has a cycle ({} tasks unplaced)", n - topo.len()));
+    }
+
+    let words_per_row = n_cols.div_ceil(64).max(1);
+    let mut bits = vec![0u64; n * words_per_row];
+    let mut acc = vec![0u64; words_per_row];
+    for &t in topo.iter().rev() {
+        acc.iter_mut().for_each(|w| *w = 0);
+        for &e in &tasks[t].trigger_events {
+            for &c in &events[e].out_tasks {
+                if c < n_cols {
+                    acc[c >> 6] |= 1u64 << (c & 63);
+                }
+                let crow = &bits[c * words_per_row..(c + 1) * words_per_row];
+                for (a, b) in acc.iter_mut().zip(crow.iter()) {
+                    *a |= *b;
+                }
+            }
+        }
+        bits[t * words_per_row..(t + 1) * words_per_row].copy_from_slice(&acc);
+    }
+    Ok(HbClosure { n_cols, words_per_row, bits })
+}
+
+/// Direct task→task pairs encoded by an event list.
+pub fn hb_edge_count(events: &[EventDesc]) -> usize {
+    events.iter().map(|e| e.in_tasks.len() * e.out_tasks.len()).sum()
+}
+
+// ---------------------------------------------------------------------------
+// Footprint re-derivation
+// ---------------------------------------------------------------------------
+
+/// The region a task writes, re-derived from the operator vocabulary
+/// (independent of the event edges under test). `Dummy` and `IterPrep`
+/// tasks touch no arena memory.
+pub fn task_write(g: &CompGraph, t: &TaskDesc) -> Option<(TensorId, Region)> {
+    match &t.kind {
+        TaskKind::Compute { op, .. } => Some((g.ops[*op].output, t.out_region.clone())),
+        // A transfer re-publishes (a tile of) its operator's output on
+        // another device: model it as a write of that tile.
+        TaskKind::Transfer { op, .. } => {
+            let out = g.ops[*op].output;
+            let r = if t.out_region.dims.is_empty() {
+                g.tensor(out).full_region()
+            } else {
+                t.out_region.clone()
+            };
+            Some((out, r))
+        }
+        TaskKind::Dummy | TaskKind::IterPrep => None,
+    }
+}
+
+/// The regions a task reads, re-derived via [`crate::ops::OpKind::input_region`].
+pub fn task_reads(g: &CompGraph, t: &TaskDesc) -> Vec<(TensorId, Region)> {
+    match &t.kind {
+        TaskKind::Compute { op, kind } => {
+            let o = &g.ops[*op];
+            o.inputs
+                .iter()
+                .enumerate()
+                .map(|(idx, &inp)| {
+                    (inp, kind.input_region(&t.out_region, idx, &g.tensor(inp).shape))
+                })
+                .collect()
+        }
+        // The transfer's source is the same tile it re-publishes.
+        TaskKind::Transfer { op, .. } => {
+            let out = g.ops[*op].output;
+            let r = if t.out_region.dims.is_empty() {
+                g.tensor(out).full_region()
+            } else {
+                t.out_region.clone()
+            };
+            vec![(out, r)]
+        }
+        TaskKind::Dummy | TaskKind::IterPrep => Vec::new(),
+    }
+}
+
+/// Outcome of the race analysis.
+pub struct RaceAnalysis {
+    pub violations: Vec<Violation>,
+    pub region_pairs: usize,
+    pub hb_edges: usize,
+}
+
+/// Race detection (analysis 1): every overlapping write/write and
+/// write/read region pair on the same tensor must be connected by a
+/// happens-before path. A cyclic graph is reported as a deadlock here
+/// (no ordering exists at all) and left for [`check_liveness`] to
+/// localize.
+pub fn check_races(g: &CompGraph, tasks: &[TaskDesc], events: &[EventDesc]) -> RaceAnalysis {
+    let hb_edges = hb_edge_count(events);
+    let closure = match hb_closure(tasks, events, tasks.len()) {
+        Ok(c) => c,
+        Err(detail) => {
+            return RaceAnalysis {
+                violations: vec![Violation::Deadlock { detail }],
+                region_pairs: 0,
+                hb_edges,
+            }
+        }
+    };
+
+    // writer lists per tensor (single-producer IR: one op's tasks).
+    let mut writers: Vec<Vec<(TaskId, Region)>> = vec![Vec::new(); g.tensors.len()];
+    for t in tasks {
+        if let Some((tid, r)) = task_write(g, t) {
+            if !r.is_empty() {
+                writers[tid].push((t.id, r));
+            }
+        }
+    }
+
+    let mut violations = Vec::new();
+    let mut region_pairs = 0usize;
+    let label = |t: TaskId| task_label(g, &tasks[t]);
+
+    // write/write: overlapping writer tiles of one tensor must be
+    // ordered in *some* direction.
+    for (tid, ws) in writers.iter().enumerate() {
+        for i in 0..ws.len() {
+            for j in i + 1..ws.len() {
+                let (a, ra) = &ws[i];
+                let (b, rb) = &ws[j];
+                if !ra.overlaps(rb) {
+                    continue;
+                }
+                region_pairs += 1;
+                if !closure.ordered(*a, *b) && !closure.ordered(*b, *a) {
+                    violations.push(Violation::Race {
+                        kind: RaceKind::WriteWrite,
+                        tensor: g.tensor(tid).name.clone(),
+                        first: *a,
+                        first_label: label(*a),
+                        first_region: ra.clone(),
+                        second: *b,
+                        second_label: label(*b),
+                        second_region: rb.clone(),
+                    });
+                }
+            }
+        }
+    }
+
+    // write/read: the writer must happen-before the reader (value
+    // semantics — a reader racing ahead observes garbage).
+    let mut seen: HashSet<(TaskId, TaskId)> = HashSet::new();
+    for t in tasks {
+        for (tensor, rr) in task_reads(g, t) {
+            if rr.is_empty() {
+                continue;
+            }
+            let ws = &writers[tensor];
+            for (w, wr) in ws {
+                if *w == t.id || !wr.overlaps(&rr) {
+                    continue;
+                }
+                if !seen.insert((*w, t.id)) {
+                    continue;
+                }
+                region_pairs += 1;
+                if !closure.ordered(*w, t.id) {
+                    violations.push(Violation::Race {
+                        kind: RaceKind::WriteRead,
+                        tensor: g.tensor(tensor).name.clone(),
+                        first: *w,
+                        first_label: label(*w),
+                        first_region: wr.clone(),
+                        second: t.id,
+                        second_label: label(t.id),
+                        second_region: rr.clone(),
+                    });
+                }
+            }
+        }
+    }
+
+    RaceAnalysis { violations, region_pairs, hb_edges }
+}
+
+// ---------------------------------------------------------------------------
+// Liveness / deadlock
+// ---------------------------------------------------------------------------
+
+/// Deadlock & liveness (analysis 2): forward activation simulation from
+/// the start event plus a reverse reachability pass from the end event.
+pub fn check_liveness(tg: &TGraph) -> Vec<Violation> {
+    let mut violations = Vec::new();
+    let tasks = &tg.tasks;
+    let events = &tg.events;
+
+    if !events[tg.start_event].in_tasks.is_empty() {
+        violations.push(Violation::Liveness {
+            detail: format!("start event {} has in-tasks", tg.start_event),
+        });
+    }
+    if !events[tg.end_event].out_tasks.is_empty() {
+        violations.push(Violation::Liveness {
+            detail: format!(
+                "end event {} launches {} task(s) — they would run after quiescence is signaled",
+                tg.end_event,
+                events[tg.end_event].out_tasks.len()
+            ),
+        });
+    }
+
+    // Forward simulation: activate the start event, run launched tasks,
+    // count notifications; an event activates exactly when its
+    // required_triggers notifications have arrived.
+    let mut notified = vec![0usize; events.len()];
+    let mut activated = vec![false; events.len()];
+    let mut ran = vec![false; tasks.len()];
+    let mut queue: std::collections::VecDeque<EventId> = std::collections::VecDeque::new();
+    activated[tg.start_event] = true;
+    queue.push_back(tg.start_event);
+    while let Some(e) = queue.pop_front() {
+        for &t in &events[e].out_tasks {
+            if ran[t] {
+                continue;
+            }
+            // a task runs when its (sole, post-normalization) dependent
+            // events have all activated.
+            if !tasks[t].dependent_events.iter().all(|&d| activated[d]) {
+                continue;
+            }
+            ran[t] = true;
+            for &te in &tasks[t].trigger_events {
+                notified[te] += 1;
+                if !activated[te] && notified[te] == events[te].required_triggers() {
+                    activated[te] = true;
+                    queue.push_back(te);
+                }
+            }
+        }
+    }
+    for (e, ev) in events.iter().enumerate() {
+        if notified[e] > ev.required_triggers() {
+            violations.push(Violation::Liveness {
+                detail: format!(
+                    "event {e} over-notified: {} notifications for {} required",
+                    notified[e],
+                    ev.required_triggers()
+                ),
+            });
+        }
+        if !activated[e] && !ev.out_tasks.is_empty() {
+            violations.push(Violation::Deadlock {
+                detail: format!(
+                    "event {e} never activates ({}/{} triggers arrive) but launches {} task(s)",
+                    notified[e],
+                    ev.required_triggers(),
+                    ev.out_tasks.len()
+                ),
+            });
+        }
+    }
+    let unran: Vec<TaskId> = (0..tasks.len()).filter(|&t| !ran[t]).collect();
+    if !unran.is_empty() {
+        violations.push(Violation::Deadlock {
+            detail: format!(
+                "{} task(s) never run (cycle or unsatisfiable prerequisites), e.g. task {}",
+                unran.len(),
+                unran[0]
+            ),
+        });
+    }
+    if !activated[tg.end_event] {
+        violations.push(Violation::Deadlock {
+            detail: format!(
+                "end event {} never activates — the runtime would never detect quiescence",
+                tg.end_event
+            ),
+        });
+    }
+
+    // Reverse reachability: every task must reach the end event, or the
+    // runtime signals completion while work is still outstanding.
+    let mut task_reaches = vec![false; tasks.len()];
+    let mut event_reaches = vec![false; events.len()];
+    let mut stack: Vec<EventId> = vec![tg.end_event];
+    event_reaches[tg.end_event] = true;
+    while let Some(e) = stack.pop() {
+        for &t in &events[e].in_tasks {
+            if task_reaches[t] {
+                continue;
+            }
+            task_reaches[t] = true;
+            for &d in &tasks[t].dependent_events {
+                if !event_reaches[d] {
+                    event_reaches[d] = true;
+                    stack.push(d);
+                }
+            }
+        }
+    }
+    let lost: Vec<TaskId> = (0..tasks.len()).filter(|&t| !task_reaches[t]).collect();
+    if !lost.is_empty() {
+        violations.push(Violation::Liveness {
+            detail: format!(
+                "{} task(s) never reach the end event (completion invisible to quiescence), \
+                 e.g. task {}",
+                lost.len(),
+                lost[0]
+            ),
+        });
+    }
+    violations
+}
+
+// ---------------------------------------------------------------------------
+// Transform preservation
+// ---------------------------------------------------------------------------
+
+/// How a stage's happens-before relation must relate to its
+/// predecessor's, restricted to the tasks both stages share.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StageRule {
+    /// The stage may add orderings but must not lose any
+    /// (event fusion, fork merging, coarsening).
+    Superset,
+    /// The stage must preserve the relation exactly (normalization:
+    /// dummy insertion is pure re-encoding).
+    Exact,
+}
+
+/// One pipeline stage's task/event lists, captured by the compiler when
+/// verification is enabled.
+#[derive(Clone)]
+pub struct StageSnapshot {
+    pub stage: &'static str,
+    pub rule: StageRule,
+    pub tasks: Vec<TaskDesc>,
+    pub events: Vec<EventDesc>,
+}
+
+/// Transform preservation (analysis 3): adjacent stage snapshots must
+/// induce compatible happens-before relations over the real tasks of
+/// the first stage (later stages only append dummy tasks).
+pub fn check_stage_preservation(snapshots: &[StageSnapshot]) -> Vec<Violation> {
+    let mut violations = Vec::new();
+    let Some(first) = snapshots.first() else { return violations };
+    let n0 = first.tasks.len();
+    let mut prev: Option<(&'static str, HbClosure)> = None;
+    for snap in snapshots {
+        let closure = match hb_closure(&snap.tasks, &snap.events, n0) {
+            Ok(c) => c,
+            Err(detail) => {
+                violations.push(Violation::StagePreservation {
+                    stage: snap.stage.to_string(),
+                    detail,
+                });
+                return violations;
+            }
+        };
+        if let Some((pstage, pclosure)) = prev.take() {
+            if let Some(v) = compare_relations(pstage, &pclosure, snap, &closure, n0) {
+                violations.push(v);
+            }
+        }
+        prev = Some((snap.stage, closure));
+    }
+    violations
+}
+
+/// Compare two stage relations under `cur.rule`; returns the first
+/// discrepancy found.
+fn compare_relations(
+    prev_stage: &str,
+    prev_cl: &HbClosure,
+    cur: &StageSnapshot,
+    cur_cl: &HbClosure,
+    n0: usize,
+) -> Option<Violation> {
+    for t in 0..n0 {
+        let pr = prev_cl.row(t);
+        let cr = cur_cl.row(t);
+        for (w, (pw, cw)) in pr.iter().zip(cr.iter()).enumerate() {
+            // lost: ordered before, unordered after.
+            let lost = pw & !cw;
+            if lost != 0 {
+                let u = (w << 6) + lost.trailing_zeros() as usize;
+                return Some(Violation::StagePreservation {
+                    stage: cur.stage.to_string(),
+                    detail: format!(
+                        "ordering {t} -> {u} present after `{}` but lost after `{}`",
+                        prev_stage, cur.stage
+                    ),
+                });
+            }
+            if cur.rule == StageRule::Exact {
+                let added = cw & !pw;
+                if added != 0 {
+                    let u = (w << 6) + added.trailing_zeros() as usize;
+                    return Some(Violation::StagePreservation {
+                        stage: cur.stage.to_string(),
+                        detail: format!(
+                            "ordering {t} -> {u} added by `{}` beyond transitivity of `{}`",
+                            cur.stage, prev_stage
+                        ),
+                    });
+                }
+            }
+        }
+    }
+    None
+}
+
+/// Ablation honesty (analysis 4): the relation of a coarse-granularity
+/// raw stage must be a superset of the fine-grained relation derived
+/// from the same decomposition.
+pub fn check_ablation_superset(
+    g: &CompGraph,
+    decomp: &[OpTasks],
+    coarse: &StageSnapshot,
+) -> Vec<Violation> {
+    let fine = crate::tgraph::build::analyze_deps(g, decomp);
+    let n0 = fine.tasks.len();
+    if n0 != coarse.tasks.len() {
+        return vec![Violation::Ablation {
+            detail: format!(
+                "task count mismatch: fine {} vs coarse {}",
+                n0,
+                coarse.tasks.len()
+            ),
+        }];
+    }
+    let fine_cl = match hb_closure(&fine.tasks, &fine.events, n0) {
+        Ok(c) => c,
+        Err(detail) => return vec![Violation::Ablation { detail }],
+    };
+    let coarse_cl = match hb_closure(&coarse.tasks, &coarse.events, n0) {
+        Ok(c) => c,
+        Err(detail) => return vec![Violation::Ablation { detail }],
+    };
+    for t in 0..n0 {
+        let fr = fine_cl.row(t);
+        let cr = coarse_cl.row(t);
+        for (w, (fw, cw)) in fr.iter().zip(cr.iter()).enumerate() {
+            let lost = fw & !cw;
+            if lost != 0 {
+                let u = (w << 6) + lost.trailing_zeros() as usize;
+                return vec![Violation::Ablation {
+                    detail: format!(
+                        "coarse granularity loses fine ordering {t} -> {u} — the ablation \
+                         would run an under-synchronized graph"
+                    ),
+                }];
+            }
+        }
+    }
+    Vec::new()
+}
+
+// ---------------------------------------------------------------------------
+// Linearization agreement
+// ---------------------------------------------------------------------------
+
+/// Linearized-encoding agreement: the `(first, last)` ranges and
+/// trigger counts must round-trip the event lists, and the launch order
+/// must be a topological order of the happens-before relation.
+pub fn check_linearization(
+    lin: &LinearTGraph,
+    tasks: &[TaskDesc],
+    events: &[EventDesc],
+) -> Vec<Violation> {
+    let mut violations = Vec::new();
+    if let Err(detail) = crate::tgraph::linearize::verify(lin, tasks, events) {
+        violations.push(Violation::Linearization { detail });
+    }
+    for e in events {
+        if lin.required.get(e.id).copied() != Some(e.required_triggers()) {
+            violations.push(Violation::Linearization {
+                detail: format!(
+                    "event {} required-trigger count {:?} disagrees with in-task list ({})",
+                    e.id,
+                    lin.required.get(e.id),
+                    e.required_triggers()
+                ),
+            });
+        }
+        for &p in &e.in_tasks {
+            for &c in &e.out_tasks {
+                if lin.pos[p] >= lin.pos[c] {
+                    violations.push(Violation::Linearization {
+                        detail: format!(
+                            "launch order places consumer task {c} (pos {}) before its \
+                             producer task {p} (pos {})",
+                            lin.pos[c], lin.pos[p]
+                        ),
+                    });
+                }
+            }
+        }
+    }
+    violations
+}
+
+// ---------------------------------------------------------------------------
+// Entry points
+// ---------------------------------------------------------------------------
+
+/// Verify a fully compiled graph: race detection, liveness, and
+/// linearization agreement. Stage-preservation and ablation checks need
+/// the compiler's intermediate snapshots — use
+/// [`crate::tgraph::compile_verified`] for the full gate.
+pub fn verify_compiled(c: &crate::tgraph::CompiledGraph) -> VerifyReport {
+    let t0 = Instant::now();
+    let tg = &c.tgraph;
+    let mut report = VerifyReport {
+        tasks: tg.tasks.len(),
+        events: tg.events.len(),
+        ..Default::default()
+    };
+    let races = check_races(&c.graph, &tg.tasks, &tg.events);
+    report.hb_edges = races.hb_edges;
+    report.region_pairs = races.region_pairs;
+    report.violations = races.violations;
+    report.violations.extend(check_liveness(tg));
+    report.violations.extend(check_linearization(&c.linear, &tg.tasks, &tg.events));
+    report.wall_us = t0.elapsed().as_micros() as u64;
+    report
+}
+
+/// Race + liveness only, on bare task/event lists (used by the mutation
+/// harness, which perturbs graphs that no longer linearize).
+pub fn verify_graph(g: &CompGraph, tg: &TGraph) -> VerifyReport {
+    let t0 = Instant::now();
+    let races = check_races(g, &tg.tasks, &tg.events);
+    let mut violations = races.violations;
+    violations.extend(check_liveness(tg));
+    VerifyReport {
+        tasks: tg.tasks.len(),
+        events: tg.events.len(),
+        hb_edges: races.hb_edges,
+        region_pairs: races.region_pairs,
+        violations,
+        wall_us: t0.elapsed().as_micros() as u64,
+    }
+}
+
+/// The full compile-time gate: everything [`verify_compiled`] checks,
+/// plus transform preservation across the compiler's captured stage
+/// snapshots (with the final normalized graph appended under the
+/// exact-preservation rule) and, under a coarse
+/// [`crate::tgraph::DepGranularity`], the ablation-honesty superset
+/// check against a freshly derived fine-grained relation.
+pub fn verify_pipeline(
+    c: &crate::tgraph::CompiledGraph,
+    snapshots: &[StageSnapshot],
+    opt: &crate::tgraph::CompileOptions,
+) -> VerifyReport {
+    let t0 = Instant::now();
+    let mut report = verify_compiled(c);
+    let mut chain: Vec<StageSnapshot> = snapshots.to_vec();
+    chain.push(StageSnapshot {
+        stage: "normalize",
+        rule: StageRule::Exact,
+        tasks: c.tgraph.tasks.clone(),
+        events: c.tgraph.events.clone(),
+    });
+    report.violations.extend(check_stage_preservation(&chain));
+    if opt.granularity != crate::tgraph::DepGranularity::Fine {
+        if let Some(first) = snapshots.first() {
+            report
+                .violations
+                .extend(check_ablation_superset(&c.graph, &c.decomposition, first));
+        }
+    }
+    report.wall_us = t0.elapsed().as_micros() as u64;
+    report
+}
+
+// ---------------------------------------------------------------------------
+// Mutation testing — the verifier's own validation
+// ---------------------------------------------------------------------------
+
+/// What a seeded mutation did to the graph.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MutationKind {
+    /// Removed an event→task launch edge (the task was re-attached to
+    /// the start event, modeling a dropped dependency).
+    DropDependency,
+    /// Removed a task→event completion edge (the task's completion
+    /// becomes invisible).
+    DropTrigger,
+    /// Re-pointed a task's dependency at an event that cannot restore
+    /// the original ordering.
+    RedirectDependency,
+    /// Re-pointed a task's completion signal at an event that cannot
+    /// restore the original ordering.
+    RedirectTrigger,
+}
+
+/// A single applied edge mutation.
+#[derive(Clone, Copy, Debug)]
+pub struct Mutation {
+    pub kind: MutationKind,
+    pub event: EventId,
+    pub task: TaskId,
+    /// Redirection target (None for drops).
+    pub new_event: Option<EventId>,
+}
+
+impl std::fmt::Display for Mutation {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self.new_event {
+            Some(ne) => write!(
+                f,
+                "{:?} task {} edge: event {} -> event {}",
+                self.kind, self.task, self.event, ne
+            ),
+            None => write!(f, "{:?} task {} / event {}", self.kind, self.task, self.event),
+        }
+    }
+}
+
+/// Events reachable from `e` (inclusive) over the event graph.
+fn event_descendants(tg: &TGraph, e: EventId) -> Vec<bool> {
+    let mut seen = vec![false; tg.events.len()];
+    let mut stack = vec![e];
+    seen[e] = true;
+    while let Some(cur) = stack.pop() {
+        for &t in &tg.events[cur].out_tasks {
+            for &ne in &tg.tasks[t].trigger_events {
+                if !seen[ne] {
+                    seen[ne] = true;
+                    stack.push(ne);
+                }
+            }
+        }
+    }
+    seen
+}
+
+/// Events that reach `e` (inclusive) over the event graph.
+fn event_ancestors(tg: &TGraph, e: EventId) -> Vec<bool> {
+    let mut seen = vec![false; tg.events.len()];
+    let mut stack = vec![e];
+    seen[e] = true;
+    while let Some(cur) = stack.pop() {
+        for &t in &tg.events[cur].in_tasks {
+            for &pe in &tg.tasks[t].dependent_events {
+                if !seen[pe] {
+                    seen[pe] = true;
+                    stack.push(pe);
+                }
+            }
+        }
+    }
+    seen
+}
+
+/// Apply one seeded single-edge mutation to a copy of `tg`, keeping the
+/// result structurally consistent (`check_consistent` still passes) so
+/// it models a plausible *compiler* bug rather than corrupted memory.
+/// Returns `None` when the graph has no eligible edge.
+pub fn mutate(tg: &TGraph, seed: u64) -> Option<(TGraph, Mutation)> {
+    let mut rng = XorShift64::new(seed);
+    // dependency edges that encode a real ordering (not start-attach),
+    // and completion edges.
+    let dep_edges: Vec<(EventId, TaskId)> = tg
+        .events
+        .iter()
+        .filter(|e| e.id != tg.start_event)
+        .flat_map(|e| e.out_tasks.iter().map(move |&t| (e.id, t)))
+        .collect();
+    let trig_edges: Vec<(TaskId, EventId)> = tg
+        .events
+        .iter()
+        .filter(|e| e.id != tg.start_event)
+        .flat_map(|e| e.in_tasks.iter().map(move |&t| (t, e.id)))
+        .collect();
+    if dep_edges.is_empty() && trig_edges.is_empty() {
+        return None;
+    }
+
+    for _attempt in 0..8 {
+        let kind = match rng.below(4) {
+            0 => MutationKind::DropDependency,
+            1 => MutationKind::DropTrigger,
+            2 => MutationKind::RedirectDependency,
+            _ => MutationKind::RedirectTrigger,
+        };
+        let mut g = tg.clone();
+        match kind {
+            MutationKind::DropDependency | MutationKind::RedirectDependency => {
+                if dep_edges.is_empty() {
+                    continue;
+                }
+                let (e, t) = dep_edges[rng.below(dep_edges.len())];
+                let new_event = if kind == MutationKind::RedirectDependency {
+                    // any event that cannot re-establish the ordering:
+                    // a non-descendant of `e` (start is always eligible).
+                    let desc = event_descendants(tg, e);
+                    let cands: Vec<EventId> =
+                        (0..tg.events.len()).filter(|&x| !desc[x]).collect();
+                    if cands.is_empty() {
+                        Some(tg.start_event)
+                    } else {
+                        Some(cands[rng.below(cands.len())])
+                    }
+                } else {
+                    None
+                };
+                g.events[e].out_tasks.retain(|&x| x != t);
+                g.tasks[t].dependent_events.retain(|&x| x != e);
+                let target = new_event.unwrap_or(tg.start_event);
+                match kind {
+                    MutationKind::RedirectDependency => {
+                        g.tasks[t].dependent_events.push(target);
+                        g.events[target].out_tasks.push(t);
+                    }
+                    _ => {
+                        // a dropped dependency leaves the task parentless:
+                        // the buggy compiler would attach it to start.
+                        if g.tasks[t].dependent_events.is_empty() {
+                            g.tasks[t].dependent_events.push(tg.start_event);
+                            g.events[tg.start_event].out_tasks.push(t);
+                        }
+                    }
+                }
+                return Some((g, Mutation { kind, event: e, task: t, new_event }));
+            }
+            MutationKind::DropTrigger | MutationKind::RedirectTrigger => {
+                if trig_edges.is_empty() {
+                    continue;
+                }
+                let (t, e) = trig_edges[rng.below(trig_edges.len())];
+                let new_event = if kind == MutationKind::RedirectTrigger {
+                    // any non-ancestor of `e` except start (a trigger
+                    // can't point at the start event).
+                    let anc = event_ancestors(tg, e);
+                    let cands: Vec<EventId> = (0..tg.events.len())
+                        .filter(|&x| !anc[x] && x != tg.start_event)
+                        .collect();
+                    if cands.is_empty() {
+                        continue;
+                    }
+                    Some(cands[rng.below(cands.len())])
+                } else {
+                    None
+                };
+                g.events[e].in_tasks.retain(|&x| x != t);
+                g.tasks[t].trigger_events.retain(|&x| x != e);
+                if let Some(ne) = new_event {
+                    g.tasks[t].trigger_events.push(ne);
+                    g.events[ne].in_tasks.push(t);
+                }
+                return Some((g, Mutation { kind, event: e, task: t, new_event }));
+            }
+        }
+    }
+    None
+}
+
+/// Outcome of a mutation sweep.
+pub struct MutationSweep {
+    pub total: usize,
+    pub caught: usize,
+    /// Mutations the race + liveness analyses failed to flag.
+    pub survivors: Vec<Mutation>,
+}
+
+impl MutationSweep {
+    pub fn catch_rate(&self) -> f64 {
+        self.caught as f64 / self.total.max(1) as f64
+    }
+}
+
+/// Run `n` seeded single-edge mutations against a known-good compiled
+/// graph and count how many the race or liveness analysis catches.
+pub fn mutation_sweep(c: &crate::tgraph::CompiledGraph, n: usize, seed: u64) -> MutationSweep {
+    let mut sweep = MutationSweep { total: 0, caught: 0, survivors: Vec::new() };
+    for i in 0..n {
+        let Some((mutated, m)) =
+            mutate(&c.tgraph, seed.wrapping_add(i as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15))
+        else {
+            continue;
+        };
+        debug_assert_eq!(mutated.check_consistent(), Ok(()), "mutation broke consistency: {m}");
+        sweep.total += 1;
+        let report = verify_graph(&c.graph, &mutated);
+        if report.is_clean() {
+            sweep.survivors.push(m);
+        } else {
+            sweep.caught += 1;
+        }
+    }
+    sweep
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::{build_decode_graph, GraphOptions, ModelConfig};
+    use crate::ops::{DType, LaunchMode, OpKind};
+    use crate::tgraph::compiler::StageStats;
+    use crate::tgraph::{compile, CompileOptions, DecomposeConfig};
+
+    fn compile_tiny() -> crate::tgraph::CompiledGraph {
+        let cfg = ModelConfig::tiny();
+        let g = build_decode_graph(
+            &cfg,
+            &GraphOptions { batch: 2, kv_len: 16, ..Default::default() },
+        );
+        compile(
+            &g,
+            &CompileOptions {
+                decompose: DecomposeConfig { target_tasks: 16, min_tile_cols: 8 },
+                ..Default::default()
+            },
+        )
+    }
+
+    fn two_op_graph() -> CompGraph {
+        let mut g = CompGraph::new();
+        let x = g.input("x", vec![2, 16], DType::F32);
+        let w = g.param("w", vec![16, 8], DType::F32);
+        let y = g.op("mm", OpKind::MatMul, &[x, w], vec![2, 8], DType::F32);
+        g.op("add", OpKind::Add, &[y, y], vec![2, 8], DType::F32);
+        g
+    }
+
+    /// Hand-build a tGraph for `two_op_graph` where the Add task does
+    /// NOT wait for the MatMul task — a racy graph the compiler must
+    /// never emit.
+    fn racy_tgraph(g: &CompGraph) -> TGraph {
+        let mk = |id: usize, op: usize, kind: OpKind, dep: usize, trig: usize| TaskDesc {
+            id,
+            kind: TaskKind::Compute { op, kind },
+            out_region: Region::full(&g.tensor(g.ops[op].output).shape),
+            launch: LaunchMode::Aot,
+            dependent_events: vec![dep],
+            trigger_events: vec![trig],
+            device: 0,
+        };
+        // both tasks launched straight from start: no ordering.
+        let tasks = vec![
+            mk(0, 0, OpKind::MatMul, 0, 1),
+            mk(1, 1, OpKind::Add, 0, 1),
+        ];
+        let events = vec![
+            EventDesc { id: 0, in_tasks: vec![], out_tasks: vec![0, 1] },
+            EventDesc { id: 1, in_tasks: vec![0, 1], out_tasks: vec![] },
+        ];
+        TGraph { tasks, events, start_event: 0, end_event: 1, stats: StageStats::default() }
+    }
+
+    #[test]
+    fn detects_missing_writer_reader_edge() {
+        let g = two_op_graph();
+        let tg = racy_tgraph(&g);
+        let races = check_races(&g, &tg.tasks, &tg.events);
+        assert!(
+            races
+                .violations
+                .iter()
+                .any(|v| matches!(v, Violation::Race { kind: RaceKind::WriteRead, .. })),
+            "expected a write/read race, got {:?}",
+            races.violations
+        );
+    }
+
+    #[test]
+    fn ordered_graph_is_race_free() {
+        let g = two_op_graph();
+        let mut tg = racy_tgraph(&g);
+        // insert the missing edge: mm -> e2 -> add.
+        tg.events.push(EventDesc { id: 2, in_tasks: vec![0], out_tasks: vec![1] });
+        tg.tasks[0].trigger_events = vec![2];
+        tg.tasks[1].dependent_events = vec![2];
+        tg.events[0].out_tasks = vec![0];
+        tg.events[1].in_tasks = vec![1];
+        tg.check_consistent().unwrap();
+        let races = check_races(&g, &tg.tasks, &tg.events);
+        assert!(races.violations.is_empty(), "{:?}", races.violations);
+        assert!(races.region_pairs > 0);
+    }
+
+    #[test]
+    fn detects_cycle_as_deadlock() {
+        let g = two_op_graph();
+        let mut tg = racy_tgraph(&g);
+        // t0 -> e2 -> t1 -> e3 -> t0: a cycle.
+        tg.events.push(EventDesc { id: 2, in_tasks: vec![0], out_tasks: vec![1] });
+        tg.events.push(EventDesc { id: 3, in_tasks: vec![1], out_tasks: vec![0] });
+        tg.tasks[0].trigger_events = vec![2];
+        tg.tasks[0].dependent_events = vec![0, 3];
+        tg.tasks[1].dependent_events = vec![2];
+        tg.tasks[1].trigger_events = vec![3];
+        tg.events[0].out_tasks = vec![0];
+        tg.events[1].in_tasks = vec![];
+        let races = check_races(&g, &tg.tasks, &tg.events);
+        assert!(races.violations.iter().any(|v| matches!(v, Violation::Deadlock { .. })));
+        let live = check_liveness(&tg);
+        assert!(!live.is_empty());
+    }
+
+    #[test]
+    fn detects_unsatisfiable_event() {
+        let g = two_op_graph();
+        let mut tg = racy_tgraph(&g);
+        // event 2 launches task 1 but nothing ever triggers it.
+        tg.events.push(EventDesc { id: 2, in_tasks: vec![], out_tasks: vec![1] });
+        tg.tasks[1].dependent_events = vec![2];
+        tg.events[0].out_tasks = vec![0];
+        let live = check_liveness(&tg);
+        assert!(
+            live.iter().any(|v| matches!(v, Violation::Deadlock { .. })),
+            "expected deadlock, got {live:?}"
+        );
+    }
+
+    #[test]
+    fn detects_task_invisible_to_end_event() {
+        let g = two_op_graph();
+        let mut tg = racy_tgraph(&g);
+        // task 1 triggers nothing: quiescence fires while it may still run.
+        tg.tasks[1].trigger_events.clear();
+        tg.events[1].in_tasks = vec![0];
+        let live = check_liveness(&tg);
+        assert!(
+            live.iter().any(|v| matches!(v, Violation::Liveness { .. })),
+            "expected liveness violation, got {live:?}"
+        );
+    }
+
+    #[test]
+    fn compiled_tiny_model_verifies_clean() {
+        let c = compile_tiny();
+        let report = verify_compiled(&c);
+        assert!(report.is_clean(), "{}", report.render(8));
+        assert!(report.region_pairs > 0);
+        assert!(report.hb_edges > 0);
+    }
+
+    #[test]
+    fn hb_closure_matches_hand_graph() {
+        // chain t0 -> t1 -> t2 plus parallel t3.
+        let mk = |id: usize, dep: &[usize], trig: &[usize]| TaskDesc {
+            id,
+            kind: TaskKind::Dummy,
+            out_region: Region::new(vec![]),
+            launch: LaunchMode::Aot,
+            dependent_events: dep.to_vec(),
+            trigger_events: trig.to_vec(),
+            device: 0,
+        };
+        let tasks = vec![
+            mk(0, &[0], &[1]),
+            mk(1, &[1], &[2]),
+            mk(2, &[2], &[3]),
+            mk(3, &[0], &[3]),
+        ];
+        let events = vec![
+            EventDesc { id: 0, in_tasks: vec![], out_tasks: vec![0, 3] },
+            EventDesc { id: 1, in_tasks: vec![0], out_tasks: vec![1] },
+            EventDesc { id: 2, in_tasks: vec![1], out_tasks: vec![2] },
+            EventDesc { id: 3, in_tasks: vec![2, 3], out_tasks: vec![] },
+        ];
+        let cl = hb_closure(&tasks, &events, 4).unwrap();
+        assert!(cl.ordered(0, 1) && cl.ordered(0, 2) && cl.ordered(1, 2));
+        assert!(!cl.ordered(1, 0) && !cl.ordered(2, 0));
+        assert!(!cl.ordered(0, 3) && !cl.ordered(3, 0) && !cl.ordered(3, 2));
+    }
+
+    #[test]
+    fn mutations_on_tiny_model_are_caught() {
+        let c = compile_tiny();
+        let sweep = mutation_sweep(&c, 60, 0xFACADE);
+        assert!(sweep.total >= 50, "mutator produced only {} mutations", sweep.total);
+        assert!(
+            sweep.catch_rate() >= 0.95,
+            "catch rate {:.2} ({} of {}; survivors: {})",
+            sweep.catch_rate(),
+            sweep.caught,
+            sweep.total,
+            sweep
+                .survivors
+                .iter()
+                .map(|m| m.to_string())
+                .collect::<Vec<_>>()
+                .join("; ")
+        );
+    }
+
+    #[test]
+    fn mutated_graphs_stay_structurally_consistent() {
+        let c = compile_tiny();
+        for i in 0..40u64 {
+            if let Some((g, m)) = mutate(&c.tgraph, 0xBAD5EED + i) {
+                assert_eq!(g.check_consistent(), Ok(()), "mutation {m} broke consistency");
+            }
+        }
+    }
+}

@@ -5,7 +5,10 @@
 
 use mpk::models::{build_decode_graph, GraphOptions, ModelConfig, MoeConfig};
 use mpk::proputil::forall;
-use mpk::tgraph::{compile, CompileOptions, CompiledGraph, DecomposeConfig, DepGranularity};
+use mpk::tgraph::{
+    compile, compile_verified, mutation_sweep, CompileOptions, CompiledGraph, DecomposeConfig,
+    DepGranularity,
+};
 use mpk::util::XorShift64;
 
 fn random_config(rng: &mut XorShift64) -> (ModelConfig, GraphOptions) {
@@ -46,13 +49,16 @@ fn compile_random(rng: &mut XorShift64) -> CompiledGraph {
     let g = build_decode_graph(&cfg, &opt);
     let copt = CompileOptions {
         decompose: DecomposeConfig { target_tasks: rng.range(2, 48), min_tile_cols: 8 },
-        granularity: if rng.below(5) == 0 {
-            DepGranularity::CoarseAll
-        } else {
-            DepGranularity::Fine
+        granularity: match rng.below(5) {
+            0 => DepGranularity::CoarseAll,
+            1 => DepGranularity::CoarseCollectives,
+            _ => DepGranularity::Fine,
         },
         fuse: rng.below(8) != 0,
         merge_forks: rng.below(4) != 0,
+        // the static race/deadlock verifier gates every random compile:
+        // compile() panics with the full report on any violation.
+        verify: true,
     };
     compile(&g, &copt)
 }
@@ -147,6 +153,58 @@ fn reaches(tg: &mpk::tgraph::TGraph, from: usize, to: usize) -> bool {
         }
     }
     false
+}
+
+#[test]
+fn prop_verifier_clean_and_mutations_caught() {
+    // Two-sided soundness check for the static verifier over random
+    // graphs × all CompileOptions combinations: (a) every unmutated
+    // compile must verify clean under compile_verified (all four
+    // analyses), and (b) a seeded single-edge mutation sweep must be
+    // caught by the race or liveness analysis. Random graphs can
+    // contain the occasional semantically-equivalent mutant (a dropped
+    // edge whose orderings all survive via alternate paths), so one
+    // survivor per sweep is tolerated here; the built-in decode graphs
+    // are held to the ≥95% acceptance bar in tests/verify_mutation.rs.
+    forall(
+        "verifier soundness",
+        0xFACADE,
+        12,
+        |rng| {
+            let (cfg, opt) = random_config(rng);
+            let g = build_decode_graph(&cfg, &opt);
+            let copt = CompileOptions {
+                decompose: DecomposeConfig { target_tasks: rng.range(2, 48), min_tile_cols: 8 },
+                granularity: match rng.below(3) {
+                    0 => DepGranularity::CoarseAll,
+                    1 => DepGranularity::CoarseCollectives,
+                    _ => DepGranularity::Fine,
+                },
+                fuse: rng.below(2) == 0,
+                merge_forks: rng.below(2) == 0,
+                verify: true,
+            };
+            let (c, report) = compile_verified(&g, &copt);
+            let sweep_seed = rng.below(1 << 30) as u64;
+            (c, report, sweep_seed)
+        },
+        |(c, report, sweep_seed)| {
+            if !report.is_clean() {
+                return Err(format!("verifier flagged a clean compile:\n{}", report.render(8)));
+            }
+            let sweep = mutation_sweep(c, 8, *sweep_seed);
+            if sweep.total == 0 {
+                return Err("mutation harness produced no mutants".into());
+            }
+            if sweep.caught + 1 < sweep.total {
+                return Err(format!(
+                    "mutation sweep: only {}/{} caught; survivors: {:?}",
+                    sweep.caught, sweep.total, sweep.survivors
+                ));
+            }
+            Ok(())
+        },
+    );
 }
 
 #[test]

@@ -1,0 +1,130 @@
+//! Acceptance suite for the static race/deadlock verifier
+//! (`tgraph/verify.rs`) on the *built-in* decode graphs:
+//!
+//! * every unmutated compile — all `DepGranularity` options × `fuse` ×
+//!   `merge_forks` — verifies clean (all four analyses);
+//! * the seeded mutation harness catches ≥ 95% of single-edge
+//!   deletions/redirections (the acceptance bar: an analyzer that
+//!   passes everything is worthless);
+//! * verification is observation-only: compiling with the gate on and
+//!   off yields the same simulated makespan (paper-figure stats are
+//!   untouched by the new stage).
+
+use mpk::models::{build_decode_graph, GraphOptions, ModelConfig};
+use mpk::sim::{simulate_megakernel, GpuSpec, SimOptions};
+use mpk::tgraph::{
+    compile, compile_verified, mutation_sweep, CompileOptions, DecomposeConfig, DepGranularity,
+};
+
+/// The decode graphs the suite runs against: the tiny end-to-end model
+/// plus the smallest paper model (the full five-model sweep runs in CI
+/// via `mpk verify`).
+fn builtin_graphs() -> Vec<(ModelConfig, GraphOptions)> {
+    vec![
+        (ModelConfig::tiny(), GraphOptions { batch: 2, kv_len: 64, ..Default::default() }),
+        (ModelConfig::qwen3_0_6b(), GraphOptions { batch: 1, kv_len: 64, ..Default::default() }),
+    ]
+}
+
+fn all_option_combos() -> Vec<CompileOptions> {
+    let grans =
+        [DepGranularity::Fine, DepGranularity::CoarseCollectives, DepGranularity::CoarseAll];
+    let mut v = Vec::new();
+    for &granularity in &grans {
+        for &fuse in &[false, true] {
+            for &merge_forks in &[false, true] {
+                v.push(CompileOptions {
+                    decompose: DecomposeConfig { target_tasks: 32, min_tile_cols: 8 },
+                    granularity,
+                    fuse,
+                    merge_forks,
+                    verify: true,
+                });
+            }
+        }
+    }
+    v
+}
+
+#[test]
+fn builtin_graphs_verify_clean_under_all_options() {
+    for (cfg, gopt) in builtin_graphs() {
+        let g = build_decode_graph(&cfg, &gopt);
+        for opt in all_option_combos() {
+            let (_, report) = compile_verified(&g, &opt);
+            assert!(
+                report.is_clean(),
+                "{} with {:?}/fuse={}/merge={} failed verification:\n{}",
+                cfg.name,
+                opt.granularity,
+                opt.fuse,
+                opt.merge_forks,
+                report.render(8)
+            );
+            assert!(report.region_pairs > 0, "{}: verifier checked no pairs", cfg.name);
+            assert!(report.hb_edges > 0, "{}: verifier saw no hb edges", cfg.name);
+        }
+    }
+}
+
+#[test]
+fn mutation_catch_rate_meets_acceptance_bar() {
+    // ≥ 95% of seeded single-edge mutations on the built-in decode
+    // graphs must trip the race or liveness analysis. Aggregated over
+    // the default options and both coarse ablations so the bar covers
+    // every happens-before construction path.
+    let mut total = 0usize;
+    let mut caught = 0usize;
+    let mut survivors = Vec::new();
+    for (cfg, gopt) in builtin_graphs() {
+        let g = build_decode_graph(&cfg, &gopt);
+        for &granularity in
+            &[DepGranularity::Fine, DepGranularity::CoarseCollectives, DepGranularity::CoarseAll]
+        {
+            let opt = CompileOptions {
+                decompose: DecomposeConfig { target_tasks: 32, min_tile_cols: 8 },
+                granularity,
+                ..Default::default()
+            };
+            let (c, report) = compile_verified(&g, &opt);
+            assert!(report.is_clean(), "{}: baseline not clean", cfg.name);
+            let sweep = mutation_sweep(&c, 40, 0xD15EA5E);
+            total += sweep.total;
+            caught += sweep.caught;
+            survivors.extend(sweep.survivors.into_iter().map(|m| (cfg.name, granularity, m)));
+        }
+    }
+    assert!(total >= 100, "sweep too small to be meaningful: {total}");
+    let rate = caught as f64 / total as f64;
+    assert!(
+        rate >= 0.95,
+        "mutation catch rate {:.1}% < 95% ({caught}/{total}); survivors: {survivors:?}",
+        rate * 100.0
+    );
+}
+
+#[test]
+fn verification_does_not_perturb_compiled_output() {
+    // The verifier is a read-only gate: same tGraph, same linear order,
+    // same simulated makespan with the gate on or off.
+    let graphs = builtin_graphs();
+    let (cfg, gopt) = &graphs[0];
+    let g = build_decode_graph(cfg, gopt);
+    let base = CompileOptions {
+        decompose: DecomposeConfig { target_tasks: 32, min_tile_cols: 8 },
+        ..Default::default()
+    };
+    let on = compile(&g, &CompileOptions { verify: true, ..base.clone() });
+    let off = compile(&g, &CompileOptions { verify: false, ..base });
+    assert_eq!(on.tgraph.tasks.len(), off.tgraph.tasks.len());
+    assert_eq!(on.tgraph.events.len(), off.tgraph.events.len());
+    assert_eq!(on.linear.order, off.linear.order);
+    let gpu = GpuSpec::by_name("A100").unwrap();
+    let m_on = simulate_megakernel(&on, &gpu, &SimOptions::default()).makespan_us;
+    let m_off = simulate_megakernel(&off, &gpu, &SimOptions::default()).makespan_us;
+    assert_eq!(m_on.to_bits(), m_off.to_bits(), "verification changed the simulated makespan");
+    // and the gate's coverage stats landed in the Table-2 row.
+    assert!(on.stats().verify_pairs > 0);
+    assert!(on.stats().verify_us > 0 || on.stats().verify_pairs > 0);
+    assert_eq!(off.stats().verify_pairs, 0);
+}

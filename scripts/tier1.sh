@@ -7,8 +7,8 @@
 # a warning when miri is absent); then (best-effort) the perf-trajectory
 # benches so BENCH_launch_overhead.json, BENCH_store_hotpath.json,
 # BENCH_weight_arena.json, BENCH_exec_into.json,
-# BENCH_step_overhead.json, BENCH_saturation.json, and
-# BENCH_transport.json track the hot paths across PRs
+# BENCH_step_overhead.json, BENCH_saturation.json, BENCH_transport.json,
+# and BENCH_verify.json track the hot paths across PRs
 # (spawn-per-iteration vs persistent runtime; locked-clone vs
 # borrowed-view tile reads; per-session vs shared-arena weight init;
 # alloc-per-call vs write-into pool outputs; step() bookkeeping vs the
@@ -28,6 +28,43 @@ cd "$ROOT/rust"
 # would skip vacuously.
 export MPK_ARTIFACTS="${MPK_ARTIFACTS:-$ROOT/artifacts}"
 
+# Unsafe-confinement lint: the crate's entire unsafe surface must stay
+# inside the audited modules listed below (the tensor arena, the pool's
+# lifetime-erased channel crossing, and the megakernel runtime's MPMC
+# queue + scoped executor borrow — each carries a memory-model note and
+# SAFETY comments; store.rs documents the full surface). The crate root
+# additionally carries #![deny(unsafe_op_in_unsafe_fn)] so every raw
+# operation sits in an explicit inner `unsafe {}` block. Pure text
+# check, so it runs even when the toolchain is absent. The pattern
+# matches unsafe *code* tokens (`unsafe fn|impl|extern|{`), not the
+# bare word, so doc comments and the deny attribute don't trip it.
+echo "== tier1: unsafe-confinement lint =="
+UNSAFE_ALLOWLIST=(
+    "src/exec/store.rs"
+    "src/runtime/pool.rs"
+    "src/megakernel/queue.rs"
+    "src/megakernel/runtime.rs"
+)
+unsafe_violations=0
+while IFS= read -r f; do
+    rel="${f#"$ROOT/rust/"}"
+    allowed=0
+    for a in "${UNSAFE_ALLOWLIST[@]}"; do
+        [[ "$rel" == "$a" ]] && allowed=1 && break
+    done
+    if [[ "$allowed" == "0" ]]; then
+        echo "tier1: FAIL: \`unsafe\` outside the audited allowlist: $rel" >&2
+        grep -n "unsafe" "$f" >&2 || true
+        unsafe_violations=1
+    fi
+done < <(grep -rlE 'unsafe (fn|impl|extern)|unsafe *\{' "$ROOT/rust/src" --include="*.rs" || true)
+if [[ "$unsafe_violations" != "0" ]]; then
+    echo "tier1: new unsafe code must be confined to the audited modules" >&2
+    echo "tier1: (see the memory-model note in rust/src/exec/store.rs)" >&2
+    exit 3
+fi
+echo "tier1: unsafe confined to: ${UNSAFE_ALLOWLIST[*]}"
+
 if ! command -v cargo >/dev/null 2>&1; then
     echo "tier1: cargo not found on PATH — cannot build/test in this environment" >&2
     echo "tier1: (the repo's CI image bakes in the toolchain; locally: rustup default stable)" >&2
@@ -45,6 +82,15 @@ cargo build --release
 
 echo "== tier1: cargo test -q =="
 cargo test -q
+
+# Static race/deadlock verification over every built-in model config
+# under every DepGranularity (exercises the tgraph/verify.rs analyses
+# end-to-end and seeds a small mutation sweep per graph to prove the
+# analyzer still catches broken edges). Nonzero exit on any violation.
+echo "== tier1: mpk verify (static race/deadlock gate) =="
+# 8 mutations per config keeps the local gate snappy; CI runs a larger
+# sweep (32) as its own named step.
+cargo run --release --quiet -- verify --mutations 8
 
 echo "== tier1: cargo clippy -- -D warnings =="
 cargo clippy --all-targets -- -D warnings
@@ -80,13 +126,14 @@ if [[ "${1:-}" != "--no-bench" ]]; then
     # `if` (not `&&`) so a missing bench file cannot trip errexit.
     if [[ -f "$ROOT/BENCH_launch_overhead.json" ]]; then cat "$ROOT/BENCH_launch_overhead.json"; fi
 
-    echo "== tier1: hotpath_micro bench (store hot path + weight arena + pool output boundary + step API + serving saturation + wire transport) =="
+    echo "== tier1: hotpath_micro bench (store hot path + weight arena + pool output boundary + step API + serving saturation + wire transport + verifier cost) =="
     MPK_BENCH_STORE_JSON="$ROOT/BENCH_store_hotpath.json" \
     MPK_BENCH_WEIGHT_JSON="$ROOT/BENCH_weight_arena.json" \
     MPK_BENCH_EXEC_INTO_JSON="$ROOT/BENCH_exec_into.json" \
     MPK_BENCH_STEP_JSON="$ROOT/BENCH_step_overhead.json" \
     MPK_BENCH_SATURATION_JSON="$ROOT/BENCH_saturation.json" \
     MPK_BENCH_TRANSPORT_JSON="$ROOT/BENCH_transport.json" \
+    MPK_BENCH_VERIFY_JSON="$ROOT/BENCH_verify.json" \
         cargo bench --bench hotpath_micro ||
         echo "tier1: bench skipped (non-fatal)" >&2
     if [[ -f "$ROOT/BENCH_store_hotpath.json" ]]; then cat "$ROOT/BENCH_store_hotpath.json"; fi
@@ -95,6 +142,7 @@ if [[ "${1:-}" != "--no-bench" ]]; then
     if [[ -f "$ROOT/BENCH_step_overhead.json" ]]; then cat "$ROOT/BENCH_step_overhead.json"; fi
     if [[ -f "$ROOT/BENCH_saturation.json" ]]; then cat "$ROOT/BENCH_saturation.json"; fi
     if [[ -f "$ROOT/BENCH_transport.json" ]]; then cat "$ROOT/BENCH_transport.json"; fi
+    if [[ -f "$ROOT/BENCH_verify.json" ]]; then cat "$ROOT/BENCH_verify.json"; fi
 fi
 
 echo "tier1: OK"

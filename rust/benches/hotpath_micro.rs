@@ -1,15 +1,16 @@
 //! Hot-path microbenchmarks for the perf pass (§Perf in
 //! EXPERIMENTS.md): queue ops, event notification, compiler stages, DES
-//! throughput, tile marshalling into the PJRT pool, and the serving
-//! front-end under saturation. Custom harness (criterion unavailable
-//! offline): warmup + median-of-N on the monotonic clock.
+//! throughput, tile marshalling across the exec-pool boundary, the
+//! native CPU backend's kernels, and the serving front-end under
+//! saturation. Custom harness (criterion unavailable offline): warmup +
+//! median-of-N on the monotonic clock.
 
 use mpk::exec::real::{init_weights, WeightArena};
 use mpk::exec::store::TensorStore;
 use mpk::megakernel::{EventTable, MpmcQueue};
 use mpk::models::{build_decode_graph, GraphOptions, ModelConfig};
 use mpk::ops::{CompGraph, DType, Region};
-use mpk::runtime::{ExecPool, Manifest, OutView, Value};
+use mpk::runtime::{ArgType, BackendKind, ExecPool, Manifest, OutView, Value};
 use mpk::serving::mock::MockEngine;
 use mpk::serving::{
     Batcher, EngineError, FinishReason, KvAllocator, Priority, Request, ServeEngine, ServeServer,
@@ -155,15 +156,16 @@ fn bench_weight_arena(t: &mut Table) -> (u64, u64, u64, u64) {
 /// The pool output boundary across its two generations: alloc-per-call
 /// (`execute` replies with a fresh `Vec` the caller then copies into
 /// the arena) vs write-into (`execute_into`: the executor scatters the
-/// result straight into the caller's arena destination). With AOT
-/// artifacts and a PJRT backend available this times the real pool on
-/// `add_b1`; offline it times the same boundary shapes on the store
-/// primitives (reply-alloc + caller scatter vs direct scatter through a
-/// mutable view), flagged `"mode": "synthetic"` in the JSON. Returns
-/// `(alloc_per_call_ns, write_into_ns, mode, into_path_output_allocs)`.
+/// result straight into the caller's arena destination). Times the real
+/// pool on `add_b1` on the default backend — the native CPU backend
+/// runs everywhere, so the real path is the normal case now; the
+/// synthetic store-primitive fallback (flagged `"mode": "synthetic"`)
+/// survives only for builds where even that fails. Returns
+/// `(alloc_per_call_ns, write_into_ns, mode/backend, into_path_output_allocs)`.
 fn bench_exec_into(t: &mut Table) -> (u64, u64, &'static str, u64) {
-    if let Ok(m) = Manifest::load(&Manifest::default_dir()) {
+    if let Ok(m) = Manifest::resolve(&Manifest::default_dir(), BackendKind::from_env()) {
         if let Ok(pool) = ExecPool::new(m, 1) {
+            let backend = pool.backend_name();
             if let Some((idx, _)) = pool.manifest().find("add_b1") {
                 let a = vec![1.5f32; 256];
                 let b = vec![2.5f32; 256];
@@ -196,7 +198,7 @@ fn bench_exec_into(t: &mut Table) -> (u64, u64, &'static str, u64) {
                     format!("{into_ns} ns"),
                     "result lands in the caller's arena region".into(),
                 ]);
-                return (alloc_ns, into_ns, "pjrt", into_allocs);
+                return (alloc_ns, into_ns, backend, into_allocs);
             }
         }
     }
@@ -238,13 +240,14 @@ fn bench_exec_into(t: &mut Table) -> (u64, u64, &'static str, u64) {
 
 /// The step-API overhead: what one `ServeEngine::step()` call costs
 /// beyond the kernel iteration it wraps (retire/admit, staging by slot,
-/// harvest, event construction). With artifacts and a PJRT backend this
-/// drives a real engine and compares median per-`step()` wall time to
-/// the median kernel iteration latency inside it — the difference is
-/// the API's bookkeeping, which replaced the old inlined `serve()` loop
-/// body. Offline it times the same bookkeeping on the scheduler
-/// substrate alone (no kernel — `kernel_ns` reported as 0), flagged
-/// `"mode": "synthetic"`. Returns `(step_ns, kernel_ns, mode)`.
+/// harvest, event construction). Drives a real engine on the default
+/// backend (the native CPU backend runs everywhere) and compares median
+/// per-`step()` wall time to the median kernel iteration latency inside
+/// it — the difference is the API's bookkeeping, which replaced the old
+/// inlined `serve()` loop body. The scheduler-substrate fallback (no
+/// kernel — `kernel_ns` reported as 0, flagged `"mode": "synthetic"`)
+/// survives only for builds where even the CPU engine fails. Returns
+/// `(step_ns, kernel_ns, mode/backend)`.
 fn bench_step_overhead(t: &mut Table) -> (u64, u64, &'static str) {
     let median = |mut v: Vec<u64>| -> u64 {
         if v.is_empty() {
@@ -292,7 +295,7 @@ fn bench_step_overhead(t: &mut Table) -> (u64, u64, &'static str) {
             format!("{kernel_ns} ns"),
             "resident megakernel re-arm inside step()".into(),
         ]);
-        return (step_ns, kernel_ns, "engine");
+        return (step_ns, kernel_ns, e.pool().backend_name());
     }
 
     // offline: the scheduler-side loop body alone — retire scan, graph
@@ -322,6 +325,119 @@ fn bench_step_overhead(t: &mut Table) -> (u64, u64, &'static str) {
         "retire/admit + graph pick + slot staging, no kernel".into(),
     ]);
     (ns, 0, "synthetic")
+}
+
+/// The native CPU backend's kernels, per artifact op plus the fused
+/// end-to-end decode step. Per-op timings drive a [`BackendSession`]
+/// directly (no channel hops — the kernel alone); the end-to-end row
+/// sends `ref_decode_b4` — a whole batch-4 decode iteration: embedding,
+/// 4 transformer layers with GQA attention and KV append, final norm,
+/// lm head — through a real [`ExecPool`], so it prices the full
+/// protocol + numerics path serving takes per token. Inputs are seeded
+/// deterministic fills shaped by the builtin manifest's signatures.
+/// Returns `(per_op_rows, e2e_step_ns)`.
+fn bench_cpu_backend(t: &mut Table) -> (Vec<(&'static str, u64)>, u64) {
+    use mpk::runtime::backend::{backend, In};
+    use std::sync::Arc;
+
+    // deterministic in-range fills from the artifact signature: f32
+    // small and varied, i32 all 1 (valid token id and cache length).
+    let fill = |spec: &mpk::runtime::ArtifactSpec| -> (Vec<Vec<f32>>, Vec<Vec<i32>>, Vec<(bool, usize)>) {
+        let mut f_bufs: Vec<Vec<f32>> = Vec::new();
+        let mut i_bufs: Vec<Vec<i32>> = Vec::new();
+        let mut kinds: Vec<(bool, usize)> = Vec::new();
+        for (ai, a) in spec.inputs.iter().enumerate() {
+            match a.ty {
+                ArgType::F32 => {
+                    f_bufs.push(
+                        (0..a.numel()).map(|i| ((i * 31 + ai * 7) % 97) as f32 * 0.013 - 0.5).collect(),
+                    );
+                    kinds.push((true, f_bufs.len() - 1));
+                }
+                ArgType::I32 => {
+                    i_bufs.push(vec![1; a.numel()]);
+                    kinds.push((false, i_bufs.len() - 1));
+                }
+            }
+        }
+        (f_bufs, i_bufs, kinds)
+    };
+
+    let manifest = Arc::new(Manifest::builtin());
+    let be = backend(BackendKind::Cpu);
+    let mut sess = be.session(manifest.clone()).expect("cpu backend session");
+    let ops = [
+        "embed_b1",
+        "rmsnorm_b1",
+        "matmul_b1_k256_n128",
+        "matmul_b1_k512_n128",
+        "attn_q1",
+        "add_b1",
+        "swiglu_b1",
+        "ref_decode_b1",
+    ];
+    let mut rows: Vec<(&'static str, u64)> = Vec::new();
+    for name in ops {
+        let (idx, spec) = manifest.find(name).expect("builtin artifact");
+        let (f_bufs, i_bufs, kinds) = fill(spec);
+        let inputs: Vec<In<'_>> = kinds
+            .iter()
+            .map(|&(f, i)| if f { In::F32(&f_bufs[i]) } else { In::I32(&i_bufs[i]) })
+            .collect();
+        // one allocating call sizes the destinations; the timed loop
+        // then reuses them through the write-into path.
+        let mut out_bufs: Vec<Vec<f32>> =
+            sess.execute(idx, &inputs).expect("cpu execute").iter().map(|v| vec![0.0; v.len()]).collect();
+        let ns = bench_median_ns(10, 100, || {
+            let mut outs: Vec<OutView<'_>> =
+                out_bufs.iter_mut().map(|b| OutView::from_slice(b)).collect();
+            sess.execute_into(idx, &inputs, &mut outs).unwrap();
+        });
+        t.row(vec![
+            format!("cpu_backend: {name}"),
+            format!("{:.2} us", ns as f64 / 1e3),
+            "native kernel, direct session".into(),
+        ]);
+        rows.push((name, ns));
+    }
+
+    // end to end: the fused batch-4 decode step through the pool.
+    let pool = ExecPool::with_backend(Manifest::builtin(), 1, BackendKind::Cpu).expect("cpu pool");
+    let (idx, spec) = pool.manifest().find("ref_decode_b4").expect("builtin artifact");
+    let (f_bufs, i_bufs, kinds) = fill(spec);
+    let mut out_bufs: Vec<Vec<f32>> =
+        sess.execute(idx, &{
+            kinds
+                .iter()
+                .map(|&(f, i)| if f { In::F32(&f_bufs[i]) } else { In::I32(&i_bufs[i]) })
+                .collect::<Vec<In<'_>>>()
+        })
+        .expect("cpu execute")
+        .iter()
+        .map(|v| vec![0.0; v.len()])
+        .collect();
+    let e2e_ns = bench_median_ns(5, 50, || {
+        let inputs: Vec<Value<'_>> = kinds
+            .iter()
+            .map(|&(f, i)| {
+                if f {
+                    Value::Borrowed(&f_bufs[i])
+                } else {
+                    Value::BorrowedI32(&i_bufs[i])
+                }
+            })
+            .collect();
+        let mut outs: Vec<OutView<'_>> =
+            out_bufs.iter_mut().map(|b| OutView::from_slice(b)).collect();
+        pool.execute_into(idx, inputs, &mut outs).unwrap();
+    });
+    assert_eq!(pool.output_allocs(), 0, "cpu decode step allocated output buffers");
+    t.row(vec![
+        "cpu_backend: decode step e2e (b4)".into(),
+        format!("{:.2} us", e2e_ns as f64 / 1e3),
+        "ref_decode_b4 through the pool protocol".into(),
+    ]);
+    (rows, e2e_ns)
 }
 
 /// A [`MockEngine`] with wall-clock step time, so the server front-end
@@ -497,6 +613,7 @@ fn main() {
     let (per_session_ns, shared_ns, dup_bytes, shared_bytes) = bench_weight_arena(&mut t);
     let (exec_alloc_ns, exec_into_ns, exec_mode, exec_into_allocs) = bench_exec_into(&mut t);
     let (step_ns, kernel_ns, step_mode) = bench_step_overhead(&mut t);
+    let (cpu_rows, cpu_e2e_ns) = bench_cpu_backend(&mut t);
     let (sat_p50, sat_max, sat_accepted, sat_shed, sat_rejected) = bench_saturation(&mut t);
     let (wire_rt_ns, wire_frames, wire_fps) = bench_transport(&mut t);
 
@@ -633,12 +750,13 @@ fn main() {
     }
 
     // pool-output-boundary record: alloc-per-call vs write-into. `mode`
-    // says whether the real PJRT pool or the offline synthetic boundary
-    // was measured.
+    // doubles as the backend identity ("cpu"/"pjrt") when the real pool
+    // ran; "synthetic" marks the offline store-primitive fallback.
     let exec_json_path = std::env::var("MPK_BENCH_EXEC_INTO_JSON")
         .unwrap_or_else(|_| "BENCH_exec_into.json".to_string());
     let exec_json = format!(
         "{{\n  \"bench\": \"exec_into\",\n  \"mode\": \"{exec_mode}\",\n  \
+         \"backend\": \"{exec_mode}\",\n  \
          \"alloc_per_call_ns\": {exec_alloc_ns},\n  \"write_into_ns\": {exec_into_ns},\n  \
          \"into_path_output_allocs\": {exec_into_allocs},\n  \
          \"write_into_speedup\": {:.4}\n}}\n",
@@ -657,6 +775,7 @@ fn main() {
         .unwrap_or_else(|_| "BENCH_step_overhead.json".to_string());
     let step_json = format!(
         "{{\n  \"bench\": \"step_overhead\",\n  \"mode\": \"{step_mode}\",\n  \
+         \"backend\": \"{step_mode}\",\n  \
          \"step_ns\": {step_ns},\n  \"kernel_iter_ns\": {kernel_ns},\n  \
          \"api_overhead_ns\": {}\n}}\n",
         step_ns.saturating_sub(kernel_ns)
@@ -664,6 +783,24 @@ fn main() {
     match std::fs::write(&step_json_path, step_json) {
         Ok(()) => println!("wrote {step_json_path}"),
         Err(e) => eprintln!("could not write {step_json_path}: {e}"),
+    }
+
+    // native-CPU-backend record: per-op kernel latency plus the fused
+    // batch-4 decode step through the full pool protocol.
+    let cpu_json_path = std::env::var("MPK_BENCH_CPU_JSON")
+        .unwrap_or_else(|_| "BENCH_cpu_backend.json".to_string());
+    let op_rows: Vec<String> = cpu_rows
+        .iter()
+        .map(|(op, ns)| format!("    {{ \"op\": \"{op}\", \"ns\": {ns} }}"))
+        .collect();
+    let cpu_json = format!(
+        "{{\n  \"bench\": \"cpu_backend\",\n  \"backend\": \"cpu\",\n  \"ops\": [\n{}\n  ],\n  \
+         \"e2e_decode_step_b4_ns\": {cpu_e2e_ns}\n}}\n",
+        op_rows.join(",\n")
+    );
+    match std::fs::write(&cpu_json_path, cpu_json) {
+        Ok(()) => println!("wrote {cpu_json_path}"),
+        Err(e) => eprintln!("could not write {cpu_json_path}: {e}"),
     }
 
     // saturation record: admission-decision latency and shed rate when

@@ -8,6 +8,8 @@ use crate::exec::store::{SharedSlab, TensorStore};
 use crate::megakernel::{MegaConfig, PersistentMegaKernel, RunReport};
 use crate::models::{build_decode_graph, GraphOptions, ModelConfig};
 use crate::ops::{CompGraph, DType, OpKind, TensorId};
+use crate::runtime::backend::BackendKind;
+use crate::runtime::manifest::ManifestError;
 use crate::runtime::pool::{ExecPool, Value};
 use crate::runtime::Manifest;
 use crate::tgraph::{compile, CompileOptions, CompiledGraph, DecomposeConfig};
@@ -18,15 +20,21 @@ use std::sync::Arc;
 
 /// Build the tiny-model decode graph whose tiles line up with the AOT
 /// artifacts: matmuls tiled to `tile_n` columns, attention per request,
-/// everything else whole-tensor.
-pub fn build_real_graph(manifest: &Manifest, batch: usize) -> CompGraph {
+/// everything else whole-tensor. A manifest whose model metadata or
+/// tile width disagrees with the compiled-in tiny model is a typed
+/// [`ManifestError`] — a bad artifacts dir degrades into `EngineError`
+/// at the serving layer instead of aborting the thread.
+pub fn build_real_graph(manifest: &Manifest, batch: usize) -> Result<CompGraph, ManifestError> {
     let cfg = ModelConfig::tiny();
     let m = manifest.model;
-    assert_eq!(
-        (m.layers, m.d_model, m.heads, m.kv_heads, m.head_dim, m.ffn, m.vocab),
-        (cfg.layers, cfg.d_model, cfg.heads, cfg.kv_heads, cfg.head_dim, cfg.ffn, cfg.vocab),
-        "rust ModelConfig::tiny() out of sync with python TinyConfig"
-    );
+    let got = (m.layers, m.d_model, m.heads, m.kv_heads, m.head_dim, m.ffn, m.vocab);
+    let want = (cfg.layers, cfg.d_model, cfg.heads, cfg.kv_heads, cfg.head_dim, cfg.ffn, cfg.vocab);
+    if got != want {
+        return Err(ManifestError::ModelMismatch {
+            manifest: format!("{got:?}"),
+            builtin: format!("{want:?}"),
+        });
+    }
     let mut g = build_decode_graph(
         &cfg,
         &GraphOptions {
@@ -54,7 +62,13 @@ pub fn build_real_graph(manifest: &Manifest, batch: usize) -> CompGraph {
     for (op, shape) in g.ops.iter_mut().zip(shapes) {
         match op.kind {
             OpKind::MatMul => {
-                assert_eq!(shape[1] % tile_n, 0, "{}: N={} not tileable", op.name, shape[1]);
+                if shape[1] % tile_n != 0 {
+                    return Err(ManifestError::NotTileable {
+                        op: op.name.clone(),
+                        n: shape[1],
+                        tile_n,
+                    });
+                }
                 op.partition_hint = Some(vec![1, shape[1] / tile_n]);
             }
             OpKind::Attention { .. } => {}
@@ -63,19 +77,19 @@ pub fn build_real_graph(manifest: &Manifest, batch: usize) -> CompGraph {
             }
         }
     }
-    g
+    Ok(g)
 }
 
 /// Compile the real graph for the megakernel.
-pub fn compile_real(manifest: &Manifest, batch: usize) -> CompiledGraph {
-    let g = build_real_graph(manifest, batch);
-    compile(
+pub fn compile_real(manifest: &Manifest, batch: usize) -> Result<CompiledGraph, ManifestError> {
+    let g = build_real_graph(manifest, batch)?;
+    Ok(compile(
         &g,
         &CompileOptions {
             decompose: DecomposeConfig { target_tasks: 8, min_tile_cols: 8 },
             ..Default::default()
         },
-    )
+    ))
 }
 
 /// Deterministically synthesize one parameter's values: norm weights =
@@ -223,9 +237,14 @@ pub fn set_ids_at(store: &TensorStore, t: crate::ops::TensorId, ids: &[i32]) {
 }
 
 /// Write this iteration's token ids into the store (by-name lookup).
-pub fn set_ids(g: &CompGraph, store: &TensorStore, ids: &[i32]) {
-    let t = g.tensor_by_name("token_ids").expect("token_ids input");
+/// A graph without the `token_ids` input is a typed error, not a panic
+/// — this runs on serving threads.
+pub fn set_ids(g: &CompGraph, store: &TensorStore, ids: &[i32]) -> Result<(), ManifestError> {
+    let t = g
+        .tensor_by_name("token_ids")
+        .ok_or_else(|| ManifestError::MissingTensor { name: "token_ids".into() })?;
     set_ids_at(store, t.id, ids);
+    Ok(())
 }
 
 /// Fetch the logits at a known tensor id (hot-path variant; the engine
@@ -235,9 +254,12 @@ pub fn logits_at(store: &TensorStore, t: crate::ops::TensorId) -> Vec<f32> {
 }
 
 /// Fetch the logits produced by the last iteration (by-name lookup).
-pub fn get_logits(g: &CompGraph, store: &TensorStore) -> Vec<f32> {
-    let t = g.tensor_by_name("lm_head").expect("lm_head output");
-    logits_at(store, t.id)
+/// A graph without the `lm_head` output is a typed error, not a panic.
+pub fn get_logits(g: &CompGraph, store: &TensorStore) -> Result<Vec<f32>, ManifestError> {
+    let t = g
+        .tensor_by_name("lm_head")
+        .ok_or_else(|| ManifestError::MissingTensor { name: "lm_head".into() })?;
+    Ok(logits_at(store, t.id))
 }
 
 /// Run one decode iteration on the resident persistent megakernel with
@@ -271,33 +293,37 @@ pub fn run_reference(
     cur_len: usize,
 ) -> Result<Vec<f32>, String> {
     let m = manifest.model;
+    // a tensor lookup miss is a typed ManifestError converted through
+    // the String shim — never a panic on a serving thread.
+    let by_name = |n: &str| -> Result<Value, String> {
+        let t = g
+            .tensor_by_name(n)
+            .ok_or_else(|| String::from(ManifestError::MissingTensor { name: n.to_string() }))?;
+        Ok(Value::F32(store.get(t.id)))
+    };
     let mut inputs: Vec<Value> = Vec::new();
     inputs.push(Value::I32(ids.to_vec()));
     for l in 0..m.layers {
-        let t = g.tensor_by_name(&format!("l{l}.kcache")).unwrap();
-        inputs.push(Value::F32(store.get(t.id)));
+        inputs.push(by_name(&format!("l{l}.kcache"))?);
     }
     for l in 0..m.layers {
-        let t = g.tensor_by_name(&format!("l{l}.vcache")).unwrap();
-        inputs.push(Value::F32(store.get(t.id)));
+        inputs.push(by_name(&format!("l{l}.vcache"))?);
     }
     inputs.push(Value::I32(vec![cur_len as i32]));
-    let by_name = |n: &str| -> Value {
-        Value::F32(store.get(g.tensor_by_name(n).unwrap_or_else(|| panic!("missing {n}")).id))
-    };
-    inputs.push(by_name("embed.weight"));
+    inputs.push(by_name("embed.weight")?);
     for l in 0..m.layers {
-        inputs.push(by_name(&format!("l{l}.ln1.weight")));
-        inputs.push(by_name(&format!("l{l}.wqkv")));
-        inputs.push(by_name(&format!("l{l}.wo")));
-        inputs.push(by_name(&format!("l{l}.ln2.weight")));
-        inputs.push(by_name(&format!("l{l}.w_gate_up")));
-        inputs.push(by_name(&format!("l{l}.w_down")));
+        inputs.push(by_name(&format!("l{l}.ln1.weight"))?);
+        inputs.push(by_name(&format!("l{l}.wqkv"))?);
+        inputs.push(by_name(&format!("l{l}.wo"))?);
+        inputs.push(by_name(&format!("l{l}.ln2.weight"))?);
+        inputs.push(by_name(&format!("l{l}.w_gate_up"))?);
+        inputs.push(by_name(&format!("l{l}.w_down"))?);
     }
-    inputs.push(by_name("final_norm.weight"));
-    inputs.push(by_name("lm_head.weight"));
-    let out = pool.execute_by_name(&format!("ref_decode_b{batch}"), inputs)?;
-    Ok(out.into_iter().next().unwrap())
+    inputs.push(by_name("final_norm.weight")?);
+    inputs.push(by_name("lm_head.weight")?);
+    let name = format!("ref_decode_b{batch}");
+    let out = pool.execute_by_name(&name, inputs)?;
+    out.into_iter().next().ok_or_else(|| format!("{name}: empty result tuple"))
 }
 
 /// Argmax over a logits row.
@@ -318,12 +344,25 @@ pub struct RealSession {
 }
 
 impl RealSession {
+    /// Session on the environment-selected backend (`MPK_BACKEND`,
+    /// defaulting to native CPU — so this works in a bare container).
     pub fn create(batch: usize, pool_threads: usize, seed: u64) -> Result<RealSession, String> {
-        let manifest = Manifest::load(&Manifest::default_dir())?;
-        let compiled = Arc::new(compile_real(&manifest, batch));
+        Self::create_with(batch, pool_threads, seed, BackendKind::from_env())
+    }
+
+    /// Session on an explicit backend. Artifact-free backends fall back
+    /// to the compiled-in manifest when no artifacts dir exists.
+    pub fn create_with(
+        batch: usize,
+        pool_threads: usize,
+        seed: u64,
+        kind: BackendKind,
+    ) -> Result<RealSession, String> {
+        let manifest = Manifest::resolve(&Manifest::default_dir(), kind)?;
+        let compiled = Arc::new(compile_real(&manifest, batch)?);
         let store = Arc::new(TensorStore::new(&compiled.graph));
         init_weights(&compiled.graph, &store, seed);
-        let pool = Arc::new(ExecPool::new(manifest.clone(), pool_threads)?);
+        let pool = Arc::new(ExecPool::with_backend(manifest.clone(), pool_threads, kind)?);
         Ok(RealSession { manifest, pool, batch, compiled, store })
     }
 
@@ -346,23 +385,6 @@ impl RealSession {
 #[cfg(test)]
 mod tests {
     use super::*;
-
-    /// True when the AOT artifacts *and* a working PJRT backend exist.
-    /// Artifacts alone are not enough: an offline build runs the stub
-    /// `runtime::xla` binding, whose client construction always fails
-    /// — these tests must skip there, not panic on `unwrap`.
-    fn have_runtime() -> bool {
-        match Manifest::load(&Manifest::default_dir()) {
-            Ok(m) => match ExecPool::new(m, 1) {
-                Ok(_) => true,
-                Err(e) => {
-                    eprintln!("skipping: PJRT backend unavailable ({e})");
-                    false
-                }
-            },
-            Err(_) => false,
-        }
-    }
 
     /// Batch-`b` tiny-model decode graph — no artifacts needed, so the
     /// weight-arena tests below run everywhere.
@@ -435,14 +457,31 @@ mod tests {
     }
 
     #[test]
+    fn mismatched_manifest_is_a_typed_error_not_a_panic() {
+        let mut m = Manifest::builtin();
+        m.model.layers = 2;
+        let err = build_real_graph(&m, 1).unwrap_err();
+        assert!(matches!(err, ManifestError::ModelMismatch { .. }), "got: {err}");
+        // the rendered error carries both shapes for the operator.
+        assert!(err.to_string().contains("does not match"), "got: {err}");
+    }
+
+    #[test]
+    fn missing_tensor_lookups_are_typed_errors() {
+        let g = CompGraph::new();
+        let store = TensorStore::new(&g);
+        let err = set_ids(&g, &store, &[1]).unwrap_err();
+        assert_eq!(err, ManifestError::MissingTensor { name: "token_ids".into() });
+        let err = get_logits(&g, &store).unwrap_err();
+        assert_eq!(err, ManifestError::MissingTensor { name: "lm_head".into() });
+    }
+
+    #[test]
     fn real_graph_tiles_match_artifacts() {
-        // needs only the manifest (graph/tile shapes), not a backend.
-        if Manifest::load(&Manifest::default_dir()).is_err() {
-            eprintln!("skipping: artifacts not built");
-            return;
-        }
-        let m = Manifest::load(&Manifest::default_dir()).unwrap();
-        let c = compile_real(&m, 2);
+        // needs only the manifest (graph/tile shapes), not a backend —
+        // the compiled-in manifest carries the same tile geometry.
+        let m = Manifest::builtin();
+        let c = compile_real(&m, 2).unwrap();
         // every matmul task must be exactly tile_n wide.
         for t in &c.tgraph.tasks {
             if let crate::tgraph::TaskKind::Compute { kind: OpKind::MatMul, .. } = &t.kind {
@@ -456,16 +495,12 @@ mod tests {
 
     #[test]
     fn megakernel_matches_reference_logits_batch1() {
-        if !have_runtime() {
-            eprintln!("skipping: artifacts not built");
-            return;
-        }
         let s = RealSession::create(1, 2, 42).unwrap();
         let mut kernel = s.persistent_kernel(4, 1);
         let exec = TileExecutor::new(&s.compiled.graph, &s.store, &s.pool, 1);
         // reference first (reads caches before KvAppend mutates them —
         // same values either way, but keep the clean order).
-        set_ids(&s.compiled.graph, &s.store, &[7]);
+        set_ids(&s.compiled.graph, &s.store, &[7]).unwrap();
         let want = run_reference(&s.manifest, &s.pool, &s.compiled.graph, &s.store, 1, &[7], 0).unwrap();
         // the reference path allocates reply buffers (legacy execute);
         // the megakernel iteration itself must not: every task body
@@ -477,7 +512,7 @@ mod tests {
             boundary_allocs,
             "a megakernel task received an allocated output buffer"
         );
-        let got = get_logits(&s.compiled.graph, &s.store);
+        let got = get_logits(&s.compiled.graph, &s.store).unwrap();
         assert_eq!(got.len(), want.len());
         let max_err = got
             .iter()
@@ -489,10 +524,6 @@ mod tests {
 
     #[test]
     fn multi_step_decode_consistent_with_reference() {
-        if !have_runtime() {
-            eprintln!("skipping: artifacts not built");
-            return;
-        }
         let s = RealSession::create(2, 2, 7).unwrap();
         // resident kernel re-armed across steps — the session outlives
         // each run, so the persistent front-end is the right tool.
@@ -500,7 +531,7 @@ mod tests {
         let exec = TileExecutor::new(&s.compiled.graph, &s.store, &s.pool, 2);
         let mut ids = vec![3i32, 11];
         for step in 0..3 {
-            set_ids(&s.compiled.graph, &s.store, &ids);
+            set_ids(&s.compiled.graph, &s.store, &ids).unwrap();
             let want =
                 run_reference(&s.manifest, &s.pool, &s.compiled.graph, &s.store, 2, &ids, step).unwrap();
             let boundary_allocs = s.pool.output_allocs();
@@ -510,7 +541,7 @@ mod tests {
                 boundary_allocs,
                 "step {step}: decode iteration allocated an output buffer"
             );
-            let got = get_logits(&s.compiled.graph, &s.store);
+            let got = get_logits(&s.compiled.graph, &s.store).unwrap();
             let max_err =
                 got.iter().zip(&want).map(|(a, b)| (a - b).abs()).fold(0.0f32, f32::max);
             assert!(max_err < 1e-3, "step {step}: max err {max_err}");
@@ -523,27 +554,23 @@ mod tests {
 
     #[test]
     fn owning_executor_drives_decode() {
-        if !have_runtime() {
-            eprintln!("skipping: artifacts not built");
-            return;
-        }
         // same decode through the owning executor (the serving-session
         // configuration) must match the borrowed executor.
         let s = RealSession::create(1, 2, 42).unwrap();
         let mut kernel = s.persistent_kernel(4, 1);
         let exec = s.owning_executor();
-        set_ids(&s.compiled.graph, &s.store, &[7]);
+        set_ids(&s.compiled.graph, &s.store, &[7]).unwrap();
         exec.set_cur_len(0);
         kernel.run(&exec).unwrap();
         assert!(exec.take_error().is_none());
-        let got = get_logits(&s.compiled.graph, &s.store);
+        let got = get_logits(&s.compiled.graph, &s.store).unwrap();
 
         let s2 = RealSession::create(1, 2, 42).unwrap();
         let mut k2 = s2.persistent_kernel(4, 1);
         let e2 = TileExecutor::new(&s2.compiled.graph, &s2.store, &s2.pool, 1);
-        set_ids(&s2.compiled.graph, &s2.store, &[7]);
+        set_ids(&s2.compiled.graph, &s2.store, &[7]).unwrap();
         run_iteration(&mut k2, &e2, 0).unwrap();
-        let want = get_logits(&s2.compiled.graph, &s2.store);
+        let want = get_logits(&s2.compiled.graph, &s2.store).unwrap();
         assert_eq!(got, want);
     }
 }

@@ -15,8 +15,15 @@
 //!   the CLI with `mpk verify`).
 //! * [`megakernel`] — the in-kernel parallel runtime, threaded: workers,
 //!   schedulers, events, hybrid JIT/AOT launch, paged shared memory (§5).
-//! * [`runtime`] / [`exec`] — PJRT-backed real-numerics execution of
-//!   compiled tGraphs (HLO text artifacts built by `make artifacts`).
+//! * [`runtime`] / [`exec`] — real-numerics execution of compiled
+//!   tGraphs through pluggable [`runtime::ExecBackend`]s: the native
+//!   CPU backend (`runtime::backend::cpu`, artifact-free, the default —
+//!   decode runs end to end with no artifacts dir and no PJRT library)
+//!   and the PJRT backend (`runtime::backend::pjrt`, compiles the HLO
+//!   text artifacts built by `make artifacts`). The
+//!   [`runtime::ExecPool`] owns the typed execution-boundary protocol
+//!   ([`runtime::PoolError`], zero-copy `execute_into` scatter);
+//!   backends own only numerics.
 //! * [`sim`] — discrete-event GPU timing simulator regenerating the
 //!   paper's figures on A100/H100/B200 roofline models.
 //! * [`serving`] — the overload-hardened serving stack (§6.1): spawn a

@@ -5,12 +5,14 @@
 //!   simulate <model> [--batch N] [--gpu NAME]   MPK vs baselines on a roofline
 //!   verify   [model] [--batch N] [--gpu NAME] [--granularity G] [--mutations N]
 //!            static race/deadlock verification of the compiled tGraphs
-//!   serve    [--requests N] [--batch N]         real-numerics serving (needs artifacts)
+//!   serve    [--requests N] [--batch N] [--backend cpu|pjrt]
+//!            real-numerics serving (native CPU backend by default; no artifacts needed)
 //!   serve    --listen ADDR [--requests N]       TCP serving (wire protocol + graceful drain)
 //!   models                                      list known model configs
 
 use mpk::megakernel::MegaConfig;
 use mpk::models::{build_decode_graph, GraphOptions, ModelConfig};
+use mpk::runtime::BackendKind;
 use mpk::serving::mock::MockEngine;
 use mpk::serving::{
     Request, ServeEngine, ServeServer, ServeTransport, ServerConfig, SubmitOptions,
@@ -143,15 +145,24 @@ fn main() {
         "serve" => {
             let n: usize = flag(&args, "--requests").and_then(|v| v.parse().ok()).unwrap_or(8);
             let batch: usize = flag(&args, "--batch").and_then(|v| v.parse().ok()).unwrap_or(4);
+            let backend = parse_backend(&args);
             if let Some(addr) = flag(&args, "--listen") {
-                serve_listen(&addr, n, batch);
+                serve_listen(&addr, n, batch, backend);
                 return;
             }
             let mega = MegaConfig { workers: 6, schedulers: 2, ..Default::default() };
-            let mut e = ServeEngine::builder().max_batch(batch).pool_threads(3).seed(42).mega(mega).build().expect(
-                "serving needs `make artifacts` and a real PJRT backend \
-                 (offline builds ship the xla stub)",
-            );
+            let mut e = ServeEngine::builder()
+                .max_batch(batch)
+                .pool_threads(3)
+                .seed(42)
+                .mega(mega)
+                .backend(backend)
+                .build()
+                .expect(
+                    "engine build failed (the cpu backend needs no artifacts; \
+                     pjrt needs `make artifacts` and a vendored PJRT build)",
+                );
+            println!("backend: {}", backend.name());
             // stream: half the wave up front, the rest submitted
             // mid-flight while earlier requests are still decoding.
             let prompt_for = |i: u64| -> Vec<i32> { (0..3).map(|t| 1 + (i as i32 * 13 + t) % 500).collect() };
@@ -197,7 +208,9 @@ fn main() {
             println!("      static race/deadlock check of every compiled tGraph");
             println!("      (+ a seeded mutation sweep proving the analyzer bites);");
             println!("      nonzero exit on any violation or mutation survivor");
-            println!("  mpk serve --requests 8 --batch 4   (after `make artifacts`)");
+            println!("  mpk serve --requests 8 --batch 4 [--backend cpu|pjrt]");
+            println!("      cpu (default) runs the native backend, no artifacts needed;");
+            println!("      pjrt needs `make artifacts` and a vendored PJRT build");
             println!("  mpk serve --listen 127.0.0.1:7171 --requests 8");
         }
     }
@@ -206,21 +219,21 @@ fn main() {
 /// `serve --listen ADDR`: put the server behind the TCP transport,
 /// drive a demo wave through a loopback wire client (the same frames a
 /// remote client would send), then drain gracefully. Uses the
-/// real-numerics engine when artifacts are available and falls back to
-/// the backend-free mock otherwise, so the wire path is demonstrable
-/// on any machine.
-fn serve_listen(addr: &str, n: usize, batch: usize) {
+/// real-numerics engine on the selected backend (the CPU backend works
+/// on any machine) and falls back to the engine-free mock only if even
+/// that fails, so the wire path is demonstrable everywhere.
+fn serve_listen(addr: &str, n: usize, batch: usize, backend: BackendKind) {
     let mega = MegaConfig { workers: 6, schedulers: 2, ..Default::default() };
     let server = match ServeServer::spawn(
-        ServeEngine::builder().max_batch(batch).pool_threads(3).seed(42).mega(mega),
+        ServeEngine::builder().max_batch(batch).pool_threads(3).seed(42).mega(mega).backend(backend),
         ServerConfig::default(),
     ) {
         Ok(s) => {
-            println!("engine: real numerics (artifacts + PJRT backend)");
+            println!("engine: real numerics ({} backend)", backend.name());
             s
         }
         Err(e) => {
-            println!("engine: backend-free mock ({e})");
+            println!("engine: engine-free mock ({e})");
             ServeServer::spawn_with(MockEngine::new(batch.max(1)), ServerConfig::default())
         }
     };
@@ -255,6 +268,19 @@ fn serve_listen(addr: &str, n: usize, batch: usize) {
         m.frames_sent,
         m.frames_received,
     );
+}
+
+/// `--backend cpu|pjrt`; falls back to `MPK_BACKEND` / the CPU default
+/// when the flag is absent, and exits with a usage message on an
+/// unknown name instead of silently serving on the wrong backend.
+fn parse_backend(args: &[String]) -> BackendKind {
+    match flag(args, "--backend") {
+        None => BackendKind::from_env(),
+        Some(v) => BackendKind::parse(&v).unwrap_or_else(|| {
+            eprintln!("unknown backend {v:?} (expected cpu or pjrt)");
+            std::process::exit(2);
+        }),
+    }
 }
 
 fn flag(args: &[String], name: &str) -> Option<String> {

@@ -1,0 +1,588 @@
+//! Native CPU execution backend: pure-Rust kernels for the tiny-model
+//! artifact vocabulary, executing straight from the manifest's
+//! [`ArtifactSpec`] signatures. No artifact files are opened and no
+//! PJRT library is needed — this is the in-container default backend,
+//! and the one that makes tier-1 run real decode numerics.
+//!
+//! Numerics are pinned to match the task binder bit-for-bit where both
+//! paths run the same op (the conformance suite leans on this):
+//!
+//! * matmul accumulates k-ascending per output element, in column
+//!   blocks of [`COL_BLOCK`] (= the manifest's `tile_n`), so a fused
+//!   full-width call and a sequence of `tile_n`-wide tiled calls
+//!   produce identical bits;
+//! * GQA attention uses a single-pass **online softmax** (running max /
+//!   running sum, rescale-on-new-max), and the same [`attention_row`]
+//!   serves both the `attn_q1` artifact and the fused `ref_decode`
+//!   reference;
+//! * rmsnorm is `x / sqrt(mean(x²) + 1e-6) * w`, swiglu is
+//!   `silu(gate) · up` over a `[gate | up]`-packed row, and embedding
+//!   ids are clamped into the vocab range.
+//!
+//! The hot path is allocation-free after warmup: `execute_into`
+//! scatters each output row directly into the caller's arena-backed
+//! [`OutView`] runs, and the only scratch (the attention accumulator)
+//! is a reused per-session buffer. Every destination is validated —
+//! count, numel, run geometry — before the first element is written,
+//! so a failed call leaves destinations untouched. This module
+//! contains no `unsafe`: all pointer reconstruction stays in the
+//! audited `runtime/pool.rs`.
+
+use super::{check_inputs, BackendKind, BackendSession, ExecBackend, In};
+use crate::runtime::manifest::{ArtifactSpec, Manifest, TinyModelMeta};
+use crate::runtime::pool::{OutView, PoolError};
+use std::sync::Arc;
+
+/// Column-block width for the streamed matmul — matches the artifact
+/// set's `tile_n`, so blocking never changes accumulation order
+/// relative to the tiled artifact calls.
+const COL_BLOCK: usize = 128;
+
+/// The native CPU backend handle. Stateless — per-thread state lives
+/// in [`CpuSession`].
+pub struct CpuBackend;
+
+impl ExecBackend for CpuBackend {
+    fn kind(&self) -> BackendKind {
+        BackendKind::Cpu
+    }
+
+    fn session(&self, manifest: Arc<Manifest>) -> Result<Box<dyn BackendSession>, PoolError> {
+        Ok(Box::new(CpuSession::new(manifest)))
+    }
+}
+
+/// Which native kernel an artifact name maps to. Parsed lazily at
+/// `prepare` time from the artifact *name* (the spec's shapes carry
+/// every dimension the kernels need), so manifests may list artifacts
+/// this backend cannot run — e.g. the MoE grouped-GEMM — as long as
+/// nothing executes them.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum CpuOp {
+    Embed,
+    RmsNorm,
+    MatMul,
+    Attn,
+    Add,
+    SwiGlu,
+    RefDecode,
+}
+
+fn classify(name: &str) -> Option<CpuOp> {
+    if name.starts_with("embed_b") {
+        Some(CpuOp::Embed)
+    } else if name.starts_with("rmsnorm_b") {
+        Some(CpuOp::RmsNorm)
+    } else if name.starts_with("matmul_b") {
+        Some(CpuOp::MatMul)
+    } else if name.starts_with("attn_q") {
+        Some(CpuOp::Attn)
+    } else if name.starts_with("add_b") {
+        Some(CpuOp::Add)
+    } else if name.starts_with("swiglu_b") {
+        Some(CpuOp::SwiGlu)
+    } else if name.starts_with("ref_decode_b") {
+        Some(CpuOp::RefDecode)
+    } else {
+        None
+    }
+}
+
+/// Per-thread CPU execution state: the lazily parsed op table plus the
+/// reused attention accumulator (the only hot-path scratch).
+pub struct CpuSession {
+    manifest: Arc<Manifest>,
+    ops: Vec<Option<CpuOp>>,
+    acc: Vec<f32>,
+}
+
+impl CpuSession {
+    pub fn new(manifest: Arc<Manifest>) -> CpuSession {
+        let n = manifest.artifacts.len();
+        CpuSession { manifest, ops: vec![None; n], acc: Vec::new() }
+    }
+}
+
+/// `spec.inputs[arg].shape[axis]`, as a typed error instead of a panic
+/// when a (hand-written or foreign) manifest is malformed.
+fn dim(spec: &ArtifactSpec, arg: usize, axis: usize) -> Result<usize, PoolError> {
+    spec.inputs
+        .get(arg)
+        .and_then(|a| a.shape.get(axis))
+        .copied()
+        .ok_or_else(|| PoolError(format!("{}: input {arg} is missing dimension {axis}", spec.name)))
+}
+
+/// Per-output `(rows, row_width)` write plan, derived from the spec's
+/// input signature alone — this is what lets the backend validate every
+/// destination before computing anything.
+fn plan(
+    op: CpuOp,
+    spec: &ArtifactSpec,
+    model: &TinyModelMeta,
+) -> Result<Vec<(usize, usize)>, PoolError> {
+    match op {
+        CpuOp::Embed => {
+            let b = spec.inputs.first().map(|a| a.numel()).unwrap_or(0);
+            Ok(vec![(b, dim(spec, 1, 1)?)])
+        }
+        CpuOp::RmsNorm => Ok(vec![(dim(spec, 0, 0)?, dim(spec, 0, 1)?)]),
+        CpuOp::MatMul => Ok(vec![(dim(spec, 0, 0)?, dim(spec, 1, 1)?)]),
+        CpuOp::Attn => {
+            let _ = dim(spec, 3, 0)?; // cur_len input must exist
+            Ok(vec![(1, spec.inputs[0].numel())])
+        }
+        CpuOp::Add => Ok(vec![(dim(spec, 0, 0)?, dim(spec, 0, 1)?)]),
+        CpuOp::SwiGlu => {
+            let (b, two_f) = (dim(spec, 0, 0)?, dim(spec, 0, 1)?);
+            if two_f % 2 != 0 {
+                return Err(PoolError(format!(
+                    "{}: swiglu input width {two_f} is not even",
+                    spec.name
+                )));
+            }
+            Ok(vec![(b, two_f / 2)])
+        }
+        CpuOp::RefDecode => {
+            let l = model.layers;
+            if spec.inputs.len() != 5 + 8 * l {
+                return Err(PoolError(format!(
+                    "{}: reference decode expects {} inputs, manifest lists {}",
+                    spec.name,
+                    5 + 8 * l,
+                    spec.inputs.len()
+                )));
+            }
+            let b = spec.inputs[0].numel();
+            let mut plan = vec![(b, model.vocab)];
+            plan.extend(std::iter::repeat((b, model.kv_dim())).take(2 * l));
+            Ok(plan)
+        }
+    }
+}
+
+/// Validate every destination against the write plan **before any
+/// write**: arity, numel, and that the runs tile into whole rows (so
+/// row writes never straddle a run boundary).
+fn check_outs(
+    name: &str,
+    plan: &[(usize, usize)],
+    outs: &[OutView<'_>],
+) -> Result<(), PoolError> {
+    if outs.len() != plan.len() {
+        return Err(PoolError(format!(
+            "{name}: expected {} output destinations, got {}",
+            plan.len(),
+            outs.len()
+        )));
+    }
+    for (i, (&(rows, w), o)) in plan.iter().zip(outs).enumerate() {
+        if o.len() != rows * w {
+            return Err(PoolError(format!(
+                "{name}: output {i} numel mismatch: artifact produced {}, destination holds {}",
+                rows * w,
+                o.len()
+            )));
+        }
+        if w > 0 && o.run_len() % w != 0 {
+            return Err(PoolError(format!(
+                "{name}: output {i} runs of {} elements straddle rows of width {w}",
+                o.run_len()
+            )));
+        }
+    }
+    Ok(())
+}
+
+fn silu(g: f32) -> f32 {
+    g / (1.0 + (-g).exp())
+}
+
+/// `out = x / sqrt(mean(x²) + 1e-6) * w` over one row.
+fn rmsnorm_row(x: &[f32], w: &[f32], out: &mut [f32]) {
+    let mut ss = 0.0f32;
+    for &v in x {
+        ss += v * v;
+    }
+    let inv = 1.0 / (ss / x.len() as f32 + 1e-6).sqrt();
+    for ((o, &xv), &wv) in out.iter_mut().zip(x).zip(w) {
+        *o = xv * inv * wv;
+    }
+}
+
+/// One output row of `x_row · w` where `w` is `[k, n]` row-major.
+/// Accumulation is k-ascending per element — identical order whether a
+/// caller asks for a `tile_n`-wide tile or the fused full width — and
+/// the column blocking only changes *which* elements a pass touches,
+/// never the per-element order, so tiled and fused calls agree bitwise.
+fn matmul_row(x_row: &[f32], w: &[f32], n: usize, out_row: &mut [f32]) {
+    out_row.fill(0.0);
+    let mut j0 = 0;
+    while j0 < n {
+        let jw = COL_BLOCK.min(n - j0);
+        let block = &mut out_row[j0..j0 + jw];
+        for (k, &xv) in x_row.iter().enumerate() {
+            let wrow = &w[k * n + j0..][..jw];
+            for (o, &wv) in block.iter_mut().zip(wrow) {
+                *o += xv * wv;
+            }
+        }
+        j0 += jw;
+    }
+}
+
+/// GQA geometry shared by the standalone attention artifact and the
+/// fused reference decode.
+struct AttnShape {
+    heads: usize,
+    kv_heads: usize,
+    head_dim: usize,
+}
+
+/// One request row of GQA decode attention over the first `valid`
+/// cache positions, via single-pass online softmax: per head, keep a
+/// running max `m`, running normalizer `l`, and a value accumulator;
+/// on a new max, rescale both by `exp(old_m - new_m)`. `q` holds the
+/// row's query (`heads * head_dim` — callers slice the q columns out
+/// of a fused qkv row), caches are `[s_max, kv_heads * head_dim]`.
+fn attention_row(
+    shape: &AttnShape,
+    q: &[f32],
+    kc: &[f32],
+    vc: &[f32],
+    valid: usize,
+    acc: &mut Vec<f32>,
+    out: &mut [f32],
+) {
+    let hd = shape.head_dim;
+    let kv_dim = shape.kv_heads * hd;
+    let group = (shape.heads / shape.kv_heads).max(1);
+    let scale = 1.0 / (hd as f32).sqrt();
+    acc.resize(hd, 0.0);
+    for h in 0..shape.heads {
+        let qh = &q[h * hd..][..hd];
+        let kvh = h / group;
+        let mut m = f32::NEG_INFINITY;
+        let mut l = 0.0f32;
+        acc.fill(0.0);
+        for s in 0..valid {
+            let krow = &kc[s * kv_dim + kvh * hd..][..hd];
+            let mut dot = 0.0f32;
+            for (&a, &b) in qh.iter().zip(krow) {
+                dot += a * b;
+            }
+            let score = dot * scale;
+            if score > m {
+                // exp(-inf) == 0 covers the first iteration cleanly.
+                let corr = (m - score).exp();
+                l *= corr;
+                for a in acc.iter_mut() {
+                    *a *= corr;
+                }
+                m = score;
+            }
+            let p = (score - m).exp();
+            l += p;
+            let vrow = &vc[s * kv_dim + kvh * hd..][..hd];
+            for (a, &v) in acc.iter_mut().zip(vrow) {
+                *a += p * v;
+            }
+        }
+        let oh = &mut out[h * hd..][..hd];
+        if l > 0.0 {
+            for (o, &a) in oh.iter_mut().zip(acc.iter()) {
+                *o = a / l;
+            }
+        } else {
+            oh.fill(0.0);
+        }
+    }
+}
+
+/// Clamp a token id into the vocab range (matches the artifact set's
+/// gather semantics: never fault on a bad id).
+fn clamp_id(id: i32, vocab: usize) -> usize {
+    (id.max(0) as usize).min(vocab.saturating_sub(1))
+}
+
+impl BackendSession for CpuSession {
+    fn prepare(&mut self, artifact: usize) -> Result<(), PoolError> {
+        let spec = self
+            .manifest
+            .artifacts
+            .get(artifact)
+            .ok_or_else(|| PoolError(format!("artifact index {artifact} out of range")))?;
+        if self.ops[artifact].is_none() {
+            let op = classify(&spec.name).ok_or_else(|| {
+                PoolError(format!("{}: no native cpu kernel for this artifact", spec.name))
+            })?;
+            self.ops[artifact] = Some(op);
+        }
+        Ok(())
+    }
+
+    fn execute(&mut self, artifact: usize, inputs: &[In<'_>]) -> Result<Vec<Vec<f32>>, PoolError> {
+        self.prepare(artifact)?;
+        let manifest = Arc::clone(&self.manifest);
+        let spec = &manifest.artifacts[artifact];
+        let op = self.ops[artifact].expect("prepared above");
+        let plan = plan(op, spec, &manifest.model)?;
+        let mut bufs: Vec<Vec<f32>> = plan.iter().map(|&(r, w)| vec![0.0; r * w]).collect();
+        let mut views: Vec<OutView<'_>> = bufs.iter_mut().map(|b| OutView::from_slice(b)).collect();
+        self.execute_into(artifact, inputs, &mut views)?;
+        drop(views);
+        Ok(bufs)
+    }
+
+    fn execute_into(
+        &mut self,
+        artifact: usize,
+        inputs: &[In<'_>],
+        outs: &mut [OutView<'_>],
+    ) -> Result<(), PoolError> {
+        self.prepare(artifact)?;
+        let manifest = Arc::clone(&self.manifest);
+        let spec = &manifest.artifacts[artifact];
+        let op = self.ops[artifact].expect("prepared above");
+        check_inputs(spec, inputs)?;
+        let plan = plan(op, spec, &manifest.model)?;
+        check_outs(&spec.name, &plan, outs)?;
+        // Everything below is infallible: inputs and all destinations
+        // are fully validated, so a partial write can never be
+        // observed.
+        match op {
+            CpuOp::Embed => {
+                let ids = inputs[0].as_i32()?;
+                let table = inputs[1].as_f32()?;
+                let d = plan[0].1;
+                let vocab = spec.inputs[1].shape[0];
+                for (r, &id) in ids.iter().enumerate() {
+                    let row = clamp_id(id, vocab);
+                    outs[0].span_mut(r * d, d).copy_from_slice(&table[row * d..][..d]);
+                }
+            }
+            CpuOp::RmsNorm => {
+                let x = inputs[0].as_f32()?;
+                let w = inputs[1].as_f32()?;
+                let (rows, d) = plan[0];
+                for r in 0..rows {
+                    rmsnorm_row(&x[r * d..][..d], w, outs[0].span_mut(r * d, d));
+                }
+            }
+            CpuOp::MatMul => {
+                let x = inputs[0].as_f32()?;
+                let w = inputs[1].as_f32()?;
+                let k = dim(spec, 0, 1)?;
+                let (rows, n) = plan[0];
+                for r in 0..rows {
+                    matmul_row(&x[r * k..][..k], w, n, outs[0].span_mut(r * n, n));
+                }
+            }
+            CpuOp::Attn => {
+                let q = inputs[0].as_f32()?;
+                let kc = inputs[1].as_f32()?;
+                let vc = inputs[2].as_f32()?;
+                let s_max = dim(spec, 1, 0)?;
+                let valid = (inputs[3].as_i32()?[0].max(0) as usize).min(s_max);
+                let m = manifest.model;
+                let shape =
+                    AttnShape { heads: m.heads, kv_heads: m.kv_heads, head_dim: m.head_dim };
+                let w = plan[0].1;
+                attention_row(&shape, q, kc, vc, valid, &mut self.acc, outs[0].span_mut(0, w));
+            }
+            CpuOp::Add => {
+                let a = inputs[0].as_f32()?;
+                let b = inputs[1].as_f32()?;
+                let (rows, d) = plan[0];
+                for r in 0..rows {
+                    let row = outs[0].span_mut(r * d, d);
+                    for ((o, &x), &y) in row.iter_mut().zip(&a[r * d..][..d]).zip(&b[r * d..][..d])
+                    {
+                        *o = x + y;
+                    }
+                }
+            }
+            CpuOp::SwiGlu => {
+                let x = inputs[0].as_f32()?;
+                let (rows, f) = plan[0];
+                for r in 0..rows {
+                    let xr = &x[r * 2 * f..][..2 * f];
+                    let (gate, up) = xr.split_at(f);
+                    let row = outs[0].span_mut(r * f, f);
+                    for ((o, &g), &u) in row.iter_mut().zip(gate).zip(up) {
+                        *o = silu(g) * u;
+                    }
+                }
+            }
+            CpuOp::RefDecode => {
+                ref_decode(&manifest.model, spec, inputs, outs, &mut self.acc)?;
+            }
+        }
+        Ok(())
+    }
+}
+
+/// The fused reference decode: the whole tiny-model forward pass in one
+/// call, mirroring the compiled decode graph op for op — pre-norm
+/// residual blocks, fused qkv with the binder's column split, KvAppend
+/// semantics (caches are read *as stored* for positions `0..cur_len`
+/// and this step's K/V is appended at `cur_len`), and the same
+/// [`attention_row`] / [`matmul_row`] kernels as the per-op artifacts,
+/// so binder decode and reference logits agree bitwise on this backend.
+/// Outputs: `[logits, k_row per layer ×L, v_row per layer ×L]`. This is
+/// the validation path, so per-call scratch allocation is fine.
+fn ref_decode(
+    model: &TinyModelMeta,
+    spec: &ArtifactSpec,
+    inputs: &[In<'_>],
+    outs: &mut [OutView<'_>],
+    acc: &mut Vec<f32>,
+) -> Result<(), PoolError> {
+    let ln = model.layers;
+    let (d, qd, kvd) = (model.d_model, model.q_dim(), model.kv_dim());
+    let (ffn, vocab) = (model.ffn, model.vocab);
+    let shape = AttnShape { heads: model.heads, kv_heads: model.kv_heads, head_dim: model.head_dim };
+    let ids = inputs[0].as_i32()?;
+    let b = ids.len();
+    let s_max = dim(spec, 1, 1)?; // caches are [b, s_max, kv_dim]
+    let cur_len = (inputs[1 + 2 * ln].as_i32()?[0].max(0) as usize).min(s_max.saturating_sub(1));
+    let embed = inputs[2 + 2 * ln].as_f32()?;
+
+    let mut x = vec![0.0f32; b * d];
+    for (r, &id) in ids.iter().enumerate() {
+        x[r * d..][..d].copy_from_slice(&embed[clamp_id(id, vocab) * d..][..d]);
+    }
+    let mut normed = vec![0.0f32; b * d];
+    let mut qkv = vec![0.0f32; b * (qd + 2 * kvd)];
+    let mut attn = vec![0.0f32; b * qd];
+    let mut proj = vec![0.0f32; b * d];
+    let mut gu = vec![0.0f32; b * 2 * ffn];
+    let mut act = vec![0.0f32; b * ffn];
+    let mut kc = vec![0.0f32; s_max * kvd];
+    let mut vc = vec![0.0f32; s_max * kvd];
+
+    for layer in 0..ln {
+        let base = 3 + 2 * ln + 6 * layer;
+        let ln1 = inputs[base].as_f32()?;
+        let wqkv = inputs[base + 1].as_f32()?;
+        let wo = inputs[base + 2].as_f32()?;
+        let ln2 = inputs[base + 3].as_f32()?;
+        let wgu = inputs[base + 4].as_f32()?;
+        let wdown = inputs[base + 5].as_f32()?;
+        let kc_in = inputs[1 + layer].as_f32()?;
+        let vc_in = inputs[1 + ln + layer].as_f32()?;
+
+        // attention block: x + wo·attn(ln1(x))
+        for r in 0..b {
+            rmsnorm_row(&x[r * d..][..d], ln1, &mut normed[r * d..][..d]);
+        }
+        let qkv_w = qd + 2 * kvd;
+        for r in 0..b {
+            matmul_row(&normed[r * d..][..d], wqkv, qkv_w, &mut qkv[r * qkv_w..][..qkv_w]);
+        }
+        for r in 0..b {
+            let qkv_r = &qkv[r * qkv_w..][..qkv_w];
+            let k_new = &qkv_r[qd..qd + kvd];
+            let v_new = &qkv_r[qd + kvd..];
+            outs[1 + layer].span_mut(r * kvd, kvd).copy_from_slice(k_new);
+            outs[1 + ln + layer].span_mut(r * kvd, kvd).copy_from_slice(v_new);
+            // KvAppend semantics on a scratch copy of this row's cache.
+            kc.copy_from_slice(&kc_in[r * s_max * kvd..][..s_max * kvd]);
+            vc.copy_from_slice(&vc_in[r * s_max * kvd..][..s_max * kvd]);
+            kc[cur_len * kvd..][..kvd].copy_from_slice(k_new);
+            vc[cur_len * kvd..][..kvd].copy_from_slice(v_new);
+            attention_row(&shape, &qkv_r[..qd], &kc, &vc, cur_len + 1, acc, &mut attn[r * qd..][..qd]);
+        }
+        for r in 0..b {
+            matmul_row(&attn[r * qd..][..qd], wo, d, &mut proj[r * d..][..d]);
+        }
+        for (xv, &pv) in x.iter_mut().zip(&proj) {
+            *xv += pv;
+        }
+
+        // MLP block: h + wdown·swiglu(ln2(h)·wgu)
+        for r in 0..b {
+            rmsnorm_row(&x[r * d..][..d], ln2, &mut normed[r * d..][..d]);
+        }
+        for r in 0..b {
+            matmul_row(&normed[r * d..][..d], wgu, 2 * ffn, &mut gu[r * 2 * ffn..][..2 * ffn]);
+        }
+        for r in 0..b {
+            let row = &gu[r * 2 * ffn..][..2 * ffn];
+            let (gate, up) = row.split_at(ffn);
+            for ((o, &g), &u) in act[r * ffn..][..ffn].iter_mut().zip(gate).zip(up) {
+                *o = silu(g) * u;
+            }
+        }
+        for r in 0..b {
+            matmul_row(&act[r * ffn..][..ffn], wdown, d, &mut proj[r * d..][..d]);
+        }
+        for (xv, &pv) in x.iter_mut().zip(&proj) {
+            *xv += pv;
+        }
+    }
+
+    let final_norm = inputs[3 + 8 * ln].as_f32()?;
+    let lm_head = inputs[4 + 8 * ln].as_f32()?;
+    for r in 0..b {
+        rmsnorm_row(&x[r * d..][..d], final_norm, &mut normed[r * d..][..d]);
+    }
+    for r in 0..b {
+        matmul_row(&normed[r * d..][..d], lm_head, vocab, outs[0].span_mut(r * vocab, vocab));
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn classify_covers_the_artifact_vocabulary() {
+        assert_eq!(classify("embed_b4"), Some(CpuOp::Embed));
+        assert_eq!(classify("rmsnorm_b1"), Some(CpuOp::RmsNorm));
+        assert_eq!(classify("matmul_b2_k256_n128"), Some(CpuOp::MatMul));
+        assert_eq!(classify("attn_q1"), Some(CpuOp::Attn));
+        assert_eq!(classify("add_b8"), Some(CpuOp::Add));
+        assert_eq!(classify("swiglu_b2"), Some(CpuOp::SwiGlu));
+        assert_eq!(classify("ref_decode_b1"), Some(CpuOp::RefDecode));
+        assert_eq!(classify("moe_gather_gemm_b8"), None);
+    }
+
+    #[test]
+    fn unknown_artifact_fails_at_prepare_not_execute() {
+        let mut m = Manifest::builtin();
+        m.artifacts[0].name = "moe_gather_gemm_b8".into();
+        let mut s = CpuSession::new(Arc::new(m));
+        let err = s.prepare(0).unwrap_err();
+        assert!(err.0.contains("no native cpu kernel"), "got: {err}");
+        assert!(s.prepare(1).is_ok(), "other artifacts still prepare");
+    }
+
+    #[test]
+    fn matmul_blocking_is_bit_identical_to_unblocked() {
+        // fused width (512) crosses block boundaries; a plain k-outer
+        // accumulation must produce the same bits.
+        let k = 96;
+        let n = 512;
+        let mut rng = crate::util::XorShift64::new(5);
+        let x: Vec<f32> = (0..k).map(|_| rng.unit_f32()).collect();
+        let w: Vec<f32> = (0..k * n).map(|_| rng.unit_f32()).collect();
+        let mut got = vec![0.0f32; n];
+        matmul_row(&x, &w, n, &mut got);
+        let mut want = vec![0.0f32; n];
+        for (kk, &xv) in x.iter().enumerate() {
+            for (o, &wv) in want.iter_mut().zip(&w[kk * n..(kk + 1) * n]) {
+                *o += xv * wv;
+            }
+        }
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn embedding_ids_are_clamped() {
+        assert_eq!(clamp_id(-3, 10), 0);
+        assert_eq!(clamp_id(4, 10), 4);
+        assert_eq!(clamp_id(99, 10), 9);
+    }
+}

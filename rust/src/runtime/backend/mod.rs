@@ -1,0 +1,271 @@
+//! Pluggable execution backends for [`ExecPool`](crate::runtime::ExecPool).
+//!
+//! The pool owns the *protocol* — lifetime-erased request channels,
+//! validation against the [`Manifest`], zero-copy output scatter — and
+//! delegates the *numerics* to a backend selected at construction time.
+//! Two backends are registered:
+//!
+//! * [`cpu::CpuBackend`] — native Rust kernels for the full tiny-model
+//!   artifact vocabulary (embedding lookup, rmsnorm, tiled matmul, GQA
+//!   attention with online softmax, residual add, swiglu, and the fused
+//!   `ref_decode_b{b}` reference artifact). **Artifact-free**: it
+//!   executes straight from the [`ArtifactSpec`] signatures, so it
+//!   needs neither `make artifacts` nor a PJRT library, and it is the
+//!   in-container default.
+//! * [`pjrt::PjrtBackend`] — compiles the HLO text artifacts through
+//!   [`crate::runtime::xla`]. Offline builds ship a stub `xla` module
+//!   whose client constructor fails, so this backend reports itself
+//!   unavailable until a real PJRT build is vendored.
+//!
+//! # Adding a backend
+//!
+//! 1. Implement [`ExecBackend`] (thread-safe identity + capability
+//!    metadata, plus a [`ExecBackend::session`] factory) and
+//!    [`BackendSession`] (the per-executor-thread state: prepared
+//!    artifacts, scratch buffers, device handles — deliberately **not**
+//!    `Send`, each pool thread builds its own).
+//! 2. Add a variant to [`BackendKind`] and register the backend in
+//!    [`registry`].
+//! 3. Run the backend-conformance suite
+//!    (`rust/tests/backend_conformance.rs`): it iterates the registry
+//!    and checks per-op golden vectors, decode agreement with the task
+//!    binder, and `execute_into` partial-write protection against every
+//!    backend that reports itself available.
+//!
+//! Backends receive inputs as safe [`In`] slices and write results
+//! through the safe run-wise accessors on
+//! [`OutView`](crate::runtime::OutView) — all pointer reconstruction
+//! stays inside the audited `runtime/pool.rs`, so backend
+//! implementations contain no `unsafe`.
+
+use crate::runtime::manifest::{ArgType, ArtifactSpec, Manifest};
+use crate::runtime::pool::{OutView, PoolError};
+use std::sync::{Arc, OnceLock};
+
+pub mod cpu;
+pub mod pjrt;
+
+/// Which execution backend an [`ExecPool`](crate::runtime::ExecPool)
+/// dispatches to. `Cpu` is the default: it is the only backend that
+/// works in a bare container (no artifacts dir, no PJRT library).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum BackendKind {
+    /// Native Rust kernels; artifact-free.
+    #[default]
+    Cpu,
+    /// PJRT via the `xla` module (the offline stub until vendored).
+    Pjrt,
+}
+
+impl BackendKind {
+    /// Reads `MPK_BACKEND` (`cpu` / `pjrt`); anything else — including
+    /// the variable being unset — selects the CPU backend.
+    pub fn from_env() -> BackendKind {
+        match std::env::var("MPK_BACKEND").as_deref() {
+            Ok("pjrt") => BackendKind::Pjrt,
+            _ => BackendKind::Cpu,
+        }
+    }
+
+    /// Parses a CLI flag value; `None` for unknown names.
+    pub fn parse(s: &str) -> Option<BackendKind> {
+        match s {
+            "cpu" => Some(BackendKind::Cpu),
+            "pjrt" => Some(BackendKind::Pjrt),
+            _ => None,
+        }
+    }
+
+    /// Stable lowercase identity, used to tag `BENCH_*.json` records.
+    pub fn name(self) -> &'static str {
+        match self {
+            BackendKind::Cpu => "cpu",
+            BackendKind::Pjrt => "pjrt",
+        }
+    }
+
+    /// `true` when the backend executes straight from the manifest's
+    /// [`ArtifactSpec`](crate::runtime::ArtifactSpec) signatures and
+    /// never opens the artifact files, so
+    /// [`Manifest::resolve`](crate::runtime::Manifest::resolve) may
+    /// fall back to the compiled-in [`Manifest::builtin`] manifest.
+    pub fn artifact_free(self) -> bool {
+        matches!(self, BackendKind::Cpu)
+    }
+}
+
+/// One input argument, already validated against the artifact's
+/// [`ArgSpec`](crate::runtime::ArgSpec) by the pool: the dtype matches
+/// and the length equals the spec's numel. The pool materializes these
+/// from its lifetime-erased channel payload on the executor thread.
+#[derive(Clone, Copy, Debug)]
+pub enum In<'a> {
+    F32(&'a [f32]),
+    I32(&'a [i32]),
+}
+
+impl<'a> In<'a> {
+    pub fn len(&self) -> usize {
+        match self {
+            In::F32(d) => d.len(),
+            In::I32(d) => d.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// The f32 payload, or a typed error when the argument is i32.
+    pub fn as_f32(&self) -> Result<&'a [f32], PoolError> {
+        match self {
+            In::F32(d) => Ok(d),
+            In::I32(_) => Err(PoolError("expected f32 input, got i32".into())),
+        }
+    }
+
+    /// The i32 payload, or a typed error when the argument is f32.
+    pub fn as_i32(&self) -> Result<&'a [i32], PoolError> {
+        match self {
+            In::I32(d) => Ok(d),
+            In::F32(_) => Err(PoolError("expected i32 input, got f32".into())),
+        }
+    }
+}
+
+/// Thread-safe backend handle: identity/capability metadata plus a
+/// factory for per-thread sessions. Registered once in [`registry`]
+/// and shared by every pool that selects it.
+pub trait ExecBackend: Send + Sync {
+    /// Which [`BackendKind`] this backend implements.
+    fn kind(&self) -> BackendKind;
+
+    /// Stable identity used in logs and `BENCH_*.json` records.
+    fn name(&self) -> &'static str {
+        self.kind().name()
+    }
+
+    /// See [`BackendKind::artifact_free`].
+    fn artifact_free(&self) -> bool {
+        self.kind().artifact_free()
+    }
+
+    /// Builds the per-executor-thread session. Called once per pool
+    /// thread; the error (device/library unavailable, unsupported
+    /// artifact vocabulary) surfaces through the pool's ready channel
+    /// as a construction failure.
+    fn session(&self, manifest: Arc<Manifest>) -> Result<Box<dyn BackendSession>, PoolError>;
+}
+
+/// Per-thread execution state: prepared artifacts, scratch buffers,
+/// device handles. Deliberately **not** `Send` — each executor thread
+/// owns one session for its lifetime, which is what lets backends keep
+/// thread-confined client handles (the PJRT client is `Rc`-based).
+pub trait BackendSession {
+    /// Prepares one artifact (compile HLO, parse the op out of the
+    /// spec, size scratch). Lazy and idempotent: the pool calls it
+    /// before every execute and the session caches the result, so only
+    /// the first call per artifact does work.
+    fn prepare(&mut self, artifact: usize) -> Result<(), PoolError>;
+
+    /// Executes into freshly allocated output buffers (the validation
+    /// path — the hot decode path uses [`Self::execute_into`]).
+    fn execute(&mut self, artifact: usize, inputs: &[In<'_>]) -> Result<Vec<Vec<f32>>, PoolError>;
+
+    /// Executes and scatters results directly into caller-owned
+    /// destinations — the zero-copy decode path. Contract: **every**
+    /// destination is validated (count, numel, run geometry) before
+    /// the first element is written, so a failed call leaves the
+    /// destinations untouched.
+    fn execute_into(
+        &mut self,
+        artifact: usize,
+        inputs: &[In<'_>],
+        outs: &mut [OutView<'_>],
+    ) -> Result<(), PoolError>;
+}
+
+/// Validate `inputs` against the artifact signature — count, per-input
+/// numel, dtype. The pool runs the same checks before dispatch, but
+/// backends re-validate defensively because sessions are also driven
+/// directly (the conformance suite, `execute`'s self-call).
+pub(crate) fn check_inputs(spec: &ArtifactSpec, inputs: &[In<'_>]) -> Result<(), PoolError> {
+    if inputs.len() != spec.inputs.len() {
+        return Err(PoolError(format!(
+            "{}: expected {} inputs, got {}",
+            spec.name,
+            spec.inputs.len(),
+            inputs.len()
+        )));
+    }
+    for (i, (v, s)) in inputs.iter().zip(&spec.inputs).enumerate() {
+        if v.len() != s.numel() {
+            return Err(PoolError(format!(
+                "{}: input {i} numel mismatch: {} vs {:?}",
+                spec.name,
+                v.len(),
+                s.shape
+            )));
+        }
+        let ok = matches!((v, s.ty), (In::F32(_), ArgType::F32) | (In::I32(_), ArgType::I32));
+        if !ok {
+            return Err(PoolError(format!("{}: input {i} dtype mismatch", spec.name)));
+        }
+    }
+    Ok(())
+}
+
+/// The built-in backend registry: one shared handle per
+/// [`BackendKind`], in declaration order. The conformance suite
+/// iterates this to test every backend uniformly.
+pub fn registry() -> &'static [Arc<dyn ExecBackend>] {
+    static REGISTRY: OnceLock<Vec<Arc<dyn ExecBackend>>> = OnceLock::new();
+    REGISTRY.get_or_init(|| vec![Arc::new(cpu::CpuBackend), Arc::new(pjrt::PjrtBackend)])
+}
+
+/// Looks up the registered backend for `kind`.
+pub fn backend(kind: BackendKind) -> Arc<dyn ExecBackend> {
+    registry()
+        .iter()
+        .find(|b| b.kind() == kind)
+        .cloned()
+        .expect("every BackendKind has a registered backend")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_covers_every_kind_exactly_once() {
+        for kind in [BackendKind::Cpu, BackendKind::Pjrt] {
+            let matches: Vec<_> = registry().iter().filter(|b| b.kind() == kind).collect();
+            assert_eq!(matches.len(), 1, "{kind:?} must be registered exactly once");
+            assert_eq!(backend(kind).kind(), kind);
+            assert_eq!(backend(kind).name(), kind.name());
+        }
+    }
+
+    #[test]
+    fn kind_parse_and_identity_round_trip() {
+        for kind in [BackendKind::Cpu, BackendKind::Pjrt] {
+            assert_eq!(BackendKind::parse(kind.name()), Some(kind));
+        }
+        assert_eq!(BackendKind::parse("tpu"), None);
+        assert_eq!(BackendKind::default(), BackendKind::Cpu);
+        assert!(BackendKind::Cpu.artifact_free());
+        assert!(!BackendKind::Pjrt.artifact_free());
+    }
+
+    #[test]
+    fn in_accessors_are_typed() {
+        let f = [1.0f32, 2.0];
+        let i = [3i32];
+        assert_eq!(In::F32(&f).len(), 2);
+        assert!(!In::F32(&f).is_empty());
+        assert_eq!(In::F32(&f).as_f32().unwrap(), &f);
+        assert_eq!(In::I32(&i).as_i32().unwrap(), &i);
+        assert!(In::F32(&f).as_i32().is_err());
+        assert!(In::I32(&i).as_f32().is_err());
+    }
+}

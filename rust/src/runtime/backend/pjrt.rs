@@ -1,0 +1,160 @@
+//! PJRT execution backend: compiles the HLO text artifacts written by
+//! `make artifacts` through the `xla` binding and executes them on a
+//! thread-confined CPU client. Offline builds ship the in-tree stub
+//! binding ([`crate::runtime::xla`]), whose client constructor fails —
+//! so this backend reports itself unavailable at session construction
+//! (surfaced through the pool's ready channel) until the real binding
+//! is vendored. **Not** artifact-free: the artifacts directory must
+//! exist, so [`Manifest::resolve`](crate::runtime::Manifest::resolve)
+//! never falls back to the builtin manifest for this backend.
+//!
+//! Like the CPU backend, this module contains no `unsafe`: inputs
+//! arrive as safe [`In`] slices (the pool re-materializes its erased
+//! pointers before dispatch) and results are scattered through
+//! [`OutView::copy_from`].
+
+use super::{check_inputs, BackendKind, BackendSession, ExecBackend, In};
+use crate::runtime::manifest::Manifest;
+use crate::runtime::pool::{OutView, PoolError};
+use crate::runtime::xla;
+use std::sync::Arc;
+
+/// The PJRT backend handle. Stateless — clients and compiled
+/// executables are per-thread, inside [`PjrtSession`].
+pub struct PjrtBackend;
+
+impl ExecBackend for PjrtBackend {
+    fn kind(&self) -> BackendKind {
+        BackendKind::Pjrt
+    }
+
+    fn session(&self, manifest: Arc<Manifest>) -> Result<Box<dyn BackendSession>, PoolError> {
+        // Own client + own compiled copies of every artifact: the
+        // binding's client is `Rc`-based (!Send), which is exactly why
+        // sessions are thread-confined.
+        let client = xla::PjRtClient::cpu().map_err(|e| PoolError(e.to_string()))?;
+        let exes = (0..manifest.artifacts.len()).map(|_| None).collect();
+        Ok(Box::new(PjrtSession { manifest, client, exes }))
+    }
+}
+
+/// Per-thread PJRT state: the client plus lazily compiled executables
+/// (compiling all ~30 artifacts up front costs tens of seconds; a
+/// typical run touches a handful).
+pub struct PjrtSession {
+    manifest: Arc<Manifest>,
+    client: xla::PjRtClient,
+    exes: Vec<Option<xla::PjRtLoadedExecutable>>,
+}
+
+impl PjrtSession {
+    /// Compile-if-needed, marshal literals, execute, and flatten the
+    /// result tuple to f32 parts — shared by both execute paths.
+    fn run(&mut self, artifact: usize, inputs: &[In<'_>]) -> Result<Vec<Vec<f32>>, PoolError> {
+        self.prepare(artifact)?;
+        let manifest = Arc::clone(&self.manifest);
+        let spec = &manifest.artifacts[artifact];
+        check_inputs(spec, inputs)?;
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (v, s) in inputs.iter().zip(&spec.inputs) {
+            let dims: Vec<i64> = s.shape.iter().map(|&d| d as i64).collect();
+            let lit = match v {
+                In::F32(d) => xla::Literal::vec1(*d),
+                In::I32(d) => xla::Literal::vec1(*d),
+            };
+            literals.push(lit.reshape(&dims).map_err(|e| PoolError(e.to_string()))?);
+        }
+        let out = self.exes[artifact]
+            .as_ref()
+            .expect("prepared above")
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| PoolError(e.to_string()))?;
+        let tuple = out[0][0].to_literal_sync().map_err(|e| PoolError(e.to_string()))?;
+        let parts = tuple.to_tuple().map_err(|e| PoolError(e.to_string()))?;
+        if parts.len() != spec.outputs {
+            return Err(PoolError(format!(
+                "{}: expected {} outputs, got {}",
+                spec.name,
+                spec.outputs,
+                parts.len()
+            )));
+        }
+        parts
+            .into_iter()
+            .map(|p| p.to_vec::<f32>().map_err(|e| PoolError(e.to_string())))
+            .collect()
+    }
+}
+
+impl BackendSession for PjrtSession {
+    fn prepare(&mut self, artifact: usize) -> Result<(), PoolError> {
+        let manifest = Arc::clone(&self.manifest);
+        let spec = manifest
+            .artifacts
+            .get(artifact)
+            .ok_or_else(|| PoolError(format!("artifact index {artifact} out of range")))?;
+        if self.exes[artifact].is_some() {
+            return Ok(());
+        }
+        let path = spec.path.to_str().ok_or_else(|| PoolError("non-utf8 path".into()))?;
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .map_err(|e| PoolError(format!("{}: {e}", spec.name)))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe =
+            self.client.compile(&comp).map_err(|e| PoolError(format!("compile {}: {e}", spec.name)))?;
+        self.exes[artifact] = Some(exe);
+        Ok(())
+    }
+
+    fn execute(&mut self, artifact: usize, inputs: &[In<'_>]) -> Result<Vec<Vec<f32>>, PoolError> {
+        self.run(artifact, inputs)
+    }
+
+    fn execute_into(
+        &mut self,
+        artifact: usize,
+        inputs: &[In<'_>],
+        outs: &mut [OutView<'_>],
+    ) -> Result<(), PoolError> {
+        let name = &self.manifest.artifacts.get(artifact).map(|s| s.name.clone()).unwrap_or_default();
+        let parts = self.run(artifact, inputs)?;
+        // validate *every* destination before writing any element — a
+        // failed call must never leave a partial write.
+        if parts.len() != outs.len() {
+            return Err(PoolError(format!(
+                "{name}: expected {} output destinations, got {}",
+                parts.len(),
+                outs.len()
+            )));
+        }
+        for (i, (p, d)) in parts.iter().zip(outs.iter()).enumerate() {
+            if p.len() != d.len() {
+                return Err(PoolError(format!(
+                    "{name}: output {i} numel mismatch: artifact produced {}, destination holds {}",
+                    p.len(),
+                    d.len()
+                )));
+            }
+        }
+        for (p, d) in parts.iter().zip(outs.iter_mut()) {
+            d.copy_from(p);
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stub_build_reports_unavailable_at_session_construction() {
+        // The offline stub fails at client creation; a vendored real
+        // binding would succeed here and the conformance suite would
+        // then cover this backend too.
+        match PjrtBackend.session(Arc::new(Manifest::builtin())) {
+            Err(e) => assert!(e.0.contains("stub"), "unexpected stub error: {e}"),
+            Ok(_) => eprintln!("real PJRT binding present; stub test vacuous"),
+        }
+    }
+}

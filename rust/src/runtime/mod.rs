@@ -1,11 +1,24 @@
-//! PJRT-backed artifact execution: manifest loading and the thread-
-//! confined exec pool. Python builds the artifacts once (`make
-//! artifacts`); this module runs them from the rust hot path. The
-//! `xla` submodule is the offline stand-in for the PJRT binding so the
-//! pool (and its protocol tests) compile in the stdlib-only build.
+//! Artifact execution: manifest resolution and the thread-confined
+//! exec pool, dispatching through pluggable [`ExecBackend`]s.
+//!
+//! The [`pool`] owns the execution-boundary *protocol* (lifetime-erased
+//! request channels, validation, zero-copy output scatter); the
+//! [`backend`] registry supplies the *numerics*. Two backends ship:
+//! the native CPU backend ([`backend::cpu`]) — artifact-free, the
+//! in-container default, what makes `mpk serve` and the real-numerics
+//! tests run with no artifacts dir and no PJRT library — and the PJRT
+//! backend ([`backend::pjrt`]), which compiles the HLO text artifacts
+//! that `make artifacts` emits (the `xla` submodule is the offline
+//! stand-in for the PJRT binding until a real build is vendored).
+//! [`Manifest::resolve`] picks the artifact manifest from disk when
+//! present and falls back to the compiled-in [`Manifest::builtin`]
+//! signatures for artifact-free backends. See the [`backend`] module
+//! docs for how to add a backend.
+pub mod backend;
 pub mod manifest;
 pub mod pool;
 pub mod xla;
 
+pub use backend::{BackendKind, BackendSession, ExecBackend, In};
 pub use manifest::{ArgSpec, ArgType, ArtifactSpec, Manifest, ManifestError, TinyModelMeta};
 pub use pool::{ExecPool, OutView, PoolError, Value};

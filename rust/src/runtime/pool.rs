@@ -1,15 +1,16 @@
-//! PJRT execution pool.
+//! Backend-neutral execution pool.
 //!
-//! The `xla` crate's `PjRtClient` is `Rc`-based (`!Send`), and
-//! `execute()` clones that `Rc` per output buffer — so a client must
-//! never be shared across threads. The pool therefore runs K *executor
-//! threads, each owning its own client and its own compiled copy of
-//! every artifact*; megakernel workers submit host tensors over a
-//! channel and block on a per-request reply channel. Python is never
-//! involved: artifacts are HLO text on disk, compiled once per executor
-//! thread at pool construction. (Offline builds use the in-tree stub
-//! binding in `runtime::xla`, which fails loudly at client creation;
-//! the pool protocol is identical either way.)
+//! The pool owns the *protocol* of the execution boundary and delegates
+//! the numerics to an [`ExecBackend`] chosen at construction
+//! ([`ExecPool::with_backend`]; [`ExecPool::new`] reads `MPK_BACKEND`,
+//! defaulting to the native CPU backend). Backend sessions are
+//! thread-confined — the PJRT client is `Rc`-based (`!Send`), and the
+//! CPU backend keeps per-thread scratch — so the pool runs K *executor
+//! threads, each owning its own [`BackendSession`]*; megakernel workers
+//! submit host tensors over a channel and block on a per-request reply
+//! channel. Artifacts prepare lazily on first use (for PJRT that means
+//! compiling HLO text from disk; the CPU backend just parses the op out
+//! of the artifact name).
 //!
 //! Inputs may be **borrowed** ([`Value::Borrowed`] /
 //! [`Value::BorrowedI32`]): the zero-copy hot path hands the pool
@@ -17,9 +18,9 @@
 //! matmul/attention task marshals no input buffer at all. Borrowed
 //! slices cross the thread boundary as raw pointer + length
 //! ([`RawValue`]); this is sound because the submitter blocks on the
-//! reply channel until the executor thread has finished building input
-//! literals and replied (or died) — the borrow outlives every read. See
-//! the safety note on [`ExecPool::execute`].
+//! reply channel until the executor thread has finished with the inputs
+//! and replied (or died) — the borrow outlives every read. See the
+//! safety note on [`ExecPool::execute`].
 //!
 //! **Outputs** may land the same way: [`ExecPool::execute_into`] takes
 //! a caller-owned destination per artifact output ([`OutView`], a
@@ -30,28 +31,36 @@
 //! mirroring `RawValue::BorrowedF32`, and are sound via the same
 //! blocking reply protocol: the caller's exclusive borrows of the
 //! destination regions live across the whole call, so the executor is
-//! the only writer while it runs. Destinations are validated (count,
-//! then every length) **before** the first element is written — a
-//! failed `execute_into` never leaves a partial write. The pool counts
-//! every output buffer it does allocate (the legacy [`ExecPool::execute`]
+//! the only writer while it runs. The executor re-materializes real
+//! [`OutView`]s before dispatch, and backends write through their safe
+//! run-wise accessors ([`OutView::span_mut`], [`OutView::copy_from`]) —
+//! all pointer reconstruction stays in this audited module.
+//! Destinations are validated (count here; numel and run geometry in
+//! the backend) **before** the first element is written — a failed
+//! `execute_into` never leaves a partial write. The pool counts every
+//! output buffer it does allocate (the legacy [`ExecPool::execute`]
 //! reply path) in [`ExecPool::output_allocs`]; the persistent-kernel
 //! decode path asserts this stays at zero.
+//!
+//! Every fallible entry point returns the typed [`PoolError`]; legacy
+//! `String` contexts (the binder's task bodies) convert through the
+//! `From<PoolError> for String` shim, and no caller matches on error
+//! strings.
 
+use crate::runtime::backend::{self, BackendKind, BackendSession, ExecBackend, In};
 use crate::runtime::manifest::{ArgType, Manifest};
-use crate::runtime::xla;
 use std::collections::VecDeque;
 use std::marker::PhantomData;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Condvar, Mutex};
 
 crate::util::boundary_error! {
-    /// Typed failure from pool construction — the `runtime` boundary
-    /// error for [`ExecPool::new`] (no PJRT backend, thread spawn
-    /// failure, an executor dying during warm-up). Per-request
-    /// execution errors stay `String`: they are harvested task-by-task
-    /// through the binder and surface through its own boundary error.
-    /// Legacy `String` contexts convert through the
-    /// `From<PoolError> for String` shim.
+    /// Typed failure at the pool boundary: construction (backend
+    /// unavailable, thread spawn failure, an executor dying during
+    /// warm-up) and per-request execution (validation mismatches,
+    /// backend errors, a dead executor thread). Legacy `String`
+    /// contexts convert through the `From<PoolError> for String` shim;
+    /// no caller matches on the message text.
     PoolError
 }
 
@@ -114,7 +123,7 @@ impl Value<'_> {
 }
 
 /// A caller-owned output destination: a mutable f32 region (typically
-/// an arena tile) the executor thread writes one artifact output into.
+/// an arena tile) an executor thread writes one artifact output into.
 ///
 /// The region is a sequence of `runs` contiguous spans of `run`
 /// elements whose starts are `stride` elements apart — `runs == 1` is
@@ -122,6 +131,12 @@ impl Value<'_> {
 /// form covers every regularly-tiled arena destination (e.g. a matmul
 /// column tile: one run per output row, advancing by the row stride).
 /// `exec::store::TileViewMut::out_view` builds these over arena tiles.
+///
+/// Backends write through the safe accessors ([`OutView::span_mut`],
+/// [`OutView::run_mut`], [`OutView::copy_from`]) — the view holds
+/// exclusive access to its runs for `'a` (the constructors' contract),
+/// and `&mut self` makes each write uniquely referenced, so the
+/// accessors are sound safe APIs over the raw parts kept here.
 pub struct OutView<'a> {
     ptr: *mut f32,
     runs: usize,
@@ -162,6 +177,56 @@ impl<'a> OutView<'a> {
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
+
+    /// Number of contiguous runs.
+    pub fn runs(&self) -> usize {
+        self.runs
+    }
+
+    /// Elements per contiguous run.
+    pub fn run_len(&self) -> usize {
+        self.run
+    }
+
+    /// Exclusive access to run `i`. Panics if `i` is out of range.
+    pub fn run_mut(&mut self, i: usize) -> &mut [f32] {
+        assert!(i < self.runs, "run index {i} out of range ({} runs)", self.runs);
+        // SAFETY: the constructor contract grants this view exclusive
+        // write access to run `i` for 'a; `&mut self` makes this the
+        // only live slice into it; bounds checked just above.
+        unsafe { std::slice::from_raw_parts_mut(self.ptr.add(i * self.stride), self.run) }
+    }
+
+    /// Exclusive access to `width` elements starting at run-major
+    /// element offset `off` — how backends address "row `r` of a
+    /// `rows × width` output" without knowing the run layout. Panics if
+    /// the span is out of range or straddles a run boundary; callers
+    /// validate geometry up front (see the CPU backend's `check_outs`)
+    /// so the hot path never trips this.
+    pub fn span_mut(&mut self, off: usize, width: usize) -> &mut [f32] {
+        if width == 0 {
+            return &mut [];
+        }
+        assert!(self.run > 0, "span into an empty destination");
+        let (run_idx, in_run) = (off / self.run, off % self.run);
+        assert!(
+            in_run + width <= self.run && run_idx < self.runs,
+            "span [{off}, +{width}) exceeds or straddles runs of {} elements",
+            self.run
+        );
+        // SAFETY: as in `run_mut`; the span is inside run `run_idx`.
+        unsafe { std::slice::from_raw_parts_mut(self.ptr.add(run_idx * self.stride + in_run), width) }
+    }
+
+    /// Scatter `src` (run-major) across the destination runs. Panics on
+    /// length mismatch — callers validate numel before writing.
+    pub fn copy_from(&mut self, src: &[f32]) {
+        assert_eq!(src.len(), self.len(), "copy_from length mismatch");
+        let run = self.run;
+        for i in 0..self.runs {
+            self.run_mut(i).copy_from_slice(&src[i * run..][..run]);
+        }
+    }
 }
 
 /// Lifetime-erased value stored in the request queue. Borrowed slices
@@ -190,7 +255,10 @@ impl RawValue {
 }
 
 /// Lifetime-erased [`OutView`] in the request queue: the mutable
-/// counterpart of `RawValue::BorrowedF32`.
+/// counterpart of `RawValue::BorrowedF32`. The executor thread turns it
+/// back into an [`OutView`] (via [`OutView::from_raw_strided`]) before
+/// handing it to the backend, so all writes go through the safe
+/// accessors.
 struct RawOutView {
     ptr: *mut f32,
     runs: usize,
@@ -202,31 +270,6 @@ struct RawOutView {
 // is parked in `execute_into` keeping its exclusive destination borrows
 // alive (blocking reply protocol — see `execute`'s safety note).
 unsafe impl Send for RawOutView {}
-
-impl RawOutView {
-    fn len(&self) -> usize {
-        self.runs * self.run
-    }
-
-    /// Scatter `src` (run-major) into the destination runs.
-    ///
-    /// SAFETY: the submitting thread must be parked keeping the
-    /// destination borrow alive, and `src.len() == self.len()`.
-    unsafe fn write(&self, src: &[f32]) {
-        debug_assert_eq!(src.len(), self.len());
-        for i in 0..self.runs {
-            // SAFETY: caller holds the destination borrow (contract above)
-            // and distinct runs are disjoint (stride >= run).
-            unsafe {
-                std::ptr::copy_nonoverlapping(
-                    src.as_ptr().add(i * self.run),
-                    self.ptr.add(i * self.stride),
-                    self.run,
-                );
-            }
-        }
-    }
-}
 
 /// Where a request's outputs go.
 enum RawOut {
@@ -242,7 +285,7 @@ struct Request {
     artifact: usize,
     inputs: Vec<RawValue>,
     out: RawOut,
-    reply: mpsc::SyncSender<Result<Vec<Vec<f32>>, String>>,
+    reply: mpsc::SyncSender<Result<Vec<Vec<f32>>, PoolError>>,
 }
 
 struct SharedQueue {
@@ -251,7 +294,8 @@ struct SharedQueue {
     closed: Mutex<bool>,
 }
 
-/// Thread pool of PJRT executor threads.
+/// Thread pool of executor threads, each owning one thread-confined
+/// [`BackendSession`] of the pool's selected backend.
 pub struct ExecPool {
     queue: Arc<SharedQueue>,
     handles: Vec<std::thread::JoinHandle<()>>,
@@ -261,16 +305,25 @@ pub struct ExecPool {
     /// `Vec`s). `execute_into` never moves it.
     out_allocs: Arc<AtomicUsize>,
     manifest: Arc<Manifest>,
+    backend: Arc<dyn ExecBackend>,
 }
 
 impl ExecPool {
-    /// Build a pool with `threads` executor threads; each compiles all
-    /// artifacts in `manifest` on its own CPU client.
+    /// Build a pool with `threads` executor threads on the backend
+    /// selected by `MPK_BACKEND` (native CPU unless set to `pjrt`).
     pub fn new(manifest: Manifest, threads: usize) -> Result<ExecPool, PoolError> {
-        Self::new_impl(manifest, threads).map_err(PoolError)
+        Self::with_backend(manifest, threads, BackendKind::from_env())
     }
 
-    fn new_impl(manifest: Manifest, threads: usize) -> Result<ExecPool, String> {
+    /// Build a pool on an explicit backend; each executor thread builds
+    /// its own [`BackendSession`] and the call fails if any session
+    /// cannot be constructed (e.g. PJRT selected in a stub build).
+    pub fn with_backend(
+        manifest: Manifest,
+        threads: usize,
+        kind: BackendKind,
+    ) -> Result<ExecPool, PoolError> {
+        let backend = backend::backend(kind);
         let manifest = Arc::new(manifest);
         let queue = Arc::new(SharedQueue {
             q: Mutex::new(VecDeque::new()),
@@ -279,31 +332,45 @@ impl ExecPool {
         });
         let executed = Arc::new(AtomicUsize::new(0));
         let out_allocs = Arc::new(AtomicUsize::new(0));
-        // compile-check on the main thread first for a clean error.
         let mut handles = Vec::new();
-        let (ready_tx, ready_rx) = mpsc::channel::<Result<(), String>>();
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<(), PoolError>>();
         for t in 0..threads.max(1) {
             let queue = queue.clone();
             let manifest = manifest.clone();
             let executed = executed.clone();
             let out_allocs = out_allocs.clone();
             let ready = ready_tx.clone();
+            let backend = backend.clone();
             handles.push(
                 std::thread::Builder::new()
-                    .name(format!("pjrt-exec-{t}"))
-                    .spawn(move || executor_thread(queue, manifest, executed, out_allocs, ready))
-                    .map_err(|e| e.to_string())?,
+                    .name(format!("mpk-exec-{t}"))
+                    .spawn(move || {
+                        executor_thread(queue, manifest, backend, executed, out_allocs, ready)
+                    })
+                    .map_err(|e| PoolError(e.to_string()))?,
             );
         }
         drop(ready_tx);
+        // session construction is checked before the pool is handed
+        // out, so backend unavailability is a clean construction error.
         for _ in 0..threads.max(1) {
-            ready_rx.recv().map_err(|e| e.to_string())??;
+            ready_rx.recv().map_err(|e| PoolError(e.to_string()))??;
         }
-        Ok(ExecPool { queue, handles, executed, out_allocs, manifest })
+        Ok(ExecPool { queue, handles, executed, out_allocs, manifest, backend })
     }
 
     pub fn manifest(&self) -> &Manifest {
         &self.manifest
+    }
+
+    /// Which backend this pool dispatches to.
+    pub fn backend_kind(&self) -> BackendKind {
+        self.backend.kind()
+    }
+
+    /// The backend's stable identity (tags `BENCH_*.json` records).
+    pub fn backend_name(&self) -> &'static str {
+        self.backend.name()
     }
 
     /// Output buffers allocated at the pool boundary so far. The
@@ -329,7 +396,7 @@ impl ExecPool {
         artifact: usize,
         inputs: Vec<Value<'_>>,
         out: RawOut,
-    ) -> Result<Vec<Vec<f32>>, String> {
+    ) -> Result<Vec<Vec<f32>>, PoolError> {
         let inputs: Vec<RawValue> = inputs
             .into_iter()
             .map(|v| match v {
@@ -345,7 +412,7 @@ impl ExecPool {
             q.push_back(Request { artifact, inputs, out, reply: tx });
         }
         self.queue.cv.notify_one();
-        rx.recv().map_err(|_| "executor thread died".to_string())?
+        rx.recv().map_err(|_| PoolError("executor thread died".into()))?
     }
 
     /// Execute artifact `artifact` (index into the manifest) with the
@@ -355,7 +422,11 @@ impl ExecPool {
     /// output sizes are unknown until the artifact runs, so this is the
     /// boundary that allocates (counted in [`ExecPool::output_allocs`]).
     /// See [`ExecPool::submit`] for the borrowed-input safety argument.
-    pub fn execute(&self, artifact: usize, inputs: Vec<Value<'_>>) -> Result<Vec<Vec<f32>>, String> {
+    pub fn execute(
+        &self,
+        artifact: usize,
+        inputs: Vec<Value<'_>>,
+    ) -> Result<Vec<Vec<f32>>, PoolError> {
         self.submit(artifact, inputs, RawOut::Alloc)
     }
 
@@ -374,7 +445,7 @@ impl ExecPool {
         artifact: usize,
         inputs: Vec<Value<'_>>,
         outs: &mut [OutView<'_>],
-    ) -> Result<(), String> {
+    ) -> Result<(), PoolError> {
         let raw = outs
             .iter()
             .map(|o| RawOutView { ptr: o.ptr, runs: o.runs, run: o.run, stride: o.stride })
@@ -383,8 +454,15 @@ impl ExecPool {
     }
 
     /// Execute by artifact name (convenience for tests/examples).
-    pub fn execute_by_name(&self, name: &str, inputs: Vec<Value<'_>>) -> Result<Vec<Vec<f32>>, String> {
-        let (idx, _) = self.manifest.find(name).ok_or_else(|| format!("unknown artifact {name}"))?;
+    pub fn execute_by_name(
+        &self,
+        name: &str,
+        inputs: Vec<Value<'_>>,
+    ) -> Result<Vec<Vec<f32>>, PoolError> {
+        let (idx, _) = self
+            .manifest
+            .find(name)
+            .ok_or_else(|| PoolError(format!("unknown artifact {name}")))?;
         self.execute(idx, inputs)
     }
 
@@ -394,8 +472,11 @@ impl ExecPool {
         name: &str,
         inputs: Vec<Value<'_>>,
         outs: &mut [OutView<'_>],
-    ) -> Result<(), String> {
-        let (idx, _) = self.manifest.find(name).ok_or_else(|| format!("unknown artifact {name}"))?;
+    ) -> Result<(), PoolError> {
+        let (idx, _) = self
+            .manifest
+            .find(name)
+            .ok_or_else(|| PoolError(format!("unknown artifact {name}")))?;
         self.execute_into(idx, inputs, outs)
     }
 }
@@ -413,25 +494,23 @@ impl Drop for ExecPool {
 fn executor_thread(
     queue: Arc<SharedQueue>,
     manifest: Arc<Manifest>,
+    backend: Arc<dyn ExecBackend>,
     executed: Arc<AtomicUsize>,
     out_allocs: Arc<AtomicUsize>,
-    ready: mpsc::Sender<Result<(), String>>,
+    ready: mpsc::Sender<Result<(), PoolError>>,
 ) {
-    // Own client + own compiled executables: nothing here is Send.
-    // Artifacts compile lazily on first use (compiling all ~30 up front
-    // costs tens of seconds; a typical run touches a handful).
-    let client = match xla::PjRtClient::cpu() {
-        Ok(c) => {
+    // Own session: nothing in it is Send (PJRT clients are Rc-based,
+    // the CPU backend keeps per-thread scratch).
+    let mut session = match backend.session(manifest.clone()) {
+        Ok(s) => {
             let _ = ready.send(Ok(()));
-            c
+            s
         }
         Err(e) => {
-            let _ = ready.send(Err(e.to_string()));
+            let _ = ready.send(Err(e));
             return;
         }
     };
-    let mut exes: Vec<Option<xla::PjRtLoadedExecutable>> =
-        (0..manifest.artifacts.len()).map(|_| None).collect();
 
     loop {
         let req = {
@@ -446,119 +525,90 @@ fn executor_thread(
                 q = queue.cv.wait(q).unwrap();
             }
         };
-        let result = run_one(&client, &mut exes, &manifest, &req, &out_allocs);
+        let result = run_one(session.as_mut(), &manifest, &req, &out_allocs);
         executed.fetch_add(1, Ordering::Relaxed);
         let _ = req.reply.send(result);
     }
 }
 
+/// Validate one request against the manifest, re-materialize the erased
+/// inputs/destinations, and dispatch to the backend session. Validation
+/// order is part of the boundary contract: destination *count* (known
+/// statically) is rejected before anything runs; input count, numel,
+/// and dtype before the backend sees the request; the backend validates
+/// every destination's numel and run geometry before its first write.
 fn run_one(
-    client: &xla::PjRtClient,
-    exes: &mut [Option<xla::PjRtLoadedExecutable>],
+    session: &mut dyn BackendSession,
     manifest: &Manifest,
     req: &Request,
     out_allocs: &AtomicUsize,
-) -> Result<Vec<Vec<f32>>, String> {
+) -> Result<Vec<Vec<f32>>, PoolError> {
     let spec = &manifest.artifacts[req.artifact];
     // destination *count* is known statically — reject before running
     // so a miscounted call can never write anything at all.
     if let RawOut::Into(dsts) = &req.out {
         if dsts.len() != spec.outputs {
-            return Err(format!(
+            return Err(PoolError(format!(
                 "{}: expected {} output destinations, got {}",
                 spec.name,
                 spec.outputs,
                 dsts.len()
-            ));
+            )));
         }
     }
-    if exes[req.artifact].is_none() {
-        let proto = xla::HloModuleProto::from_text_file(
-            spec.path.to_str().ok_or("non-utf8 path")?,
-        )
-        .map_err(|e| format!("{}: {e}", spec.name))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        exes[req.artifact] =
-            Some(client.compile(&comp).map_err(|e| format!("compile {}: {e}", spec.name))?);
-    }
+    session.prepare(req.artifact)?;
     if req.inputs.len() != spec.inputs.len() {
-        return Err(format!(
+        return Err(PoolError(format!(
             "{}: expected {} inputs, got {}",
             spec.name,
             spec.inputs.len(),
             req.inputs.len()
-        ));
+        )));
     }
-    let mut literals = Vec::with_capacity(req.inputs.len());
+    let mut ins: Vec<In<'_>> = Vec::with_capacity(req.inputs.len());
     for (v, s) in req.inputs.iter().zip(spec.inputs.iter()) {
         if v.len() != s.numel() {
-            return Err(format!(
+            return Err(PoolError(format!(
                 "{}: input numel mismatch {} vs {:?}",
                 spec.name,
                 v.len(),
                 s.shape
-            ));
+            )));
         }
-        let dims: Vec<i64> = s.shape.iter().map(|&d| d as i64).collect();
-        let lit = match (v, s.ty) {
-            (RawValue::F32(data), ArgType::F32) => {
-                xla::Literal::vec1(data.as_slice()).reshape(&dims).map_err(|e| e.to_string())?
-            }
-            (RawValue::I32(data), ArgType::I32) => {
-                xla::Literal::vec1(data.as_slice()).reshape(&dims).map_err(|e| e.to_string())?
-            }
+        let arg = match (v, s.ty) {
+            (RawValue::F32(data), ArgType::F32) => In::F32(data.as_slice()),
+            (RawValue::I32(data), ArgType::I32) => In::I32(data.as_slice()),
             (RawValue::BorrowedF32(p, n), ArgType::F32) => {
                 // SAFETY: the submitter is blocked in `execute` keeping
                 // the arena borrow alive until we reply (see `submit`).
-                let data = unsafe { std::slice::from_raw_parts(*p, *n) };
-                xla::Literal::vec1(data).reshape(&dims).map_err(|e| e.to_string())?
+                In::F32(unsafe { std::slice::from_raw_parts(*p, *n) })
             }
             (RawValue::BorrowedI32(p, n), ArgType::I32) => {
                 // SAFETY: as above.
-                let data = unsafe { std::slice::from_raw_parts(*p, *n) };
-                xla::Literal::vec1(data).reshape(&dims).map_err(|e| e.to_string())?
+                In::I32(unsafe { std::slice::from_raw_parts(*p, *n) })
             }
-            _ => return Err(format!("{}: dtype mismatch", spec.name)),
+            _ => return Err(PoolError(format!("{}: dtype mismatch", spec.name))),
         };
-        literals.push(lit);
+        ins.push(arg);
     }
-    let out = exes[req.artifact]
-        .as_ref()
-        .unwrap()
-        .execute::<xla::Literal>(&literals)
-        .map_err(|e| e.to_string())?;
-    let tuple = out[0][0].to_literal_sync().map_err(|e| e.to_string())?;
-    let parts = tuple.to_tuple().map_err(|e| e.to_string())?;
-    if parts.len() != spec.outputs {
-        return Err(format!("{}: expected {} outputs, got {}", spec.name, spec.outputs, parts.len()));
-    }
-    let parts: Vec<Vec<f32>> = parts
-        .into_iter()
-        .map(|p| p.to_vec::<f32>().map_err(|e| e.to_string()))
-        .collect::<Result<_, String>>()?;
     match &req.out {
         RawOut::Alloc => {
+            let parts = session.execute(req.artifact, &ins)?;
             out_allocs.fetch_add(parts.len(), Ordering::Relaxed);
             Ok(parts)
         }
         RawOut::Into(dsts) => {
-            // validate *every* destination length before writing any
-            // element: a failed call must never leave a partial write.
-            for (i, (p, d)) in parts.iter().zip(dsts.iter()).enumerate() {
-                if p.len() != d.len() {
-                    return Err(format!(
-                        "{}: output {i} numel mismatch: artifact produced {}, destination holds {}",
-                        spec.name,
-                        p.len(),
-                        d.len()
-                    ));
-                }
-            }
-            for (p, d) in parts.iter().zip(dsts.iter()) {
-                // SAFETY: submitter parked in `execute_into`, lengths
-                // validated just above (see `submit`).
-                unsafe { d.write(p) };
-            }
+            let mut views: Vec<OutView<'_>> = dsts
+                .iter()
+                .map(|d| {
+                    // SAFETY: the submitter is parked in `execute_into`
+                    // keeping its exclusive destination borrows alive
+                    // until we reply; the raw parts came from a real
+                    // OutView, so the run layout contract holds.
+                    unsafe { OutView::from_raw_strided(d.ptr, d.runs, d.run, d.stride) }
+                })
+                .collect();
+            session.execute_into(req.artifact, &ins, &mut views)?;
             Ok(Vec::new())
         }
     }
@@ -569,21 +619,14 @@ mod tests {
     use super::*;
     use crate::runtime::manifest::Manifest;
 
-    fn pool(threads: usize) -> Option<ExecPool> {
-        let m = Manifest::load(&Manifest::default_dir()).ok()?;
-        match ExecPool::new(m, threads) {
-            Ok(p) => Some(p),
-            Err(e) => {
-                // artifacts exist but no PJRT backend (stub xla build).
-                eprintln!("skipping: pool unavailable ({e})");
-                None
-            }
-        }
+    /// CPU-backend pool over the compiled-in manifest: always available
+    /// (no artifacts dir, no PJRT library).
+    fn pool(threads: usize) -> ExecPool {
+        ExecPool::with_backend(Manifest::builtin(), threads, BackendKind::Cpu).unwrap()
     }
 
-    // -- protocol-level tests: no artifacts or backend needed (these
-    //    are the ones the miri gate runs over the channel-crossing
-    //    unsafe in RawOutView). --
+    // -- protocol-level tests (these are the ones the miri gate runs
+    //    over the channel-crossing unsafe and the OutView accessors). --
 
     #[test]
     fn typed_value_accessors_error_instead_of_panicking() {
@@ -611,14 +654,14 @@ mod tests {
         // 4×6 row-major buffer; destination = rows 0..4, cols 2..5
         // (runs of 3, stride 6, starting at offset 2).
         let mut dst = vec![0.0f32; 24];
-        let raw = {
-            let v = unsafe { OutView::from_raw_strided(dst.as_mut_ptr().add(2), 4, 3, 6) };
-            assert_eq!(v.len(), 12);
-            RawOutView { ptr: v.ptr, runs: v.runs, run: v.run, stride: v.stride }
-        };
-        let src: Vec<f32> = (1..=12).map(|i| i as f32).collect();
-        // SAFETY: `dst` outlives the write and nothing else touches it.
-        unsafe { raw.write(&src) };
+        {
+            // SAFETY: `dst` outlives the view and nothing else touches
+            // the runs while it lives.
+            let mut v = unsafe { OutView::from_raw_strided(dst.as_mut_ptr().add(2), 4, 3, 6) };
+            assert_eq!((v.runs(), v.run_len(), v.len()), (4, 3, 12));
+            let src: Vec<f32> = (1..=12).map(|i| i as f32).collect();
+            v.copy_from(&src);
+        }
         for r in 0..4 {
             for c in 0..6 {
                 let want = if (2..5).contains(&c) { (r * 3 + (c - 2) + 1) as f32 } else { 0.0 };
@@ -630,26 +673,54 @@ mod tests {
     #[test]
     fn out_view_from_slice_is_one_contiguous_run() {
         let mut dst = vec![0.0f32; 8];
-        let v = OutView::from_slice(&mut dst);
-        assert_eq!((v.runs, v.run, v.len()), (1, 8, 8));
-        let raw = RawOutView { ptr: v.ptr, runs: v.runs, run: v.run, stride: v.stride };
-        // SAFETY: `dst` outlives the write and nothing else touches it.
-        unsafe { raw.write(&[1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0, 8.0]) };
+        let mut v = OutView::from_slice(&mut dst);
+        assert_eq!((v.runs(), v.run_len(), v.len()), (1, 8, 8));
+        v.copy_from(&[1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0, 8.0]);
+        drop(v);
         assert_eq!(dst, vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0, 8.0]);
     }
 
     #[test]
+    fn out_view_span_mut_addresses_rows_across_runs() {
+        // runs of 4 with stride 6: row-major spans of width 2 must land
+        // inside the right run, and a straddling span must panic (see
+        // the should_panic sibling below).
+        let mut dst = vec![0.0f32; 12];
+        {
+            // SAFETY: `dst` outlives the view; nothing else touches it.
+            let mut v = unsafe { OutView::from_raw_strided(dst.as_mut_ptr(), 2, 4, 6) };
+            v.span_mut(0, 2).copy_from_slice(&[1.0, 2.0]);
+            v.span_mut(2, 2).copy_from_slice(&[3.0, 4.0]);
+            v.span_mut(4, 4).copy_from_slice(&[5.0, 6.0, 7.0, 8.0]);
+            assert!(v.span_mut(0, 0).is_empty());
+            assert_eq!(v.run_mut(1), &[5.0, 6.0, 7.0, 8.0]);
+        }
+        assert_eq!(dst, vec![1.0, 2.0, 3.0, 4.0, 0.0, 0.0, 5.0, 6.0, 7.0, 8.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "straddles")]
+    fn out_view_span_straddling_a_run_boundary_panics() {
+        let mut dst = vec![0.0f32; 12];
+        // SAFETY: `dst` outlives the view; nothing else touches it.
+        let mut v = unsafe { OutView::from_raw_strided(dst.as_mut_ptr(), 2, 4, 6) };
+        let _ = v.span_mut(2, 4); // elements 2..6 cross the run edge at 4
+    }
+
+    #[test]
     fn out_view_crosses_threads_like_the_reply_protocol() {
-        // the erased destination is written by another thread while
-        // this one "blocks" (the scope join models the reply recv) —
-        // the exact shape of the execute_into channel crossing.
+        // the erased destination is re-materialized and written by
+        // another thread while this one "blocks" (the scope join models
+        // the reply recv) — the exact shape of the execute_into channel
+        // crossing, including the from_raw_strided round trip.
         let mut dst = vec![0.0f32; 12];
         let raw = RawOutView { ptr: dst.as_mut_ptr(), runs: 3, run: 2, stride: 4 };
         std::thread::scope(|s| {
             s.spawn(move || {
                 // SAFETY: the owning thread is parked in scope-join
                 // until this write completes (blocking reply protocol).
-                unsafe { raw.write(&[1.0, 2.0, 3.0, 4.0, 5.0, 6.0]) };
+                let mut v = unsafe { OutView::from_raw_strided(raw.ptr, raw.runs, raw.run, raw.stride) };
+                v.copy_from(&[1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
             });
         });
         assert_eq!(dst, vec![1.0, 2.0, 0.0, 0.0, 3.0, 4.0, 0.0, 0.0, 5.0, 6.0, 0.0, 0.0]);
@@ -663,20 +734,35 @@ mod tests {
         let _ = unsafe { OutView::from_raw_strided(dst.as_mut_ptr(), 2, 4, 2) };
     }
 
-    // -- artifact-gated tests (skip without `make artifacts` + a real
-    //    PJRT backend). --
+    // -- execution tests: run un-gated on the CPU backend over the
+    //    compiled-in manifest. --
+
+    #[test]
+    fn cpu_pool_reports_backend_identity() {
+        let p = pool(1);
+        assert_eq!(p.backend_kind(), BackendKind::Cpu);
+        assert_eq!(p.backend_name(), "cpu");
+    }
+
+    #[test]
+    fn pjrt_pool_is_a_clean_construction_error_in_stub_builds() {
+        match ExecPool::with_backend(Manifest::builtin(), 1, BackendKind::Pjrt) {
+            Err(e) => assert!(e.0.contains("stub"), "unexpected error: {e}"),
+            Ok(p) => {
+                // a vendored real PJRT binding makes this succeed.
+                assert_eq!(p.backend_kind(), BackendKind::Pjrt);
+            }
+        }
+    }
 
     #[test]
     fn matmul_artifact_computes() {
-        let Some(p) = pool(1) else {
-            eprintln!("skipping: artifacts not built");
-            return;
-        };
-        // x = ones(1,256), w = identity-ish: w[i,j] = 1 if i==j else 0
+        let p = pool(1);
+        // x = ones(1,256), w[i,j] = 2 if i==j else 0 for i,j < 128.
         let x = vec![1.0f32; 256];
         let mut w = vec![0.0f32; 256 * 128];
         for i in 0..128 {
-            w[i * 128 + i] = 2.0; // rows 0..128 map to cols scaled by 2
+            w[i * 128 + i] = 2.0;
         }
         let out = p
             .execute_by_name("matmul_b1_k256_n128", vec![Value::F32(x), Value::F32(w)])
@@ -690,10 +776,7 @@ mod tests {
 
     #[test]
     fn borrowed_inputs_match_owned() {
-        let Some(p) = pool(1) else {
-            eprintln!("skipping: artifacts not built");
-            return;
-        };
+        let p = pool(1);
         let a = vec![3.0f32; 256];
         let b = vec![4.0f32; 256];
         let owned = p
@@ -707,10 +790,7 @@ mod tests {
 
     #[test]
     fn execute_into_matches_execute_bitwise() {
-        let Some(p) = pool(1) else {
-            eprintln!("skipping: artifacts not built");
-            return;
-        };
+        let p = pool(1);
         let a = vec![3.5f32; 256];
         let b = vec![0.25f32; 256];
         let owned = p
@@ -732,10 +812,7 @@ mod tests {
 
     #[test]
     fn execute_into_validates_before_writing() {
-        let Some(p) = pool(1) else {
-            eprintln!("skipping: artifacts not built");
-            return;
-        };
+        let p = pool(1);
         let a = vec![1.0f32; 256];
         let b = vec![2.0f32; 256];
         // wrong destination count: rejected before execution.
@@ -748,7 +825,7 @@ mod tests {
                 &mut [OutView::from_slice(&mut d0), OutView::from_slice(&mut d1)],
             )
             .unwrap_err();
-        assert!(err.contains("output destinations"), "{err}");
+        assert!(err.0.contains("output destinations"), "{err}");
         assert!(d0.iter().chain(&d1).all(|&v| v == -7.0), "partial write on count mismatch");
         // wrong destination length: rejected before the first element.
         let mut short = vec![-7.0f32; 8];
@@ -759,16 +836,13 @@ mod tests {
                 &mut [OutView::from_slice(&mut short)],
             )
             .unwrap_err();
-        assert!(err.contains("numel mismatch"), "{err}");
+        assert!(err.0.contains("numel mismatch"), "{err}");
         assert!(short.iter().all(|&v| v == -7.0), "partial write on length mismatch");
     }
 
     #[test]
     fn concurrent_execution_from_many_threads() {
-        let Some(p) = pool(2) else {
-            eprintln!("skipping: artifacts not built");
-            return;
-        };
+        let p = pool(2);
         let p = std::sync::Arc::new(p);
         std::thread::scope(|s| {
             for t in 0..8 {
@@ -802,15 +876,16 @@ mod tests {
 
     #[test]
     fn input_validation_errors() {
-        let Some(p) = pool(1) else {
-            eprintln!("skipping: artifacts not built");
-            return;
-        };
+        let p = pool(1);
         let err = p.execute_by_name("add_b1", vec![Value::F32(vec![0.0; 3])]).unwrap_err();
-        assert!(err.contains("expected 2 inputs"), "{err}");
+        assert!(err.0.contains("expected 2 inputs"), "{err}");
         let err = p
             .execute_by_name("add_b1", vec![Value::F32(vec![0.0; 3]), Value::F32(vec![0.0; 256])])
             .unwrap_err();
-        assert!(err.contains("numel mismatch"), "{err}");
+        assert!(err.0.contains("numel mismatch"), "{err}");
+        let err = p
+            .execute_by_name("add_b1", vec![Value::I32(vec![0; 256]), Value::F32(vec![0.0; 256])])
+            .unwrap_err();
+        assert!(err.0.contains("dtype mismatch"), "{err}");
     }
 }

@@ -1,24 +1,26 @@
 //! Offline stand-in for the `xla` PJRT binding.
 //!
 //! The crate is stdlib-only by policy (the dev/CI environment is
-//! offline), but the execution pool is written against the `xla`
-//! crate's PJRT surface: `Rc`-based thread-confined clients, HLO-text
+//! offline), but the PJRT execution backend
+//! (`runtime::backend::pjrt`) is written against the `xla` crate's
+//! PJRT surface: `Rc`-based thread-confined clients, HLO-text
 //! compilation, literal marshalling. This module pins that exact
-//! surface so `runtime::pool` compiles and its protocol-level tests
-//! (value erasure, output scatter, validation ordering) run everywhere.
-//! Every entry point that would need a real backend fails at **client
-//! construction** ([`PjRtClient::cpu`]) with a descriptive error, which
-//! `ExecPool::new` surfaces before any request is queued.
+//! surface so the backend compiles everywhere. Every entry point that
+//! would need a real device fails at **client construction**
+//! ([`PjRtClient::cpu`]) with a descriptive error, which surfaces
+//! through the pool's ready channel as a
+//! `PjrtBackend::session` construction failure — before any request
+//! is queued.
 //!
 //! Swapping in the real binding is a one-line change in
-//! `runtime/pool.rs` (import the external crate instead of this
-//! module); nothing else in the crate touches these types. Tests that
-//! need real execution gate on **both** the artifacts and a working
-//! backend — they attempt pool construction and skip on error (see
-//! `have_runtime` in the `exec::real` / `serving::engine` test
-//! modules and the pool test helper) — so a stub build on a machine
-//! where `make artifacts` *has* run skips cleanly instead of
-//! panicking on the `cpu()` error.
+//! `runtime/backend/pjrt.rs` (import the external crate instead of
+//! this module); nothing else in the crate touches these types. The
+//! stub never blocks real-numerics testing: the native CPU backend
+//! (`runtime::backend::cpu`) is the default and runs the full decode
+//! vocabulary with no artifacts and no PJRT library, so only tests
+//! specifically pinning PJRT behavior touch this module — and those
+//! tolerate either the stub's construction error or a vendored
+//! binding's success.
 
 use std::fmt;
 use std::rc::Rc;

@@ -66,6 +66,7 @@ use crate::exec::real::{self, compile_real, WeightArena};
 use crate::exec::store::TensorStore;
 use crate::megakernel::{MegaConfig, PersistentMegaKernel};
 use crate::ops::TensorId;
+use crate::runtime::backend::BackendKind;
 use crate::runtime::pool::ExecPool;
 use crate::runtime::Manifest;
 use crate::serving::batcher::{Batcher, Request};
@@ -236,7 +237,7 @@ impl ServeStats {
 ///     .mega(MegaConfig { workers: 6, schedulers: 2, ..Default::default() })
 ///     .eos_token(2)
 ///     .build()
-///     .expect("needs `make artifacts` and a PJRT backend");
+///     .expect("engine build failed");
 /// # let _ = engine;
 /// ```
 #[derive(Clone, Copy, Debug)]
@@ -250,6 +251,7 @@ pub struct EngineBuilder {
     step_retries: usize,
     retry_backoff: Duration,
     faults: FaultPlan,
+    backend: BackendKind,
 }
 
 impl Default for EngineBuilder {
@@ -264,6 +266,7 @@ impl Default for EngineBuilder {
             step_retries: 2,
             retry_backoff: Duration::ZERO,
             faults: FaultPlan::default(),
+            backend: BackendKind::from_env(),
         }
     }
 }
@@ -279,9 +282,17 @@ impl EngineBuilder {
         self
     }
 
-    /// PJRT executor threads shared by every session.
+    /// Executor threads shared by every session.
     pub fn pool_threads(mut self, n: usize) -> Self {
         self.pool_threads = n;
+        self
+    }
+
+    /// Execution backend (default: `MPK_BACKEND`, falling back to the
+    /// native CPU backend — which needs no artifacts dir and no PJRT
+    /// library, so an engine builds in a bare container).
+    pub fn backend(mut self, kind: BackendKind) -> Self {
+        self.backend = kind;
         self
     }
 
@@ -376,7 +387,7 @@ impl EngineBuilder {
                 self.retry_backoff
             )));
         }
-        let manifest = Manifest::load(&Manifest::default_dir())?;
+        let manifest = Manifest::resolve(&Manifest::default_dir(), self.backend)?;
         if !manifest.batch_sizes.contains(&self.max_batch) {
             return Err(EngineError::InvalidConfig(format!(
                 "max_batch {} not among specialized sizes {:?}",
@@ -392,14 +403,14 @@ impl EngineBuilder {
             }
         }
         let m = manifest.model;
-        let pool = Arc::new(ExecPool::new(manifest.clone(), self.pool_threads)?);
+        let pool = Arc::new(ExecPool::with_backend(manifest.clone(), self.pool_threads, self.backend)?);
         let kv_arena = KvArena::new(m.layers, self.max_batch, manifest.s_max, m.kv_dim());
-        let specs: Vec<(usize, Arc<crate::tgraph::CompiledGraph>)> = manifest
-            .batch_sizes
-            .iter()
-            .filter(|&&b| b <= self.max_batch)
-            .map(|&b| (b, Arc::new(compile_real(&manifest, b))))
-            .collect();
+        let mut specs: Vec<(usize, Arc<crate::tgraph::CompiledGraph>)> = Vec::new();
+        for &b in manifest.batch_sizes.iter().filter(|&&b| b <= self.max_batch) {
+            // a manifest/model mismatch degrades into EngineError here
+            // instead of panicking the builder.
+            specs.push((b, Arc::new(compile_real(&manifest, b)?)));
+        }
         // one shared weight arena, initialized once: params are
         // batch-independent and name-seeded, so every specialization
         // aliases the same values instead of re-synthesizing them.
@@ -601,7 +612,7 @@ impl ServeEngine {
         self.batcher.take_finished()
     }
 
-    /// The engine's PJRT pool (shared by every session's executor).
+    /// The engine's exec pool (shared by every session's executor).
     pub fn pool(&self) -> &ExecPool {
         &self.pool
     }
@@ -624,7 +635,7 @@ impl ServeEngine {
         self.weights.len()
     }
 
-    /// Output buffers allocated at the PJRT pool boundary over this
+    /// Output buffers allocated at the exec-pool boundary over this
     /// engine's lifetime. The persistent-kernel task bodies hand the
     /// pool mutable arena destinations (`execute_into`), so serving
     /// keeps this at zero — the allocating `execute` reply survives
@@ -996,22 +1007,6 @@ mod tests {
     use super::*;
     use crate::exec::binder::TileExecutor;
 
-    /// True when the AOT artifacts *and* a working PJRT backend exist
-    /// (an offline build runs the stub `runtime::xla` binding, whose
-    /// client construction always fails — skip, don't panic).
-    fn have_runtime() -> bool {
-        match Manifest::load(&Manifest::default_dir()) {
-            Ok(m) => match ExecPool::new(m, 1) {
-                Ok(_) => true,
-                Err(e) => {
-                    eprintln!("skipping: PJRT backend unavailable ({e})");
-                    false
-                }
-            },
-            Err(_) => false,
-        }
-    }
-
     fn mega() -> MegaConfig {
         MegaConfig { workers: 4, schedulers: 1, ..Default::default() }
     }
@@ -1088,10 +1083,6 @@ mod tests {
 
     #[test]
     fn builder_rejects_unspecialized_batch_and_bad_eos() {
-        if !have_runtime() {
-            eprintln!("skipping: artifacts not built");
-            return;
-        }
         let err = ServeEngine::builder().max_batch(3).mega(mega()).build().unwrap_err();
         assert!(
             matches!(&err, EngineError::InvalidConfig(m) if m.contains("specialized sizes")),
@@ -1106,10 +1097,6 @@ mod tests {
 
     #[test]
     fn serves_batch_to_completion() {
-        if !have_runtime() {
-            eprintln!("skipping: artifacts not built");
-            return;
-        }
         let mut e = engine(4, 42);
         for i in 0..3u64 {
             e.submit(Request::new(i, vec![(i as i32) + 1, 7], 4)).unwrap();
@@ -1140,10 +1127,6 @@ mod tests {
 
     #[test]
     fn step_streaming_matches_serve_and_supports_midflight_submit() {
-        if !have_runtime() {
-            eprintln!("skipping: artifacts not built");
-            return;
-        }
         // streaming engine: request 1 arrives mid-flight, after request
         // 0 has already decoded a couple of steps.
         let mut a = engine(2, 42);
@@ -1185,10 +1168,6 @@ mod tests {
 
     #[test]
     fn eos_token_stops_generation_early() {
-        if !have_runtime() {
-            eprintln!("skipping: artifacts not built");
-            return;
-        }
         // discover what this prompt decodes first under this seed, then
         // build an engine that treats that token as EOS.
         let mut probe = engine(1, 42);
@@ -1218,10 +1197,6 @@ mod tests {
 
     #[test]
     fn cancel_frees_kv_and_slot_and_emits_terminal_event() {
-        if !have_runtime() {
-            eprintln!("skipping: artifacts not built");
-            return;
-        }
         let mut e = engine(2, 42);
         e.submit(Request::new(0, vec![5, 6], 6)).unwrap();
         e.submit(Request::new(1, vec![9], 6)).unwrap();
@@ -1305,10 +1280,6 @@ mod tests {
 
     #[test]
     fn fault_injection_recovers_and_quarantines() {
-        if !have_runtime() {
-            eprintln!("skipping: artifacts not built");
-            return;
-        }
         // baseline: what the survivor decodes on a healthy engine.
         let mut clean = engine(2, 42);
         clean.submit(Request::new(1, vec![9], 4)).unwrap();
@@ -1362,10 +1333,6 @@ mod tests {
 
     #[test]
     fn random_fault_rates_recover_without_losing_requests() {
-        if !have_runtime() {
-            eprintln!("skipping: artifacts not built");
-            return;
-        }
         // epoch-level faults at a healthy-retry rate: every request
         // still finishes (faults are unattributable, so nothing is
         // quarantined as long as the retry budget absorbs the streak —
@@ -1396,10 +1363,6 @@ mod tests {
 
     #[test]
     fn compaction_relocates_once_counted_and_output_identical() {
-        if !have_runtime() {
-            eprintln!("skipping: artifacts not built");
-            return;
-        }
         let build = |compaction: bool| {
             ServeEngine::builder()
                 .max_batch(8)
@@ -1438,10 +1401,6 @@ mod tests {
 
     #[test]
     fn steady_state_decode_is_zero_copy() {
-        if !have_runtime() {
-            eprintln!("skipping: artifacts not built");
-            return;
-        }
         // a uniform wave (same prompt + generation lengths) is admitted
         // together and retired together: the whole run is the steady
         // state the zero-copy invariant promises.
@@ -1460,10 +1419,6 @@ mod tests {
 
     #[test]
     fn churned_decode_is_allocation_free_after_warmup() {
-        if !have_runtime() {
-            eprintln!("skipping: artifacts not built");
-            return;
-        }
         // staggered admit/retire churn: requests with different prompt
         // and generation lengths retire one by one while later
         // submissions admit into the freed slots, forcing batch-size
@@ -1502,10 +1457,6 @@ mod tests {
 
     #[test]
     fn retirements_do_not_migrate_kv() {
-        if !have_runtime() {
-            eprintln!("skipping: artifacts not built");
-            return;
-        }
         // staggered generation lengths: requests retire one at a time
         // while the rest keep decoding. Under prefix compaction every
         // retirement remapped the survivors' slots and moved their KV
@@ -1529,10 +1480,6 @@ mod tests {
 
     #[test]
     fn weights_initialized_once_and_shared() {
-        if !have_runtime() {
-            eprintln!("skipping: artifacts not built");
-            return;
-        }
         // four specializations (1, 2, 4, 8) — still one weight init and
         // one weight allocation.
         let e = engine(8, 42);
@@ -1560,10 +1507,6 @@ mod tests {
 
     #[test]
     fn oversized_request_is_rejected_not_fatal() {
-        if !have_runtime() {
-            eprintln!("skipping: artifacts not built");
-            return;
-        }
         let mut e = engine(2, 5);
         let s_max = e.manifest.s_max;
         let err = e.submit(Request::new(0, vec![1; s_max], 1)).unwrap_err();
@@ -1577,10 +1520,6 @@ mod tests {
 
     #[test]
     fn batch_size_transitions_do_not_migrate_kv() {
-        if !have_runtime() {
-            eprintln!("skipping: artifacts not built");
-            return;
-        }
         // second wave admitted after the first fully retires: the batch
         // size transitions 2 → 0 → 1 but no surviving request ever
         // changes slot, so the shared arena moves nothing.
@@ -1596,10 +1535,6 @@ mod tests {
 
     #[test]
     fn greedy_decode_is_deterministic() {
-        if !have_runtime() {
-            eprintln!("skipping: artifacts not built");
-            return;
-        }
         let run = || {
             let mut e = engine(2, 9);
             e.submit(Request::new(0, vec![5, 6, 7], 5)).unwrap();
@@ -1610,10 +1545,6 @@ mod tests {
 
     #[test]
     fn staggered_admission_continuous_batching() {
-        if !have_runtime() {
-            eprintln!("skipping: artifacts not built");
-            return;
-        }
         // more requests than slots: later ones admitted as earlier retire.
         let mut e = engine(2, 11);
         for i in 0..5u64 {
@@ -1632,10 +1563,6 @@ mod tests {
 
     #[test]
     fn single_request_matches_single_session_decode() {
-        if !have_runtime() {
-            eprintln!("skipping: artifacts not built");
-            return;
-        }
         // engine output for one request == direct RealSession loop.
         let mut e = engine(1, 42);
         e.submit(Request::new(0, vec![7], 3)).unwrap();
@@ -1647,9 +1574,9 @@ mod tests {
         let mut ids = vec![7i32];
         let mut got = Vec::new();
         for step in 0..4 {
-            real::set_ids(&s.compiled.graph, &s.store, &ids);
+            real::set_ids(&s.compiled.graph, &s.store, &ids).unwrap();
             crate::exec::real::run_iteration(&mut kernel, &exec, step).unwrap();
-            let logits = real::get_logits(&s.compiled.graph, &s.store);
+            let logits = real::get_logits(&s.compiled.graph, &s.store).unwrap();
             let tok = real::argmax(&logits) as i32;
             got.push(tok);
             ids = vec![tok];

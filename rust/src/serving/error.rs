@@ -26,7 +26,7 @@ pub enum EngineError {
     InvalidConfig(String),
     /// Manifest loading / artifact discovery failed (`runtime` boundary).
     Manifest(String),
-    /// PJRT pool construction failed (`runtime` boundary).
+    /// Exec-pool / backend construction failed (`runtime` boundary).
     Pool(String),
     /// A mega-kernel epoch failed — timeout or executor panic
     /// (`megakernel` boundary).
@@ -124,7 +124,7 @@ impl std::error::Error for EngineError {}
 
 impl From<ManifestError> for EngineError {
     fn from(e: ManifestError) -> Self {
-        EngineError::Manifest(e.0)
+        EngineError::Manifest(e.to_string())
     }
 }
 
@@ -168,8 +168,12 @@ mod tests {
     #[test]
     fn boundary_shims_tag_their_layer() {
         assert_eq!(
-            EngineError::from(ManifestError("missing".into())),
+            EngineError::from(ManifestError::Load { detail: "missing".into() }),
             EngineError::Manifest("missing".into())
+        );
+        let mm = ManifestError::ModelMismatch { manifest: "A".into(), builtin: "B".into() };
+        assert!(
+            matches!(&EngineError::from(mm), EngineError::Manifest(m) if m.contains("does not match")),
         );
         assert_eq!(EngineError::from(PoolError("no backend".into())), EngineError::Pool("no backend".into()));
         assert_eq!(EngineError::from(KernelError("timed out".into())), EngineError::Kernel("timed out".into()));

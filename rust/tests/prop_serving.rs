@@ -5,8 +5,8 @@
 //! admission and **cancellation** without losing or duplicating a
 //! token, and complete every request with exactly the asked-for token
 //! count. (Mostly scheduler-level — no artifacts needed; the
-//! real-numerics step/submit/cancel/EOS churn runs when artifacts and a
-//! PJRT backend exist, and `examples/serve_e2e` drives it too.)
+//! real-numerics step/submit/cancel/EOS churn runs on the native CPU
+//! backend everywhere, and `examples/serve_e2e` drives it too.)
 
 use mpk::proputil::forall;
 use mpk::serving::{Batcher, EngineError, FinishReason, KvAllocator, Request};
@@ -352,28 +352,14 @@ fn prop_churn_submit_cancel_conserves_slots_tokens_blocks() {
 /// with mid-flight submission, cancellation, and EOS stops, holding
 /// `allocs == bytes_copied == output_allocs == kv_rows_migrated == 0`
 /// throughout (compaction off), with no token lost or duplicated —
-/// every request's event stream equals its recorded output. Skips
-/// without artifacts + a PJRT backend (the scheduler-level churn above
-/// covers the bookkeeping everywhere).
+/// every request's event stream equals its recorded output. Runs on
+/// the native CPU backend — no artifacts dir, no PJRT library.
 #[test]
 fn engine_step_churn_100_steps_is_zero_copy_with_cancel_and_eos() {
     use mpk::megakernel::MegaConfig;
-    use mpk::runtime::{ExecPool, Manifest};
     use mpk::serving::{ServeEngine, TokenEvent};
     use std::collections::HashSet;
 
-    match Manifest::load(&Manifest::default_dir()) {
-        Err(_) => {
-            eprintln!("skipping: artifacts not built");
-            return;
-        }
-        Ok(m) => {
-            if let Err(e) = ExecPool::new(m, 1) {
-                eprintln!("skipping: PJRT backend unavailable ({e})");
-                return;
-            }
-        }
-    }
     let mega = MegaConfig { workers: 4, schedulers: 1, ..Default::default() };
 
     // discover an EOS token: requests are row-independent, so whatever

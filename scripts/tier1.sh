@@ -7,14 +7,17 @@
 # a warning when miri is absent); then (best-effort) the perf-trajectory
 # benches so BENCH_launch_overhead.json, BENCH_store_hotpath.json,
 # BENCH_weight_arena.json, BENCH_exec_into.json,
-# BENCH_step_overhead.json, BENCH_saturation.json, BENCH_transport.json,
-# and BENCH_verify.json track the hot paths across PRs
-# (spawn-per-iteration vs persistent runtime; locked-clone vs
-# borrowed-view tile reads; per-session vs shared-arena weight init;
-# alloc-per-call vs write-into pool outputs; step() bookkeeping vs the
-# kernel iteration inside it; admission latency and shed rate with the
-# serving front-end offered 2x capacity; loopback TCP round-trip
-# latency and streaming frames/s through the wire transport).
+# BENCH_step_overhead.json, BENCH_cpu_backend.json,
+# BENCH_saturation.json, BENCH_transport.json, and BENCH_verify.json
+# track the hot paths across PRs (spawn-per-iteration vs persistent
+# runtime; locked-clone vs borrowed-view tile reads; per-session vs
+# shared-arena weight init; alloc-per-call vs write-into pool outputs;
+# step() bookkeeping vs the kernel iteration inside it; the native CPU
+# backend's per-op kernels and fused decode step; admission latency and
+# shed rate with the serving front-end offered 2x capacity; loopback
+# TCP round-trip latency and streaming frames/s through the wire
+# transport). The exec_into/step/cpu_backend records carry the backend
+# identity they were measured on.
 #
 # Usage: scripts/tier1.sh [--no-bench]
 set -euo pipefail
@@ -83,6 +86,16 @@ cargo build --release
 echo "== tier1: cargo test -q =="
 cargo test -q
 
+# Real numerics with no artifacts dir and no PJRT library: the native
+# CPU backend must decode the tiny model end to end from the compiled-in
+# manifest alone. MPK_ARTIFACTS points at a directory that cannot
+# exist, so this step proves the artifact-free path (a regression that
+# silently starts requiring artifacts fails here, not on a user's
+# machine).
+echo "== tier1: real-numerics serve on the native CPU backend (no artifacts) =="
+MPK_ARTIFACTS="$ROOT/nonexistent-artifacts-$$" \
+    cargo run --release --quiet -- serve --requests 4 --batch 2 --backend cpu
+
 # Static race/deadlock verification over every built-in model config
 # under every DepGranularity (exercises the tgraph/verify.rs analyses
 # end-to-end and seeds a small mutation sweep per graph to prove the
@@ -103,8 +116,9 @@ cargo doc --no-deps --quiet
 
 # The unsafe surface is the tensor arena (rust/src/exec/store.rs) plus
 # the pool's lifetime-erased channel crossing (RawValue/RawOutView in
-# rust/src/runtime/pool.rs — the OutView scatter tests exercise the
-# erase → cross-thread write → reply shape without a PJRT backend);
+# rust/src/runtime/pool.rs — the OutView accessor and cross-thread
+# scatter tests exercise the erase → cross-thread write → reply shape;
+# backends themselves are unsafe-free and dispatch through it);
 # when miri is installed, run both under the interpreter to check the
 # aliasing contracts (UB detection). Like the missing-cargo path above,
 # absence is a loud skip, not a silent green.
@@ -126,11 +140,12 @@ if [[ "${1:-}" != "--no-bench" ]]; then
     # `if` (not `&&`) so a missing bench file cannot trip errexit.
     if [[ -f "$ROOT/BENCH_launch_overhead.json" ]]; then cat "$ROOT/BENCH_launch_overhead.json"; fi
 
-    echo "== tier1: hotpath_micro bench (store hot path + weight arena + pool output boundary + step API + serving saturation + wire transport + verifier cost) =="
+    echo "== tier1: hotpath_micro bench (store hot path + weight arena + pool output boundary + step API + cpu backend + serving saturation + wire transport + verifier cost) =="
     MPK_BENCH_STORE_JSON="$ROOT/BENCH_store_hotpath.json" \
     MPK_BENCH_WEIGHT_JSON="$ROOT/BENCH_weight_arena.json" \
     MPK_BENCH_EXEC_INTO_JSON="$ROOT/BENCH_exec_into.json" \
     MPK_BENCH_STEP_JSON="$ROOT/BENCH_step_overhead.json" \
+    MPK_BENCH_CPU_JSON="$ROOT/BENCH_cpu_backend.json" \
     MPK_BENCH_SATURATION_JSON="$ROOT/BENCH_saturation.json" \
     MPK_BENCH_TRANSPORT_JSON="$ROOT/BENCH_transport.json" \
     MPK_BENCH_VERIFY_JSON="$ROOT/BENCH_verify.json" \
@@ -140,6 +155,7 @@ if [[ "${1:-}" != "--no-bench" ]]; then
     if [[ -f "$ROOT/BENCH_weight_arena.json" ]]; then cat "$ROOT/BENCH_weight_arena.json"; fi
     if [[ -f "$ROOT/BENCH_exec_into.json" ]]; then cat "$ROOT/BENCH_exec_into.json"; fi
     if [[ -f "$ROOT/BENCH_step_overhead.json" ]]; then cat "$ROOT/BENCH_step_overhead.json"; fi
+    if [[ -f "$ROOT/BENCH_cpu_backend.json" ]]; then cat "$ROOT/BENCH_cpu_backend.json"; fi
     if [[ -f "$ROOT/BENCH_saturation.json" ]]; then cat "$ROOT/BENCH_saturation.json"; fi
     if [[ -f "$ROOT/BENCH_transport.json" ]]; then cat "$ROOT/BENCH_transport.json"; fi
     if [[ -f "$ROOT/BENCH_verify.json" ]]; then cat "$ROOT/BENCH_verify.json"; fi

@@ -605,6 +605,108 @@ fn bench_transport(t: &mut Table) -> (u64, u64, u64) {
     (round_trip_ns, stream_frames, frames_per_s)
 }
 
+/// The paged-KV hot paths (two levels). Pool level: what admission
+/// costs cold (every block freshly allocated and hashed) vs through the
+/// prefix index (every whole prompt block already resident — refcount
+/// bumps and table writes only). Engine level: what block-table
+/// indirection adds to a steady decode step — the same wave through
+/// the same CPU-backend engine, paged vs slot-contiguous, with the
+/// token streams asserted identical so the comparison is honest.
+/// Returns `(cold_admit_ns, prefix_admit_ns, paged_step_ns,
+/// legacy_step_ns, shared_blocks_per_hit)`.
+fn bench_paged_kv(t: &mut Table) -> (u64, u64, u64, u64, u64) {
+    use mpk::serving::{KvArena, PagedKvPool};
+
+    // pool level: 2 layers x 32 slots x 64 rows of 32 elements,
+    // 8-token blocks -> 256 blocks; a 32-token prompt spans 4.
+    let arena = KvArena::new(2, 32, 64, 32);
+    let prompt: Vec<i32> = (0..32).map(|i| (i % 50) + 1).collect();
+
+    let mut pool = PagedKvPool::over(&arena, 8);
+    let mut id = 0u64;
+    let cold_ns = bench_median_ns(200, 2000, || {
+        id += 1;
+        let adm = pool.admit(id, &prompt).expect("pool has room");
+        assert_eq!(adm.shared_blocks, 0, "cold admission found a prefix");
+        pool.release(id);
+    });
+
+    // publish the prompt's blocks once, then every admission maps them.
+    let mut pool = PagedKvPool::over(&arena, 8);
+    pool.admit(1, &prompt).expect("pool has room");
+    pool.promote(1, &prompt, prompt.len());
+    let mut id = 1u64;
+    let mut shared_per_hit = 0u64;
+    let hit_ns = bench_median_ns(200, 2000, || {
+        id += 1;
+        let adm = pool.admit(id, &prompt).expect("pool has room");
+        assert!(adm.shared_blocks > 0, "prefix index missed a published prompt");
+        shared_per_hit = adm.shared_blocks as u64;
+        pool.release(id);
+    });
+    pool.check_invariants().expect("pool invariants after admission churn");
+
+    // engine level: identical wave, paged vs contiguous, CPU backend.
+    let run = |paged: bool| -> (u64, Vec<(u64, Option<i32>)>) {
+        let mut e = ServeEngine::builder()
+            .max_batch(4)
+            .pool_threads(2)
+            .seed(42)
+            .mega(mpk::megakernel::MegaConfig { workers: 4, schedulers: 1, ..Default::default() })
+            .backend(BackendKind::Cpu)
+            .paged_kv(paged)
+            .build()
+            .expect("cpu engine (no artifacts needed)");
+        // warm-up wave (lazy compiles, scratch growth).
+        for i in 0..4u64 {
+            e.submit(Request::new(i, vec![(i as i32) + 1, 3], 4)).unwrap();
+        }
+        while e.has_work() {
+            e.step().unwrap();
+        }
+        let _ = e.take_stats();
+        // measured wave: steady batch-4 decode.
+        for i in 10..14u64 {
+            e.submit(Request::new(i, vec![(i as i32) + 1, 5], 8)).unwrap();
+        }
+        let mut per_step = Vec::new();
+        let mut events = Vec::new();
+        while e.has_work() {
+            let t0 = std::time::Instant::now();
+            let out = e.step().unwrap();
+            per_step.push(t0.elapsed().as_nanos() as u64);
+            events.extend(out.events.into_iter().map(|ev| (ev.request, ev.token)));
+        }
+        per_step.sort_unstable();
+        (per_step[per_step.len() / 2], events)
+    };
+    let (legacy_step_ns, legacy_events) = run(false);
+    let (paged_step_ns, paged_events) = run(true);
+    assert_eq!(paged_events, legacy_events, "paged decode diverged from contiguous decode");
+
+    t.row(vec![
+        "paged_kv: cold admission".into(),
+        format!("{cold_ns} ns"),
+        "4 fresh blocks allocated + hashed per admit".into(),
+    ]);
+    t.row(vec![
+        "paged_kv: prefix-hit admission".into(),
+        format!("{hit_ns} ns"),
+        format!("{shared_per_hit} blocks mapped from the prefix index"),
+    ]);
+    t.row(vec![
+        "paged_kv: decode step (contiguous)".into(),
+        format!("{legacy_step_ns} ns"),
+        "slot-contiguous KV, CPU backend".into(),
+    ]);
+    t.row(vec![
+        "paged_kv: decode step (paged)".into(),
+        format!("{paged_step_ns} ns"),
+        "block-table indirection, token streams asserted equal".into(),
+    ]);
+    (cold_ns, hit_ns, paged_step_ns, legacy_step_ns, shared_per_hit)
+}
+
 fn main() {
     println!("== hot-path microbenchmarks (median ns unless noted) ==\n");
     let mut t = Table::new(&["benchmark", "median", "note"]);
@@ -616,6 +718,8 @@ fn main() {
     let (cpu_rows, cpu_e2e_ns) = bench_cpu_backend(&mut t);
     let (sat_p50, sat_max, sat_accepted, sat_shed, sat_rejected) = bench_saturation(&mut t);
     let (wire_rt_ns, wire_frames, wire_fps) = bench_transport(&mut t);
+    let (paged_cold_ns, paged_hit_ns, paged_step_ns, paged_legacy_ns, paged_shared) =
+        bench_paged_kv(&mut t);
 
     // queue push+pop round trip
     let q: MpmcQueue<usize> = MpmcQueue::new(1024);
@@ -835,6 +939,26 @@ fn main() {
     match std::fs::write(&wire_json_path, wire_json) {
         Ok(()) => println!("wrote {wire_json_path}"),
         Err(e) => eprintln!("could not write {wire_json_path}: {e}"),
+    }
+
+    // paged-KV record: admission cost cold vs through the prefix index,
+    // and the decode-step price of block-table indirection vs the
+    // slot-contiguous layout (token streams asserted identical).
+    let paged_json_path = std::env::var("MPK_BENCH_PAGED_JSON")
+        .unwrap_or_else(|_| "BENCH_paged_kv.json".to_string());
+    let paged_json = format!(
+        "{{\n  \"bench\": \"paged_kv\",\n  \"backend\": \"cpu\",\n  \
+         \"cold_admit_ns\": {paged_cold_ns},\n  \"prefix_admit_ns\": {paged_hit_ns},\n  \
+         \"shared_blocks_per_hit\": {paged_shared},\n  \
+         \"decode_step_contiguous_ns\": {paged_legacy_ns},\n  \
+         \"decode_step_paged_ns\": {paged_step_ns},\n  \
+         \"prefix_admit_speedup\": {:.4},\n  \"indirection_overhead\": {:.4}\n}}\n",
+        paged_cold_ns as f64 / paged_hit_ns.max(1) as f64,
+        paged_step_ns as f64 / paged_legacy_ns.max(1) as f64
+    );
+    match std::fs::write(&paged_json_path, paged_json) {
+        Ok(()) => println!("wrote {paged_json_path}"),
+        Err(e) => eprintln!("could not write {paged_json_path}: {e}"),
     }
 
     // verifier-cost record: static race/deadlock verification wall time

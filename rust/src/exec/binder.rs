@@ -23,6 +23,17 @@
 //! `TensorStore::view_region_mut` (pure cache bookkeeping, zero flops
 //! — the §6.1 in-kernel KV metadata update).
 //!
+//! With **paged KV** on ([`ExecCore::set_paged_geometry`] +
+//! per-epoch [`ExecCore::set_block_tables`]), attention and `KvAppend`
+//! stop assuming slot-contiguous cache rows: each position resolves
+//! through the staged block table to a borrowed span of the shared KV
+//! slab (`SharedSlab::view_span` — pointer arithmetic, no gather, no
+//! per-step allocation), attention runs the CPU backend's
+//! position-closure online-softmax kernel natively (the fixed-arity
+//! `attn_q1` artifact cannot take a scattered cache), and appends
+//! write the slab offset the table names. The zero-copy counters never
+//! see any of it.
+//!
 //! Two executor front-ends share the binding logic via [`ExecCore`]:
 //!
 //! * [`TileExecutor`] borrows graph/store/pool — the one-shot
@@ -31,9 +42,10 @@
 //!   engine hoists one into each long-lived `Session` so the decode hot
 //!   path constructs nothing per iteration.
 
-use crate::exec::store::TensorStore;
+use crate::exec::store::{SharedSlab, TensorStore};
 use crate::megakernel::runtime::TaskExecutor;
-use crate::ops::{CompGraph, OpKind, Region};
+use crate::ops::{CompGraph, OpKind, Region, TensorId};
+use crate::runtime::backend::cpu::{attention_row_paged, AttnShape};
 use crate::runtime::pool::{ExecPool, Value};
 use crate::tgraph::{CompiledGraph, TaskDesc, TaskKind};
 use std::cell::RefCell;
@@ -59,6 +71,10 @@ struct Scratch {
     tile: Vec<f32>,
     /// i32 staging (embedding ids, attention valid-length).
     ints: Vec<i32>,
+    /// Paged-attention per-head accumulator (the online-softmax value
+    /// accumulator the contiguous artifact keeps inside the backend
+    /// session).
+    acc: Vec<f32>,
 }
 
 thread_local! {
@@ -93,6 +109,50 @@ fn resolve_artifacts(graph: &CompGraph, pool: &ExecPool, batch: usize) -> Vec<Op
         .collect()
 }
 
+/// Session-constant paged-KV geometry: how a cache tensor id resolves
+/// to a base element offset in the shared KV slab. Set once per session
+/// by the serving engine when paging is on; the per-epoch variable part
+/// (the block tables) is staged separately via
+/// [`ExecCore::set_block_tables`].
+///
+/// Physical blocks are addressed through the **slab**, not the
+/// session's cache tensor regions: a batch-`b` session's `l{l}.kcache`
+/// tensor covers only the first `b` slots of the layer segment, but a
+/// block table may legitimately map any block in the whole max-batch
+/// segment — slab-offset arithmetic is the only addressing that is
+/// valid for every specialization.
+pub struct PagedKvMap {
+    pub slab: SharedSlab,
+    pub block_tokens: usize,
+    pub kv_dim: usize,
+    /// `(cache tensor id, slab element base offset)` for every layer's
+    /// kcache and vcache tensor — 2·layers entries, scanned linearly
+    /// (tensor ids are tiny integers; no hashing on the hot path).
+    pub bases: Vec<(TensorId, usize)>,
+}
+
+impl PagedKvMap {
+    fn base_for(&self, t: TensorId) -> Result<usize, String> {
+        self.bases
+            .iter()
+            .find(|&&(id, _)| id == t)
+            .map(|&(_, b)| b)
+            .ok_or_else(|| format!("tensor {t} is not a mapped paged cache tensor"))
+    }
+}
+
+/// Per-epoch block tables, staged while the kernel is quiesced and
+/// read by attention/KvAppend task bodies. Buffers are reused across
+/// epochs (clear + extend), so staging allocates nothing at steady
+/// state.
+#[derive(Default)]
+struct PagedTables {
+    /// Per batch row: `(start, len)` into `flat`. `len == 0` marks a
+    /// vacant row (attention writes zeros, KvAppend skips it).
+    spans: Vec<(usize, usize)>,
+    flat: Vec<usize>,
+}
+
 /// Executor state + binding logic shared by both front-ends.
 pub struct ExecCore {
     batch: usize,
@@ -112,6 +172,11 @@ pub struct ExecCore {
     /// First execution error, if any (the runtime has no error channel;
     /// callers check this after the epoch).
     error: Mutex<Option<String>>,
+    /// Paged-KV geometry (None = legacy slot-contiguous path). Set
+    /// once per session, before the first epoch.
+    paged: Mutex<Option<PagedKvMap>>,
+    /// Per-epoch staged block tables (meaningful only with `paged`).
+    tables: Mutex<PagedTables>,
 }
 
 impl ExecCore {
@@ -126,6 +191,8 @@ impl ExecCore {
                 .collect(),
             row_lens: Mutex::new(vec![0; batch]),
             error: Mutex::new(None),
+            paged: Mutex::new(None),
+            tables: Mutex::new(PagedTables::default()),
         }
     }
 
@@ -158,6 +225,33 @@ impl ExecCore {
 
     fn row_len(&self, r: usize) -> usize {
         self.row_lens.lock().unwrap()[r]
+    }
+
+    /// Enable the paged-KV path for this session (set once, before the
+    /// first epoch). Attention and KvAppend then resolve cache rows
+    /// through the staged block tables instead of slot-contiguous
+    /// regions.
+    pub fn set_paged_geometry(&self, map: PagedKvMap) {
+        *self.paged.lock().unwrap() = Some(map);
+    }
+
+    /// Whether this session runs the paged-KV path.
+    pub fn paged_enabled(&self) -> bool {
+        self.paged.lock().unwrap().is_some()
+    }
+
+    /// Stage this epoch's block tables: `spans[r]` is the `(start,
+    /// len)` slice of `flat` holding batch row `r`'s table (`len == 0`
+    /// marks a vacant row). Runs while the kernel is quiesced; buffers
+    /// are reused, so a steady-state epoch stages with zero
+    /// allocations.
+    pub fn set_block_tables(&self, spans: &[(usize, usize)], flat: &[usize]) {
+        debug_assert_eq!(spans.len(), self.batch, "one span per batch row");
+        let mut g = self.tables.lock().unwrap();
+        g.spans.clear();
+        g.spans.extend_from_slice(spans);
+        g.flat.clear();
+        g.flat.extend_from_slice(flat);
     }
 
     /// First task error of the epoch, if any (cleared on read).
@@ -270,56 +364,150 @@ impl ExecCore {
                 let r = r0;
                 let q_dim = m.q_dim();
                 let kv_dim = m.kv_dim();
-                let s_max = pool.manifest().s_max;
-                // inputs: [qkv, kcache, vcache, kv_new]
                 let q_r = Region::new(vec![(r, r + 1), (0, q_dim)]);
-                let c_r = Region::new(vec![(r, r + 1), (0, s_max), (0, kv_dim)]);
-                let q = store.view_region(op.inputs[0], &q_r);
-                let kc = store.view_region(op.inputs[1], &c_r);
-                let vc = store.view_region(op.inputs[2], &c_r);
-                let valid = self.row_len(r) + 1;
-                let art = self.artifact(graph, op_id)?;
-                let mut out = store.tile_mut(op.output, &q_r);
-                let dst = out.out_view().expect("per-row attention output is contiguous");
-                SCRATCH.with(|s| {
-                    let mut s = s.borrow_mut();
-                    s.ints.clear();
-                    s.ints.push(valid as i32);
-                    pool.execute_into(
-                        art,
-                        vec![
-                            Value::Borrowed(q),
-                            Value::Borrowed(kc),
-                            Value::Borrowed(vc),
-                            Value::BorrowedI32(&s.ints),
-                        ],
-                        &mut [dst],
-                    )
-                })?;
+                let paged = self.paged.lock().unwrap();
+                if let Some(map) = paged.as_ref() {
+                    // paged path: the fixed-arity attention artifact
+                    // wants one contiguous [s_max, kv_dim] cache slice,
+                    // which a block table cannot provide without a
+                    // gather (a per-step copy the zero-copy contract
+                    // forbids) — so run the same online-softmax kernel
+                    // natively, resolving each position to a borrowed
+                    // slab span through the staged table. Shared blocks
+                    // are read-only here (COW already re-pointed any
+                    // row this epoch appends), so these reads race with
+                    // nothing.
+                    let q = store.view_region(op.inputs[0], &q_r);
+                    let kbase = map.base_for(op.inputs[1])?;
+                    let vbase = map.base_for(op.inputs[2])?;
+                    let tables = self.tables.lock().unwrap();
+                    let (start, len) = tables.spans.get(r).copied().unwrap_or((0, 0));
+                    let table = &tables.flat[start..start + len];
+                    let bt = map.block_tokens;
+                    debug_assert_eq!(kv_dim, map.kv_dim);
+                    // vacant rows (no table) compute nothing and write
+                    // zeros; live rows never see more positions than
+                    // their table covers.
+                    let valid =
+                        if len == 0 { 0 } else { (self.row_len(r) + 1).min(len * bt) };
+                    let shape =
+                        AttnShape { heads: m.heads, kv_heads: m.kv_heads, head_dim: m.head_dim };
+                    let mut out = store.tile_mut(op.output, &q_r);
+                    let dst = out.as_slice_mut().expect("per-row attention output is contiguous");
+                    SCRATCH.with(|s| {
+                        let mut s = s.borrow_mut();
+                        let row = |base: usize, pos: usize| {
+                            map.slab
+                                .view_span(base + (table[pos / bt] * bt + pos % bt) * kv_dim, kv_dim)
+                        };
+                        attention_row_paged(
+                            &shape,
+                            q,
+                            |p| row(kbase, p),
+                            |p| row(vbase, p),
+                            valid,
+                            &mut s.acc,
+                            dst,
+                        );
+                    });
+                } else {
+                    drop(paged);
+                    let s_max = pool.manifest().s_max;
+                    // inputs: [qkv, kcache, vcache, kv_new]
+                    let c_r = Region::new(vec![(r, r + 1), (0, s_max), (0, kv_dim)]);
+                    let q = store.view_region(op.inputs[0], &q_r);
+                    let kc = store.view_region(op.inputs[1], &c_r);
+                    let vc = store.view_region(op.inputs[2], &c_r);
+                    let valid = self.row_len(r) + 1;
+                    let art = self.artifact(graph, op_id)?;
+                    let mut out = store.tile_mut(op.output, &q_r);
+                    let dst = out.out_view().expect("per-row attention output is contiguous");
+                    SCRATCH.with(|s| {
+                        let mut s = s.borrow_mut();
+                        s.ints.clear();
+                        s.ints.push(valid as i32);
+                        pool.execute_into(
+                            art,
+                            vec![
+                                Value::Borrowed(q),
+                                Value::Borrowed(kc),
+                                Value::Borrowed(vc),
+                                Value::BorrowedI32(&s.ints),
+                            ],
+                            &mut [dst],
+                        )
+                    })?;
+                }
             }
             OpKind::KvAppend => {
                 // native: copy this step's K/V rows from the fused qkv
                 // output into the caches at position cur_len — a direct
-                // arena-to-arena copy through mutable row views whose
-                // debug write registration spans each copy, no staging
-                // buffer.
+                // arena-to-arena copy, no staging buffer.
                 let q_dim = m.q_dim();
                 let kv_dim = m.kv_dim();
                 let qkv = op.inputs[0];
-                for r in 0..self.batch {
-                    let pos = self.row_len(r);
-                    let row_r = Region::new(vec![(r, r + 1), (pos, pos + 1), (0, kv_dim)]);
-                    let krow = store
-                        .view_region(qkv, &Region::new(vec![(r, r + 1), (q_dim, q_dim + kv_dim)]));
-                    let mut kdst = store.tile_mut(op.inputs[2], &row_r);
-                    kdst.as_slice_mut().expect("cache row is contiguous").copy_from_slice(krow);
-                    drop(kdst);
-                    let vrow = store.view_region(
-                        qkv,
-                        &Region::new(vec![(r, r + 1), (q_dim + kv_dim, q_dim + 2 * kv_dim)]),
-                    );
-                    let mut vdst = store.tile_mut(op.inputs[3], &row_r);
-                    vdst.as_slice_mut().expect("cache row is contiguous").copy_from_slice(vrow);
+                let paged = self.paged.lock().unwrap();
+                if let Some(map) = paged.as_ref() {
+                    // paged path: the target row lives wherever the
+                    // block table says — possibly beyond this
+                    // specialization's cache-tensor bounds (the tensor
+                    // covers only the first `batch` slots of the layer
+                    // segment), so address the slab directly. The
+                    // engine's pre-epoch `ensure_append` guarantees
+                    // every written block has exactly one referencing
+                    // table (COW happened already), and this single
+                    // KvAppend task is the only writer the event graph
+                    // admits before the per-row attention reads — the
+                    // same happens-before edge the contiguous path
+                    // relies on, resolved through the same table.
+                    let kbase = map.base_for(op.inputs[2])?;
+                    let vbase = map.base_for(op.inputs[3])?;
+                    let tables = self.tables.lock().unwrap();
+                    let bt = map.block_tokens;
+                    for r in 0..self.batch {
+                        let (start, len) = tables.spans.get(r).copied().unwrap_or((0, 0));
+                        if len == 0 {
+                            continue; // vacant row: nothing to append
+                        }
+                        let table = &tables.flat[start..start + len];
+                        let pos = self.row_len(r);
+                        let b = pos / bt;
+                        if b >= len {
+                            return Err(format!(
+                                "kv append at position {pos} beyond row {r}'s block table \
+                                 ({len} blocks of {bt} tokens) — ensure_append missed a row"
+                            ));
+                        }
+                        let off = (table[b] * bt + pos % bt) * kv_dim;
+                        let krow = store.view_region(
+                            qkv,
+                            &Region::new(vec![(r, r + 1), (q_dim, q_dim + kv_dim)]),
+                        );
+                        map.slab.write(kbase + off, krow);
+                        let vrow = store.view_region(
+                            qkv,
+                            &Region::new(vec![(r, r + 1), (q_dim + kv_dim, q_dim + 2 * kv_dim)]),
+                        );
+                        map.slab.write(vbase + off, vrow);
+                    }
+                } else {
+                    for r in 0..self.batch {
+                        let pos = self.row_len(r);
+                        let row_r = Region::new(vec![(r, r + 1), (pos, pos + 1), (0, kv_dim)]);
+                        let krow = store.view_region(
+                            qkv,
+                            &Region::new(vec![(r, r + 1), (q_dim, q_dim + kv_dim)]),
+                        );
+                        let mut kdst = store.tile_mut(op.inputs[2], &row_r);
+                        kdst.as_slice_mut().expect("cache row is contiguous").copy_from_slice(krow);
+                        drop(kdst);
+                        let vrow = store.view_region(
+                            qkv,
+                            &Region::new(vec![(r, r + 1), (q_dim + kv_dim, q_dim + 2 * kv_dim)]),
+                        );
+                        let mut vdst = store.tile_mut(op.inputs[3], &row_r);
+                        vdst.as_slice_mut().expect("cache row is contiguous").copy_from_slice(vrow);
+                    }
                 }
             }
             OpKind::Add => {

@@ -51,6 +51,22 @@
 //!   flight together, and slot ownership never changes while a request
 //!   lives).
 //!
+//! * **Block aliasing (the paged KV pool).** With paging on
+//!   (`serving/paged.rs`), several requests' block tables may map the
+//!   *same* physical block of the KV slab — a shared prompt prefix.
+//!   The rule is: **a shared block (refcount > 1) is read-only until
+//!   copy-on-write.** Appends are re-pointed at a private copy by the
+//!   engine's pre-epoch `ensure_append` pass, which runs while the
+//!   kernel is quiesced, so by the time any task is in flight every
+//!   row a `KvAppend` will write lives in a block with exactly one
+//!   referencing table and concurrent readers of the shared original
+//!   race with nothing. Reads of shared blocks need no ordering beyond
+//!   the usual writer-before-reader event edges because no in-flight
+//!   task ever writes them ([`SharedSlab::view_span`] is the read
+//!   primitive; the COW copy itself is a quiesced-host
+//!   [`SharedSlab::copy_within`], honestly counted by the engine as
+//!   `kv_blocks_cowed`, never by the store's counters).
+//!
 //! * **Mutable views (pool output destinations).** A task that owns an
 //!   output region may borrow it mutably ([`TensorStore::view_region_mut`],
 //!   [`TensorStore::tile_mut`] / [`TileViewMut`]) and hand it to the
@@ -229,6 +245,24 @@ impl SharedSlab {
         // SAFETY: in bounds; staging writes run only while no kernel
         // task is in flight (module doc).
         unsafe { std::ptr::copy(data.as_ptr(), self.buf.ptr.add(off), data.len()) }
+    }
+
+    /// Borrow a contiguous element span without copying — the paged-KV
+    /// read primitive: the binder resolves a block table entry to a
+    /// `(offset, len)` span per physical block and hands attention a
+    /// strided run of these views instead of one slot-contiguous slice,
+    /// so block-table indirection is pointer arithmetic, not a per-step
+    /// allocation (the zero-copy counters never see it).
+    pub fn view_span(&self, off: usize, len: usize) -> &[f32] {
+        assert!(off + len <= self.buf.len, "SharedSlab::view_span out of bounds");
+        // SAFETY: in bounds (asserted). Soundness of the borrow is the
+        // aliasing contract's: a span is only viewed while the event
+        // graph guarantees no in-flight task writes an overlapping
+        // region — same writer-before-reader argument as
+        // `TensorStore::view_region`, plus the block-aliasing rule
+        // (shared blocks are read-only until COW re-points the writer
+        // at a private copy before the kernel runs).
+        unsafe { std::slice::from_raw_parts(self.buf.ptr.add(off), len) }
     }
 }
 

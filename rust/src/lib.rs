@@ -34,13 +34,22 @@
 //!   with typed shedding, deadlines as scheduled terminations, and
 //!   fault-tolerant steps (retry, then quarantine the attributed
 //!   request) underneath. The embeddable `serving::ServeEngine`
-//!   (continuous batching + paged KV + stable slots, typed
-//!   `serving::EngineError` throughout) remains for callers that want
-//!   to own the loop. `serving::ServeTransport` puts the server behind
-//!   a TCP socket: a versioned length-prefixed frame protocol
-//!   (`serving::wire`) with read/write deadlines, frame-size caps,
-//!   per-connection backpressure, disconnect-cancels-requests, and a
-//!   bounded graceful drain.
+//!   (continuous batching + stable slots, typed `serving::EngineError`
+//!   throughout) remains for callers that want to own the loop. KV
+//!   memory is either a contiguous per-slot arena (the default) or —
+//!   with `EngineBuilder::paged_kv` — the block-granular
+//!   `serving::PagedKvPool` ([`serving::paged`]): per-request block
+//!   tables over the shared slab, copy-on-write prefix sharing keyed
+//!   by a rolling hash of full prompt blocks (a wave sharing a system
+//!   prompt physically shares its prefix), chunked prefill that
+//!   spreads long prompts across extra epochs without stalling decode,
+//!   and typed `Shed` displacement on pool exhaustion — steady-state
+//!   decode stays zero-copy and zero-alloc either way.
+//!   `serving::ServeTransport` puts the server behind a TCP socket: a
+//!   versioned length-prefixed frame protocol (`serving::wire`) with
+//!   read/write deadlines, frame-size caps, per-connection
+//!   backpressure, disconnect-cancels-requests, and a bounded graceful
+//!   drain; the `Status` frame carries the KV pool gauges.
 //! * [`moe`] — expert routing + hybrid workload balancer (§6.4).
 //! * [`multigpu`] — tensor parallelism + collective decomposition (§6.5).
 #![deny(rustdoc::broken_intra_doc_links)]

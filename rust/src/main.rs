@@ -6,7 +6,10 @@
 //!   verify   [model] [--batch N] [--gpu NAME] [--granularity G] [--mutations N]
 //!            static race/deadlock verification of the compiled tGraphs
 //!   serve    [--requests N] [--batch N] [--backend cpu|pjrt]
-//!            real-numerics serving (native CPU backend by default; no artifacts needed)
+//!            [--paged [--block-tokens B] [--prefill-chunk E]]
+//!            real-numerics serving (native CPU backend by default; no artifacts needed);
+//!            --paged turns on the block-granular KV pool with copy-on-write
+//!            prefix sharing, --prefill-chunk adds chunked-prefill epochs
 //!   serve    --listen ADDR [--requests N]       TCP serving (wire protocol + graceful drain)
 //!   models                                      list known model configs
 
@@ -151,18 +154,33 @@ fn main() {
                 return;
             }
             let mega = MegaConfig { workers: 6, schedulers: 2, ..Default::default() };
+            let paged = has_flag(&args, "--paged");
+            let block_tokens: usize =
+                flag(&args, "--block-tokens").and_then(|v| v.parse().ok()).unwrap_or(8);
+            let prefill_chunk: usize =
+                flag(&args, "--prefill-chunk").and_then(|v| v.parse().ok()).unwrap_or(0);
             let mut e = ServeEngine::builder()
                 .max_batch(batch)
                 .pool_threads(3)
                 .seed(42)
                 .mega(mega)
                 .backend(backend)
+                .paged_kv(paged)
+                .kv_block_tokens(block_tokens)
+                .prefill_chunk(prefill_chunk)
                 .build()
                 .expect(
                     "engine build failed (the cpu backend needs no artifacts; \
-                     pjrt needs `make artifacts` and a vendored PJRT build)",
+                     pjrt needs `make artifacts` and a vendored PJRT build; \
+                     --paged requires the cpu backend)",
                 );
             println!("backend: {}", backend.name());
+            if paged {
+                println!(
+                    "kv: paged, {}-token blocks, prefill chunk {}",
+                    block_tokens, prefill_chunk
+                );
+            }
             // stream: half the wave up front, the rest submitted
             // mid-flight while earlier requests are still decoding.
             let prompt_for = |i: u64| -> Vec<i32> { (0..3).map(|t| 1 + (i as i32 * 13 + t) % 500).collect() };
@@ -186,7 +204,20 @@ fn main() {
                     next += 1;
                 }
             }
+            let kv = e.kv_status();
             let stats = e.take_stats();
+            if paged {
+                println!(
+                    "kv pool: {}/{} blocks free | {} shared | {} cow copies | {} prefix hits | \
+                     {} prefill chunks",
+                    kv.blocks_free,
+                    kv.blocks_total,
+                    kv.blocks_shared,
+                    kv.blocks_cowed,
+                    kv.prefix_hits,
+                    kv.prefill_chunks
+                );
+            }
             println!(
                 "{done} requests | {} tokens | {} iters | {:?} busy / {:?} wall | {:.1} tok/s | \
                  p50 iter {:?} | ttft p50 {:?}",
@@ -211,6 +242,9 @@ fn main() {
             println!("  mpk serve --requests 8 --batch 4 [--backend cpu|pjrt]");
             println!("      cpu (default) runs the native backend, no artifacts needed;");
             println!("      pjrt needs `make artifacts` and a vendored PJRT build");
+            println!("  mpk serve --paged [--block-tokens 8] [--prefill-chunk 2]");
+            println!("      block-granular KV pool with copy-on-write prefix sharing");
+            println!("      and chunked prefill (cpu backend only)");
             println!("  mpk serve --listen 127.0.0.1:7171 --requests 8");
         }
     }
@@ -239,7 +273,11 @@ fn serve_listen(addr: &str, n: usize, batch: usize, backend: BackendKind) {
     };
     let transport = ServeTransport::bind(addr, server, TransportConfig::default())
         .expect("bind listen address");
-    println!("listening on {} (wire protocol v1)", transport.local_addr());
+    println!(
+        "listening on {} (wire protocol v{})",
+        transport.local_addr(),
+        mpk::serving::wire::WIRE_VERSION
+    );
 
     // demo wave over loopback: every request crosses the full wire
     // path — encode, socket, reader, server RPC, pump, writer, decode.
@@ -285,6 +323,11 @@ fn parse_backend(args: &[String]) -> BackendKind {
 
 fn flag(args: &[String], name: &str) -> Option<String> {
     args.iter().position(|a| a == name).and_then(|i| args.get(i + 1).cloned())
+}
+
+/// Presence-only flag (no value), e.g. `--paged`.
+fn has_flag(args: &[String], name: &str) -> bool {
+    args.iter().any(|a| a == name)
 }
 
 fn flag_pos(args: &[String], idx: usize) -> Option<String> {

@@ -134,6 +134,30 @@ impl TransportMetrics {
     }
 }
 
+/// Plain-data snapshot of paged-KV pool occupancy — the operator's view
+/// of KV capacity (`serving::paged::PagedKvPool::stats`, overlaid with
+/// the engine's `prefill_chunks`, surfaced through `ServerStatus` and
+/// the wire `Status` frame). Gauges (`blocks_free`/`blocks_shared`) are
+/// instantaneous; the rest are cumulative. All-zero in the legacy
+/// slot-contiguous mode except `blocks_total`/`blocks_free`, which the
+/// accounting allocator also reports.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct KvPoolStats {
+    /// Pool size in blocks.
+    pub blocks_total: u64,
+    /// Blocks on the free list right now.
+    pub blocks_free: u64,
+    /// Blocks currently referenced more than once (prefix sharing).
+    pub blocks_shared: u64,
+    /// Cumulative copy-on-write block copies.
+    pub blocks_cowed: u64,
+    /// Cumulative blocks mapped from the prefix index at admission.
+    pub prefix_hits: u64,
+    /// Cumulative extra prefill epochs run by the chunked-prefill
+    /// scheduler.
+    pub prefill_chunks: u64,
+}
+
 /// Plain-data copy of the transport counters.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct TransportSnapshot {

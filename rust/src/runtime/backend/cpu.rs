@@ -12,9 +12,12 @@
 //!   full-width call and a sequence of `tile_n`-wide tiled calls
 //!   produce identical bits;
 //! * GQA attention uses a single-pass **online softmax** (running max /
-//!   running sum, rescale-on-new-max), and the same [`attention_row`]
-//!   serves both the `attn_q1` artifact and the fused `ref_decode`
-//!   reference;
+//!   running sum, rescale-on-new-max); the position-closure kernel
+//!   [`attention_row_paged`] is the single implementation behind the
+//!   `attn_q1` artifact, the fused `ref_decode` reference (both via the
+//!   contiguous [`attention_row`] wrapper), *and* the binder's paged
+//!   block-table path — so paged and contiguous decode agree bitwise by
+//!   construction;
 //! * rmsnorm is `x / sqrt(mean(x²) + 1e-6) * w`, swiglu is
 //!   `silu(gate) · up` over a `[gate | up]`-packed row, and embedding
 //!   ids are clamped into the vocab range.
@@ -231,31 +234,38 @@ fn matmul_row(x_row: &[f32], w: &[f32], n: usize, out_row: &mut [f32]) {
     }
 }
 
-/// GQA geometry shared by the standalone attention artifact and the
-/// fused reference decode.
-struct AttnShape {
-    heads: usize,
-    kv_heads: usize,
-    head_dim: usize,
+/// GQA geometry shared by the standalone attention artifact, the fused
+/// reference decode, and the binder's paged attention path.
+pub(crate) struct AttnShape {
+    pub(crate) heads: usize,
+    pub(crate) kv_heads: usize,
+    pub(crate) head_dim: usize,
 }
 
 /// One request row of GQA decode attention over the first `valid`
-/// cache positions, via single-pass online softmax: per head, keep a
-/// running max `m`, running normalizer `l`, and a value accumulator;
-/// on a new max, rescale both by `exp(old_m - new_m)`. `q` holds the
+/// cache positions, addressed **by position closure**: `k_at(s)` /
+/// `v_at(s)` return position `s`'s full `kv_heads * head_dim` cache
+/// row, wherever it lives. The contiguous artifact path wraps this
+/// with stride arithmetic ([`attention_row`]); the paged serving path
+/// resolves each position through a block table into
+/// `SharedSlab::view_span` rows. Both walk positions in the same
+/// ascending order through the same single-pass online softmax (per
+/// head: running max `m`, running normalizer `l`, value accumulator;
+/// on a new max, rescale both by `exp(old_m - new_m)`), so paged and
+/// contiguous decode agree **bitwise** by construction. `q` holds the
 /// row's query (`heads * head_dim` — callers slice the q columns out
-/// of a fused qkv row), caches are `[s_max, kv_heads * head_dim]`.
-fn attention_row(
+/// of a fused qkv row). A `valid` of 0 (vacant batch row) writes
+/// zeros: `out` is always fully overwritten.
+pub(crate) fn attention_row_paged<'c>(
     shape: &AttnShape,
     q: &[f32],
-    kc: &[f32],
-    vc: &[f32],
+    k_at: impl Fn(usize) -> &'c [f32],
+    v_at: impl Fn(usize) -> &'c [f32],
     valid: usize,
     acc: &mut Vec<f32>,
     out: &mut [f32],
 ) {
     let hd = shape.head_dim;
-    let kv_dim = shape.kv_heads * hd;
     let group = (shape.heads / shape.kv_heads).max(1);
     let scale = 1.0 / (hd as f32).sqrt();
     acc.resize(hd, 0.0);
@@ -266,7 +276,7 @@ fn attention_row(
         let mut l = 0.0f32;
         acc.fill(0.0);
         for s in 0..valid {
-            let krow = &kc[s * kv_dim + kvh * hd..][..hd];
+            let krow = &k_at(s)[kvh * hd..][..hd];
             let mut dot = 0.0f32;
             for (&a, &b) in qh.iter().zip(krow) {
                 dot += a * b;
@@ -283,7 +293,7 @@ fn attention_row(
             }
             let p = (score - m).exp();
             l += p;
-            let vrow = &vc[s * kv_dim + kvh * hd..][..hd];
+            let vrow = &v_at(s)[kvh * hd..][..hd];
             for (a, &v) in acc.iter_mut().zip(vrow) {
                 *a += p * v;
             }
@@ -297,6 +307,29 @@ fn attention_row(
             oh.fill(0.0);
         }
     }
+}
+
+/// Contiguous-cache wrapper over [`attention_row_paged`]: caches are
+/// `[s_max, kv_heads * head_dim]` row-major slices.
+fn attention_row(
+    shape: &AttnShape,
+    q: &[f32],
+    kc: &[f32],
+    vc: &[f32],
+    valid: usize,
+    acc: &mut Vec<f32>,
+    out: &mut [f32],
+) {
+    let kv_dim = shape.kv_heads * shape.head_dim;
+    attention_row_paged(
+        shape,
+        q,
+        |s| &kc[s * kv_dim..][..kv_dim],
+        |s| &vc[s * kv_dim..][..kv_dim],
+        valid,
+        acc,
+        out,
+    );
 }
 
 /// Clamp a token id into the vocab range (matches the artifact set's
@@ -584,5 +617,43 @@ mod tests {
         assert_eq!(clamp_id(-3, 10), 0);
         assert_eq!(clamp_id(4, 10), 4);
         assert_eq!(clamp_id(99, 10), 9);
+    }
+
+    #[test]
+    fn paged_attention_over_scattered_blocks_is_bit_identical() {
+        // Split a contiguous cache into 4-row blocks stored in shuffled
+        // order; resolving positions through a block table must produce
+        // the same bits as the contiguous wrapper.
+        let shape = AttnShape { heads: 4, kv_heads: 2, head_dim: 8 };
+        let kv_dim = 16;
+        let valid = 11; // partial final block
+        let rows = 12;
+        let mut rng = crate::util::XorShift64::new(9);
+        let q: Vec<f32> = (0..32).map(|_| rng.unit_f32()).collect();
+        let kc: Vec<f32> = (0..rows * kv_dim).map(|_| rng.unit_f32()).collect();
+        let vc: Vec<f32> = (0..rows * kv_dim).map(|_| rng.unit_f32()).collect();
+        let mut want = vec![0.0f32; 32];
+        let mut acc = Vec::new();
+        attention_row(&shape, &q, &kc, &vc, valid, &mut acc, &mut want);
+
+        let bt = 4;
+        let table = [2usize, 0, 1]; // logical block -> physical block
+        let mut pk = vec![0.0f32; rows * kv_dim];
+        let mut pv = vec![0.0f32; rows * kv_dim];
+        for (lb, &pb) in table.iter().enumerate() {
+            let (src, dst) = (lb * bt * kv_dim, pb * bt * kv_dim);
+            pk[dst..dst + bt * kv_dim].copy_from_slice(&kc[src..src + bt * kv_dim]);
+            pv[dst..dst + bt * kv_dim].copy_from_slice(&vc[src..src + bt * kv_dim]);
+        }
+        let k_at = |s: usize| &pk[(table[s / bt] * bt + s % bt) * kv_dim..][..kv_dim];
+        let v_at = |s: usize| &pv[(table[s / bt] * bt + s % bt) * kv_dim..][..kv_dim];
+        let mut got = vec![1.0f32; 32];
+        attention_row_paged(&shape, &q, k_at, v_at, valid, &mut acc, &mut got);
+        assert_eq!(got, want);
+
+        // valid == 0 (vacant row) fully overwrites the destination.
+        let mut z = vec![7.0f32; 32];
+        attention_row_paged(&shape, &q, k_at, v_at, 0, &mut acc, &mut z);
+        assert!(z.iter().all(|&v| v == 0.0));
     }
 }

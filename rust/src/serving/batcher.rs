@@ -32,8 +32,88 @@
 
 use crate::serving::error::EngineError;
 use crate::serving::kvcache::KvAllocator;
+use crate::serving::paged::PagedKvPool;
 use crate::serving::step::FinishReason;
 use std::collections::{HashSet, VecDeque};
+
+/// The batcher's KV capacity backend — one of two admission regimes
+/// behind a uniform accounting surface:
+///
+/// * [`KvPool::Slab`]: the legacy slot-contiguous mode. Admission
+///   reserves a request's **worst case** (`prompt + max_new_tokens`)
+///   up front; block ids are pure accounting (rows live in the arena
+///   slot).
+/// * [`KvPool::Paged`]: block tables over the same arena. Admission
+///   reserves **prompt-length blocks only** (shared prefix blocks are
+///   mapped, not allocated) and decode grows on demand — which is what
+///   makes overcommit possible, and why mid-decode exhaustion must
+///   shed a victim instead of panicking.
+pub enum KvPool {
+    Slab(KvAllocator),
+    Paged(PagedKvPool),
+}
+
+impl KvPool {
+    pub fn free_blocks(&self) -> usize {
+        match self {
+            KvPool::Slab(a) => a.free_blocks(),
+            KvPool::Paged(p) => p.free_blocks(),
+        }
+    }
+
+    pub fn total_blocks(&self) -> usize {
+        match self {
+            KvPool::Slab(a) => a.total_blocks(),
+            KvPool::Paged(p) => p.total_blocks(),
+        }
+    }
+
+    pub fn block_tokens(&self) -> usize {
+        match self {
+            KvPool::Slab(a) => a.block_tokens,
+            KvPool::Paged(p) => p.block_tokens(),
+        }
+    }
+
+    /// Blocks needed to hold `tokens` tokens (identical `div_ceil`
+    /// rounding in both modes — the validate boundary tests pin this).
+    pub fn blocks_for(&self, tokens: usize) -> usize {
+        match self {
+            KvPool::Slab(a) => a.blocks_for(tokens),
+            KvPool::Paged(p) => p.blocks_for(tokens),
+        }
+    }
+
+    pub fn held_by(&self, req: u64) -> usize {
+        match self {
+            KvPool::Slab(a) => a.held_by(req),
+            KvPool::Paged(p) => p.held_by(req),
+        }
+    }
+
+    pub fn release(&mut self, req: u64) -> usize {
+        match self {
+            KvPool::Slab(a) => a.release(req),
+            KvPool::Paged(p) => p.release(req),
+        }
+    }
+
+    /// The paged pool, when this batcher runs paged (the engine's
+    /// growth/COW/promotion calls live there; `None` ⇒ legacy mode).
+    pub fn paged(&self) -> Option<&PagedKvPool> {
+        match self {
+            KvPool::Slab(_) => None,
+            KvPool::Paged(p) => Some(p),
+        }
+    }
+
+    pub fn paged_mut(&mut self) -> Option<&mut PagedKvPool> {
+        match self {
+            KvPool::Slab(_) => None,
+            KvPool::Paged(p) => Some(p),
+        }
+    }
+}
 
 /// A generation request.
 #[derive(Clone, Debug)]
@@ -110,7 +190,7 @@ pub struct Batcher {
     /// long-lived streaming callers must drain periodically or this
     /// grows with every request ever served.
     pub finished: Vec<Request>,
-    pub kv: KvAllocator,
+    pub kv: KvPool,
     /// slot → occupying request id. The allocator state: admission
     /// claims the lowest `None`, retirement clears its entry, nothing
     /// else ever writes it.
@@ -128,6 +208,16 @@ pub struct Batcher {
 
 impl Batcher {
     pub fn new(max_batch: usize, max_seq: usize, kv: KvAllocator) -> Self {
+        Self::with_pool(max_batch, max_seq, KvPool::Slab(kv))
+    }
+
+    /// A batcher running paged admission: prompt-only reservation,
+    /// prefix sharing, on-demand decode growth.
+    pub fn new_paged(max_batch: usize, max_seq: usize, pool: PagedKvPool) -> Self {
+        Self::with_pool(max_batch, max_seq, KvPool::Paged(pool))
+    }
+
+    fn with_pool(max_batch: usize, max_seq: usize, kv: KvPool) -> Self {
         Batcher {
             max_batch,
             max_seq,
@@ -296,14 +386,33 @@ impl Batcher {
             }
         }
         // 2. admit into the lowest free slot while slots + KV blocks
-        // allow (worst-case reservation).
+        // allow. Slab mode reserves the worst case up front; paged
+        // mode reserves prompt blocks only (shared prefix blocks are
+        // mapped in for free) and the request resumes prefill past the
+        // shared prefix.
         while let Some(slot) = self.lowest_free_slot() {
             let Some(front) = self.waiting.front() else { break };
-            let worst = front.prompt.len() + front.max_new_tokens;
-            if !self.kv.ensure(front.id, worst) {
-                break; // KV pressure: wait for retirements
-            }
-            let mut r = self.waiting.pop_front().unwrap();
+            let mut r = match &mut self.kv {
+                KvPool::Slab(a) => {
+                    let worst = front.prompt.len() + front.max_new_tokens;
+                    if !a.ensure(front.id, worst) {
+                        break; // KV pressure: wait for retirements
+                    }
+                    self.waiting.pop_front().unwrap()
+                }
+                KvPool::Paged(p) => {
+                    let Some(adm) = p.admit(front.id, &front.prompt) else {
+                        break; // pool exhausted even after eviction
+                    };
+                    let mut r = self.waiting.pop_front().unwrap();
+                    // shared prefix rows are already in cache: resume
+                    // prefill at the first unshared token (always ≥ 1
+                    // prompt token left — `resume` clamps to P−1).
+                    r.prompt_pos = adm.resume;
+                    r.cache_len = adm.resume;
+                    r
+                }
+            };
             r.slot = Some(slot);
             self.slots[slot] = Some(r.id);
             self.active.push(r);
@@ -764,5 +873,97 @@ mod tests {
         assert!(matches!(b.validate(&req(2, 60, 10)).unwrap_err(), EngineError::RequestTooLong { .. }));
         assert!(matches!(b.validate(&req(2, 9, 8)).unwrap_err(), EngineError::KvPoolExceeded { .. }));
         assert!(matches!(b.validate(&req(1, 2, 2)).unwrap_err(), EngineError::DuplicateId { id: 1 }));
+    }
+
+    /// Paged batcher over a small arena: `slots` 64-token slots of
+    /// 8-token blocks → `slots * 8` pool blocks. `max_seq` is set above
+    /// the pool's token capacity so the KvPoolExceeded check (not
+    /// RequestTooLong) is the binding constraint under test.
+    fn paged_batcher(max_batch: usize, slots: usize) -> Batcher {
+        let arena = crate::serving::kvcache::KvArena::new(2, slots, 64, 4);
+        Batcher::new_paged(max_batch, 128, PagedKvPool::over(&arena, 8))
+    }
+
+    #[test]
+    fn paged_admission_reserves_prompt_blocks_only() {
+        let mut b = paged_batcher(4, 1); // 8 blocks
+        b.submit(req(1, 16, 32)).unwrap(); // worst case 48 tokens = 6 blocks
+        b.step_admission();
+        assert_eq!(b.active.len(), 1);
+        assert_eq!(b.kv.held_by(1), 2, "16-token prompt = 2 blocks, not the worst case");
+        assert_eq!(b.kv.free_blocks(), 6);
+        // a cold prompt starts prefill from the beginning.
+        assert_eq!(b.active[0].prompt_pos, 0);
+        assert_eq!(b.active[0].cache_len, 0);
+    }
+
+    #[test]
+    fn paged_validate_rejects_at_exact_block_boundary() {
+        // 8 blocks × 8 tokens = 64-token pool capacity; max_seq is 128
+        // so the pool check is what binds. The off-by-one at the exact
+        // boundary is the regression under test: worst == 64 must be
+        // accepted (blocks_for(64) == 8 == pool), worst == 65 must be a
+        // typed KvPoolExceeded (blocks_for rounds 65 up to 9).
+        let mut b = paged_batcher(2, 1);
+        b.submit(req(1, 32, 32)).unwrap(); // exactly pool-sized
+        let err = b.submit(req(2, 33, 32)).unwrap_err();
+        assert!(
+            matches!(
+                err,
+                EngineError::KvPoolExceeded { id: 2, worst: 65, need_blocks: 9, pool_blocks: 8 }
+            ),
+            "got: {err}"
+        );
+        // one token under the boundary in the other direction too.
+        b.validate(&req(3, 31, 33)).unwrap(); // worst 64 again
+        assert!(matches!(
+            b.validate(&req(3, 31, 34)).unwrap_err(),
+            EngineError::KvPoolExceeded { worst: 65, .. }
+        ));
+    }
+
+    #[test]
+    fn paged_admission_waits_under_pool_pressure_without_leaking() {
+        let mut b = paged_batcher(4, 1); // 8 blocks
+        b.submit(req(1, 48, 8)).unwrap(); // 6 blocks of prompt
+        b.submit(req(2, 32, 8)).unwrap(); // 4 more: cannot fit
+        b.step_admission();
+        assert_eq!(b.active.len(), 1);
+        assert_eq!(b.pending(), 1, "second request waits, is not dropped");
+        assert_eq!(b.kv.held_by(2), 0, "failed paged admission must not leak blocks");
+        b.cancel(1).unwrap();
+        b.step_admission();
+        assert_eq!(b.active.len(), 1);
+        assert_eq!(b.active[0].id, 2);
+    }
+
+    #[test]
+    fn paged_admission_resumes_past_a_shared_prefix() {
+        let mut b = paged_batcher(2, 2);
+        let prompt: Vec<i32> = (0..16).collect();
+        b.submit(Request::new(1, prompt.clone(), 4)).unwrap();
+        b.step_admission();
+        // simulate request 1's prefill publishing both prompt blocks.
+        let p = b.kv.paged_mut().unwrap();
+        for pos in 0..16 {
+            assert_ne!(p.ensure_append(1, pos), crate::serving::paged::Append::Exhausted);
+            p.promote(1, &prompt, pos + 1);
+        }
+        b.cancel(1).unwrap();
+        b.take_finished();
+        let alloc_before = b.kv.paged().unwrap().blocks_allocated();
+        b.submit(Request::new(2, prompt.clone(), 4)).unwrap();
+        b.step_admission();
+        let r = &b.active[0];
+        assert_eq!(r.id, 2);
+        assert_eq!(r.prompt_pos, 15, "resume clamps to the last prompt token");
+        assert_eq!(r.cache_len, 15);
+        assert!(r.in_prefill(), "the resumed request still runs ≥ 1 prefill step");
+        assert_eq!(
+            b.kv.paged().unwrap().blocks_allocated(),
+            alloc_before,
+            "a fully shared prompt allocates nothing at admission"
+        );
+        assert!(b.kv.paged().unwrap().shared_blocks() >= 2);
     }
 }

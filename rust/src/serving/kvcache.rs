@@ -1,13 +1,16 @@
-//! Paged KV-cache block allocator (§6.1 / PagedAttention-class) and the
-//! shared max-batch KV arena.
+//! KV accounting for the legacy slot-contiguous mode, and the shared
+//! max-batch KV arena both modes store into.
 //!
-//! Physical cache memory is divided into fixed-size blocks of
-//! `block_tokens` tokens; each active request holds a growing list of
-//! blocks per layer. The serving engine uses this for admission control
-//! (a request is admitted only if its worst-case block demand fits) and
-//! frees blocks when requests retire.
+//! [`KvAllocator`] is the **accounting-only** block allocator behind
+//! slot-contiguous admission control: cache memory is *counted* in
+//! fixed-size blocks of `block_tokens` tokens (a request is admitted
+//! only if its worst-case block demand fits; blocks free when it
+//! retires), but block ids never address storage — a request's rows
+//! physically live in its arena slot. The true paged mode, where block
+//! tables *do* address storage and enable copy-on-write prefix sharing,
+//! is [`crate::serving::paged::PagedKvPool`].
 //!
-//! The [`KvArena`] is the storage those blocks account for: **one**
+//! The [`KvArena`] is the storage both account for: **one**
 //! `[slots, s_max, kv_dim]` K and V segment per layer, sized for the
 //! maximum batch, shared (via [`SharedSlab`] aliasing) by every
 //! batch-size-specialized session store. A batch-`b` session's
@@ -22,7 +25,11 @@
 //! specialized graph a whole power of two, counted in
 //! `kv_rows_migrated`) — any *undeliberate* remap is still an invariant
 //! violation the engine surfaces as a typed error, never a silent
-//! repair.
+//! repair. With paging on, slot compaction is obsolete (a relocation
+//! would be a block-table rewrite) and the whole
+//! `move_slot`/`compaction_candidate`/`relocate` path is **legacy-only
+//! and unreachable** — the builder rejects `compaction` + `paged_kv`
+//! up front and the engine's compaction pass asserts paging is off.
 
 use crate::exec::store::SharedSlab;
 
@@ -151,9 +158,26 @@ impl KvArena {
         self.layers
     }
 
-    /// Move the first `rows` cached rows of slot `src` into slot `dst`
-    /// across every layer's K and V segments. One contiguous memcpy per
-    /// segment. Returns rows moved × layers — the engine's
+    /// Rows per slot (the geometry the paged pool re-partitions into
+    /// blocks — `block_tokens` must divide this).
+    pub fn s_max(&self) -> usize {
+        self.s_max
+    }
+
+    /// Elements per cached row.
+    pub fn kv_dim(&self) -> usize {
+        self.kv_dim
+    }
+
+    /// **Legacy-only** (slot-contiguous mode): move the first `rows`
+    /// cached rows of slot `src` into slot `dst` across every layer's
+    /// K and V segments. Unreachable with paging on — block tables make
+    /// relocation a table rewrite, the builder rejects the
+    /// `compaction` + `paged_kv` combination, and the engine's
+    /// compaction pass `debug_assert`s the pool is not paged.
+    ///
+    /// One contiguous memcpy per segment. Returns rows moved × layers
+    /// — the engine's
     /// `kv_rows_migrated` unit. A `src == dst` move is a **no-op
     /// returning 0**: the rows are already home, nothing is copied and
     /// nothing is counted (a compaction policy that resolves a slot to

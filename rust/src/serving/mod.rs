@@ -68,6 +68,44 @@
 //! layer over exactly this surface (the [`StepEngine`] trait —
 //! [`mock::MockEngine`] runs the front-end without artifacts).
 //!
+//! # The paged KV lifecycle
+//!
+//! With [`EngineBuilder::paged_kv`], a request's KV cache is a set of
+//! fixed-size blocks from a [`PagedKvPool`] carved over the shared
+//! arena ([`paged`]), indirected through a per-request block table —
+//! not a contiguous span. The request's life then reads:
+//!
+//! 1. **Admit**: [`Batcher`] admission reserves only the blocks the
+//!    *prompt* needs (growth is on demand, one block at a time), after
+//!    consulting the prefix index — a rolling hash over full prompt
+//!    blocks. Every indexed block that matches token-for-token is
+//!    mapped into the new table refcounted ([`Admission`] reports how
+//!    many), so a wave sharing a system prompt physically shares its
+//!    prefix blocks and decode resumes past them.
+//! 2. **Prefill, optionally chunked**: with
+//!    [`EngineBuilder::prefill_chunk`], a long prompt is staged across
+//!    up to that many *extra* kernel epochs per step, so one giant
+//!    prefill cannot stall the decode cadence of the rest of the
+//!    batch (decode rows are re-staged idempotently; their logits are
+//!    discarded).
+//! 3. **Decode, zero-copy**: every step appends one KV row through the
+//!    block table ([`Append`] names the physical block). Steady-state
+//!    decode allocates nothing and copies nothing; writing into a
+//!    block shared with another request first copies it
+//!    (copy-on-write — one counted block copy, see
+//!    [`ServeStats::kv_blocks_cowed`]). A request that needs one more
+//!    block from an exhausted pool is displaced with a terminal
+//!    [`FinishReason::Shed`] — never a panic, never a stall.
+//! 4. **Release**: retirement returns the request's blocks to the free
+//!    list; blocks still referenced by the prefix index or another
+//!    table survive until their last reference drops. Pool occupancy
+//!    is observable at every step via [`ServeEngine::kv_status`] and
+//!    crosses the wire in the `Status` frame.
+//!
+//! The legacy contiguous allocator ([`KvAllocator`]) remains the
+//! default; its slot-moving compaction machinery is quarantined to
+//! that path and asserted unreachable when paging is on.
+//!
 //! # The network transport
 //!
 //! [`ServeTransport`] puts the server behind a TCP socket: a
@@ -129,16 +167,18 @@ pub mod error;
 pub mod fault;
 pub mod kvcache;
 pub mod mock;
+pub mod paged;
 pub mod server;
 pub mod step;
 pub mod transport;
 pub mod wire;
 
-pub use batcher::{Batcher, Request};
+pub use batcher::{Batcher, KvPool, Request};
 pub use engine::{EngineBuilder, RequestLatency, ServeEngine, ServeStats};
 pub use error::EngineError;
 pub use fault::FaultPlan;
 pub use kvcache::{KvAllocator, KvArena, KvResidency};
+pub use paged::{Admission, Append, PagedKvPool};
 pub use server::{
     Priority, ServeServer, ServerClient, ServerConfig, ServerReport, ServerStatus, StepEngine,
     SubmitOptions, TokenStream,

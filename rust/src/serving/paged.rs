@@ -1,0 +1,642 @@
+//! Paged KV cache: block-granular allocation over the shared
+//! [`KvArena`] slab, copy-on-write prefix sharing, and the accounting
+//! the chunked-prefill scheduler reads.
+//!
+//! # Why paging
+//!
+//! The slot-contiguous [`KvArena`] layout gives every admitted request
+//! `s_max` rows from admission to retirement: memory scales with the
+//! *worst-case* sequence length, and two requests with an identical
+//! system prompt share nothing. [`PagedKvPool`] keeps the arena's
+//! physical layout (same slab, same per-layer K/V segments) but
+//! re-partitions each segment's `slots × s_max` token rows into
+//! fixed-size **blocks** of `block_tokens` rows. A request owns a
+//! *block table* — logical block `i` of the sequence maps to physical
+//! block `table[i]` — in the pooling-allocator idiom: index-based
+//! reuse off a free list, no per-step allocation, no compaction (a
+//! "relocation" would be a table rewrite, which is why the legacy
+//! `move_slot` compaction path is unreachable when paging is on).
+//!
+//! # Prefix sharing and copy-on-write
+//!
+//! Fully written **prompt** blocks are published to a prefix index
+//! keyed by a *chained* rolling hash: the key for block `i` hashes the
+//! whole prompt prefix `tokens[0..(i+1)·block_tokens]`, so a lookup
+//! chain only continues while every earlier block matched, and each
+//! hit is verified against the stored block tokens (hash collisions
+//! degrade to a miss, never to aliasing a wrong block). Admission
+//! walks the chain and maps matched physical blocks into the new
+//! request's table with a reference-count bump; the request resumes
+//! prefill at the first unshared token (clamped to `prompt_len - 1` so
+//! at least one prompt token is always processed and the request's
+//! first logits are computed from its own forward pass).
+//!
+//! Shared blocks are **read-only**. The index itself holds one pinning
+//! reference per published block (so a popular prefix survives its
+//! original request), and any append into a block with `refs > 1`
+//! triggers exactly one block copy — counted honestly in
+//! `kv_blocks_cowed`, the only arena copy the zero-copy decode
+//! contract permits. When the free list runs dry, pinned prefixes are
+//! evicted FIFO until a block frees; live request tables are never
+//! evicted, so exhaustion surfaces to the engine as a typed
+//! [`Append::Exhausted`] / failed admission, never a panic.
+
+use crate::exec::store::SharedSlab;
+use crate::metrics::KvPoolStats;
+use crate::serving::kvcache::KvArena;
+use std::collections::{HashMap, VecDeque};
+
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+/// Extend a running FNV-1a hash over a block of prompt tokens. The
+/// chain property (block `i`'s key depends on every earlier token)
+/// falls out of threading the running hash through consecutive calls.
+fn fnv_extend(mut h: u64, tokens: &[i32]) -> u64 {
+    for &t in tokens {
+        for b in t.to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(FNV_PRIME);
+        }
+    }
+    h
+}
+
+/// A published full prompt block: which physical block holds it, plus
+/// the block's own tokens for collision-proof equality (the chained
+/// key already pins every earlier token).
+struct PrefixEntry {
+    phys: usize,
+    tokens: Vec<i32>,
+}
+
+/// Result of a paged admission.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Admission {
+    /// Token position prefill resumes at (`0` for a cold prompt): the
+    /// first `resume` cache rows were mapped in from shared blocks.
+    pub resume: usize,
+    /// How many whole blocks were shared from the prefix index.
+    pub shared_blocks: usize,
+}
+
+/// What `ensure_append` had to do to make position `pos` writable.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Append {
+    /// The position lands in a block this request exclusively owns.
+    Ready,
+    /// A fresh block was appended to the table (on-demand growth).
+    Grew,
+    /// The target block was shared: one block copy was made and the
+    /// table now points at the private copy (`kv_blocks_cowed` += 1).
+    Cowed,
+    /// No block could be allocated even after evicting every pinned
+    /// prefix — the caller must shed, never panic.
+    Exhausted,
+}
+
+/// Block-granular KV pool over the shared max-batch [`KvArena`] slab.
+///
+/// Physical block `p` of layer `l`'s K (resp. V) segment is the
+/// contiguous element span `[k_offset(l) + p·block_tokens·kv_dim, …)`
+/// of length `block_tokens·kv_dim` — block tables are pure pointer
+/// arithmetic over the same memory the slot-contiguous layout used.
+pub struct PagedKvPool {
+    slab: SharedSlab,
+    layers: usize,
+    /// Elements per layer-direction segment (= slots · s_max · kv_dim).
+    seg: usize,
+    kv_dim: usize,
+    block_tokens: usize,
+    total_blocks: usize,
+    /// Free physical blocks (LIFO for reuse locality).
+    free: Vec<usize>,
+    /// Per-block reference count: one per request table containing the
+    /// block, plus one if the prefix index pins it.
+    refs: Vec<u32>,
+    /// request id → block table (logical block i → physical block).
+    tables: HashMap<u64, Vec<usize>>,
+    /// chained prefix hash → published block.
+    prefix: HashMap<u64, PrefixEntry>,
+    /// physical block → the chained hash it is published under.
+    hash_of: HashMap<usize, u64>,
+    /// Publication order of chained hashes — the FIFO eviction queue.
+    registered: VecDeque<u64>,
+    /// Cumulative copy-on-write block copies.
+    cowed: u64,
+    /// Cumulative fresh-block allocations (shared mappings excluded).
+    alloc_total: u64,
+    /// Cumulative blocks mapped in from the prefix index at admission.
+    share_hits: u64,
+}
+
+impl PagedKvPool {
+    /// Build a pool over `arena`'s slab with `block_tokens`-token
+    /// blocks. `block_tokens` must divide the arena's `s_max` so block
+    /// boundaries never straddle a legacy slot boundary mid-row.
+    pub fn over(arena: &KvArena, block_tokens: usize) -> Self {
+        assert!(block_tokens > 0, "block_tokens must be nonzero");
+        assert_eq!(
+            arena.s_max() % block_tokens,
+            0,
+            "block_tokens {} must divide s_max {}",
+            block_tokens,
+            arena.s_max()
+        );
+        let total_blocks = arena.slots() * arena.s_max() / block_tokens;
+        PagedKvPool {
+            slab: arena.slab(),
+            layers: arena.layers(),
+            seg: arena.slots() * arena.s_max() * arena.kv_dim(),
+            kv_dim: arena.kv_dim(),
+            block_tokens,
+            total_blocks,
+            free: (0..total_blocks).rev().collect(),
+            refs: vec![0; total_blocks],
+            tables: HashMap::new(),
+            prefix: HashMap::new(),
+            hash_of: HashMap::new(),
+            registered: VecDeque::new(),
+            cowed: 0,
+            alloc_total: 0,
+            share_hits: 0,
+        }
+    }
+
+    pub fn block_tokens(&self) -> usize {
+        self.block_tokens
+    }
+
+    pub fn total_blocks(&self) -> usize {
+        self.total_blocks
+    }
+
+    pub fn free_blocks(&self) -> usize {
+        self.free.len()
+    }
+
+    /// Blocks needed to hold `tokens` tokens.
+    pub fn blocks_for(&self, tokens: usize) -> usize {
+        tokens.div_ceil(self.block_tokens)
+    }
+
+    /// Blocks currently mapped by a request's table.
+    pub fn held_by(&self, req: u64) -> usize {
+        self.tables.get(&req).map_or(0, |t| t.len())
+    }
+
+    /// The request's block table (logical → physical), if admitted.
+    pub fn table(&self, req: u64) -> Option<&[usize]> {
+        self.tables.get(&req).map(|t| t.as_slice())
+    }
+
+    /// Handle to the backing slab (the same memory every session's
+    /// cache tensors alias).
+    pub fn slab(&self) -> SharedSlab {
+        self.slab.clone()
+    }
+
+    /// Element offset of layer `l`'s K segment (mirrors
+    /// [`KvArena::k_offset`] — the pool never re-lays-out the arena).
+    pub fn k_offset(&self, l: usize) -> usize {
+        assert!(l < self.layers);
+        2 * l * self.seg
+    }
+
+    /// Element offset of layer `l`'s V segment.
+    pub fn v_offset(&self, l: usize) -> usize {
+        assert!(l < self.layers);
+        (2 * l + 1) * self.seg
+    }
+
+    /// Gauge: blocks currently referenced more than once (shared
+    /// between requests, or between a request and the prefix index).
+    pub fn shared_blocks(&self) -> usize {
+        self.refs.iter().filter(|&&r| r >= 2).count()
+    }
+
+    /// Cumulative copy-on-write block copies.
+    pub fn cowed_total(&self) -> u64 {
+        self.cowed
+    }
+
+    /// Cumulative fresh-block allocations (admission + growth + COW).
+    pub fn blocks_allocated(&self) -> u64 {
+        self.alloc_total
+    }
+
+    /// Cumulative blocks mapped from the prefix index at admission.
+    pub fn prefix_hits(&self) -> u64 {
+        self.share_hits
+    }
+
+    /// Plain-data snapshot for observability (`prefill_chunks` is
+    /// engine-side scheduling state and stays 0 here — the engine
+    /// overlays it).
+    pub fn stats(&self) -> KvPoolStats {
+        KvPoolStats {
+            blocks_total: self.total_blocks as u64,
+            blocks_free: self.free.len() as u64,
+            blocks_shared: self.shared_blocks() as u64,
+            blocks_cowed: self.cowed,
+            prefix_hits: self.share_hits,
+            prefill_chunks: 0,
+        }
+    }
+
+    /// Pop a free block, evicting pinned prefixes FIFO on demand.
+    /// Returns `None` only when every block is held by a live table.
+    /// The returned block's refcount is set to 1 for the caller.
+    fn alloc_block(&mut self) -> Option<usize> {
+        while self.free.is_empty() {
+            if !self.evict_one() {
+                return None;
+            }
+        }
+        let p = self.free.pop().unwrap();
+        debug_assert_eq!(self.refs[p], 0, "free block {p} had live references");
+        self.refs[p] = 1;
+        Some(p)
+    }
+
+    /// Unpublish the oldest prefix entry. Its block frees only if no
+    /// live table still maps it. A mid-chain eviction leaves deeper
+    /// entries of the same prefix unreachable (an admission walk stops
+    /// at the first miss), but they sit ahead in the same FIFO and are
+    /// evicted next — temporarily cold, never leaked.
+    fn evict_one(&mut self) -> bool {
+        let Some(h) = self.registered.pop_front() else { return false };
+        let e = self.prefix.remove(&h).expect("registered hash lost its prefix entry");
+        self.hash_of.remove(&e.phys);
+        self.refs[e.phys] -= 1;
+        if self.refs[e.phys] == 0 {
+            self.free.push(e.phys);
+        }
+        true
+    }
+
+    /// Admit a request: walk the prefix index over `prompt`'s full
+    /// blocks, map every matching block in (refcount bump, no copy),
+    /// then allocate fresh blocks so the table covers the whole
+    /// prompt — **only** the prompt; decode-time growth is on demand.
+    /// All-or-nothing: on exhaustion the partial table is rolled back
+    /// and `None` is returned (the caller keeps the request queued or
+    /// sheds it — this is not a panic path).
+    pub fn admit(&mut self, id: u64, prompt: &[i32]) -> Option<Admission> {
+        debug_assert!(!self.tables.contains_key(&id), "request {id} admitted twice");
+        let bt = self.block_tokens;
+        let need = self.blocks_for(prompt.len());
+        let mut table: Vec<usize> = Vec::with_capacity(need);
+
+        let mut h = FNV_OFFSET;
+        for i in 0..prompt.len() / bt {
+            let tokens = &prompt[i * bt..(i + 1) * bt];
+            h = fnv_extend(h, tokens);
+            let Some(e) = self.prefix.get(&h) else { break };
+            if e.tokens != tokens {
+                break; // chained-hash collision: treat as a miss.
+            }
+            self.refs[e.phys] += 1;
+            table.push(e.phys);
+        }
+        let shared = table.len();
+
+        while table.len() < need {
+            match self.alloc_block() {
+                Some(p) => table.push(p),
+                None => {
+                    // roll back shared bumps and fresh blocks alike.
+                    for &p in &table {
+                        self.refs[p] -= 1;
+                        if self.refs[p] == 0 {
+                            self.free.push(p);
+                        }
+                    }
+                    return None;
+                }
+            }
+        }
+        self.alloc_total += (need - shared) as u64;
+        self.share_hits += shared as u64;
+        self.tables.insert(id, table);
+        // resume clamps to the last prompt token: the request always
+        // runs its own forward pass for at least one position, and a
+        // fully shared prompt re-appends its final row (one honest COW
+        // into a private block) instead of skipping prefill entirely.
+        Some(Admission { resume: (shared * bt).min(prompt.len().saturating_sub(1)), shared_blocks: shared })
+    }
+
+    /// Make token position `pos` writable for `id`: grow the table by
+    /// one block if `pos` is past its end, or copy-on-write if the
+    /// target block is shared. Exhaustion is a typed outcome.
+    pub fn ensure_append(&mut self, id: u64, pos: usize) -> Append {
+        let bt = self.block_tokens;
+        let b = pos / bt;
+        let Some(len) = self.tables.get(&id).map(|t| t.len()) else {
+            debug_assert!(false, "ensure_append for unadmitted request {id}");
+            return Append::Exhausted;
+        };
+        if b >= len {
+            debug_assert_eq!(b, len, "append skipped block {len}..{b} for request {id}");
+            let Some(p) = self.alloc_block() else { return Append::Exhausted };
+            self.alloc_total += 1;
+            self.tables.get_mut(&id).unwrap().push(p);
+            return Append::Grew;
+        }
+        let phys = self.tables[&id][b];
+        if self.refs[phys] <= 1 {
+            return Append::Ready;
+        }
+        // copy-on-write: one block copy per layer-direction segment,
+        // then repoint this request's table at the private copy.
+        let Some(np) = self.alloc_block() else { return Append::Exhausted };
+        self.alloc_total += 1;
+        let bs = bt * self.kv_dim;
+        for l in 0..self.layers {
+            for base in [self.k_offset(l), self.v_offset(l)] {
+                self.slab.copy_within(base + phys * bs, base + np * bs, bs);
+            }
+        }
+        self.refs[phys] -= 1;
+        debug_assert!(self.refs[phys] >= 1, "COW source lost its other reference");
+        self.tables.get_mut(&id).unwrap()[b] = np;
+        self.cowed += 1;
+        Append::Cowed
+    }
+
+    /// Publish `id`'s fully written prompt blocks to the prefix index.
+    /// Call after appends whenever `cache_len` crosses a block
+    /// boundary inside the prompt; idempotent (an already-published
+    /// chain hash is skipped, so a COW'd duplicate of a published
+    /// block is never double-registered). Publication pins the block
+    /// with one index-owned reference so the prefix outlives the
+    /// request; pins are dropped FIFO under memory pressure.
+    pub fn promote(&mut self, id: u64, prompt: &[i32], cache_len: usize) {
+        let bt = self.block_tokens;
+        let Some(table) = self.tables.get(&id) else { return };
+        let full = cache_len.min(prompt.len()) / bt;
+        let mut h = FNV_OFFSET;
+        for i in 0..full {
+            let tokens = &prompt[i * bt..(i + 1) * bt];
+            h = fnv_extend(h, tokens);
+            if self.prefix.contains_key(&h) {
+                continue;
+            }
+            let phys = table[i];
+            self.refs[phys] += 1;
+            self.prefix.insert(h, PrefixEntry { phys, tokens: tokens.to_vec() });
+            self.hash_of.insert(phys, h);
+            self.registered.push_back(h);
+        }
+    }
+
+    /// Release a retired request's table. Blocks free when their last
+    /// reference drops; published blocks stay resident under their
+    /// index pin (that is the point of prefix sharing). Returns the
+    /// number of table entries released.
+    pub fn release(&mut self, id: u64) -> usize {
+        let Some(table) = self.tables.remove(&id) else { return 0 };
+        let n = table.len();
+        for p in table {
+            self.refs[p] -= 1;
+            if self.refs[p] == 0 {
+                self.free.push(p);
+            }
+        }
+        n
+    }
+
+    /// Structural invariants, for tests and the property harness:
+    /// every block's refcount equals (tables mapping it) + (1 if the
+    /// index pins it); the free list is exactly the zero-ref blocks,
+    /// without duplicates; index bookkeeping is mutually consistent.
+    pub fn check_invariants(&self) -> Result<(), String> {
+        let mut want = vec![0u32; self.total_blocks];
+        for (id, t) in &self.tables {
+            for &p in t {
+                if p >= self.total_blocks {
+                    return Err(format!("request {id} maps out-of-range block {p}"));
+                }
+                want[p] += 1;
+            }
+        }
+        for &p in self.hash_of.keys() {
+            want[p] += 1;
+        }
+        for (p, (&got, &w)) in self.refs.iter().zip(&want).enumerate() {
+            if got != w {
+                return Err(format!("block {p}: refs {got}, expected {w}"));
+            }
+        }
+        let mut seen = vec![false; self.total_blocks];
+        for &p in &self.free {
+            if seen[p] {
+                return Err(format!("block {p} on the free list twice"));
+            }
+            seen[p] = true;
+            if self.refs[p] != 0 {
+                return Err(format!("block {p} free with {} refs", self.refs[p]));
+            }
+        }
+        let zero_refs = self.refs.iter().filter(|&&r| r == 0).count();
+        if zero_refs != self.free.len() {
+            return Err(format!(
+                "{zero_refs} zero-ref blocks but {} on the free list (leak)",
+                self.free.len()
+            ));
+        }
+        if self.prefix.len() != self.hash_of.len() || self.prefix.len() != self.registered.len() {
+            return Err(format!(
+                "index bookkeeping skew: {} entries, {} hash_of, {} registered",
+                self.prefix.len(),
+                self.hash_of.len(),
+                self.registered.len()
+            ));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pool(slots: usize) -> PagedKvPool {
+        // 2 layers, 16-token slots, kv_dim 4, 4-token blocks.
+        PagedKvPool::over(&KvArena::new(2, slots, 16, 4), 4)
+    }
+
+    /// Simulate a prefill: mark blocks written and publish full ones,
+    /// painting recognizable data so sharing can be bit-checked.
+    fn prefill(p: &mut PagedKvPool, id: u64, prompt: &[i32]) {
+        for pos in 0..prompt.len() {
+            assert_ne!(p.ensure_append(id, pos), Append::Exhausted);
+            let t = p.table(id).unwrap();
+            let (b, o) = (pos / 4, pos % 4);
+            let bs = 4 * 4;
+            for l in 0..2 {
+                for (s, base) in [p.k_offset(l), p.v_offset(l)].into_iter().enumerate() {
+                    let row: Vec<f32> =
+                        (0..4).map(|e| (l * 1000 + s * 100 + pos * 10 + e) as f32).collect();
+                    p.slab().write(base + t[b] * bs + o * 4, &row);
+                }
+            }
+            p.promote(id, prompt, pos + 1);
+        }
+        p.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn admit_reserves_prompt_blocks_only() {
+        let mut p = pool(2); // 8 blocks
+        let a = p.admit(1, &[9; 6]).unwrap();
+        assert_eq!(a, Admission { resume: 0, shared_blocks: 0 });
+        assert_eq!(p.held_by(1), 2, "6 tokens -> 2 blocks, not worst-case");
+        assert_eq!(p.free_blocks(), 6);
+        p.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn growth_is_on_demand_and_release_frees() {
+        let mut p = pool(2);
+        p.admit(1, &[3; 4]).unwrap();
+        assert_eq!(p.ensure_append(1, 0), Append::Ready);
+        assert_eq!(p.ensure_append(1, 3), Append::Ready);
+        assert_eq!(p.ensure_append(1, 4), Append::Grew);
+        assert_eq!(p.held_by(1), 2);
+        assert_eq!(p.release(1), 2);
+        assert_eq!(p.free_blocks(), 8);
+        p.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn shared_prefix_resumes_and_cows_bit_identically() {
+        let mut p = pool(2);
+        let prompt: Vec<i32> = (0..8).collect();
+        p.admit(1, &prompt).unwrap();
+        prefill(&mut p, 1, &prompt);
+        assert_eq!(p.prefix_hits(), 0);
+        p.release(1); // both blocks stay pinned by the index
+        assert_eq!(p.free_blocks(), 6);
+
+        let a = p.admit(2, &prompt).unwrap();
+        assert_eq!(a.shared_blocks, 2);
+        assert_eq!(a.resume, 7, "resume clamps to prompt_len - 1");
+        assert_eq!(p.free_blocks(), 6, "sharing allocates nothing");
+        let shared_phys = p.table(2).unwrap()[1];
+        let before = p.slab().read(p.k_offset(0) + shared_phys * 16, 16);
+
+        // appending at the resume position must COW the shared block...
+        assert_eq!(p.ensure_append(2, 7), Append::Cowed);
+        assert_eq!(p.cowed_total(), 1);
+        let new_phys = p.table(2).unwrap()[1];
+        assert_ne!(new_phys, shared_phys);
+        // ...with a bit-identical copy, leaving the original untouched.
+        assert_eq!(p.slab().read(p.k_offset(0) + new_phys * 16, 16), before);
+        p.slab().write(p.k_offset(0) + new_phys * 16, &[-1.0; 4]);
+        assert_eq!(p.slab().read(p.k_offset(0) + shared_phys * 16, 16), before);
+        p.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn partial_prefix_shares_full_blocks_only() {
+        let mut p = pool(2);
+        let prompt: Vec<i32> = (0..8).collect();
+        p.admit(1, &prompt).unwrap();
+        prefill(&mut p, 1, &prompt);
+        p.release(1);
+
+        // same first block, diverging second block.
+        let other: Vec<i32> = (0..4).chain(90..94).collect();
+        let a = p.admit(2, &other).unwrap();
+        assert_eq!(a.shared_blocks, 1);
+        assert_eq!(a.resume, 4, "resume at the first unshared token");
+        assert_eq!(p.held_by(2), 2);
+        // the unshared tail never COWs: writes land in the fresh block.
+        assert_eq!(p.ensure_append(2, 4), Append::Ready);
+        assert_eq!(p.cowed_total(), 0);
+        p.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn mid_block_prompts_do_not_publish_or_share_the_partial_block() {
+        let mut p = pool(2);
+        let prompt: Vec<i32> = (0..6).collect(); // 1 full + 1 partial block
+        p.admit(1, &prompt).unwrap();
+        prefill(&mut p, 1, &prompt);
+        p.release(1);
+        assert_eq!(p.free_blocks(), 7, "only the full block stays pinned");
+        let a = p.admit(2, &prompt).unwrap();
+        assert_eq!(a.shared_blocks, 1);
+        assert_eq!(a.resume, 4);
+        p.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn pinned_prefixes_evict_fifo_under_pressure() {
+        let mut p = pool(2); // 8 blocks
+        // publish two 2-block prefixes (4 pinned blocks), retire both.
+        for (id, base) in [(1u64, 0i32), (2, 50)] {
+            let prompt: Vec<i32> = (base..base + 8).collect();
+            p.admit(id, &prompt).unwrap();
+            prefill(&mut p, id, &prompt);
+            p.release(id);
+        }
+        assert_eq!(p.free_blocks(), 4);
+        // a cold 6-block prompt forces FIFO eviction of prefix 1 first.
+        let cold: Vec<i32> = (900..924).collect();
+        let a = p.admit(3, &cold).unwrap();
+        assert_eq!(a.shared_blocks, 0);
+        assert_eq!(p.held_by(3), 6);
+        // prefix 2 survived (evictions stop as soon as a block frees).
+        let again: Vec<i32> = (50..58).collect();
+        let b = p.admit(4, &again);
+        assert!(b.is_none(), "pool is full of live tables now");
+        p.release(3);
+        let b = p.admit(4, &again).unwrap();
+        assert!(b.shared_blocks >= 1, "the younger prefix outlived the eviction");
+        p.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn exhaustion_is_typed_and_rolls_back() {
+        let mut p = pool(1); // 4 blocks
+        p.admit(1, &[1; 16]).unwrap(); // all 4 blocks, live
+        assert!(p.admit(2, &[2; 4]).is_none(), "no free blocks, nothing evictable");
+        assert_eq!(p.held_by(2), 0, "failed admission must not leak");
+        assert_eq!(p.ensure_append(1, 16), Append::Exhausted);
+        p.check_invariants().unwrap();
+        p.release(1);
+        assert_eq!(p.free_blocks(), 4);
+        assert!(p.admit(2, &[2; 4]).is_some());
+    }
+
+    #[test]
+    fn blocks_for_boundary_rounding() {
+        let p = pool(2);
+        assert_eq!(p.blocks_for(0), 0);
+        assert_eq!(p.blocks_for(1), 1);
+        assert_eq!(p.blocks_for(4), 1);
+        assert_eq!(p.blocks_for(5), 2);
+        assert_eq!(p.blocks_for(32), 8, "exactly the whole pool");
+        assert_eq!(p.blocks_for(33), 9, "one past the pool boundary");
+    }
+
+    #[test]
+    fn stats_snapshot_tracks_gauges_and_counters() {
+        let mut p = pool(2);
+        let prompt: Vec<i32> = (0..8).collect();
+        p.admit(1, &prompt).unwrap();
+        prefill(&mut p, 1, &prompt);
+        let s = p.stats();
+        assert_eq!(s.blocks_total, 8);
+        assert_eq!(s.blocks_free, 6);
+        assert_eq!(s.blocks_shared, 2, "published blocks are request+index shared");
+        p.admit(2, &prompt).unwrap();
+        p.ensure_append(2, 7);
+        let s = p.stats();
+        assert_eq!(s.blocks_cowed, 1);
+        assert_eq!(s.prefix_hits, 2);
+        assert_eq!(s.blocks_free as usize + p.refs.iter().filter(|&&r| r > 0).count(), 8);
+    }
+}

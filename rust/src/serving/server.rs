@@ -66,6 +66,7 @@
 //! assert!(report.fatal.is_none());
 //! ```
 
+use crate::metrics::KvPoolStats;
 use crate::serving::batcher::Request;
 use crate::serving::engine::{EngineBuilder, ServeEngine, ServeStats};
 use crate::serving::error::EngineError;
@@ -101,6 +102,11 @@ pub trait StepEngine: Send {
     fn take_finished(&mut self) -> Vec<Request>;
     /// Close and return the current stats window.
     fn take_stats(&mut self) -> ServeStats;
+    /// KV-pool occupancy snapshot for the status surface. Defaults to
+    /// all-zero for engines without a paged pool (mocks, adapters).
+    fn kv_status(&self) -> KvPoolStats {
+        KvPoolStats::default()
+    }
 }
 
 impl StepEngine for ServeEngine {
@@ -130,6 +136,9 @@ impl StepEngine for ServeEngine {
     }
     fn take_stats(&mut self) -> ServeStats {
         ServeEngine::take_stats(self)
+    }
+    fn kv_status(&self) -> KvPoolStats {
+        ServeEngine::kv_status(self)
     }
 }
 
@@ -227,6 +236,9 @@ pub struct ServerStatus {
     pub finished: usize,
     pub shed: usize,
     pub rejected: usize,
+    /// KV-pool occupancy (paged mode; all-zero for engines without a
+    /// pool). See [`KvPoolStats`].
+    pub kv: KvPoolStats,
 }
 
 /// A per-request event stream: everything the engine emits for one
@@ -526,6 +538,7 @@ impl<E: StepEngine> ServerState<E> {
                     finished: self.report.finished,
                     shed: self.report.shed,
                     rejected: self.report.rejected,
+                    kv: self.engine.kv_status(),
                 });
             }
             Command::Shutdown => self.closing = true,

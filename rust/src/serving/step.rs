@@ -24,10 +24,16 @@ pub enum FinishReason {
     /// with this reason): the request retires exactly like a
     /// cancellation, keeping whatever it generated so far.
     DeadlineExceeded,
-    /// Shed from the server's bounded wait queue to admit a
-    /// higher-priority request under overload. Only requests that were
-    /// *accepted* (queued, stream handed out) are shed with a terminal
-    /// event; a submission refused outright gets the synchronous
+    /// Shed under resource pressure, keeping whatever it generated so
+    /// far. Two paths raise it: the server's bounded wait queue evicts
+    /// an accepted request to admit a higher-priority one under
+    /// overload, and — with the paged KV pool
+    /// ([`EngineBuilder::paged_kv`](crate::serving::EngineBuilder::paged_kv))
+    /// — a mid-decode request that needs one more block from an
+    /// exhausted pool is displaced so the surviving batch keeps its
+    /// zero-copy decode guarantee. Only requests that were *accepted*
+    /// (queued, stream handed out) are shed with a terminal event; a
+    /// submission refused outright gets the synchronous
     /// [`EngineError::Overloaded`](crate::serving::EngineError::Overloaded)
     /// rejection instead.
     Shed,

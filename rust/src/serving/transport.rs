@@ -640,6 +640,12 @@ fn handle_frame(
                     finished: s.finished as u64,
                     shed: s.shed as u64,
                     rejected: s.rejected as u64,
+                    kv_blocks_total: s.kv.blocks_total,
+                    kv_blocks_free: s.kv.blocks_free,
+                    kv_blocks_shared: s.kv.blocks_shared,
+                    kv_blocks_cowed: s.kv.blocks_cowed,
+                    kv_prefix_hits: s.kv.prefix_hits,
+                    kv_prefill_chunks: s.kv.prefill_chunks,
                 });
             }
             Err(err) => {

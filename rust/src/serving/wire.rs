@@ -52,7 +52,11 @@ use std::time::Duration;
 /// Protocol version spoken by this build; the first byte of every
 /// frame body. A receiver rejects any other value with
 /// [`TransportError::BadVersion`] before touching the payload.
-pub const WIRE_VERSION: u8 = 1;
+///
+/// v2 widened [`ServerFrame::Status`] with the paged-KV pool gauges
+/// (block occupancy, prefix sharing, COW copies, prefill chunks); a v1
+/// peer cannot parse the longer payload, so the version byte moved.
+pub const WIRE_VERSION: u8 = 2;
 
 /// Default max-frame cap (bytes of body), sized for 16k-token prompts
 /// with ample header room. See
@@ -182,8 +186,23 @@ pub enum ServerFrame {
     /// bounded wait queue ([`EngineError::Overloaded`]) or by the
     /// connection's own in-flight cap. Retry after backoff.
     Shed { id: u64, queue_depth: u32 },
-    /// Occupancy snapshot answering [`ClientFrame::Status`].
-    Status { queued: u32, in_flight: u32, capacity: u32, finished: u64, shed: u64, rejected: u64 },
+    /// Occupancy snapshot answering [`ClientFrame::Status`]. The six
+    /// `kv_*` gauges mirror [`KvPoolStats`](crate::metrics::KvPoolStats)
+    /// — all zero when the engine runs the legacy contiguous KV arena.
+    Status {
+        queued: u32,
+        in_flight: u32,
+        capacity: u32,
+        finished: u64,
+        shed: u64,
+        rejected: u64,
+        kv_blocks_total: u64,
+        kv_blocks_free: u64,
+        kv_blocks_shared: u64,
+        kv_blocks_cowed: u64,
+        kv_prefix_hits: u64,
+        kv_prefill_chunks: u64,
+    },
     /// The server is closing this connection; no frame follows.
     Close { reason: CloseReason },
 }
@@ -493,16 +512,33 @@ pub fn encode_server(f: &ServerFrame) -> Vec<u8> {
             put_u64(b, *id);
             put_u32(b, *queue_depth);
         }),
-        ServerFrame::Status { queued, in_flight, capacity, finished, shed, rejected } => {
-            frame_with(TAG_STATUS, |b| {
-                put_u32(b, *queued);
-                put_u32(b, *in_flight);
-                put_u32(b, *capacity);
-                put_u64(b, *finished);
-                put_u64(b, *shed);
-                put_u64(b, *rejected);
-            })
-        }
+        ServerFrame::Status {
+            queued,
+            in_flight,
+            capacity,
+            finished,
+            shed,
+            rejected,
+            kv_blocks_total,
+            kv_blocks_free,
+            kv_blocks_shared,
+            kv_blocks_cowed,
+            kv_prefix_hits,
+            kv_prefill_chunks,
+        } => frame_with(TAG_STATUS, |b| {
+            put_u32(b, *queued);
+            put_u32(b, *in_flight);
+            put_u32(b, *capacity);
+            put_u64(b, *finished);
+            put_u64(b, *shed);
+            put_u64(b, *rejected);
+            put_u64(b, *kv_blocks_total);
+            put_u64(b, *kv_blocks_free);
+            put_u64(b, *kv_blocks_shared);
+            put_u64(b, *kv_blocks_cowed);
+            put_u64(b, *kv_prefix_hits);
+            put_u64(b, *kv_prefill_chunks);
+        }),
         ServerFrame::Close { reason } => frame_with(TAG_CLOSE, |b| b.push(reason.code())),
     }
 }
@@ -595,7 +631,26 @@ pub fn decode_server(body: &[u8]) -> Result<ServerFrame, TransportError> {
             let finished = c.u64()?;
             let shed = c.u64()?;
             let rejected = c.u64()?;
-            c.finish(ServerFrame::Status { queued, in_flight, capacity, finished, shed, rejected })
+            let kv_blocks_total = c.u64()?;
+            let kv_blocks_free = c.u64()?;
+            let kv_blocks_shared = c.u64()?;
+            let kv_blocks_cowed = c.u64()?;
+            let kv_prefix_hits = c.u64()?;
+            let kv_prefill_chunks = c.u64()?;
+            c.finish(ServerFrame::Status {
+                queued,
+                in_flight,
+                capacity,
+                finished,
+                shed,
+                rejected,
+                kv_blocks_total,
+                kv_blocks_free,
+                kv_blocks_shared,
+                kv_blocks_cowed,
+                kv_prefix_hits,
+                kv_prefill_chunks,
+            })
         }
         TAG_CLOSE => {
             let mut c = Cursor::new(payload, "Close");
@@ -791,6 +846,12 @@ mod tests {
             finished: 100,
             shed: 3,
             rejected: 4,
+            kv_blocks_total: 64,
+            kv_blocks_free: 12,
+            kv_blocks_shared: 5,
+            kv_blocks_cowed: 2,
+            kv_prefix_hits: 31,
+            kv_prefill_chunks: 7,
         });
         for reason in
             [CloseReason::Drain, CloseReason::SlowConsumer, CloseReason::Protocol, CloseReason::Overloaded]
@@ -894,8 +955,8 @@ mod tests {
     fn transport_error_display_names_the_failure() {
         let e = TransportError::FrameTooLarge { len: 70000, cap: 65536 };
         assert!(e.to_string().contains("70000") && e.to_string().contains("65536"), "got: {e}");
-        let e = TransportError::BadVersion { got: 2, want: WIRE_VERSION };
-        assert!(e.to_string().contains("version 2"), "got: {e}");
+        let e = TransportError::BadVersion { got: 1, want: WIRE_VERSION };
+        assert!(e.to_string().contains("version 1"), "got: {e}");
         let e = TransportError::SlowConsumer { depth: 8 };
         assert!(e.to_string().contains("slow consumer"), "got: {e}");
         let e = TransportError::Closed { reason: CloseReason::Drain };

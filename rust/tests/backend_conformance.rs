@@ -13,6 +13,11 @@
 //! * **Zero-copy property** — CPU-backend serving holds the steady-state
 //!   counters (`allocs == bytes_copied == output_allocs ==
 //!   kv_rows_migrated == 0`) across seeded request mixes.
+//! * **Paged-KV agreement** — the block-granular paged KV pool decodes
+//!   bit-identically to the contiguous slot layout across 100+ CPU
+//!   steps, including waves whose block-multiple shared prompts decode
+//!   over physically shared prefix blocks, with the same zero-copy
+//!   counters held at zero.
 //!
 //! Backends that report themselves unavailable at session construction
 //! (the PJRT backend in an offline stub build) are skipped **loudly**,
@@ -336,6 +341,63 @@ fn execute_into_failures_never_touch_destinations() {
 /// zero-copy contract — no store allocations, no bytes copied through
 /// the store boundary, no pool output allocations, no KV row moves —
 /// across varied request mixes.
+/// Acceptance: paged decode is bit-identical to the contiguous layout
+/// across 100+ CPU decode steps. Two waves each carry a pair of
+/// requests on the same block-multiple (16-token) system prompt: wave
+/// 1 publishes its prefix blocks, wave 2's pair admits *through* the
+/// prefix index and decodes over physically shared cache rows — and
+/// every generated token still matches the contiguous run exactly,
+/// while the paged engine holds the zero-copy counters at zero.
+#[test]
+fn cpu_paged_decode_is_bit_identical_to_contiguous_for_100_plus_steps() {
+    use std::collections::HashMap;
+    let run = |paged: bool| -> (HashMap<u64, Vec<i32>>, usize, u64) {
+        let mut e = ServeEngine::builder()
+            .max_batch(4)
+            .pool_threads(2)
+            .seed(42)
+            .mega(MegaConfig { workers: 4, schedulers: 1, ..Default::default() })
+            .backend(BackendKind::Cpu)
+            .paged_kv(paged)
+            .build()
+            .unwrap();
+        let sys: Vec<i32> = (0..16).map(|i| 1 + (i * 7 % 90) as i32).collect();
+        let mut outputs: HashMap<u64, Vec<i32>> = HashMap::new();
+        let mut steps = 0usize;
+        let mut shared_peak = 0u64;
+        let mut migrated = 0usize;
+        for wave in 0..2u64 {
+            for k in 0..3u64 {
+                let prompt = if k < 2 {
+                    sys.clone()
+                } else {
+                    vec![3 + wave as i32, 11, 4 + k as i32]
+                };
+                e.submit(Request::new(wave * 10 + k, prompt, 50)).unwrap();
+            }
+            let (out, stats) = e.serve().unwrap();
+            assert_eq!(out.len(), 3, "paged={paged} wave {wave}");
+            steps += stats.iterations;
+            shared_peak = shared_peak.max(stats.kv_blocks_shared);
+            migrated += stats.kv_rows_migrated;
+            outputs.extend(out);
+        }
+        assert_eq!(e.store_counters(), (0, 0), "paged={paged}: store alloc/copy in decode");
+        assert_eq!(e.output_allocs(), 0, "paged={paged}: pool allocated output buffers");
+        assert_eq!(migrated, 0, "paged={paged}: KV rows moved");
+        (outputs, steps, shared_peak)
+    };
+    let (plain, plain_steps, plain_shared) = run(false);
+    let (paged, paged_steps, paged_shared) = run(true);
+    assert_eq!(plain, paged, "paged decode diverged from the contiguous layout");
+    assert!(
+        plain_steps >= 100 && paged_steps >= 100,
+        "agreement held for only {plain_steps} contiguous / {paged_steps} paged steps"
+    );
+    assert_eq!(plain_shared, 0, "contiguous run reported shared KV blocks");
+    assert!(paged_shared > 0, "wave 2 never decoded over a shared prefix block");
+}
+
 #[test]
 fn cpu_serving_decode_preserves_zero_copy_counters() {
     for seed in [1u64, 0xC0FFEE, 31337] {

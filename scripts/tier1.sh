@@ -8,16 +8,18 @@
 # benches so BENCH_launch_overhead.json, BENCH_store_hotpath.json,
 # BENCH_weight_arena.json, BENCH_exec_into.json,
 # BENCH_step_overhead.json, BENCH_cpu_backend.json,
-# BENCH_saturation.json, BENCH_transport.json, and BENCH_verify.json
-# track the hot paths across PRs (spawn-per-iteration vs persistent
-# runtime; locked-clone vs borrowed-view tile reads; per-session vs
-# shared-arena weight init; alloc-per-call vs write-into pool outputs;
-# step() bookkeeping vs the kernel iteration inside it; the native CPU
-# backend's per-op kernels and fused decode step; admission latency and
-# shed rate with the serving front-end offered 2x capacity; loopback
-# TCP round-trip latency and streaming frames/s through the wire
-# transport). The exec_into/step/cpu_backend records carry the backend
-# identity they were measured on.
+# BENCH_saturation.json, BENCH_transport.json, BENCH_paged_kv.json,
+# and BENCH_verify.json track the hot paths across PRs
+# (spawn-per-iteration vs persistent runtime; locked-clone vs
+# borrowed-view tile reads; per-session vs shared-arena weight init;
+# alloc-per-call vs write-into pool outputs; step() bookkeeping vs the
+# kernel iteration inside it; the native CPU backend's per-op kernels
+# and fused decode step; admission latency and shed rate with the
+# serving front-end offered 2x capacity; loopback TCP round-trip
+# latency and streaming frames/s through the wire transport; paged-KV
+# admission cold vs prefix-hit and the decode-step price of block-table
+# indirection). The exec_into/step/cpu_backend records carry the
+# backend identity they were measured on.
 #
 # Usage: scripts/tier1.sh [--no-bench]
 set -euo pipefail
@@ -140,7 +142,7 @@ if [[ "${1:-}" != "--no-bench" ]]; then
     # `if` (not `&&`) so a missing bench file cannot trip errexit.
     if [[ -f "$ROOT/BENCH_launch_overhead.json" ]]; then cat "$ROOT/BENCH_launch_overhead.json"; fi
 
-    echo "== tier1: hotpath_micro bench (store hot path + weight arena + pool output boundary + step API + cpu backend + serving saturation + wire transport + verifier cost) =="
+    echo "== tier1: hotpath_micro bench (store hot path + weight arena + pool output boundary + step API + cpu backend + serving saturation + wire transport + paged KV + verifier cost) =="
     MPK_BENCH_STORE_JSON="$ROOT/BENCH_store_hotpath.json" \
     MPK_BENCH_WEIGHT_JSON="$ROOT/BENCH_weight_arena.json" \
     MPK_BENCH_EXEC_INTO_JSON="$ROOT/BENCH_exec_into.json" \
@@ -148,6 +150,7 @@ if [[ "${1:-}" != "--no-bench" ]]; then
     MPK_BENCH_CPU_JSON="$ROOT/BENCH_cpu_backend.json" \
     MPK_BENCH_SATURATION_JSON="$ROOT/BENCH_saturation.json" \
     MPK_BENCH_TRANSPORT_JSON="$ROOT/BENCH_transport.json" \
+    MPK_BENCH_PAGED_JSON="$ROOT/BENCH_paged_kv.json" \
     MPK_BENCH_VERIFY_JSON="$ROOT/BENCH_verify.json" \
         cargo bench --bench hotpath_micro ||
         echo "tier1: bench skipped (non-fatal)" >&2
@@ -158,6 +161,7 @@ if [[ "${1:-}" != "--no-bench" ]]; then
     if [[ -f "$ROOT/BENCH_cpu_backend.json" ]]; then cat "$ROOT/BENCH_cpu_backend.json"; fi
     if [[ -f "$ROOT/BENCH_saturation.json" ]]; then cat "$ROOT/BENCH_saturation.json"; fi
     if [[ -f "$ROOT/BENCH_transport.json" ]]; then cat "$ROOT/BENCH_transport.json"; fi
+    if [[ -f "$ROOT/BENCH_paged_kv.json" ]]; then cat "$ROOT/BENCH_paged_kv.json"; fi
     if [[ -f "$ROOT/BENCH_verify.json" ]]; then cat "$ROOT/BENCH_verify.json"; fi
 fi
 
